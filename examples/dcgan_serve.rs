@@ -1,0 +1,103 @@
+//! End-to-end driver (paper Figure 12, the DCGAN demo): serve a real
+//! generative model through the full three-layer stack.
+//!
+//! Layer 1 (Pallas conv kernel) and Layer 2 (JAX DCGAN generator using the
+//! SD transform) were AOT-compiled by `make artifacts` into HLO text; this
+//! binary is Layer 3: it loads the artifacts via PJRT, stands up the
+//! coordinator (dynamic batcher + bounded queue), drives a batched request
+//! workload, verifies the SD path against the direct-deconvolution artifact
+//! on live traffic, and reports latency/throughput — then writes one
+//! generated image as a PGM file, our stand-in for the paper's face demo.
+//!
+//! Run: make artifacts && cargo run --release --example dcgan_serve
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
+use split_deconv::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // --- exactness on live traffic: SD artifact vs direct-deconv artifact
+    println!("== exactness check (SD vs direct deconvolution, via PJRT) ==");
+    let mut engine = Engine::new(default_artifact_dir())?;
+    println!("platform: {}", engine.platform());
+    let mut rng = Rng::new(99);
+    let mut worst = 0.0f32;
+    for _ in 0..4 {
+        let z = rng.normal_vec(100);
+        let sd = engine.load("dcgan_sd_b1")?.run(&z)?;
+        let rf = engine.load("dcgan_ref_b1")?.run(&z)?;
+        let d = sd
+            .iter()
+            .zip(&rf)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        worst = worst.max(d);
+    }
+    println!("max |SD - direct| over 4 fresh latents: {worst:.2e}");
+    assert!(worst < 1e-3);
+    drop(engine);
+
+    // --- serving workload
+    println!("\n== serving workload: 64 requests through the dynamic batcher ==");
+    let server = Server::start_pjrt(
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(2),
+            queue_cap: 128,
+        },
+        default_artifact_dir(),
+        "dcgan_sd".into(),
+    )?;
+
+    let n = 64;
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        rxs.push(server.submit_blocking(rng.normal_vec(100))?);
+    }
+    let mut first_image = None;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        if first_image.is_none() {
+            first_image = Some(resp.image);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!("{}", m.summary());
+    println!(
+        "throughput: {:.1} images/s over {:.2}s wall",
+        n as f64 / wall,
+        wall
+    );
+    server.shutdown();
+
+    // --- write a generated sample as PGM (grayscale) — the "demo face"
+    let img = first_image.unwrap();
+    let (h, w) = (64usize, 64usize);
+    let path = "dcgan_sample.pgm";
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "P2\n{w} {h}\n255")?;
+    for y in 0..h {
+        let row: Vec<String> = (0..w)
+            .map(|x| {
+                // tanh output in [-1,1]; mean over RGB -> gray
+                let base = (y * w + x) * 3;
+                let g = (img[base] + img[base + 1] + img[base + 2]) / 3.0;
+                format!("{}", ((g * 0.5 + 0.5) * 255.0).clamp(0.0, 255.0) as u8)
+            })
+            .collect();
+        writeln!(f, "{}", row.join(" "))?;
+    }
+    println!("wrote generated sample to {path}");
+    println!("\nend-to-end OK: Pallas kernel -> JAX model -> HLO artifact -> PJRT -> batcher.");
+    Ok(())
+}

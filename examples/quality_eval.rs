@@ -1,0 +1,85 @@
+//! Quality evaluation (paper Table 4 + Figures 13/14): run the DCGAN and
+//! FST generators end to end with every deconvolution conversion approach
+//! and score each against the native transposed convolution with SSIM.
+//! Also writes side-by-side PGM images (the Figure 13/14 panels).
+//!
+//! Run: cargo run --release --example quality_eval [fst_div]
+//! (fst_div divides FST's 256x256 resolution; default 2 -> 128x128.)
+
+use std::io::Write as _;
+
+use split_deconv::metrics::ssim_tensor;
+use split_deconv::report::quality::{dcgan_image, fst_image, DeconvImpl};
+use split_deconv::tensor::Tensor;
+
+fn write_pgm(path: &str, img: &Tensor) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "P2\n{} {}\n255", img.w, img.h)?;
+    for y in 0..img.h {
+        let row: Vec<String> = (0..img.w)
+            .map(|x| {
+                let g: f32 = (0..img.c).map(|c| img.at(0, y, x, c)).sum::<f32>() / img.c as f32;
+                format!("{}", ((g * 0.5 + 0.5) * 255.0).clamp(0.0, 255.0) as u8)
+            })
+            .collect();
+        writeln!(f, "{}", row.join(" "))?;
+    }
+    Ok(())
+}
+
+fn main() {
+    let fst_div: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+
+    println!("Table 4: SSIM of deconvolution conversions vs native deconvolution");
+    println!("(paper: SD 1.000/1.000, Shi 0.568/0.939, Chang 0.534/0.742)\n");
+    println!("{:<10} {:>8} {:>10} {:>12}", "Benchmark", "SD", "Shi [30]", "Chang [31]");
+
+    // DCGAN (64x64) — Figure 13 panels
+    let native = dcgan_image(DeconvImpl::Native, 1, 2);
+    let approaches = [
+        (DeconvImpl::Sd, "dcgan_sd"),
+        (DeconvImpl::Shi, "dcgan_shi"),
+        (DeconvImpl::Chang, "dcgan_chang"),
+    ];
+    let mut ssims = Vec::new();
+    write_pgm("fig13_dcgan_native.pgm", &native).unwrap();
+    for (imp, name) in approaches {
+        let img = dcgan_image(imp, 1, 2);
+        ssims.push(ssim_tensor(&img, &native, 2.0));
+        write_pgm(&format!("fig13_{name}.pgm"), &img).unwrap();
+    }
+    println!(
+        "{:<10} {:>8.3} {:>10.3} {:>12.3}",
+        "DCGAN", ssims[0], ssims[1], ssims[2]
+    );
+
+    // FST (256/fst_div) — Figure 14 panels
+    let native = fst_image(DeconvImpl::Native, 1, fst_div);
+    let approaches = [
+        (DeconvImpl::Sd, "fst_sd"),
+        (DeconvImpl::Shi, "fst_shi"),
+        (DeconvImpl::Chang, "fst_chang"),
+    ];
+    let mut fssims = Vec::new();
+    write_pgm("fig14_fst_native.pgm", &native).unwrap();
+    for (imp, name) in approaches {
+        let img = fst_image(imp, 1, fst_div);
+        fssims.push(ssim_tensor(&img, &native, 2.0));
+        write_pgm(&format!("fig14_{name}.pgm"), &img).unwrap();
+    }
+    println!(
+        "{:<10} {:>8.3} {:>10.3} {:>12.3}",
+        "FST", fssims[0], fssims[1], fssims[2]
+    );
+
+    println!("\nwrote Figure 13/14 panels as fig13_*.pgm / fig14_*.pgm");
+    assert!(ssims[0] > 0.999 && fssims[0] > 0.999, "SD must be exact");
+    assert!(
+        fssims[1] > ssims[1],
+        "Shi's wrong padding must hurt the small DCGAN images more than FST"
+    );
+    println!("orderings hold: SD exact; Shi/Chang degrade, worse on small images.");
+}

@@ -1,0 +1,177 @@
+"""AOT pipeline: lower L2 jax models (calling L1 Pallas kernels) to HLO text.
+
+Emits, under artifacts/:
+  <name>.hlo.txt       HLO text (NOT serialized proto — the image's
+                       xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+                       protos; the text parser reassigns ids cleanly).
+  <name>.in<i>.bin     raw f32 little-endian golden inputs (params + data)
+  <name>.out.bin       golden output (computed by the same jitted fn)
+  manifest.json        index: shapes, dtypes, roles, network/layer metadata
+
+The rust runtime (rust/src/runtime) loads the manifest, compiles each HLO
+module once on the PJRT CPU client, and cross-checks numerics against the
+goldens in integration tests.
+
+Weights are passed as runtime *arguments* (not embedded constants) so the
+HLO stays small and the same artifact can serve any checkpoint.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only PATTERN]
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+from typing import Callable, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write_bin(path: str, arr: np.ndarray) -> None:
+    np.asarray(arr, dtype=np.float32).tofile(path)
+
+
+class Artifact:
+    def __init__(self, name: str, fn: Callable, inputs: List[np.ndarray], meta: dict):
+        self.name = name
+        self.fn = fn
+        self.inputs = [np.asarray(x, dtype=np.float32) for x in inputs]
+        self.meta = meta
+
+    def emit(self, out_dir: str) -> dict:
+        specs = [jax.ShapeDtypeStruct(x.shape, jnp.float32) for x in self.inputs]
+        jitted = jax.jit(self.fn)
+        lowered = jitted.lower(*specs)
+        hlo = to_hlo_text(lowered)
+        hlo_path = os.path.join(out_dir, f"{self.name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        in_paths = []
+        for i, x in enumerate(self.inputs):
+            p = os.path.join(out_dir, f"{self.name}.in{i}.bin")
+            _write_bin(p, x)
+            in_paths.append(os.path.basename(p))
+        out = np.asarray(jitted(*[jnp.asarray(x) for x in self.inputs])[0])
+        out_path = os.path.join(out_dir, f"{self.name}.out.bin")
+        _write_bin(out_path, out)
+        entry = {
+            "name": self.name,
+            "hlo": os.path.basename(hlo_path),
+            "inputs": [
+                {"shape": list(x.shape), "dtype": "f32", "bin": p}
+                for x, p in zip(self.inputs, in_paths)
+            ],
+            "output": {"shape": list(out.shape), "dtype": "f32", "bin": os.path.basename(out_path)},
+            **self.meta,
+        }
+        print(f"  {self.name}: hlo {len(hlo)/1e3:.0f}kB  out{list(out.shape)}")
+        return entry
+
+
+def rng_input(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32) * 0.5
+
+
+def dcgan_artifacts() -> List[Artifact]:
+    """Full DCGAN generator, all three deconv implementations, batch 1 and 4."""
+    weights = [np.asarray(w) for w in M.dcgan_weights(seed=42)]
+    arts = []
+    for impl in ("sd", "nzp", "ref"):
+        for b in (1, 4):
+            if impl != "sd" and b != 1:
+                continue  # batch variants only needed on the serving (SD) path
+
+            def fn(z, *ws, impl=impl):
+                return (M.dcgan_generator(z, list(ws), impl),)
+
+            z = rng_input((b, 100), seed=100 + b)
+            arts.append(
+                Artifact(
+                    f"dcgan_{impl}_b{b}",
+                    fn,
+                    [z, *weights],
+                    {"kind": "model", "network": "DCGAN", "impl": impl, "batch": b},
+                )
+            )
+    return arts
+
+
+# Per-deconv-layer units for the host-CPU Fig 16 experiment. Large layers
+# (MDE upconv1/2, FST) are included: they dominate the wall-clock ratio.
+def layer_artifacts(nets: List[str]) -> List[Artifact]:
+    arts = []
+    for net_name in nets:
+        net = M.NETWORKS[net_name]
+        for li, spec in enumerate(net.layers):
+            if spec.kind != "deconv":
+                continue
+            w = np.asarray(M.init_weight(spec, seed=1000 + li))
+            x = rng_input((1, spec.in_h, spec.in_w, spec.in_c), seed=li)
+            for impl in ("sd", "nzp"):
+
+                def fn(x, w, spec=spec, impl=impl):
+                    return (M.run_layer(x, w, spec, impl),)
+
+                safe = net_name.lower().replace("-", "")
+                arts.append(
+                    Artifact(
+                        f"layer_{safe}_{spec.name}_{impl}",
+                        fn,
+                        [x, w],
+                        {
+                            "kind": "layer",
+                            "network": net_name,
+                            "layer": spec.name,
+                            "impl": impl,
+                            "k": spec.k,
+                            "s": spec.s,
+                            "p": spec.p,
+                            "op": spec.op,
+                            "in_hw": [spec.in_h, spec.in_w],
+                            "in_c": spec.in_c,
+                            "out_c": spec.out_c,
+                            "macs": spec.macs(),
+                        },
+                    )
+                )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="fnmatch pattern over artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = dcgan_artifacts() + layer_artifacts(list(M.NETWORKS.keys()))
+    if args.only:
+        arts = [a for a in arts if fnmatch.fnmatch(a.name, args.only)]
+
+    entries = []
+    for a in arts:
+        entries.append(a.emit(args.out_dir))
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels + references for the paper's compute hot-spot.
+from . import ref  # noqa: F401
+from . import sd  # noqa: F401
+from . import conv2d  # noqa: F401

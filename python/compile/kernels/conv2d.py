@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: stride-1 valid convolution, MXU-shaped.
+
+The SD transform converts every deconvolution into s^2 of exactly these
+stride-1 convolutions, so this kernel is the compute hot-spot of the whole
+system. The inner loop is a (OW x IC) @ (IC x OC) matmul per filter tap —
+the shape the TPU MXU systolic array wants (contraction over channels),
+rather than the scalar scatter-accumulate a raw deconvolution performs.
+
+TPU mapping (documented for the real-TPU variant; we run interpret=True on
+CPU per the image constraints):
+  * grid = (N, ceil(OH / TILE_OH)): one VMEM-resident row-band per step.
+  * x block: full W x IC rows [oh*TILE_OH, oh*TILE_OH + TILE_OH + KH - 1]
+    -- expressed here by passing the whole image and slicing inside the
+    kernel (Pallas block index maps cannot express overlapping halo blocks
+    directly; a production TPU kernel would use a halo-exchange BlockSpec).
+  * w block: whole filter (K_T is tiny after SD splitting: ceil(K/s)).
+  * accumulation in f32; per-tap jnp.dot drives the MXU.
+
+VMEM footprint estimate (see DESIGN.md section 9 / EXPERIMENTS.md #Perf):
+  bytes = 4 * (TILE_X_ROWS * W * IC + KH*KW*IC*OC + TILE_OH * OW * OC).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d_pallas", "DEFAULT_TILE_OH"]
+
+DEFAULT_TILE_OH = 16
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, ow: int, tile_oh: int):
+    """Compute a TILE_OH-row band of the output.
+
+    x_ref: (1, H, W, IC) full input image (one batch element)
+    w_ref: (KH, KW, IC, OC)
+    o_ref: (1, TILE_OH, OW, OC) output band
+    """
+    t = pl.program_id(1)
+    oh0 = t * tile_oh
+    acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            # rows [oh0+dh, oh0+dh+tile_oh), cols [dw, dw+ow)
+            xs = x_ref[0, pl.dslice(oh0 + dh, tile_oh), pl.dslice(dw, ow), :]  # (tile_oh, ow, ic)
+            wt = w_ref[dh, dw]  # (ic, oc)
+            acc = acc + jax.lax.dot_general(
+                xs,
+                wt,
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_oh",))
+def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, tile_oh: int | None = None) -> jnp.ndarray:
+    """Stride-1 valid conv via Pallas. x: NHWC, w: HWIO -> NHWC.
+
+    Output height is padded up to a multiple of the row-band tile and
+    cropped afterwards, so any shape is accepted.
+    """
+    n, h, width, ic = x.shape
+    kh, kw, wic, oc = w.shape
+    assert wic == ic, f"channel mismatch {wic} != {ic}"
+    oh, ow = h - kh + 1, width - kw + 1
+    assert oh >= 1 and ow >= 1, "filter larger than input"
+
+    # Tile policy (#Perf iteration 2): small outputs run as ONE row-band —
+    # grid/dispatch overhead and pad-to-tile waste dominate tiny layers
+    # (DCGAN 8x8..32x32); large outputs keep bounded bands for VMEM.
+    t = tile_oh or (oh if oh <= 40 else DEFAULT_TILE_OH)
+    n_tiles = -(-oh // t)  # ceil
+    # pad input rows so every band is full
+    pad_rows = n_tiles * t + kh - 1 - h
+    if pad_rows > 0:
+        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, ow=ow, tile_oh=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, x.shape[1], width, ic), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ic, oc), lambda b, i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, ow, oc), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * t, ow, oc), x.dtype),
+        interpret=True,  # CPU image: real-TPU lowering emits Mosaic custom-calls
+    )(x, w)
+    return out[:, :oh]
+
+
+def vmem_bytes(h: int, w: int, ic: int, kh: int, kw: int, oc: int, tile_oh: int) -> int:
+    """Static VMEM footprint estimate for one grid step (f32)."""
+    x_bytes = h * w * ic * 4  # full image resident (interpret-mode layout)
+    w_bytes = kh * kw * ic * oc * 4
+    o_bytes = tile_oh * (w - kw + 1) * oc * 4
+    return x_bytes + w_bytes + o_bytes

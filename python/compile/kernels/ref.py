@@ -1,0 +1,116 @@
+"""Pure-jnp reference oracles for convolution and deconvolution.
+
+These are the CORE correctness signals for the repo: every Pallas kernel and
+every split-deconvolution (SD) variant is checked against these references
+by pytest (see python/tests/).
+
+Conventions (used throughout python/ and mirrored in rust/src/tensor):
+  activations : NHWC  float32
+  conv weight : HWIO  (KH, KW, IC, OC), cross-correlation (no flip)
+  deconv weight: HWIO (KH, KW, IC, OC), *scatter* semantics:
+      out[n, i*s+kh, j*s+kw, oc] += x[n, i, j, ic] * w[kh, kw, ic, oc]
+  which matches torch.nn.ConvTranspose2d / the paper's Algorithm 1 DECONV.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "conv2d",
+    "deconv2d",
+    "deconv2d_numpy",
+    "zero_insert",
+    "nzp_deconv2d",
+    "deconv_out_size",
+]
+
+
+def deconv_out_size(i: int, k: int, s: int, p: int) -> int:
+    """Output spatial size of a transposed convolution (no output padding)."""
+    return (i - 1) * s + k - 2 * p
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 0) -> jnp.ndarray:
+    """Standard cross-correlation conv. x: NHWC, w: HWIO."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def deconv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: int = 0) -> jnp.ndarray:
+    """Transposed conv with scatter semantics (torch ConvTranspose2d).
+
+    Implemented as an input-dilated convolution with the 180-degree rotated
+    filter:  deconv(x, w, s, p) == conv(dilate_s(x), rot180(w), pad=K-1-p).
+    """
+    k = w.shape[0]
+    assert w.shape[1] == k, "square filters only in reference"
+    w_flip = w[::-1, ::-1, :, :]
+    pad = k - 1 - padding
+    return lax.conv_general_dilated(
+        x,
+        w_flip,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def deconv2d_numpy(x: np.ndarray, w: np.ndarray, stride: int, padding: int = 0) -> np.ndarray:
+    """Literal scatter-loop deconvolution (the paper's Figure 4(b)).
+
+    Slow; used only in tests to validate `deconv2d` itself.
+    x: NHWC, w: HWIO.
+    """
+    n, ih, iw, ic = x.shape
+    kh, kw, _, oc = w.shape
+    full_h = (ih - 1) * stride + kh
+    full_w = (iw - 1) * stride + kw
+    out = np.zeros((n, full_h, full_w, oc), dtype=np.float64)
+    for b in range(n):
+        for i in range(ih):
+            for j in range(iw):
+                # (ic,) @ (kh, kw, ic, oc) -> (kh, kw, oc)
+                contrib = np.einsum(
+                    "c,hwco->hwo", x[b, i, j].astype(np.float64), w.astype(np.float64)
+                )
+                out[b, i * stride : i * stride + kh, j * stride : j * stride + kw] += contrib
+    if padding > 0:
+        out = out[:, padding:-padding, padding:-padding, :]
+    return out.astype(x.dtype)
+
+
+def zero_insert(x: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Insert (stride-1) zeros between activations: the NZP dilation step.
+
+    x: NHWC -> NHWC with H' = (H-1)*s + 1.
+    """
+    if stride == 1:
+        return x
+    n, h, w, c = x.shape
+    out = jnp.zeros((n, (h - 1) * stride + 1, (w - 1) * stride + 1, c), dtype=x.dtype)
+    return out.at[:, ::stride, ::stride, :].set(x)
+
+
+def nzp_deconv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: int = 0) -> jnp.ndarray:
+    """Naive Zero-Padding deconvolution (the paper's baseline, Fig 1(b)).
+
+    Materializes the zero-inserted feature map, then runs a standard stride-1
+    convolution with the rotated filter. Numerically identical to deconv2d;
+    computationally it performs the full dense conv over the zero-inflated
+    map, which is exactly the ~s^2 redundancy the paper attacks.
+    """
+    k = w.shape[0]
+    xd = zero_insert(x, stride)
+    pad = k - 1 - padding
+    xp = jnp.pad(xd, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    w_flip = w[::-1, ::-1, :, :]
+    return conv2d(xp, w_flip, stride=1, padding=0)

@@ -1,0 +1,116 @@
+"""Split Deconvolution (SD) — the paper's Section 4 transform, in JAX.
+
+Converts a K x K / stride-s deconvolution into s^2 standard stride-1
+convolutions plus an output interleave. Bit-exact with `ref.deconv2d`.
+
+Verified geometry (see DESIGN.md section 2 and python/tests/test_sd.py):
+  K_T = ceil(K / s)          split filter size            (paper Eq. 2)
+  P_K = s * K_T - K          filter zero-pad, top & left  (paper Eq. 1)
+  P_I = K_T - 1              input zero-pad, all sides    (paper Eq. 9)
+  N   = s^2                  number of split convolutions (paper Eq. 3)
+  split n (r=n//s, c=n%s):  W_n = rot180(padded_W[r::s, c::s])   (Eq. 4-8)
+  interleave: big[r::s, c::s] = ConvO_n                          (Eq. 10-11)
+  full deconv output, side R=(I-1)*s+K, sits at offset P_K (top/left)
+  in the interleaved grid; layer padding p crops a further p per side.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List
+
+import jax.numpy as jnp
+
+from . import ref
+
+__all__ = ["SDGeometry", "sd_geometry", "split_filters", "interleave", "sd_deconv2d"]
+
+
+@dataclass(frozen=True)
+class SDGeometry:
+    """All derived sizes of one SD conversion."""
+
+    k: int  # original deconv filter size
+    s: int  # stride
+    p: int  # layer padding of the deconv
+    k_t: int  # split filter size, ceil(k/s)
+    p_k: int  # filter zero-pad (top & left)
+    p_i: int  # input feature zero-pad (all sides)
+    n_splits: int  # s^2
+
+    def conv_out(self, i: int) -> int:
+        """Spatial side of each split convolution output for input side i."""
+        return i + 2 * self.p_i - self.k_t + 1  # == i + k_t - 1
+
+    def big_out(self, i: int) -> int:
+        """Side of the interleaved (pre-crop) output grid."""
+        return self.s * self.conv_out(i)
+
+    def final_out(self, i: int) -> int:
+        """Side of the equivalent deconvolution output."""
+        return ref.deconv_out_size(i, self.k, self.s, self.p)
+
+    def crop(self) -> int:
+        """Top/left crop applied to the interleaved grid."""
+        return self.p_k + self.p
+
+
+def sd_geometry(k: int, s: int, p: int = 0) -> SDGeometry:
+    k_t = math.ceil(k / s)
+    return SDGeometry(k=k, s=s, p=p, k_t=k_t, p_k=s * k_t - k, p_i=k_t - 1, n_splits=s * s)
+
+
+def split_filters(w: jnp.ndarray, stride: int) -> List[jnp.ndarray]:
+    """Split a deconv filter (HWIO) into s^2 conv filters (HWIO, K_T x K_T).
+
+    Step 1 (paper): zero-expand the filter on the TOP and LEFT so its side
+    is divisible by s.  Step 2: sample with stride s and rotate 180 degrees.
+    """
+    k = w.shape[0]
+    g = sd_geometry(k, stride)
+    wp = jnp.pad(w, ((g.p_k, 0), (g.p_k, 0), (0, 0), (0, 0)))
+    out = []
+    for n in range(g.n_splits):
+        r, c = n // stride, n % stride
+        sub = wp[r::stride, c::stride, :, :]
+        out.append(sub[::-1, ::-1, :, :])  # rotate 180 (spatial axes only)
+    return out
+
+
+def interleave(convs: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Reorganize split conv outputs into the deconv grid (paper Eq. 10-13).
+
+    convs: (N, s*s, OH1, OW1, OC) stacked on axis 1 -> (N, s*OH1, s*OW1, OC)
+    with big[..., r::s, c::s, :] = convs[:, r*s+c].
+    """
+    b, n_splits, oh, ow, oc = convs.shape
+    assert n_splits == stride * stride
+    x = convs.reshape(b, stride, stride, oh, ow, oc)
+    # (b, r, c, oh, ow, oc) -> (b, oh, r, ow, c, oc)
+    x = x.transpose(0, 3, 1, 4, 2, 5)
+    return x.reshape(b, oh * stride, ow * stride, oc)
+
+
+def sd_deconv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int,
+    padding: int = 0,
+    conv_fn=ref.conv2d,
+) -> jnp.ndarray:
+    """Full SD pipeline: pad input -> s^2 convs -> interleave -> crop.
+
+    `conv_fn(x, w)` performs the stride-1 valid convolution; pass the Pallas
+    kernel (kernels.conv2d.conv2d_pallas) to exercise the L1 hot path, or
+    leave the default pure-jnp oracle.
+    """
+    i = x.shape[1]
+    g = sd_geometry(w.shape[0], stride, padding)
+    filters = split_filters(w, stride)
+    xp = jnp.pad(x, ((0, 0), (g.p_i, g.p_i), (g.p_i, g.p_i), (0, 0)))
+    convs = jnp.stack([conv_fn(xp, f) for f in filters], axis=1)
+    big = interleave(convs, stride)
+    c0 = g.crop()
+    r = g.final_out(i)
+    return big[:, c0 : c0 + r, c0 : c0 + r, :]

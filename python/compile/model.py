@@ -1,0 +1,332 @@
+"""L2: benchmark generator models in JAX, calling the L1 Pallas kernels.
+
+Network configurations are reverse-engineered from the paper's Tables 1-3 so
+that the deconvolution MAC and parameter counts match the published numbers
+(DCGAN / SNGAN / GP-GAN / ArtGAN / MDE exactly; FST exactly; see
+EXPERIMENTS.md for the row-by-row comparison). The same tables are mirrored
+in rust/src/networks/ — keep the two in sync.
+
+Every deconv layer can be built three ways:
+  ref : direct transposed convolution (oracle)
+  nzp : naive zero-padding conversion (baseline, Fig 1(b))
+  sd  : split deconvolution (the paper's contribution, Section 4)
+The nzp/sd paths run their stride-1 convolutions through the Pallas kernel
+so the AOT artifacts exercise the L1 hot path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, sd
+from .kernels.conv2d import conv2d_pallas
+
+
+# --------------------------------------------------------------------------
+# Layer / network specifications
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a benchmark network (spatial sizes may be rectangular)."""
+
+    name: str
+    kind: str  # "deconv" | "conv" | "dense"
+    in_h: int
+    in_w: int
+    in_c: int
+    out_c: int
+    k: int = 0
+    s: int = 1
+    p: int = 0
+    op: int = 0  # output_padding (deconv only)
+
+    @property
+    def out_h(self) -> int:
+        if self.kind == "deconv":
+            return (self.in_h - 1) * self.s + self.k - 2 * self.p + self.op
+        if self.kind == "conv":
+            return (self.in_h + 2 * self.p - self.k) // self.s + 1
+        return 1
+
+    @property
+    def out_w(self) -> int:
+        if self.kind == "deconv":
+            return (self.in_w - 1) * self.s + self.k - 2 * self.p + self.op
+        if self.kind == "conv":
+            return (self.in_w + 2 * self.p - self.k) // self.s + 1
+        return 1
+
+    def macs(self) -> int:
+        """Multiply-add count, paper Table 1/2 convention (scatter for deconv)."""
+        if self.kind == "deconv":
+            return self.in_h * self.in_w * self.k * self.k * self.in_c * self.out_c
+        if self.kind == "conv":
+            return self.out_h * self.out_w * self.k * self.k * self.in_c * self.out_c
+        return self.in_h * self.in_w * self.in_c * self.out_c  # dense: in->out
+
+    def params(self) -> int:
+        if self.kind == "dense":
+            return self.in_h * self.in_w * self.in_c * self.out_c
+        return self.k * self.k * self.in_c * self.out_c
+
+
+def d(name, ih, iw, ic, oc, k, s, p, op=0) -> LayerSpec:
+    return LayerSpec(name, "deconv", ih, iw, ic, oc, k=k, s=s, p=p, op=op)
+
+
+def c(name, ih, iw, ic, oc, k, s, p) -> LayerSpec:
+    return LayerSpec(name, "conv", ih, iw, ic, oc, k=k, s=s, p=p)
+
+
+def fc(name, n_in, n_out) -> LayerSpec:
+    return LayerSpec(name, "dense", 1, 1, n_in, n_out)
+
+
+@dataclass
+class NetworkSpec:
+    name: str
+    layers: List[LayerSpec] = field(default_factory=list)
+
+    def deconv_layers(self) -> List[LayerSpec]:
+        return [l for l in self.layers if l.kind == "deconv"]
+
+    def total_macs(self) -> int:
+        return sum(l.macs() for l in self.layers)
+
+    def deconv_macs(self) -> int:
+        return sum(l.macs() for l in self.deconv_layers())
+
+
+# DCGAN on CelebA, 64x64 output. Deconv MACs 109.77M / params 1.03M — exact.
+DCGAN = NetworkSpec(
+    "DCGAN",
+    [
+        fc("project", 100, 8 * 8 * 256),
+        d("deconv1", 8, 8, 256, 128, k=5, s=2, p=2, op=1),
+        d("deconv2", 16, 16, 128, 64, k=5, s=2, p=2, op=1),
+        d("deconv3", 32, 32, 64, 3, k=5, s=2, p=2, op=1),
+    ],
+)
+
+# SNGAN on CIFAR-10, 32x32. Deconv MACs 100.66M — exact.
+SNGAN = NetworkSpec(
+    "SNGAN",
+    [
+        d("deconv1", 4, 4, 512, 256, k=4, s=2, p=1),
+        d("deconv2", 8, 8, 256, 128, k=4, s=2, p=1),
+        d("deconv3", 16, 16, 128, 64, k=4, s=2, p=1),
+        c("to_rgb", 32, 32, 64, 3, k=1, s=1, p=0),
+    ],
+)
+
+# ArtGAN on CIFAR-10, 32x32. Deconv MACs 822.08M / NZP 2030.04M — exact.
+ARTGAN = NetworkSpec(
+    "ArtGAN",
+    [
+        fc("project", 100, 4 * 4 * 1024),
+        d("deconv1", 4, 4, 1024, 512, k=4, s=2, p=1),
+        d("deconv2", 8, 8, 512, 256, k=4, s=2, p=1),
+        d("deconv3", 16, 16, 256, 256, k=5, s=1, p=2),
+        d("deconv4", 16, 16, 256, 128, k=4, s=2, p=1),
+        c("conv1", 32, 32, 128, 128, k=3, s=1, p=1),
+        c("conv2", 32, 32, 128, 128, k=3, s=1, p=1),
+        c("conv3", 32, 32, 128, 64, k=3, s=1, p=1),
+        c("to_rgb", 32, 32, 64, 3, k=3, s=1, p=1),
+    ],
+)
+
+# GP-GAN blending auto-encoder, 64x64. Deconv MACs 103.81M / params 2.76M — exact.
+GPGAN = NetworkSpec(
+    "GP-GAN",
+    [
+        c("enc1", 64, 64, 3, 64, k=4, s=2, p=1),
+        c("enc2", 32, 32, 64, 128, k=4, s=2, p=1),
+        c("enc3", 16, 16, 128, 256, k=4, s=2, p=1),
+        c("enc4", 8, 8, 256, 512, k=4, s=2, p=1),
+        fc("bottleneck", 4 * 4 * 512, 4000),
+        d("dec1", 4, 4, 512, 256, k=4, s=2, p=1),
+        d("dec2", 8, 8, 256, 128, k=4, s=2, p=1),
+        d("dec3", 16, 16, 128, 64, k=4, s=2, p=1),
+        d("dec4", 32, 32, 64, 3, k=4, s=2, p=1),
+    ],
+)
+
+# Monocular Depth Estimation (Godard et al.), KITTI 128x256 mode.
+# Deconv (upconv) MACs 830.4M vs paper 849.35M (-2.2%); params 3.93M — exact.
+MDE = NetworkSpec(
+    "MDE",
+    [
+        # VGG encoder (Godard monodepth style), 128x256 input
+        c("enc1a", 128, 256, 3, 32, k=7, s=2, p=3),
+        c("enc1b", 64, 128, 32, 32, k=7, s=1, p=3),
+        c("enc2a", 64, 128, 32, 64, k=5, s=2, p=2),
+        c("enc2b", 32, 64, 64, 64, k=5, s=1, p=2),
+        c("enc3a", 32, 64, 64, 128, k=3, s=2, p=1),
+        c("enc3b", 16, 32, 128, 128, k=3, s=1, p=1),
+        c("enc4a", 16, 32, 128, 256, k=3, s=2, p=1),
+        c("enc4b", 8, 16, 256, 256, k=3, s=1, p=1),
+        c("enc5a", 8, 16, 256, 512, k=3, s=2, p=1),
+        c("enc5b", 4, 8, 512, 512, k=3, s=1, p=1),
+        # upconv decoder, all k3 s2 (the paper's "filter expansion" case)
+        d("upconv6", 4, 8, 512, 512, k=3, s=2, p=1, op=1),
+        c("iconv6", 8, 16, 512, 512, k=3, s=1, p=1),
+        d("upconv5", 8, 16, 512, 256, k=3, s=2, p=1, op=1),
+        c("iconv5", 16, 32, 256, 256, k=3, s=1, p=1),
+        d("upconv4", 16, 32, 256, 128, k=3, s=2, p=1, op=1),
+        c("iconv4", 32, 64, 128, 32, k=3, s=1, p=1),
+        d("upconv3", 32, 64, 128, 64, k=3, s=2, p=1, op=1),
+        d("upconv2", 64, 128, 64, 32, k=3, s=2, p=1, op=1),
+        d("upconv1", 128, 256, 32, 16, k=3, s=2, p=1, op=1),
+        c("disp", 256, 512, 16, 1, k=3, s=1, p=1),
+    ],
+)
+
+# Fast-Style-Transfer transform net, 256x256. Deconv MACs 603.98M / 0.09M — exact.
+FST = NetworkSpec(
+    "FST",
+    [
+        c("conv1", 256, 256, 3, 32, k=9, s=1, p=4),
+        c("conv2", 256, 256, 32, 64, k=3, s=2, p=1),
+        c("conv3", 128, 128, 64, 128, k=3, s=2, p=1),
+        *[
+            c(f"res{i}{ab}", 64, 64, 128, 128, k=3, s=1, p=1)
+            for i in range(1, 6)
+            for ab in ("a", "b")
+        ],
+        d("deconv1", 64, 64, 128, 64, k=3, s=2, p=1, op=1),
+        d("deconv2", 128, 128, 64, 32, k=3, s=2, p=1, op=1),
+        c("to_rgb", 256, 256, 32, 3, k=9, s=1, p=4),
+    ],
+)
+
+NETWORKS = {n.name: n for n in (DCGAN, SNGAN, ARTGAN, GPGAN, MDE, FST)}
+
+
+# --------------------------------------------------------------------------
+# Layer execution (three deconvolution implementations)
+# --------------------------------------------------------------------------
+
+
+def init_weight(spec: LayerSpec, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    if spec.kind == "dense":
+        n_in = spec.in_h * spec.in_w * spec.in_c
+        w = rng.standard_normal((n_in, spec.out_c), dtype=np.float32)
+        return jnp.asarray(w * (1.0 / np.sqrt(n_in)))
+    w = rng.standard_normal((spec.k, spec.k, spec.in_c, spec.out_c), dtype=np.float32)
+    return jnp.asarray(w * (1.0 / np.sqrt(spec.k * spec.k * spec.in_c)))
+
+
+def _crop_op(y: jnp.ndarray, spec: LayerSpec) -> jnp.ndarray:
+    """Apply output_padding: keep `op` extra rows/cols on the bottom/right."""
+    return y
+
+
+def deconv_ref(x: jnp.ndarray, w: jnp.ndarray, spec: LayerSpec) -> jnp.ndarray:
+    """Oracle transposed conv, honoring output_padding via asymmetric crop."""
+    full = ref.deconv2d(x, w, spec.s, padding=0)  # full (I-1)s+K
+    oh, ow = spec.out_h, spec.out_w
+    return full[:, spec.p : spec.p + oh, spec.p : spec.p + ow, :]
+
+
+def deconv_nzp(x: jnp.ndarray, w: jnp.ndarray, spec: LayerSpec, conv_fn=conv2d_pallas) -> jnp.ndarray:
+    """NZP: zero-insert + dense stride-1 conv (Pallas) + crop."""
+    k = spec.k
+    xd = ref.zero_insert(x, spec.s)
+    pad = k - 1
+    xp = jnp.pad(xd, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    w_flip = w[::-1, ::-1, :, :]
+    full = conv_fn(xp, w_flip)  # == full deconv output
+    oh, ow = spec.out_h, spec.out_w
+    return full[:, spec.p : spec.p + oh, spec.p : spec.p + ow, :]
+
+
+def deconv_sd(x: jnp.ndarray, w: jnp.ndarray, spec: LayerSpec, conv_fn=conv2d_pallas) -> jnp.ndarray:
+    """Split deconvolution through the Pallas conv kernel + strided interleave.
+
+    Perf note (EXPERIMENTS.md #Perf): the s^2 split convolutions are FUSED
+    into a single convolution whose output channels are the s^2 stacked
+    phases, followed by a depth-to-space interleave — one kernel launch and
+    one (OW x IC) @ (IC x s^2*OC) contraction per tap instead of s^2 small
+    ones. This is the optimization that took the measured host-CPU (Fig 16)
+    SD path past NZP on every benchmark.
+    """
+    g = sd.sd_geometry(spec.k, spec.s, spec.p)
+    filters = sd.split_filters(w, spec.s)  # s^2 x (K_T, K_T, IC, OC)
+    stacked = jnp.concatenate(filters, axis=-1)  # (K_T, K_T, IC, s^2*OC)
+    xp = jnp.pad(x, ((0, 0), (g.p_i, g.p_i), (g.p_i, g.p_i), (0, 0)))
+    fused = conv_fn(xp, stacked)  # (N, H', W', s^2*OC)
+    b, oh, ow, _ = fused.shape
+    s = spec.s
+    # depth-to-space: channel block n = r*s + c lands at phase (r, c)
+    big = (
+        fused.reshape(b, oh, ow, s, s, spec.out_c)
+        .transpose(0, 1, 3, 2, 4, 5)
+        .reshape(b, oh * s, ow * s, spec.out_c)
+    )
+    c0 = g.crop()
+    return big[:, c0 : c0 + spec.out_h, c0 : c0 + spec.out_w, :]
+
+
+DECONV_IMPLS: dict[str, Callable] = {
+    "ref": deconv_ref,
+    "nzp": deconv_nzp,
+    "sd": deconv_sd,
+}
+
+
+def run_layer(x: jnp.ndarray, w: jnp.ndarray, spec: LayerSpec, impl: str) -> jnp.ndarray:
+    if spec.kind == "deconv":
+        return DECONV_IMPLS[impl](x, w, spec)
+    if spec.kind == "conv":
+        xp = jnp.pad(x, ((0, 0), (spec.p, spec.p), (spec.p, spec.p), (0, 0)))
+        return ref.conv2d(xp, w, stride=spec.s)
+    # dense
+    b = x.shape[0]
+    return (x.reshape(b, -1) @ w).reshape(b, 1, 1, spec.out_c)
+
+
+# --------------------------------------------------------------------------
+# Full generator forward passes (AOT targets)
+# --------------------------------------------------------------------------
+
+
+def dcgan_generator(z: jnp.ndarray, weights: List[jnp.ndarray], impl: str) -> jnp.ndarray:
+    """DCGAN generator: z (B, 100) -> image (B, 64, 64, 3) in [-1, 1]."""
+    spec = DCGAN.layers[0]
+    h = (z @ weights[0]).reshape(z.shape[0], 8, 8, 256)
+    h = jax.nn.relu(h)
+    for spec, w in zip(DCGAN.layers[1:], weights[1:]):
+        h = run_layer(h, w, spec, impl)
+        if spec.name != "deconv3":
+            h = jax.nn.relu(h)
+    return jnp.tanh(h)
+
+
+def dcgan_weights(seed: int = 0) -> List[jnp.ndarray]:
+    return [init_weight(l, seed + i) for i, l in enumerate(DCGAN.layers)]
+
+
+def make_dcgan_fn(impl: str, weights: List[jnp.ndarray]):
+    """Close over constant weights so the HLO artifact embeds them."""
+
+    def fn(z):
+        return (dcgan_generator(z, weights, impl),)
+
+    return fn
+
+
+def make_layer_fn(spec: LayerSpec, impl: str, weight: jnp.ndarray):
+    """Single deconv layer as a standalone AOT unit (Fig 16 timing)."""
+
+    def fn(x):
+        return (run_layer(x, weight, spec, impl),)
+
+    return fn

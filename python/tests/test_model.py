@@ -1,0 +1,108 @@
+"""L2 model tests: network table invariants + full-generator impl equivalence."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+# Paper Table 1 / 2 / 3 targets (millions). DESIGN.md documents the
+# reverse-engineered configs; tolerances reflect where the paper's own
+# numbers were recoverable exactly vs approximately.
+PAPER = {
+    # name: (total, deconv, nzp, sd, params) in M, tol fraction
+    "DCGAN": (111.41, 109.77, 439.09, 158.07, 1.03, 0.01),
+    "SNGAN": (100.86, 100.66, 402.65, 100.66, 2.63, 0.05),
+    "ArtGAN": (1268.77, 822.08, 2030.04, 822.08, 11.01, 0.16),
+    "GP-GAN": (240.39, 103.81, 415.23, 103.81, 2.76, 0.01),
+    "MDE": (2638.22, 849.35, 3397.39, 1509.95, 3.93, 0.03),
+}
+
+
+def nzp_macs(net):
+    return sum(l.out_h * l.out_w * l.k * l.k * l.in_c * l.out_c for l in net.deconv_layers())
+
+
+def sd_macs(net):
+    from compile.kernels import sd
+
+    total = 0
+    for l in net.deconv_layers():
+        g = sd.sd_geometry(l.k, l.s, l.p)
+        total += l.in_h * l.in_w * (l.s * g.k_t) ** 2 * l.in_c * l.out_c
+    return total
+
+
+@pytest.mark.parametrize("name", list(PAPER.keys()))
+def test_network_counts_match_paper(name):
+    net = M.NETWORKS[name]
+    total, deconv, nzp, sdm, params, tol = PAPER[name]
+    assert net.total_macs() / 1e6 == pytest.approx(total, rel=tol)
+    assert net.deconv_macs() / 1e6 == pytest.approx(deconv, rel=0.03)
+    assert nzp_macs(net) / 1e6 == pytest.approx(nzp, rel=0.03)
+    assert sd_macs(net) / 1e6 == pytest.approx(sdm, rel=0.03)
+    assert sum(l.params() for l in net.deconv_layers()) / 1e6 == pytest.approx(params, rel=tol)
+
+
+def test_fst_deconv_exact():
+    """FST deconv/NZP/SD MACs are exact; the paper's *total* includes the
+    (training-only) VGG loss network and is reported separately — see
+    EXPERIMENTS.md."""
+    net = M.NETWORKS["FST"]
+    assert net.deconv_macs() / 1e6 == pytest.approx(603.98, rel=1e-3)
+    assert nzp_macs(net) / 1e6 == pytest.approx(2415.92, rel=1e-3)
+    assert sd_macs(net) / 1e6 == pytest.approx(1073.74, rel=1e-3)
+
+
+def test_layer_shapes_consistent():
+    """Each layer's input must match the previous layer's output (chain check
+    along the main path; encoder/decoder boundaries via dense are exempt)."""
+    for net in M.NETWORKS.values():
+        prev = None
+        for l in net.layers:
+            if prev is not None and l.kind != "dense" and prev.kind != "dense":
+                # skip explicit branches (iconv tap points in MDE)
+                if l.in_c == prev.out_c:
+                    assert (l.in_h, l.in_w) == (prev.out_h, prev.out_w), (
+                        f"{net.name}.{l.name}: in {l.in_h}x{l.in_w} != "
+                        f"prev out {prev.out_h}x{prev.out_w}"
+                    )
+            prev = l
+
+
+@pytest.mark.parametrize("impl", ["nzp", "sd"])
+def test_dcgan_generator_impls_match_ref(impl):
+    weights = M.dcgan_weights(seed=7)
+    z = jnp.asarray(np.random.default_rng(5).standard_normal((2, 100), dtype=np.float32))
+    want = M.dcgan_generator(z, weights, "ref")
+    got = M.dcgan_generator(z, weights, impl)
+    assert got.shape == (2, 64, 64, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_dcgan_output_range():
+    weights = M.dcgan_weights(seed=7)
+    z = jnp.asarray(np.random.default_rng(5).standard_normal((1, 100), dtype=np.float32))
+    img = np.asarray(M.dcgan_generator(z, weights, "sd"))
+    assert img.min() >= -1.0 and img.max() <= 1.0
+
+
+@pytest.mark.parametrize(
+    "name,li",
+    [("MDE", "upconv6"), ("FST", "deconv1"), ("ArtGAN", "deconv3"), ("SNGAN", "deconv1")],
+)
+def test_single_layer_impls_agree(name, li):
+    net = M.NETWORKS[name]
+    spec = next(l for l in net.layers if l.name == li)
+    w = M.init_weight(spec, seed=3)
+    x = jnp.asarray(
+        np.random.default_rng(4).standard_normal(
+            (1, spec.in_h, spec.in_w, spec.in_c), dtype=np.float32
+        )
+    )
+    want = M.run_layer(x, w, spec, "ref")
+    assert want.shape == (1, spec.out_h, spec.out_w, spec.out_c)
+    for impl in ("nzp", "sd"):
+        got = M.run_layer(x, w, spec, impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)

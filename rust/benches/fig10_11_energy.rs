@@ -1,0 +1,58 @@
+//! Bench target: Figures 10 and 11 — energy of the deconvolutional layers
+//! on both simulated processors, with the PE/buffer/DRAM breakdown that
+//! drives the paper's Section 5.2.3 analysis.
+
+#[path = "harness.rs"]
+mod harness;
+
+use split_deconv::report;
+use split_deconv::sim::energy::EnergyModel;
+use split_deconv::util;
+
+fn main() {
+    harness::section("Figure 10: energy, dot-production PE array");
+    let f10 = report::fig10(42);
+    report::print_energy_figure("", &f10);
+
+    harness::section("Figure 11: energy, regular 2D PE array");
+    let f11 = report::fig11(42);
+    report::print_energy_figure("", &f11);
+
+    let m = EnergyModel::default();
+    let mut reductions = Vec::new();
+    for row in &f11 {
+        let e = row.normalized_energy(&m);
+        let wasparse = e.iter().find(|(l, _, _)| *l == "SD-WAsparse").unwrap().2;
+        reductions.push(1.0 - wasparse);
+    }
+    println!(
+        "\nSD-WAsparse energy reduction vs NZP: avg {:.1}% (paper band 27.7%-54.5%), per-net {:?}",
+        100.0 * (reductions.iter().sum::<f64>() / reductions.len() as f64),
+        reductions
+            .iter()
+            .map(|r| format!("{:.0}%", r * 100.0))
+            .collect::<Vec<_>>()
+    );
+
+    // FCN-vs-SD energy (paper: FCN higher on all benchmarks)
+    harness::section("FCN-Engine vs SD-WAsparse energy");
+    for row in &f11 {
+        let e = row.normalized_energy(&m);
+        let sd = e.iter().find(|(l, _, _)| *l == "SD-WAsparse").unwrap().2;
+        let fcn = e.iter().find(|(l, _, _)| *l == "FCN").unwrap().2;
+        println!(
+            "{:<10} SD-WAsparse {:.2}  FCN {:.2}  (FCN/SD = {:.2}x)",
+            row.name,
+            sd,
+            fcn,
+            fcn / sd
+        );
+    }
+
+    harness::section("Generation cost");
+    harness::bench("fig10+fig11 full regeneration", 3, || {
+        let _ = report::fig10(42);
+        let _ = report::fig11(42);
+    });
+    let _ = util::geomean(&reductions); // keep util linked
+}

@@ -1,0 +1,60 @@
+//! Bench target: Tables 5-8 and Figures 15/17 — the commodity-device
+//! models (Edge TPU, Intel NCS2), including the tables-only ablation that
+//! exposes the NZP activation-inflation derate assumption.
+
+#[path = "harness.rs"]
+mod harness;
+
+use split_deconv::commodity::{
+    edge_tpu::EdgeTpu, ncs2, nzp_time_s_derated, sd_time_s, EfficiencyModel,
+};
+use split_deconv::{networks, report};
+
+fn main() {
+    harness::section("Tables 5/6: Edge TPU efficiency curves");
+    report::print_eff_table("Table 5 (filter sweep @ fmap 128):", &report::table6(), "k");
+    report::print_eff_table("Table 6 (fmap sweep @ k3):", &report::table5(), "px");
+
+    harness::section("Tables 7/8: NCS2 efficiency curves");
+    report::print_eff_table("Table 7 (fmap sweep @ k3):", &report::table7(), "px");
+    report::print_eff_table("Table 8 (filter sweep @ fmap 128):", &report::table8(), "k");
+
+    harness::section("Figure 15: Edge TPU");
+    let f15 = report::fig15();
+    report::print_speedup_figure("", &f15);
+    println!(
+        "average SD speedup: {:.2}x (paper: 1.51x, max 1.65x on FST)",
+        report::average_speedup(&f15, "SD")
+    );
+
+    harness::section("Figure 17: Intel NCS2");
+    let f17 = report::fig17();
+    report::print_speedup_figure("", &f17);
+    println!(
+        "average SD speedup over NZP: {:.2}x (paper: 1.67x); over native: {:.2}x (paper: 1.10x)",
+        report::average_speedup(&f17, "SD"),
+        report::average_speedup(&f17, "SD") / report::average_speedup(&f17, "Native")
+    );
+
+    harness::section("Ablation: tables-only prediction (derate = 1.0)");
+    let tpu = EdgeTpu;
+    for net in networks::all() {
+        let nzp_model = nzp_time_s_derated(&tpu, &net, 1.0);
+        let nzp_cal = nzp_time_s_derated(&tpu, &net, tpu.nzp_derate());
+        let sd = sd_time_s(&tpu, &net, report::HOST_REORG_GBPS);
+        println!(
+            "{:<10} tables-only SD speedup {:.2}x | calibrated {:.2}x",
+            net.name,
+            nzp_model / sd,
+            nzp_cal / sd
+        );
+    }
+    println!("(tables alone under-predict the measured SD advantage — see commodity/mod.rs)");
+
+    harness::section("Generation cost");
+    harness::bench("fig15+fig17 regeneration", 100, || {
+        let _ = report::fig15();
+        let _ = report::fig17();
+    });
+    let _ = ncs2::native_deconv_time_s(&networks::dcgan());
+}

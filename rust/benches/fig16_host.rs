@@ -1,0 +1,22 @@
+//! Bench target: Figure 16 — NZP vs SD deconvolution layers measured on the
+//! host CPU through the AOT-compiled Pallas artifacts via PJRT. This is a
+//! real wall-clock measurement, not a model (requires `make artifacts`).
+
+#[path = "harness.rs"]
+mod harness;
+
+use split_deconv::commodity::host;
+use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
+
+fn main() {
+    if !artifacts_available() {
+        println!("SKIP fig16: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    harness::section("Figure 16: host CPU, measured wall-clock (PJRT + Pallas kernels)");
+    let mut engine = Engine::new(default_artifact_dir()).expect("engine");
+    println!("platform: {}", engine.platform());
+    let rows = host::measure_fig16(&mut engine, 3).expect("measure");
+    host::print_fig16(&rows);
+    println!("(paper, Intel i7-7700: SD 3.04x average, up to 3.60x on GP-GAN)");
+}

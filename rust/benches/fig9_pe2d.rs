@@ -1,0 +1,62 @@
+//! Bench target: Figure 9 — deconvolutional layers on the regular 2D PE
+//! array (NZP / SD-Asparse / SD-Wsparse / SD-WAsparse / FCN-Engine), plus
+//! the sparse-policy ablation the paper discusses (22% Wsparse->WAsparse
+//! redundancy reduction; 75-80% for expansion workloads).
+
+#[path = "harness.rs"]
+mod harness;
+
+use split_deconv::report;
+use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
+use split_deconv::sim::{pe2d, ProcessorConfig, SkipPolicy};
+use split_deconv::{networks, util};
+
+fn main() {
+    harness::section("Figure 9: regular 2D PE array (normalized to NZP)");
+    let rows = report::fig9(42);
+    report::print_sim_figure("", &rows);
+    let wasparse: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            r.normalized_perf()
+                .iter()
+                .find(|(l, _)| *l == "SD-WAsparse")
+                .unwrap()
+                .1
+        })
+        .collect();
+    println!(
+        "SD-WAsparse average speedup over NZP: {:.2}x (paper band: 2.41x-4.34x)",
+        util::geomean(&wasparse)
+    );
+
+    harness::section("Ablation: what each skip policy buys on SD");
+    let cfg = ProcessorConfig::default();
+    for net in networks::all() {
+        let ops = lower_network_deconvs(&net, Lowering::Sd, 42);
+        let dense = pe2d::simulate(&ops, &cfg, SkipPolicy::None).cycles as f64;
+        let a = pe2d::simulate(&ops, &cfg, SkipPolicy::ASparse).cycles as f64;
+        let w = pe2d::simulate(&ops, &cfg, SkipPolicy::WSparse).cycles as f64;
+        let aw = pe2d::simulate(&ops, &cfg, SkipPolicy::AWSparse).cycles as f64;
+        println!(
+            "{:<10} Asparse -{:.0}%  Wsparse -{:.0}%  WAsparse -{:.0}%  (Wsparse->WAsparse -{:.0}%)",
+            net.name,
+            100.0 * (1.0 - a / dense),
+            100.0 * (1.0 - w / dense),
+            100.0 * (1.0 - aw / dense),
+            100.0 * (1.0 - aw / w),
+        );
+    }
+
+    harness::section("Simulator throughput");
+    let net = networks::mde();
+    let ops = lower_network_deconvs(&net, Lowering::Sd, 42);
+    let macs: u64 = ops.iter().map(|o| o.dense_macs()).sum();
+    let r = harness::bench("simulate MDE SD deconvs (2D array, WAsparse)", 5, || {
+        let _ = pe2d::simulate(&ops, &cfg, SkipPolicy::AWSparse);
+    });
+    println!(
+        "simulated-MAC throughput: {:.0} MMAC/s",
+        macs as f64 / r.min_s / 1e6
+    );
+}

@@ -1,0 +1,56 @@
+//! Minimal benchmark harness (the offline registry has no criterion).
+//! Provides warm-up + repeated timed runs with mean / min / stddev
+//! reporting, and a figure/table printing convention shared by every bench
+//! target. Each bench is a `harness = false` binary run by `cargo bench`.
+
+#![allow(dead_code)] // shared by all bench targets; each uses a subset
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<4} mean={:>10.3}ms  min={:>10.3}ms  sd={:>8.3}ms",
+            self.name,
+            self.iters,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.stddev_s * 1e3
+        );
+    }
+}
+
+/// Time `f` with 1 warm-up + `iters` measured runs.
+pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    f(); // warm-up
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: min,
+        stddev_s: var.sqrt(),
+    };
+    r.report();
+    r
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,86 @@
+//! Bench target: hot-path microbenchmarks for the section-Perf optimization
+//! pass — the rust conv core, the SD transform pipeline, the interleave
+//! (stride-write) step, the simulators' counting loops, and (when artifacts
+//! exist) the serving path end-to-end.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::runtime::{artifacts_available, default_artifact_dir};
+use split_deconv::sd::{interleave, sd_deconv2d, split_filters};
+use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
+use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
+use split_deconv::tensor::{conv2d_valid, deconv2d, Filter, Tensor};
+use split_deconv::util::rng::Rng;
+use split_deconv::networks;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    harness::section("tensor conv core (the quality-eval hot loop)");
+    let x = Tensor::randn(1, 34, 34, 128, &mut rng);
+    let f = Filter::randn(3, 3, 128, 64, &mut rng);
+    let macs = (32 * 32 * 9 * 128 * 64) as f64;
+    let r = harness::bench("conv2d_valid 32x32x128 -> 64 k3", 10, || {
+        let _ = conv2d_valid(&x, &f, 1);
+    });
+    println!("  -> {:.2} GMAC/s", macs / r.min_s / 1e9);
+
+    harness::section("SD transform pipeline vs direct deconv (DCGAN deconv2)");
+    let x = Tensor::randn(1, 16, 16, 128, &mut rng);
+    let w = Filter::randn(5, 5, 128, 64, &mut rng);
+    harness::bench("direct deconv2d k5 s2", 10, || {
+        let _ = deconv2d(&x, &w, 2, 2, 1);
+    });
+    harness::bench("sd_deconv2d k5 s2 (split+4conv+interleave)", 10, || {
+        let _ = sd_deconv2d(&x, &w, 2, 2, 1);
+    });
+    harness::bench("split_filters k5 s2", 100, || {
+        let _ = split_filters(&w, 2);
+    });
+    let convs: Vec<Tensor> = (0..4).map(|_| Tensor::randn(1, 17, 17, 64, &mut rng)).collect();
+    harness::bench("interleave (stride-write) 4x17x17x64", 200, || {
+        let _ = interleave(&convs, 2);
+    });
+
+    harness::section("simulator counting loops");
+    let cfg = ProcessorConfig::default();
+    let ops_sd = lower_network_deconvs(&networks::fst(), Lowering::Sd, 42);
+    let ops_nzp = lower_network_deconvs(&networks::fst(), Lowering::Nzp, 42);
+    harness::bench("pe2d FST SD WAsparse", 5, || {
+        let _ = pe2d::simulate(&ops_sd, &cfg, SkipPolicy::AWSparse);
+    });
+    harness::bench("dot_array FST NZP Asparse", 5, || {
+        let _ = dot_array::simulate(&ops_nzp, &cfg, SkipPolicy::ASparse);
+    });
+
+    if artifacts_available() {
+        harness::section("serving path (PJRT DCGAN, end to end)");
+        let server = Server::start_pjrt(
+            ServerConfig {
+                max_batch: 4,
+                batch_timeout: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+            default_artifact_dir(),
+            "dcgan_sd".into(),
+        )
+        .expect("server");
+        let mut rng = Rng::new(2);
+        harness::bench("serve 16 requests (batched)", 5, || {
+            let rxs: Vec<_> = (0..16)
+                .map(|_| server.submit_blocking(rng.normal_vec(100)).unwrap())
+                .collect();
+            for rx in rxs {
+                let _ = rx.recv().unwrap();
+            }
+        });
+        println!("{}", server.metrics().summary());
+        server.shutdown();
+    } else {
+        println!("\n(serving bench skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench target: regenerate the paper's Tables 1-4 (and time their
+//! generation). Run: `cargo bench --bench paper_tables`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use split_deconv::report;
+
+fn main() {
+    harness::section("Paper tables (counts vs the published values)");
+    report::print_table1();
+    println!();
+    report::print_table2();
+    println!();
+    report::print_table3();
+    println!();
+    report::print_table4(2); // FST at 128x128 for tractable wall-clock
+    println!();
+
+    harness::section("Generation cost");
+    harness::bench("tables 1-3 (pure counting)", 50, || {
+        let _ = report::table1();
+        let _ = report::table2();
+        let _ = report::table3();
+    });
+    harness::bench("table 4 (full generator quality eval)", 3, || {
+        let _ = report::quality::table4(4);
+    });
+}

@@ -1,0 +1,94 @@
+//! Host-CPU experiment (paper Figure 16): run the per-layer NZP and SD
+//! artifacts through the PJRT runtime and compare *measured wall-clock*.
+//! This is the one commodity experiment that is a real measurement rather
+//! than a calibrated model: both implementations execute through the same
+//! AOT-compiled Pallas convolution kernel on this machine's CPU.
+
+use anyhow::Result;
+
+use crate::runtime::{read_bin, Engine};
+use crate::util::time_it;
+
+/// Measured times for one network's deconv layers.
+#[derive(Clone, Debug)]
+pub struct HostRow {
+    pub network: String,
+    pub nzp_s: f64,
+    pub sd_s: f64,
+}
+
+impl HostRow {
+    pub fn speedup(&self) -> f64 {
+        self.nzp_s / self.sd_s
+    }
+}
+
+/// Time every `layer_*` artifact pair and aggregate per network.
+/// `iters` controls timing repetitions per layer.
+pub fn measure_fig16(engine: &mut Engine, iters: usize) -> Result<Vec<HostRow>> {
+    let nets: Vec<String> = {
+        let mut v: Vec<String> = engine
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "layer")
+            .map(|a| a.network.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+
+    let mut rows = Vec::new();
+    for net in nets {
+        let mut nzp_s = 0.0;
+        let mut sd_s = 0.0;
+        let names: Vec<(String, String)> = engine
+            .manifest()
+            .select(|a| a.kind == "layer" && a.network == net)
+            .iter()
+            .map(|a| (a.name.clone(), a.impl_.clone()))
+            .collect();
+        for (name, impl_) in names {
+            let t = time_layer(engine, &name, iters)?;
+            match impl_.as_str() {
+                "nzp" => nzp_s += t,
+                "sd" => sd_s += t,
+                _ => {}
+            }
+        }
+        rows.push(HostRow {
+            network: net,
+            nzp_s,
+            sd_s,
+        });
+    }
+    Ok(rows)
+}
+
+/// Wall-clock one artifact (input from its golden bin; excludes compile).
+pub fn time_layer(engine: &mut Engine, name: &str, iters: usize) -> Result<f64> {
+    let compiled = engine.load(name)?;
+    let input = read_bin(&compiled.spec.inputs[0].bin)?;
+    // warm-up
+    let _ = compiled.run(&input)?;
+    Ok(time_it(iters, || {
+        let _ = compiled.run(&input).expect("layer execution failed");
+    }))
+}
+
+pub fn print_fig16(rows: &[HostRow]) {
+    println!("Figure 16: host-CPU deconv layers, measured wall-clock (normalized to NZP = 1.0)");
+    let mut speedups = Vec::new();
+    for r in rows {
+        println!(
+            "{:<10} NZP={:.2}ms SD={:.2}ms  SD speedup {:.2}x",
+            r.network,
+            r.nzp_s * 1e3,
+            r.sd_s * 1e3,
+            r.speedup()
+        );
+        speedups.push(r.speedup());
+    }
+    println!("average speedup {:.2}x", crate::util::geomean(&speedups));
+}

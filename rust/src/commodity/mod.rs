@@ -1,0 +1,136 @@
+//! Analytical performance models of the commodity neural-network processors
+//! the paper evaluates in Section 5.3 (we have no physical Edge TPU / NCS2 —
+//! see DESIGN.md section 6 for the substitution argument).
+//!
+//! Both chips exhibit strongly size-dependent computational efficiency: the
+//! paper measures GMACPS versus feature-map size (Tables 5/7) and filter
+//! size (Tables 6/8) and explains the entire SD-vs-NZP speedup gap between
+//! "MAC-count prediction" and "measured" with those curves. The models here
+//! are those curves, so the benches reproduce Figures 15 and 17 and the
+//! degradation analysis.
+
+pub mod edge_tpu;
+pub mod host;
+pub mod ncs2;
+
+use crate::nn::{LayerSpec, NetworkSpec};
+use crate::sd::SdGeometry;
+
+/// A device's efficiency model: GMACPS as a function of (square) feature-map
+/// side and filter side, factorized as base * f(fmap) * g(filter), which is
+/// how the paper's Tables 5-8 are normalized.
+pub trait EfficiencyModel {
+    /// normalized efficiency vs feature-map side (Table 5 / 7 column)
+    fn fmap_factor(&self, side: usize) -> f64;
+    /// normalized efficiency vs filter side (Table 6 / 8 column)
+    fn filter_factor(&self, k: usize) -> f64;
+    /// absolute GMACPS at the normalization point (fmap 128, k 3)
+    fn base_gmacps(&self) -> f64;
+
+    /// device-specific NZP activation-inflation derate (see
+    /// [`NZP_INFLATION_DERATE`]); calibrated per device to the paper's
+    /// measured Figure 15 / 17 averages.
+    fn nzp_derate(&self) -> f64 {
+        NZP_INFLATION_DERATE
+    }
+
+    fn gmacps(&self, fmap_side: usize, k: usize) -> f64 {
+        // tables normalize fmap at k=3 and filter at fmap=128
+        self.base_gmacps() * self.fmap_factor(fmap_side) / self.fmap_factor(128)
+            * self.filter_factor(k)
+            / self.filter_factor(3)
+    }
+
+    /// Seconds to run `macs` MACs at the given geometry.
+    fn time_s(&self, macs: u64, fmap_side: usize, k: usize) -> f64 {
+        macs as f64 / (self.gmacps(fmap_side, k) * 1e9)
+    }
+}
+
+/// Piecewise-linear interpolation over (x, factor) anchor points.
+pub(crate) fn interp(points: &[(f64, f64)], x: f64) -> f64 {
+    if x <= points[0].0 {
+        return points[0].1;
+    }
+    for w in points.windows(2) {
+        let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+        if x <= x1 {
+            return y0 + (y1 - y0) * (x - x0) / (x1 - x0);
+        }
+    }
+    points.last().unwrap().1
+}
+
+/// Activation-inflation derate applied to NZP's dense convolution.
+///
+/// The paper's efficiency tables (5-8) alone would predict NZP ~on par with
+/// SD (bigger kernels are *more* efficient per MAC on both devices), yet the
+/// paper *measures* SD 1.51x / 1.67x faster. The residual is the cost of the
+/// s^2-inflated activation working set that NZP streams through the device
+/// (bandwidth + on-chip tiling pressure), which the k/fmap probe sweeps do
+/// not expose. This constant calibrates that effect; the ablation bench
+/// (`cargo bench fig15_17_commodity`) also reports the derate=1.0
+/// tables-only prediction to make the modeling assumption visible.
+pub const NZP_INFLATION_DERATE: f64 = 0.55;
+
+/// Time for a network's deconv layers under NZP on a modeled device.
+/// NZP runs one dense conv per layer at the output resolution with the
+/// original filter size, derated by the inflated activation working set.
+pub fn nzp_time_s<M: EfficiencyModel>(m: &M, net: &NetworkSpec) -> f64 {
+    nzp_time_s_derated(m, net, m.nzp_derate())
+}
+
+/// NZP time with an explicit derate (1.0 = tables-only ablation).
+pub fn nzp_time_s_derated<M: EfficiencyModel>(m: &M, net: &NetworkSpec, derate: f64) -> f64 {
+    net.deconv_layers()
+        .map(|l| {
+            let fmap = ((l.out_h() + l.out_w()) / 2).max(1);
+            m.time_s(l.nzp_macs(), fmap, l.k) / derate
+        })
+        .sum()
+}
+
+/// Time for a network's deconv layers under SD: s^2 convolutions with the
+/// small K_T filter at roughly input resolution, plus the host-side output
+/// reorganization (per the paper's measurement protocol: "we only take the
+/// split deconvolution computing time and the data reorganization time").
+pub fn sd_time_s<M: EfficiencyModel>(m: &M, net: &NetworkSpec, host_reorg_gbps: f64) -> f64 {
+    net.deconv_layers()
+        .map(|l| {
+            let g = SdGeometry::new(l.k, l.s, l.p);
+            let conv_side = ((l.in_h + l.in_w) / 2 + g.k_t - 1).max(1);
+            let compute = m.time_s(l.sd_macs(), conv_side, g.k_t);
+            // reorganization: one pass over the output bytes on the host
+            let out_bytes = (l.out_h() * l.out_w() * l.out_c) as f64;
+            compute + out_bytes / (host_reorg_gbps * 1e9)
+        })
+        .sum()
+}
+
+/// Per-layer times of one deconv layer (used by reports for breakdowns).
+pub fn layer_times_s<M: EfficiencyModel>(
+    m: &M,
+    l: &LayerSpec,
+    host_reorg_gbps: f64,
+) -> (f64, f64) {
+    let fmap = ((l.out_h() + l.out_w()) / 2).max(1);
+    let nzp = m.time_s(l.nzp_macs(), fmap, l.k);
+    let g = SdGeometry::new(l.k, l.s, l.p);
+    let conv_side = ((l.in_h + l.in_w) / 2 + g.k_t - 1).max(1);
+    let out_bytes = (l.out_h() * l.out_w() * l.out_c) as f64;
+    let sd = m.time_s(l.sd_macs(), conv_side, g.k_t) + out_bytes / (host_reorg_gbps * 1e9);
+    (nzp, sd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_endpoints_and_middle() {
+        let pts = [(2.0, 1.0), (4.0, 3.0)];
+        assert_eq!(interp(&pts, 1.0), 1.0);
+        assert_eq!(interp(&pts, 5.0), 3.0);
+        assert!((interp(&pts, 3.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Intel Neural Compute Stick 2 efficiency model, calibrated to the paper's
+//! Tables 7 and 8, plus its *native deconvolution* path (NCS2 has dedicated
+//! hardware support; the paper still measures SD 1.10x faster on average —
+//! Figure 17).
+
+use super::{interp, EfficiencyModel};
+use crate::nn::NetworkSpec;
+
+pub struct Ncs2;
+
+/// Paper Table 7 (feature-map sweep at k=3): side -> normalized GMACPS.
+const FMAP: &[(f64, f64)] = &[
+    (8.0, 1.0),
+    (16.0, 4.55),
+    (32.0, 10.70),
+    (64.0, 14.71),
+    (128.0, 15.45),
+];
+
+/// Paper Table 8 (filter sweep at fmap=128): k -> normalized GMACPS.
+const FILTER: &[(f64, f64)] = &[(2.0, 1.0), (3.0, 2.14), (4.0, 3.64), (5.0, 5.22)];
+
+impl EfficiencyModel for Ncs2 {
+    fn fmap_factor(&self, side: usize) -> f64 {
+        interp(FMAP, side as f64)
+    }
+
+    fn filter_factor(&self, k: usize) -> f64 {
+        interp(FILTER, (k as f64).max(1.0)).max(0.4)
+    }
+
+    fn base_gmacps(&self) -> f64 {
+        // NCS2 ~1 TOPS effective on its VPU; normalized anchor at (128, k3).
+        90.0
+    }
+
+    fn nzp_derate(&self) -> f64 {
+        // NCS2's steep feature-map efficiency curve (Table 7: 1x -> 15.45x)
+        // punishes SD's input-resolution convolutions harder than the Edge
+        // TPU's; the measured 1.67x average (Fig 17) implies a stronger
+        // inflation cost on the NZP side. Calibrated to that average.
+        0.40
+    }
+}
+
+/// Native deconvolution on the NCS2's dedicated hardware path.
+///
+/// Modeled as the original deconvolution MACs executed at the device's
+/// efficiency for the layer's *input* geometry with the full filter, times a
+/// native-path overhead factor: the vendor engine internally performs the
+/// overlap-add scatter, which leaves it behind the SD formulation despite
+/// executing fewer MACs (the paper measures SD/native = 1.10x on average).
+/// The 3.4 factor is this model's single calibration constant: it absorbs
+/// the scatter-accumulate's poor utilization of the VPU's dense conv engine.
+pub fn native_deconv_time_s(net: &NetworkSpec) -> f64 {
+    let m = Ncs2;
+    net.deconv_layers()
+        .map(|l| {
+            let fmap = ((l.in_h + l.in_w) / 2).max(1);
+            m.time_s(l.macs(), fmap, l.k) * 3.4
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::commodity::{nzp_time_s, sd_time_s};
+    use crate::networks;
+
+    #[test]
+    fn table_anchor_values() {
+        let t = Ncs2;
+        assert!((t.fmap_factor(32) - 10.70).abs() < 1e-9);
+        assert!((t.filter_factor(4) - 3.64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig17_ordering_nzp_native_sd() {
+        // paper: SD 1.67x over NZP, 1.10x over native (averages)
+        let t = Ncs2;
+        let mut sd_vs_nzp = Vec::new();
+        let mut sd_vs_native = Vec::new();
+        for net in networks::all() {
+            let nzp = nzp_time_s(&t, &net);
+            let sd = sd_time_s(&t, &net, 8.0);
+            let native = native_deconv_time_s(&net);
+            sd_vs_nzp.push(nzp / sd);
+            sd_vs_native.push(native / sd);
+        }
+        let a = crate::util::geomean(&sd_vs_nzp);
+        let b = crate::util::geomean(&sd_vs_native);
+        assert!(a > 1.2 && a < 2.6, "sd/nzp {a}");
+        assert!(b > 0.9 && b < 1.8, "sd/native {b}");
+        // orderings hold: SD fastest on average, native second, NZP last
+        assert!(a > b, "nzp should be slower than native on average");
+    }
+}
+
+#[cfg(test)]
+mod dbg_tests {
+    use super::*;
+    use crate::commodity::{nzp_time_s, sd_time_s};
+    use crate::networks;
+
+    #[test]
+    fn print_native_breakdown() {
+        let t = Ncs2;
+        for net in networks::all() {
+            let nzp = nzp_time_s(&t, &net);
+            let sd = sd_time_s(&t, &net, 8.0);
+            let nat = native_deconv_time_s(&net);
+            println!(
+                "{:8} nzp {:.3}ms sd {:.3}ms native {:.3}ms  sd/nzp {:.2} native/sd {:.2}",
+                net.name, nzp * 1e3, sd * 1e3, nat * 1e3, nzp / sd, nat / sd
+            );
+        }
+    }
+}

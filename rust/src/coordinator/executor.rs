@@ -1,0 +1,134 @@
+//! Batch executors: the interface between the coordinator (batching,
+//! routing, backpressure) and the compute backend.
+//!
+//! The production executor runs the AOT-compiled DCGAN generator through the
+//! PJRT runtime. Because PJRT handles are not `Send`, executors are
+//! constructed *inside* the dispatcher thread via a `Send` factory closure
+//! (see [`super::Server::start_with`]); tests plug in a mock.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+
+/// Runs batches of latent vectors into batches of images.
+pub trait BatchExecutor {
+    /// Batch sizes with a compiled executable, ascending.
+    fn supported_batches(&self) -> &[usize];
+    /// Latent-vector length (input 0 per request).
+    fn z_len(&self) -> usize;
+    /// Flattened image length per request.
+    fn image_len(&self) -> usize;
+    /// Execute a batch; returns one image per request, in order.
+    fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Pick the execution batch size for `n` queued requests: the smallest
+/// supported size >= n, else the largest supported (callers chunk).
+pub fn plan_batch(supported: &[usize], n: usize) -> usize {
+    debug_assert!(!supported.is_empty());
+    for &b in supported {
+        if b >= n {
+            return b;
+        }
+    }
+    *supported.last().unwrap()
+}
+
+/// PJRT-backed executor for the DCGAN generator artifacts
+/// (`dcgan_sd_b1`, `dcgan_sd_b4`, ... per the manifest).
+pub struct PjrtExecutor {
+    engine: Engine,
+    names: Vec<(usize, String)>, // (batch, artifact name), ascending
+    batches: Vec<usize>,
+    z_len: usize,
+    image_len: usize,
+}
+
+impl PjrtExecutor {
+    /// `prefix` selects the model family, e.g. "dcgan_sd".
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>, prefix: &str) -> Result<Self> {
+        let mut engine = Engine::new(artifact_dir)?;
+        let mut names: Vec<(usize, String)> = engine
+            .manifest()
+            .select(|a| a.kind == "model" && a.name.starts_with(prefix))
+            .iter()
+            .map(|a| (a.batch, a.name.clone()))
+            .collect();
+        names.sort();
+        if names.is_empty() {
+            bail!("no model artifacts with prefix {prefix}");
+        }
+        // compile all variants up front (AOT: no compile on the hot path)
+        let mut z_len = 0;
+        let mut image_len = 0;
+        for (b, name) in &names {
+            let c = engine.load(name)?;
+            z_len = c.spec.inputs[0].numel() / b;
+            image_len = c.spec.output.numel() / b;
+        }
+        let batches = names.iter().map(|(b, _)| *b).collect();
+        Ok(PjrtExecutor {
+            engine,
+            names,
+            batches,
+            z_len,
+            image_len,
+        })
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn z_len(&self) -> usize {
+        self.z_len
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(batch.len());
+        let mut cursor = 0;
+        while cursor < batch.len() {
+            let remaining = batch.len() - cursor;
+            let b = plan_batch(&self.batches, remaining);
+            let take = remaining.min(b);
+            let name = self
+                .names
+                .iter()
+                .find(|(nb, _)| *nb == b)
+                .map(|(_, n)| n.clone())
+                .unwrap();
+            // pack + zero-pad to the executable's batch size
+            let mut z = vec![0.0f32; b * self.z_len];
+            for (i, req) in batch[cursor..cursor + take].iter().enumerate() {
+                z[i * self.z_len..(i + 1) * self.z_len].copy_from_slice(req);
+            }
+            let compiled = self.engine.load(&name)?;
+            let flat = compiled.run(&z)?;
+            for i in 0..take {
+                out.push(flat[i * self.image_len..(i + 1) * self.image_len].to_vec());
+            }
+            cursor += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_batch_picks_smallest_covering() {
+        let s = [1, 4];
+        assert_eq!(plan_batch(&s, 1), 1);
+        assert_eq!(plan_batch(&s, 2), 4);
+        assert_eq!(plan_batch(&s, 4), 4);
+        assert_eq!(plan_batch(&s, 9), 4); // chunked by caller
+    }
+}

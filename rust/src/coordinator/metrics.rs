@@ -1,0 +1,139 @@
+//! Serving metrics: throughput, latency distribution, batch-size histogram.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug)]
+struct Inner {
+    started: Instant,
+    served: u64,
+    batches: u64,
+    errors: u64,
+    batch_hist: [u64; 65], // index = batch size (cap 64)
+    latencies_us: Vec<u64>,
+    compute_us_total: u64,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            started: Instant::now(),
+            served: 0,
+            batches: 0,
+            errors: 0,
+            batch_hist: [0; 65],
+            latencies_us: Vec::new(),
+            compute_us_total: 0,
+        }
+    }
+}
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, compute_us: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.served += size as u64;
+        m.batch_hist[size.min(64)] += 1;
+        m.compute_us_total += compute_us;
+    }
+
+    pub fn record_latency(&self, us: u64) {
+        self.inner.lock().unwrap().latencies_us.push(us);
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let elapsed = m.started.elapsed().as_secs_f64();
+        let mut lat = m.latencies_us.iter().map(|v| *v as f64).collect::<Vec<_>>();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let r = ((p / 100.0) * (lat.len() as f64 - 1.0)).round() as usize;
+            lat[r.min(lat.len() - 1)]
+        };
+        MetricsSnapshot {
+            served: m.served,
+            batches: m.batches,
+            errors: m.errors,
+            throughput_rps: if elapsed > 0.0 {
+                m.served as f64 / elapsed
+            } else {
+                0.0
+            },
+            mean_batch: if m.batches > 0 {
+                m.served as f64 / m.batches as f64
+            } else {
+                0.0
+            },
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            batch_hist: m.batch_hist,
+            mean_compute_us: if m.batches > 0 {
+                m.compute_us_total as f64 / m.batches as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// A point-in-time view of the metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub batch_hist: [u64; 65],
+    pub mean_compute_us: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn summary(&self) -> String {
+        format!(
+            "served={} batches={} errors={} mean_batch={:.2} p50={:.0}us p95={:.0}us p99={:.0}us mean_compute={:.0}us",
+            self.served, self.batches, self.errors, self.mean_batch,
+            self.p50_us, self.p95_us, self.p99_us, self.mean_compute_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(4, 100);
+        m.record_batch(2, 50);
+        m.record_latency(10);
+        m.record_latency(20);
+        m.record_latency(30);
+        let s = m.snapshot();
+        assert_eq!(s.served, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batch_hist[4], 1);
+        assert_eq!(s.batch_hist[2], 1);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert_eq!(s.p50_us, 20.0);
+        assert_eq!(s.p99_us, 30.0);
+    }
+}

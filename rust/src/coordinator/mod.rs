@@ -1,0 +1,253 @@
+//! L3 coordinator: the serving stack around the AOT-compiled generator.
+//!
+//! A bounded request queue feeds a dispatcher thread that owns the compute
+//! backend (PJRT handles are not `Send`, so the backend is constructed
+//! inside the thread from a `Send` factory). The dispatcher implements
+//! *dynamic batching*: it blocks for the first request, then drains the
+//! queue up to `max_batch` or until `batch_timeout` elapses, packs the
+//! latents, runs one executable call, and fans responses back out.
+//! Backpressure is the bounded queue: `submit` fails fast when full.
+//!
+//! Invariants (tested in rust/tests/coordinator.rs):
+//! * every submitted request gets exactly one response (no drop/dup);
+//! * responses carry the request's own image (order-independent identity);
+//! * queue length never exceeds `queue_cap`;
+//! * batch sizes never exceed `max_batch`.
+
+pub mod executor;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+pub use executor::{BatchExecutor, PjrtExecutor};
+pub use metrics::{Metrics, MetricsSnapshot};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// maximum requests packed into one executable call
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch after the first arrival
+    pub batch_timeout: Duration,
+    /// bounded queue depth (backpressure limit)
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(2),
+            queue_cap: 64,
+        }
+    }
+}
+
+/// A generation request: latent vector in, image out.
+struct Request {
+    id: u64,
+    z: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub image: Vec<f32>,
+    /// time spent waiting in queue + batcher
+    pub queue_us: u64,
+    /// executable wall time for the whole batch
+    pub compute_us: u64,
+    /// how many requests shared the executable call
+    pub batch_size: usize,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Server {
+    tx: SyncSender<Msg>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start with a backend factory (runs inside the dispatcher thread).
+    pub fn start_with<F, E>(cfg: ServerConfig, factory: F) -> Result<Server>
+    where
+        F: FnOnce() -> Result<E> + Send + 'static,
+        E: BatchExecutor,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        // report backend construction success/failure synchronously
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("sd-dispatcher".into())
+            .spawn(move || {
+                let exec = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                dispatch_loop(rx, exec, cfg, m2);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("dispatcher died during startup"))??;
+        Ok(Server {
+            tx,
+            next_id: AtomicU64::new(0),
+            metrics,
+            handle: Some(handle),
+        })
+    }
+
+    /// Start the production PJRT server for a model artifact prefix.
+    pub fn start_pjrt(
+        cfg: ServerConfig,
+        artifact_dir: std::path::PathBuf,
+        prefix: String,
+    ) -> Result<Server> {
+        Self::start_with(cfg, move || PjrtExecutor::new(artifact_dir, &prefix))
+    }
+
+    /// Submit a latent vector. Returns a receiver for the response, or an
+    /// error immediately if the queue is full (backpressure) or closed.
+    pub fn submit(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            z,
+            submitted: Instant::now(),
+            resp: resp_tx,
+        };
+        match self.tx.try_send(Msg::Req(req)) {
+            Ok(()) => Ok(resp_rx),
+            Err(TrySendError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        }
+    }
+
+    /// Submit, blocking while the queue is full.
+    pub fn submit_blocking(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Req(Request {
+                id,
+                z,
+                submitted: Instant::now(),
+                resp: resp_tx,
+            }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(resp_rx)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch_loop<E: BatchExecutor>(
+    rx: Receiver<Msg>,
+    mut exec: E,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_timeout;
+        let mut shutdown = false;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        let zs: Vec<Vec<f32>> = batch.iter().map(|r| r.z.clone()).collect();
+        let t0 = Instant::now();
+        match exec.execute(&zs) {
+            Ok(images) => {
+                let compute_us = t0.elapsed().as_micros() as u64;
+                metrics.record_batch(batch.len(), compute_us);
+                for (req, image) in batch.into_iter().zip(images) {
+                    let queue_us = req.submitted.elapsed().as_micros() as u64 - compute_us.min(
+                        req.submitted.elapsed().as_micros() as u64,
+                    );
+                    let total_us = req.submitted.elapsed().as_micros() as u64;
+                    metrics.record_latency(total_us);
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        image,
+                        queue_us,
+                        compute_us,
+                        batch_size: zs.len(),
+                    });
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                // drop the responders: receivers observe disconnection
+                eprintln!("batch execution failed: {e:#}");
+            }
+        }
+
+        if shutdown {
+            return;
+        }
+    }
+}

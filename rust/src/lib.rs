@@ -1,0 +1,30 @@
+//! # split-deconv
+//!
+//! Reproduction of *"Accelerating Generative Neural Networks on Unmodified
+//! Deep Learning Processors — A Software Approach"* (Xu, Wang, Tu, Liu, He,
+//! Zhang; 2019) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L1** (python, build time): Pallas stride-1 convolution kernel — the
+//!   compute shape every split deconvolution lowers to.
+//! * **L2** (python, build time): JAX generator models, AOT-lowered to HLO
+//!   text under `artifacts/`.
+//! * **L3** (this crate): the [`coordinator`] serving stack over the
+//!   [`runtime`] PJRT engine, the [`sd`] transform and its baselines, the
+//!   cycle-accurate [`sim`] processor simulators, the [`commodity`] device
+//!   models, and the [`report`] generators for every table and figure in
+//!   the paper.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod commodity;
+pub mod coordinator;
+pub mod metrics;
+pub mod networks;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod sd;
+pub mod sim;
+pub mod tensor;
+pub mod util;

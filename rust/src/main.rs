@@ -1,0 +1,229 @@
+//! `repro` — CLI for the split-deconvolution reproduction.
+//!
+//! Subcommands:
+//!   report <table1|table2|table3|table4|fig8|fig9|fig10|fig11|
+//!           table5|table6|table7|table8|fig15|fig16|fig17|all>
+//!   verify  [--limit N]        golden-check AOT artifacts via PJRT
+//!   serve   [--requests N] [--batch B]   run the DCGAN serving demo
+//!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
+//!
+//! (Arg parsing is hand-rolled: the offline registry has no clap.)
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::report;
+use split_deconv::runtime::{default_artifact_dir, Engine};
+use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
+use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
+use split_deconv::util::rng::Rng;
+use split_deconv::{commodity, networks};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("report") => report_cmd(args.get(1).map(String::as_str).unwrap_or("all"), args),
+        Some("verify") => verify_cmd(args),
+        Some("serve") => serve_cmd(args),
+        Some("simulate") => simulate_cmd(args),
+        Some(other) => bail!("unknown command {other}; try report/verify/serve/simulate"),
+        None => {
+            println!("repro — split deconvolution reproduction");
+            println!("usage: repro <report|verify|serve|simulate> ...");
+            Ok(())
+        }
+    }
+}
+
+fn report_cmd(which: &str, args: &[String]) -> Result<()> {
+    let seed = flag_value(args, "--seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42u64);
+    let all = which == "all";
+    if all || which == "table1" {
+        report::print_table1();
+        println!();
+    }
+    if all || which == "table2" {
+        report::print_table2();
+        println!();
+    }
+    if all || which == "table3" {
+        report::print_table3();
+        println!();
+    }
+    if all || which == "table4" {
+        report::print_table4(2);
+        println!();
+    }
+    if all || which == "fig8" {
+        report::print_sim_figure("Figure 8: dot-production PE array", &report::fig8(seed));
+        println!();
+    }
+    if all || which == "fig9" {
+        report::print_sim_figure("Figure 9: regular 2D PE array", &report::fig9(seed));
+        println!();
+    }
+    if all || which == "fig10" {
+        report::print_energy_figure("Figure 10: energy, dot-production array", &report::fig10(seed));
+        println!();
+    }
+    if all || which == "fig11" {
+        report::print_energy_figure("Figure 11: energy, 2D PE array", &report::fig11(seed));
+        println!();
+    }
+    if all || which == "table5" {
+        report::print_eff_table("Table 5 (reported as Table 6 sweep): Edge TPU GMACPS vs feature map", &report::table5(), "px");
+        println!();
+    }
+    if all || which == "table6" {
+        report::print_eff_table("Table 6: Edge TPU GMACPS vs filter size", &report::table6(), "k");
+        println!();
+    }
+    if all || which == "table7" {
+        report::print_eff_table("Table 7: NCS2 GMACPS vs feature map", &report::table7(), "px");
+        println!();
+    }
+    if all || which == "table8" {
+        report::print_eff_table("Table 8: NCS2 GMACPS vs filter size", &report::table8(), "k");
+        println!();
+    }
+    if all || which == "fig15" {
+        let rows = report::fig15();
+        report::print_speedup_figure("Figure 15: Edge TPU", &rows);
+        println!("average SD speedup {:.2}x", report::average_speedup(&rows, "SD"));
+        println!();
+    }
+    if all || which == "fig17" {
+        let rows = report::fig17();
+        report::print_speedup_figure("Figure 17: Intel NCS2", &rows);
+        println!("average SD speedup {:.2}x", report::average_speedup(&rows, "SD"));
+        println!();
+    }
+    if which == "fig16" {
+        let mut engine = Engine::new(default_artifact_dir())?;
+        let rows = commodity::host::measure_fig16(&mut engine, 3)?;
+        commodity::host::print_fig16(&rows);
+    } else if all {
+        println!("(fig16 runs real PJRT measurements: `repro report fig16`)");
+    }
+    Ok(())
+}
+
+fn verify_cmd(args: &[String]) -> Result<()> {
+    let limit: usize = flag_value(args, "--limit")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(usize::MAX);
+    let mut engine = Engine::new(default_artifact_dir())?;
+    println!("platform: {}", engine.platform());
+    let names: Vec<String> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .take(limit)
+        .collect();
+    let mut worst = 0.0f32;
+    for name in names {
+        let err = engine.verify(&name)?;
+        worst = worst.max(err);
+        println!("{name:<28} max|err| = {err:.3e}");
+    }
+    println!("worst: {worst:.3e}");
+    if worst > 1e-3 {
+        bail!("golden check failed");
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &[String]) -> Result<()> {
+    let n: usize = flag_value(args, "--requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let max_batch: usize = flag_value(args, "--batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cfg = ServerConfig {
+        max_batch,
+        batch_timeout: Duration::from_millis(2),
+        queue_cap: 128,
+    };
+    let server = Server::start_pjrt(cfg, default_artifact_dir(), "dcgan_sd".into())?;
+    println!("serving DCGAN (SD path) — {n} requests, max batch {max_batch}");
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        pending.push(server.submit_blocking(rng.normal_vec(100))?);
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if i == 0 {
+            println!(
+                "first image: {} floats, range [{:.2}, {:.2}]",
+                resp.image.len(),
+                resp.image.iter().cloned().fold(f32::INFINITY, f32::min),
+                resp.image.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+            );
+        }
+    }
+    println!("{}", server.metrics().summary());
+    server.shutdown();
+    Ok(())
+}
+
+fn simulate_cmd(args: &[String]) -> Result<()> {
+    let net_name = args.get(1).map(String::as_str).unwrap_or("DCGAN");
+    let how = match args.get(2).map(String::as_str).unwrap_or("sd") {
+        "nzp" => Lowering::Nzp,
+        "sd" => Lowering::Sd,
+        other => bail!("unknown lowering {other}"),
+    };
+    let policy = match flag_value(args, "--policy").unwrap_or("awsparse") {
+        "none" => SkipPolicy::None,
+        "asparse" => SkipPolicy::ASparse,
+        "wsparse" => SkipPolicy::WSparse,
+        "awsparse" => SkipPolicy::AWSparse,
+        other => bail!("unknown policy {other}"),
+    };
+    let arch = flag_value(args, "--arch").unwrap_or("2d");
+    let net = networks::by_name(net_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {net_name}"))?;
+    let ops = lower_network_deconvs(&net, how, 42);
+    let cfg = ProcessorConfig::default();
+    let stats = match arch {
+        "dot" => dot_array::simulate(&ops, &cfg, policy),
+        "2d" => pe2d::simulate(&ops, &cfg, policy),
+        other => bail!("unknown arch {other}"),
+    };
+    println!(
+        "{net_name} {how:?} {policy:?} on {arch}: cycles={} time={:.1}us util={:.1}% skipped={}",
+        stats.cycles,
+        stats.time_us(cfg.freq_mhz),
+        100.0 * stats.utilization(),
+        stats.cycles_skipped
+    );
+    let e = split_deconv::sim::energy::energy(&stats, &Default::default());
+    println!(
+        "energy: PE {:.1}uJ buffer {:.1}uJ DRAM {:.1}uJ total {:.1}uJ",
+        e.pe_uj,
+        e.buffer_uj,
+        e.dram_uj,
+        e.total_uj()
+    );
+    Ok(())
+}

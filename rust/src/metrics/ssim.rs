@@ -1,0 +1,184 @@
+//! SSIM — structural similarity index (Wang, Bovik, Sheikh, Simoncelli 2004),
+//! the metric the paper uses in Table 4 to compare deconvolution conversion
+//! approaches. Standard parameters: 11x11 gaussian window, sigma 1.5,
+//! K1=0.01, K2=0.03, dynamic range L given by the caller.
+
+use crate::tensor::Tensor;
+
+const WIN: usize = 11;
+const SIGMA: f64 = 1.5;
+const K1: f64 = 0.01;
+const K2: f64 = 0.03;
+
+fn gaussian_kernel() -> [f64; WIN] {
+    let mut k = [0.0; WIN];
+    let c = (WIN / 2) as f64;
+    let mut sum = 0.0;
+    for (i, v) in k.iter_mut().enumerate() {
+        let d = i as f64 - c;
+        *v = (-d * d / (2.0 * SIGMA * SIGMA)).exp();
+        sum += *v;
+    }
+    for v in &mut k {
+        *v /= sum;
+    }
+    k
+}
+
+/// Separable gaussian blur of a single-channel image (valid region only).
+fn blur(img: &[f64], h: usize, w: usize) -> (Vec<f64>, usize, usize) {
+    let k = gaussian_kernel();
+    let oh = h - WIN + 1;
+    let ow = w - WIN + 1;
+    // horizontal pass
+    let mut tmp = vec![0.0; h * ow];
+    for y in 0..h {
+        for x in 0..ow {
+            let mut acc = 0.0;
+            for (i, kv) in k.iter().enumerate() {
+                acc += img[y * w + x + i] * kv;
+            }
+            tmp[y * ow + x] = acc;
+        }
+    }
+    // vertical pass
+    let mut out = vec![0.0; oh * ow];
+    for y in 0..oh {
+        for x in 0..ow {
+            let mut acc = 0.0;
+            for (i, kv) in k.iter().enumerate() {
+                acc += tmp[(y + i) * ow + x] * kv;
+            }
+            out[y * ow + x] = acc;
+        }
+    }
+    (out, oh, ow)
+}
+
+/// SSIM between two single-channel images with dynamic range `l`.
+/// Images smaller than the 11x11 window fall back to the global statistics
+/// formula over the whole image.
+pub fn ssim(a: &[f64], b: &[f64], h: usize, w: usize, l: f64) -> f64 {
+    assert_eq!(a.len(), h * w);
+    assert_eq!(b.len(), h * w);
+    let c1 = (K1 * l) * (K1 * l);
+    let c2 = (K2 * l) * (K2 * l);
+
+    if h < WIN || w < WIN {
+        // global SSIM
+        let n = (h * w) as f64;
+        let mu_a = a.iter().sum::<f64>() / n;
+        let mu_b = b.iter().sum::<f64>() / n;
+        let var_a = a.iter().map(|x| (x - mu_a) * (x - mu_a)).sum::<f64>() / n;
+        let var_b = b.iter().map(|x| (x - mu_b) * (x - mu_b)).sum::<f64>() / n;
+        let cov = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - mu_a) * (y - mu_b))
+            .sum::<f64>()
+            / n;
+        return ((2.0 * mu_a * mu_b + c1) * (2.0 * cov + c2))
+            / ((mu_a * mu_a + mu_b * mu_b + c1) * (var_a + var_b + c2));
+    }
+
+    let sq = |v: &[f64]| v.iter().map(|x| x * x).collect::<Vec<f64>>();
+    let prod: Vec<f64> = a.iter().zip(b).map(|(x, y)| x * y).collect();
+
+    let (mu_a, oh, ow) = blur(a, h, w);
+    let (mu_b, _, _) = blur(b, h, w);
+    let (e_a2, _, _) = blur(&sq(a), h, w);
+    let (e_b2, _, _) = blur(&sq(b), h, w);
+    let (e_ab, _, _) = blur(&prod, h, w);
+
+    let mut total = 0.0;
+    for i in 0..oh * ow {
+        let (ma, mb) = (mu_a[i], mu_b[i]);
+        let va = e_a2[i] - ma * ma;
+        let vb = e_b2[i] - mb * mb;
+        let cab = e_ab[i] - ma * mb;
+        total += ((2.0 * ma * mb + c1) * (2.0 * cab + c2))
+            / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+    }
+    total / (oh * ow) as f64
+}
+
+/// Mean SSIM over batch and channels of two NHWC tensors. `l` is the dynamic
+/// range of the data (2.0 for tanh outputs in [-1, 1]).
+pub fn ssim_tensor(a: &Tensor, b: &Tensor, l: f64) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mut vals = Vec::new();
+    for n in 0..a.n {
+        for c in 0..a.c {
+            let pa: Vec<f64> = (0..a.h * a.w)
+                .map(|i| a.data[((n * a.h + i / a.w) * a.w + i % a.w) * a.c + c] as f64)
+                .collect();
+            let pb: Vec<f64> = (0..b.h * b.w)
+                .map(|i| b.data[((n * b.h + i / b.w) * b.w + i % b.w) * b.c + c] as f64)
+                .collect();
+            vals.push(ssim(&pa, &pb, a.h, a.w, l));
+        }
+    }
+    vals.iter().sum::<f64>() / vals.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_images_are_one() {
+        let mut rng = Rng::new(20);
+        let img: Vec<f64> = (0..64 * 64).map(|_| rng.uniform() as f64).collect();
+        let s = ssim(&img, &img, 64, 64, 1.0);
+        assert!((s - 1.0).abs() < 1e-9, "ssim {s}");
+    }
+
+    #[test]
+    fn noise_reduces_ssim() {
+        let mut rng = Rng::new(21);
+        let img: Vec<f64> = (0..64 * 64).map(|_| rng.uniform() as f64).collect();
+        let noisy: Vec<f64> = img
+            .iter()
+            .map(|v| v + 0.6 * (rng.uniform() as f64 - 0.5))
+            .collect();
+        let s = ssim(&img, &noisy, 64, 64, 1.0);
+        assert!(s < 0.93 && s > 0.0, "ssim {s}");
+    }
+
+    #[test]
+    fn shift_reduces_ssim_more_on_small_images() {
+        // the effect behind the paper's DCGAN-vs-FST Shi SSIM gap
+        let mk = |side: usize, shift: usize, rng: &mut Rng| {
+            // smooth image: sum of a few sinusoids
+            let f1 = 0.13 + rng.uniform() as f64 * 0.02;
+            let img = |sh: usize| {
+                (0..side * side)
+                    .map(|i| {
+                        let (y, x) = (i / side + sh, i % side + sh);
+                        ((y as f64 * f1).sin() + (x as f64 * 0.07).cos()) * 0.5
+                    })
+                    .collect::<Vec<f64>>()
+            };
+            ssim(&img(0), &img(shift), side, side, 2.0)
+        };
+        let mut rng = Rng::new(22);
+        let small = mk(32, 2, &mut rng);
+        let large = mk(256, 2, &mut rng);
+        assert!(small < large, "small {small} large {large}");
+    }
+
+    #[test]
+    fn tensor_ssim_identity() {
+        let mut rng = Rng::new(23);
+        let t = crate::tensor::Tensor::randn(1, 32, 32, 3, &mut rng);
+        assert!((ssim_tensor(&t, &t, 2.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_image_global_fallback() {
+        let a = vec![0.5; 16];
+        let b = vec![0.5; 16];
+        assert!((ssim(&a, &b, 4, 4, 1.0) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,237 @@
+//! Layer / network descriptors and the MAC & parameter arithmetic behind the
+//! paper's Tables 1–3. Counting conventions (validated against the paper's
+//! published numbers, see python/tests/test_model.py and rust/tests):
+//!
+//! * deconv MACs (scatter): `IH*IW*K*K*IC*OC`
+//! * conv MACs:             `OH*OW*K*K*IC*OC`
+//! * NZP deconv MACs:       `OH*OW*K*K*IC*OC` (dense conv over the
+//!                          zero-inserted map)
+//! * SD deconv MACs:        `IH*IW*(s*K_T)^2*IC*OC` (Table 2 convention:
+//!                          interior compute; boundary halo zeros excluded,
+//!                          padded-filter zeros included)
+
+use crate::sd::SdGeometry;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Deconv,
+    Dense,
+}
+
+/// One layer of a benchmark network. Spatial sizes may be rectangular.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: &'static str,
+    pub kind: LayerKind,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub out_c: usize,
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+    /// output padding (deconv only): out = (i-1)s + k - 2p + op
+    pub op: usize,
+}
+
+impl LayerSpec {
+    pub fn conv(
+        name: &'static str,
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> Self {
+        LayerSpec { name, kind: LayerKind::Conv, in_h, in_w, in_c, out_c, k, s, p, op: 0 }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn deconv(
+        name: &'static str,
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        op: usize,
+    ) -> Self {
+        LayerSpec { name, kind: LayerKind::Deconv, in_h, in_w, in_c, out_c, k, s, p, op }
+    }
+
+    pub fn dense(name: &'static str, n_in: usize, n_out: usize) -> Self {
+        LayerSpec {
+            name,
+            kind: LayerKind::Dense,
+            in_h: 1,
+            in_w: 1,
+            in_c: n_in,
+            out_c: n_out,
+            k: 0,
+            s: 1,
+            p: 0,
+            op: 0,
+        }
+    }
+
+    pub fn out_h(&self) -> usize {
+        match self.kind {
+            LayerKind::Deconv => (self.in_h - 1) * self.s + self.k - 2 * self.p + self.op,
+            LayerKind::Conv => (self.in_h + 2 * self.p - self.k) / self.s + 1,
+            LayerKind::Dense => 1,
+        }
+    }
+
+    pub fn out_w(&self) -> usize {
+        match self.kind {
+            LayerKind::Deconv => (self.in_w - 1) * self.s + self.k - 2 * self.p + self.op,
+            LayerKind::Conv => (self.in_w + 2 * self.p - self.k) / self.s + 1,
+            LayerKind::Dense => 1,
+        }
+    }
+
+    /// Multiply-add count, paper Table 1 convention.
+    pub fn macs(&self) -> u64 {
+        let (k2, icoc) = (
+            (self.k * self.k) as u64,
+            (self.in_c * self.out_c) as u64,
+        );
+        match self.kind {
+            LayerKind::Deconv => (self.in_h * self.in_w) as u64 * k2 * icoc,
+            LayerKind::Conv => (self.out_h() * self.out_w()) as u64 * k2 * icoc,
+            LayerKind::Dense => (self.in_h * self.in_w) as u64 * icoc,
+        }
+    }
+
+    /// MACs of the NZP conversion of this deconv layer (Table 2, column 2).
+    pub fn nzp_macs(&self) -> u64 {
+        assert_eq!(self.kind, LayerKind::Deconv);
+        (self.out_h() * self.out_w() * self.k * self.k * self.in_c * self.out_c) as u64
+    }
+
+    /// MACs of the SD conversion (Table 2, column 3 convention).
+    pub fn sd_macs(&self) -> u64 {
+        assert_eq!(self.kind, LayerKind::Deconv);
+        let g = SdGeometry::new(self.k, self.s, self.p);
+        let skt = self.s * g.k_t;
+        (self.in_h * self.in_w * skt * skt * self.in_c * self.out_c) as u64
+    }
+
+    /// SD MACs as actually *executed* on a dense processor (includes the
+    /// P_I input-halo overhead the Table-2 convention excludes). This is the
+    /// number a no-skip processor pays.
+    pub fn sd_exec_macs(&self) -> u64 {
+        assert_eq!(self.kind, LayerKind::Deconv);
+        let g = SdGeometry::new(self.k, self.s, self.p);
+        let co_h = self.in_h + g.k_t - 1; // conv out per split, stride 1
+        let co_w = self.in_w + g.k_t - 1;
+        (self.s * self.s * co_h * co_w * g.k_t * g.k_t * self.in_c * self.out_c) as u64
+    }
+
+    /// Weight parameter count (original layer).
+    pub fn params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Dense => (self.in_h * self.in_w * self.in_c * self.out_c) as u64,
+            _ => (self.k * self.k * self.in_c * self.out_c) as u64,
+        }
+    }
+
+    /// Parameters after general SD splitting (padded filters, Table 3 col 2).
+    pub fn sd_params(&self) -> u64 {
+        assert_eq!(self.kind, LayerKind::Deconv);
+        let g = SdGeometry::new(self.k, self.s, self.p);
+        let side = self.s * g.k_t;
+        (side * side * self.in_c * self.out_c) as u64
+    }
+
+    /// Parameters of compressed SD: padded zeros removed, small per-split
+    /// metadata retained (one offset word per split filter; Table 3 col 3).
+    pub fn sd_compressed_params(&self) -> u64 {
+        assert_eq!(self.kind, LayerKind::Deconv);
+        let g = SdGeometry::new(self.k, self.s, self.p);
+        self.params() + (g.n_splits() as u64)
+    }
+}
+
+/// A benchmark network: ordered layer list.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub name: &'static str,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetworkSpec {
+    pub fn deconv_layers(&self) -> impl Iterator<Item = &LayerSpec> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Deconv)
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn deconv_macs(&self) -> u64 {
+        self.deconv_layers().map(|l| l.macs()).sum()
+    }
+
+    pub fn nzp_macs(&self) -> u64 {
+        self.deconv_layers().map(|l| l.nzp_macs()).sum()
+    }
+
+    pub fn sd_macs(&self) -> u64 {
+        self.deconv_layers().map(|l| l.sd_macs()).sum()
+    }
+
+    pub fn deconv_params(&self) -> u64 {
+        self.deconv_layers().map(|l| l.params()).sum()
+    }
+
+    pub fn sd_params(&self) -> u64 {
+        self.deconv_layers().map(|l| l.sd_params()).sum()
+    }
+
+    pub fn sd_compressed_params(&self) -> u64 {
+        self.deconv_layers().map(|l| l.sd_compressed_params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deconv_shapes() {
+        let l = LayerSpec::deconv("d", 8, 8, 256, 128, 5, 2, 2, 1);
+        assert_eq!((l.out_h(), l.out_w()), (16, 16));
+        assert_eq!(l.macs(), 8 * 8 * 25 * 256 * 128);
+        assert_eq!(l.nzp_macs(), 16 * 16 * 25 * 256 * 128);
+        // k5 s2: K_T=3, sK_T=6 -> SD factor 36/25
+        assert_eq!(l.sd_macs(), 8 * 8 * 36 * 256 * 128);
+        assert_eq!(l.sd_params(), 36 * 256 * 128);
+        assert_eq!(l.sd_compressed_params(), 25 * 256 * 128 + 4);
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let l = LayerSpec::conv("c", 64, 128, 32, 64, 5, 2, 2);
+        assert_eq!((l.out_h(), l.out_w()), (32, 64));
+        assert_eq!(l.macs(), 32 * 64 * 25 * 32 * 64);
+    }
+
+    #[test]
+    fn divisible_filter_sd_is_free() {
+        let l = LayerSpec::deconv("d", 4, 4, 512, 256, 4, 2, 1, 0);
+        assert_eq!(l.sd_macs(), l.macs());
+        assert_eq!(l.sd_params(), l.params());
+    }
+
+    #[test]
+    fn sd_exec_includes_halo() {
+        let l = LayerSpec::deconv("d", 4, 4, 8, 8, 4, 2, 1, 0);
+        assert!(l.sd_exec_macs() > l.sd_macs());
+    }
+}

@@ -1,0 +1,394 @@
+//! Table / figure generators: every table and figure of the paper's
+//! evaluation section, produced from this repo's own modules and printed in
+//! the paper's row format. Used by the CLI (`repro report ...`), the bench
+//! harness (rust/benches/), and the integration tests.
+
+pub mod quality;
+
+use crate::commodity::{edge_tpu::EdgeTpu, ncs2, nzp_time_s, sd_time_s, EfficiencyModel};
+use crate::networks;
+use crate::nn::NetworkSpec;
+use crate::sim::energy::{energy, EnergyBreakdown, EnergyModel};
+use crate::sim::workload::{lower_network_deconvs, Lowering};
+use crate::sim::{dot_array, fcn_engine, pe2d, ProcessorConfig, RunStats, SkipPolicy};
+use crate::util::geomean;
+
+/// Host-side output-reorganization bandwidth (GB/s) used by the commodity
+/// models (one pass over output bytes; measured-class DDR4 copy rate).
+pub const HOST_REORG_GBPS: f64 = 8.0;
+
+// ---------------------------------------------------------------------------
+// Tables 1-3 (operation & parameter counts)
+// ---------------------------------------------------------------------------
+
+pub struct Table1Row {
+    pub name: &'static str,
+    pub total_m: f64,
+    pub deconv_m: f64,
+    pub pct: f64,
+}
+
+pub fn table1() -> Vec<Table1Row> {
+    networks::all()
+        .iter()
+        .map(|n| {
+            let t = n.total_macs() as f64 / 1e6;
+            let d = n.deconv_macs() as f64 / 1e6;
+            Table1Row {
+                name: n.name,
+                total_m: t,
+                deconv_m: d,
+                pct: 100.0 * d / t,
+            }
+        })
+        .collect()
+}
+
+pub struct Table2Row {
+    pub name: &'static str,
+    pub original_m: f64,
+    pub nzp_m: f64,
+    pub sd_m: f64,
+}
+
+pub fn table2() -> Vec<Table2Row> {
+    networks::all()
+        .iter()
+        .map(|n| Table2Row {
+            name: n.name,
+            original_m: n.deconv_macs() as f64 / 1e6,
+            nzp_m: n.nzp_macs() as f64 / 1e6,
+            sd_m: n.sd_macs() as f64 / 1e6,
+        })
+        .collect()
+}
+
+pub struct Table3Row {
+    pub name: &'static str,
+    pub original_m: f64,
+    pub sd_general_m: f64,
+    pub sd_compressed_m: f64,
+}
+
+pub fn table3() -> Vec<Table3Row> {
+    networks::all()
+        .iter()
+        .map(|n| Table3Row {
+            name: n.name,
+            original_m: n.deconv_params() as f64 / 1e6,
+            sd_general_m: n.sd_params() as f64 / 1e6,
+            sd_compressed_m: n.sd_compressed_params() as f64 / 1e6,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Figures 8-11 (simulated processors)
+// ---------------------------------------------------------------------------
+
+/// One benchmark's simulated runs across the schemes of a figure.
+pub struct SimRow {
+    pub name: &'static str,
+    /// (scheme label, stats)
+    pub runs: Vec<(&'static str, RunStats)>,
+}
+
+impl SimRow {
+    /// Normalized performance (1/cycles), NZP = 1.0 (the paper's figures).
+    pub fn normalized_perf(&self) -> Vec<(&'static str, f64)> {
+        let base = self.runs[0].1.cycles as f64;
+        self.runs
+            .iter()
+            .map(|(l, s)| (*l, base / s.cycles as f64))
+            .collect()
+    }
+
+    /// Normalized energy, NZP = 1.0.
+    pub fn normalized_energy(&self, m: &EnergyModel) -> Vec<(&'static str, EnergyBreakdown, f64)> {
+        let base = energy(&self.runs[0].1, m).total_uj();
+        self.runs
+            .iter()
+            .map(|(l, s)| {
+                let e = energy(s, m);
+                let rel = e.total_uj() / base;
+                (*l, e, rel)
+            })
+            .collect()
+    }
+}
+
+/// Figure 8: deconvolutional layers on the dot-production PE array.
+/// Schemes: NZP (legacy, no skip), SD (no skip), SD-Asparse.
+pub fn fig8(seed: u64) -> Vec<SimRow> {
+    let cfg = ProcessorConfig::default();
+    networks::all()
+        .iter()
+        .map(|n| {
+            let nzp_ops = lower_network_deconvs(n, Lowering::Nzp, seed);
+            let sd_ops = lower_network_deconvs(n, Lowering::Sd, seed);
+            SimRow {
+                name: n.name,
+                runs: vec![
+                    ("NZP", dot_array::simulate(&nzp_ops, &cfg, SkipPolicy::None)),
+                    ("SD", dot_array::simulate(&sd_ops, &cfg, SkipPolicy::None)),
+                    (
+                        "SD-Asparse",
+                        dot_array::simulate(&sd_ops, &cfg, SkipPolicy::ASparse),
+                    ),
+                ],
+            }
+        })
+        .collect()
+}
+
+/// Figure 9: deconvolutional layers on the regular 2D PE array.
+/// Schemes: NZP, SD-Asparse, SD-Wsparse, SD-WAsparse, FCN-Engine.
+pub fn fig9(seed: u64) -> Vec<SimRow> {
+    let cfg = ProcessorConfig::default();
+    networks::all()
+        .iter()
+        .map(|n| {
+            let nzp_ops = lower_network_deconvs(n, Lowering::Nzp, seed);
+            let sd_ops = lower_network_deconvs(n, Lowering::Sd, seed);
+            SimRow {
+                name: n.name,
+                runs: vec![
+                    ("NZP", pe2d::simulate(&nzp_ops, &cfg, SkipPolicy::None)),
+                    (
+                        "SD-Asparse",
+                        pe2d::simulate(&sd_ops, &cfg, SkipPolicy::ASparse),
+                    ),
+                    (
+                        "SD-Wsparse",
+                        pe2d::simulate(&sd_ops, &cfg, SkipPolicy::WSparse),
+                    ),
+                    (
+                        "SD-WAsparse",
+                        pe2d::simulate(&sd_ops, &cfg, SkipPolicy::AWSparse),
+                    ),
+                    ("FCN", fcn_engine::simulate_network(n, &cfg)),
+                ],
+            }
+        })
+        .collect()
+}
+
+/// Figures 10/11 reuse the fig8/fig9 stats with the energy model.
+pub fn fig10(seed: u64) -> Vec<SimRow> {
+    fig8(seed)
+}
+
+pub fn fig11(seed: u64) -> Vec<SimRow> {
+    fig9(seed)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 5-8 + Figures 15/17 (commodity devices)
+// ---------------------------------------------------------------------------
+
+pub struct EffRow {
+    pub x: usize,
+    pub normalized: f64,
+}
+
+pub fn table5() -> Vec<EffRow> {
+    // Edge TPU, fmap sweep at k=3
+    let t = EdgeTpu;
+    [8usize, 16, 32, 64, 128]
+        .iter()
+        .map(|&s| EffRow {
+            x: s,
+            normalized: t.gmacps(s, 3) / t.gmacps(8, 3),
+        })
+        .collect()
+}
+
+pub fn table6() -> Vec<EffRow> {
+    let t = EdgeTpu;
+    [2usize, 3, 4, 5]
+        .iter()
+        .map(|&k| EffRow {
+            x: k,
+            normalized: t.gmacps(128, k) / t.gmacps(128, 2),
+        })
+        .collect()
+}
+
+pub fn table7() -> Vec<EffRow> {
+    let t = ncs2::Ncs2;
+    [8usize, 16, 32, 64, 128]
+        .iter()
+        .map(|&s| EffRow {
+            x: s,
+            normalized: t.gmacps(s, 3) / t.gmacps(8, 3),
+        })
+        .collect()
+}
+
+pub fn table8() -> Vec<EffRow> {
+    let t = ncs2::Ncs2;
+    [2usize, 3, 4, 5]
+        .iter()
+        .map(|&k| EffRow {
+            x: k,
+            normalized: t.gmacps(128, k) / t.gmacps(128, 2),
+        })
+        .collect()
+}
+
+pub struct SpeedupRow {
+    pub name: &'static str,
+    /// (scheme, time seconds) — first entry is the normalization baseline
+    pub times: Vec<(&'static str, f64)>,
+}
+
+impl SpeedupRow {
+    pub fn speedups(&self) -> Vec<(&'static str, f64)> {
+        let base = self.times[0].1;
+        self.times.iter().map(|(l, t)| (*l, base / t)).collect()
+    }
+}
+
+/// Figure 15: NZP vs SD on the Edge TPU model.
+pub fn fig15() -> Vec<SpeedupRow> {
+    let t = EdgeTpu;
+    networks::all()
+        .iter()
+        .map(|n| SpeedupRow {
+            name: n.name,
+            times: vec![
+                ("NZP", nzp_time_s(&t, n)),
+                ("SD", sd_time_s(&t, n, HOST_REORG_GBPS)),
+            ],
+        })
+        .collect()
+}
+
+/// Figure 17: NZP vs SD vs native deconvolution on the NCS2 model.
+pub fn fig17() -> Vec<SpeedupRow> {
+    let t = ncs2::Ncs2;
+    networks::all()
+        .iter()
+        .map(|n| SpeedupRow {
+            name: n.name,
+            times: vec![
+                ("NZP", nzp_time_s(&t, n)),
+                ("Native", ncs2::native_deconv_time_s(n)),
+                ("SD", sd_time_s(&t, n, HOST_REORG_GBPS)),
+            ],
+        })
+        .collect()
+}
+
+/// Average SD-over-NZP speedup of a figure (geomean, the paper's "average").
+pub fn average_speedup(rows: &[SpeedupRow], scheme: &str) -> f64 {
+    let v: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            let base = r.times[0].1;
+            let t = r.times.iter().find(|(l, _)| *l == scheme).unwrap().1;
+            base / t
+        })
+        .collect();
+    geomean(&v)
+}
+
+// ---------------------------------------------------------------------------
+// Printing (paper-style rows)
+// ---------------------------------------------------------------------------
+
+pub fn print_table1() {
+    println!("Table 1: multiply-add operations in the inference phase");
+    println!("{:<10} {:>12} {:>14} {:>7}", "Benchmark", "Total (M)", "Deconv (M)", "%");
+    for r in table1() {
+        println!(
+            "{:<10} {:>12.2} {:>14.2} {:>6.1}%",
+            r.name, r.total_m, r.deconv_m, r.pct
+        );
+    }
+}
+
+pub fn print_table2() {
+    println!("Table 2: deconv-layer MACs by implementation (M)");
+    println!("{:<10} {:>12} {:>12} {:>12}", "Benchmark", "Original", "NZP", "SD");
+    for r in table2() {
+        println!(
+            "{:<10} {:>12.2} {:>12.2} {:>12.2}",
+            r.name, r.original_m, r.nzp_m, r.sd_m
+        );
+    }
+}
+
+pub fn print_table3() {
+    println!("Table 3: deconv-layer weight parameters (M)");
+    println!(
+        "{:<10} {:>12} {:>14} {:>16}",
+        "Benchmark", "Orig [29]", "General SD", "Compressed SD"
+    );
+    for r in table3() {
+        println!(
+            "{:<10} {:>12.2} {:>14.2} {:>16.2}",
+            r.name, r.original_m, r.sd_general_m, r.sd_compressed_m
+        );
+    }
+}
+
+pub fn print_sim_figure(title: &str, rows: &[SimRow]) {
+    println!("{title} (performance normalized to NZP = 1.0)");
+    for row in rows {
+        print!("{:<10}", row.name);
+        for (label, perf) in row.normalized_perf() {
+            print!("  {label}={perf:.2}x");
+        }
+        println!();
+    }
+}
+
+pub fn print_energy_figure(title: &str, rows: &[SimRow]) {
+    let m = EnergyModel::default();
+    println!("{title} (energy normalized to NZP = 1.0; breakdown PE/buffer/DRAM uJ)");
+    for row in rows {
+        print!("{:<10}", row.name);
+        for (label, e, rel) in row.normalized_energy(&m) {
+            print!(
+                "  {label}={rel:.2} ({:.0}/{:.0}/{:.0})",
+                e.pe_uj, e.buffer_uj, e.dram_uj
+            );
+        }
+        println!();
+    }
+}
+
+pub fn print_eff_table(title: &str, rows: &[EffRow], unit: &str) {
+    println!("{title}");
+    for r in rows {
+        println!("  {}{}  {:.2}x", r.x, unit, r.normalized);
+    }
+}
+
+pub fn print_speedup_figure(title: &str, rows: &[SpeedupRow]) {
+    println!("{title} (normalized to NZP = 1.0)");
+    for row in rows {
+        print!("{:<10}", row.name);
+        for (label, s) in row.speedups() {
+            print!("  {label}={s:.2}x");
+        }
+        println!();
+    }
+}
+
+pub fn print_table4(fst_div: usize) {
+    println!("Table 4: SSIM vs native deconvolution");
+    println!("{:<10} {:>8} {:>10} {:>12}", "Benchmark", "SD", "Shi [30]", "Chang [31]");
+    for r in quality::table4(fst_div) {
+        println!(
+            "{:<10} {:>8.3} {:>10.3} {:>12.3}",
+            r.benchmark, r.ssim_sd, r.ssim_shi, r.ssim_chang
+        );
+    }
+}
+
+/// Networks helper re-export for benches.
+pub fn all_networks() -> Vec<NetworkSpec> {
+    networks::all()
+}

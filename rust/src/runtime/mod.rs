@@ -1,0 +1,260 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` emitted by
+//! `python -m compile.aot`), compile them once on the PJRT CPU client, and
+//! execute them from the rust hot path. Python never runs at request time.
+//!
+//! Interchange format is HLO *text*: jax >= 0.5 serializes HloModuleProto
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One tensor slot in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub bin: PathBuf,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: an HLO module plus golden inputs/output.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    pub kind: String,
+    pub network: String,
+    pub layer: String,
+    pub impl_: String,
+    pub batch: usize,
+    pub macs: u64,
+}
+
+/// The artifact index written by aot.py.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!(
+                "reading {}/manifest.json (run `make artifacts`)",
+                dir.display()
+            )
+        })?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let tensor = |j: &Json| -> Result<TensorSpec> {
+                let shape = j
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing shape"))?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect();
+                Ok(TensorSpec {
+                    shape,
+                    bin: dir.join(j.str_or("bin", "")),
+                })
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing inputs"))?
+                .iter()
+                .map(tensor)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a.str_or("name", "").to_string(),
+                hlo: dir.join(a.str_or("hlo", "")),
+                inputs,
+                output: tensor(a.get("output").ok_or_else(|| anyhow!("missing output"))?)?,
+                kind: a.str_or("kind", "").to_string(),
+                network: a.str_or("network", "").to_string(),
+                layer: a.str_or("layer", "").to_string(),
+                impl_: a.str_or("impl", "").to_string(),
+                batch: a.usize_or("batch", 1),
+                macs: a.get("macs").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn select<'a>(
+        &'a self,
+        pred: impl Fn(&ArtifactSpec) -> bool + 'a,
+    ) -> Vec<&'a ArtifactSpec> {
+        self.artifacts.iter().filter(|a| pred(a)).collect()
+    }
+}
+
+/// Read a raw little-endian f32 binary (the golden tensor format).
+pub fn read_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length not a multiple of 4", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// A compiled artifact ready to run.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    /// raw weight tensors for inputs 1..N (cached from the golden bins)
+    fixed: Vec<Vec<f32>>,
+}
+
+impl Compiled {
+    /// Execute with the caller supplying input 0 (the data input); weight
+    /// inputs come from the cached golden bins.
+    pub fn run(&self, data: &[f32]) -> Result<Vec<f32>> {
+        if data.len() != self.spec.inputs[0].numel() {
+            bail!(
+                "{}: input 0 expects {} elements, got {}",
+                self.spec.name,
+                self.spec.inputs[0].numel(),
+                data.len()
+            );
+        }
+        let mut args = Vec::with_capacity(1 + self.fixed.len());
+        args.push(self.literal(0, data)?);
+        for (i, f) in self.fixed.iter().enumerate() {
+            args.push(self.literal(i + 1, f)?);
+        }
+        self.execute(&args)
+    }
+
+    /// Execute with ALL inputs supplied (golden-replay path).
+    pub fn run_all(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let args = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| self.literal(i, d))
+            .collect::<Result<Vec<_>>>()?;
+        self.execute(&args)
+    }
+
+    fn literal(&self, slot: usize, data: &[f32]) -> Result<xla::Literal> {
+        let shape: Vec<i64> = self.spec.inputs[slot].shape.iter().map(|d| *d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&shape)?)
+    }
+
+    fn execute(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT engine: a CPU client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Compiled> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let fixed = spec.inputs[1..]
+                .iter()
+                .map(|t| read_bin(&t.bin))
+                .collect::<Result<Vec<_>>>()?;
+            self.compiled
+                .insert(name.to_string(), Compiled { exe, spec, fixed });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Golden check: run the artifact on its recorded inputs and compare to
+    /// the recorded output. Returns the max abs error.
+    pub fn verify(&mut self, name: &str) -> Result<f32> {
+        let compiled = self.load(name)?;
+        let inputs: Vec<Vec<f32>> = compiled
+            .spec
+            .inputs
+            .iter()
+            .map(|t| read_bin(&t.bin))
+            .collect::<Result<Vec<_>>>()?;
+        let want = read_bin(&compiled.spec.output.bin)?;
+        let got = compiled.run_all(&inputs)?;
+        if got.len() != want.len() {
+            bail!("{name}: output length {} != {}", got.len(), want.len());
+        }
+        Ok(got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+}
+
+/// Default artifact directory: $REPRO_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,99 @@
+//! The approximate deconvolution-to-convolution conversion of Chang & Kang
+//! [31] ("Optimizing FPGA-based CNN accelerator for image super-resolution"),
+//! reproduced for the Table 4 / Figure 13-14 quality comparison.
+//!
+//! Their transform targets super-resolution, which tolerates computing
+//! errors: instead of s^2 distinct split filters it derives ONE deformed
+//! filter (the phase-average of the splits) and fills all s^2 output phases
+//! from that single convolution. It also rearranges results on the host CPU
+//! (which the paper under reproduction criticizes for the CPU<->accelerator
+//! traffic — modeled in the commodity experiments).
+
+use super::{split_filters, SdGeometry};
+use crate::tensor::{conv2d_valid, Filter, Tensor};
+
+/// Chang-style approximate conversion: average the split filters, run one
+/// stride-1 convolution, replicate each output pixel into its s x s phase
+/// block (nearest-phase fill).
+pub fn chang_deconv2d(x: &Tensor, f: &Filter, s: usize, p: usize, op: usize) -> Tensor {
+    let g = SdGeometry::new(f.kh, s, p);
+    let splits = split_filters(f, s);
+    // deformed filter = mean over phases (approximation)
+    let mut avg = Filter::zeros(g.k_t, g.k_t, f.ic, f.oc);
+    for sp in &splits {
+        for (a, b) in avg.data.iter_mut().zip(&sp.data) {
+            *a += b / (splits.len() as f32);
+        }
+    }
+    let xp = x.pad(g.p_i, g.p_i, g.p_i, g.p_i);
+    let conv = conv2d_valid(&xp, &avg, 1);
+    // fill the s x s phases by bilinear interpolation of the single
+    // convolution output (the smooth phase fill the approximation relies
+    // on: exact for the aligned phase, interpolated for the rest)
+    let mut big = Tensor::zeros(conv.n, conv.h * s, conv.w * s, conv.c);
+    for n in 0..conv.n {
+        for by in 0..big.h {
+            let fy = by as f32 / s as f32;
+            let y0 = (fy.floor() as usize).min(conv.h - 1);
+            let y1 = (y0 + 1).min(conv.h - 1);
+            let wy = fy - y0 as f32;
+            for bx in 0..big.w {
+                let fx = bx as f32 / s as f32;
+                let x0 = (fx.floor() as usize).min(conv.w - 1);
+                let x1 = (x0 + 1).min(conv.w - 1);
+                let wx = fx - x0 as f32;
+                for c in 0..conv.c {
+                    let v00 = conv.at(n, y0, x0, c);
+                    let v01 = conv.at(n, y0, x1, c);
+                    let v10 = conv.at(n, y1, x0, c);
+                    let v11 = conv.at(n, y1, x1, c);
+                    *big.at_mut(n, by, bx, c) = v00 * (1.0 - wy) * (1.0 - wx)
+                        + v01 * (1.0 - wy) * wx
+                        + v10 * wy * (1.0 - wx)
+                        + v11 * wy * wx;
+                }
+            }
+        }
+    }
+    let c0 = g.crop();
+    let oh = g.final_out(x.h, op);
+    let ow = (x.w - 1) * s + f.kw - 2 * p + op;
+    big.crop_padded(c0, oh, c0, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::deconv2d;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chang_is_approximate() {
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(1, 8, 8, 4, &mut rng);
+        let f = Filter::randn(4, 4, 4, 3, &mut rng);
+        let want = deconv2d(&x, &f, 2, 1, 0);
+        let got = chang_deconv2d(&x, &f, 2, 1, 0);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.max_abs_diff(&want) > 1e-2, "chang unexpectedly exact");
+    }
+
+    #[test]
+    fn chang_preserves_dc_component() {
+        // On a constant input, deconv output interior is constant = sum(w);
+        // the phase-averaged filter preserves that mean, so interiors agree.
+        let x = Tensor::from_vec(1, 8, 8, 1, vec![1.0; 64]);
+        let mut f = Filter::zeros(4, 4, 1, 1);
+        f.data.iter_mut().for_each(|v| *v = 0.25);
+        let want = deconv2d(&x, &f, 2, 1, 0);
+        let got = chang_deconv2d(&x, &f, 2, 1, 0);
+        // compare a deep-interior pixel
+        let c = want.h / 2;
+        assert!(
+            (got.at(0, c, c, 0) - want.at(0, c, c, 0)).abs() < 1e-4,
+            "{} vs {}",
+            got.at(0, c, c, 0),
+            want.at(0, c, c, 0)
+        );
+    }
+}

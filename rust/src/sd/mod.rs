@@ -1,0 +1,214 @@
+//! Split Deconvolution — the paper's Section 4 contribution, in rust.
+//!
+//! `sd_deconv2d` is bit-exact with `tensor::deconv2d` (proven by
+//! rust/tests/sd_exactness.rs property tests). The submodules implement the
+//! prior-work baselines the paper compares against in Table 4:
+//! [`shi`] (Shi et al. [30], wrong fixed padding) and [`chang`]
+//! (Chang & Kang [31], approximate conversion).
+
+pub mod chang;
+pub mod nzp;
+pub mod shi;
+
+use crate::tensor::{conv2d_valid, Filter, Tensor};
+
+/// Derived sizes of one SD conversion (paper Eqs. 1–3, 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SdGeometry {
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+    /// split filter side, ceil(k/s)
+    pub k_t: usize,
+    /// filter zero-pad (top & left)
+    pub p_k: usize,
+    /// input feature zero-pad (all sides)
+    pub p_i: usize,
+}
+
+impl SdGeometry {
+    pub fn new(k: usize, s: usize, p: usize) -> Self {
+        let k_t = k.div_ceil(s);
+        SdGeometry {
+            k,
+            s,
+            p,
+            k_t,
+            p_k: s * k_t - k,
+            p_i: k_t - 1,
+        }
+    }
+
+    pub fn n_splits(&self) -> usize {
+        self.s * self.s
+    }
+
+    /// Spatial side of each split convolution output for input side `i`.
+    pub fn conv_out(&self, i: usize) -> usize {
+        i + 2 * self.p_i - self.k_t + 1 // == i + k_t - 1
+    }
+
+    /// Side of the interleaved (pre-crop) grid.
+    pub fn big_out(&self, i: usize) -> usize {
+        self.s * self.conv_out(i)
+    }
+
+    /// Equivalent deconvolution output side (with output padding `op`).
+    pub fn final_out(&self, i: usize, op: usize) -> usize {
+        (i - 1) * self.s + self.k - 2 * self.p + op
+    }
+
+    /// Top/left crop into the interleaved grid.
+    pub fn crop(&self) -> usize {
+        self.p_k + self.p
+    }
+}
+
+/// Step 1 + 2 (paper Eqs. 1–8): zero-expand the deconv filter on the top and
+/// left so its side is divisible by `s`, then sample with stride `s` and
+/// rotate each sub-filter 180 degrees. Returns `s*s` conv filters of side
+/// `K_T`, in row-major split order `n = r*s + c`.
+pub fn split_filters(f: &Filter, s: usize) -> Vec<Filter> {
+    assert_eq!(f.kh, f.kw, "square deconv filters only");
+    let g = SdGeometry::new(f.kh, s, 0);
+    let side = s * g.k_t;
+    // padded filter: zeros on top & left
+    let mut padded = Filter::zeros(side, side, f.ic, f.oc);
+    for y in 0..f.kh {
+        for x in 0..f.kw {
+            for i in 0..f.ic {
+                for o in 0..f.oc {
+                    *padded.at_mut(y + g.p_k, x + g.p_k, i, o) = f.at(y, x, i, o);
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(s * s);
+    for n in 0..s * s {
+        let (r, c) = (n / s, n % s);
+        let mut sub = Filter::zeros(g.k_t, g.k_t, f.ic, f.oc);
+        for y in 0..g.k_t {
+            for x in 0..g.k_t {
+                for i in 0..f.ic {
+                    for o in 0..f.oc {
+                        // sample with stride s, then rotate 180
+                        *sub.at_mut(g.k_t - 1 - y, g.k_t - 1 - x, i, o) =
+                            padded.at(r + y * s, c + x * s, i, o);
+                    }
+                }
+            }
+        }
+        out.push(sub);
+    }
+    out
+}
+
+/// Step 4 (paper Eqs. 10–13): interleave the `s*s` split-convolution outputs
+/// into the deconvolution grid: `big[r::s, c::s] = convs[r*s+c]`.
+/// This is the operation the paper maps to the processor's *stride write*
+/// DMA instruction; here it is a strided memcpy.
+pub fn interleave(convs: &[Tensor], s: usize) -> Tensor {
+    assert_eq!(convs.len(), s * s);
+    let t0 = &convs[0];
+    let (n, oh, ow, oc) = (t0.n, t0.h, t0.w, t0.c);
+    for t in convs {
+        assert_eq!(t.shape(), [n, oh, ow, oc], "split outputs must agree");
+    }
+    let mut big = Tensor::zeros(n, oh * s, ow * s, oc);
+    for (idx, t) in convs.iter().enumerate() {
+        let (r, c) = (idx / s, idx % s);
+        for b in 0..n {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let src = t.idx(b, y, x, 0);
+                    let dst = big.idx(b, y * s + r, x * s + c, 0);
+                    big.data[dst..dst + oc].copy_from_slice(&t.data[src..src + oc]);
+                }
+            }
+        }
+    }
+    big
+}
+
+/// Full SD pipeline: pad input (step 3) -> s^2 stride-1 convs -> interleave
+/// (step 4) -> crop. Bit-exact with `tensor::deconv2d(x, f, s, p, op)`.
+pub fn sd_deconv2d(x: &Tensor, f: &Filter, s: usize, p: usize, op: usize) -> Tensor {
+    let g = SdGeometry::new(f.kh, s, p);
+    let xp = x.pad(g.p_i, g.p_i, g.p_i, g.p_i);
+    let convs: Vec<Tensor> = split_filters(f, s)
+        .iter()
+        .map(|w| conv2d_valid(&xp, w, 1))
+        .collect();
+    let big = interleave(&convs, s);
+    let c0 = g.crop();
+    let oh = g.final_out(x.h, op);
+    let ow = (x.w - 1) * s + f.kw - 2 * p + op;
+    big.crop_padded(c0, oh, c0, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::deconv2d;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn geometry_matches_paper_equations() {
+        let g = SdGeometry::new(5, 2, 2);
+        assert_eq!((g.k_t, g.p_k, g.p_i, g.n_splits()), (3, 1, 2, 4));
+        let g = SdGeometry::new(4, 2, 1);
+        assert_eq!((g.k_t, g.p_k, g.p_i), (2, 0, 1));
+        let g = SdGeometry::new(3, 2, 1);
+        assert_eq!((g.k_t, g.p_k, g.p_i), (2, 1, 1));
+        let g = SdGeometry::new(3, 1, 1);
+        assert_eq!((g.k_t, g.p_k), (3, 0));
+    }
+
+    #[test]
+    fn split_preserves_weights() {
+        let mut rng = Rng::new(4);
+        let f = Filter::randn(5, 5, 2, 3, &mut rng);
+        let splits = split_filters(&f, 2);
+        assert_eq!(splits.len(), 4);
+        let total: f32 = splits.iter().flat_map(|s| &s.data).map(|v| v.abs()).sum();
+        let orig: f32 = f.data.iter().map(|v| v.abs()).sum();
+        assert!((total - orig).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sd_exact_dcgan_layer() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(1, 8, 8, 16, &mut rng);
+        let f = Filter::randn(5, 5, 16, 8, &mut rng);
+        let want = deconv2d(&x, &f, 2, 2, 1);
+        let got = sd_deconv2d(&x, &f, 2, 2, 1);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn sd_exact_rectangular() {
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(2, 4, 8, 3, &mut rng);
+        let f = Filter::randn(3, 3, 3, 5, &mut rng);
+        let want = deconv2d(&x, &f, 2, 1, 1);
+        let got = sd_deconv2d(&x, &f, 2, 1, 1);
+        assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn interleave_places_phases() {
+        let mut t = Vec::new();
+        for v in 0..4 {
+            let mut x = Tensor::zeros(1, 2, 2, 1);
+            x.data.fill(v as f32);
+            t.push(x);
+        }
+        let big = interleave(&t, 2);
+        assert_eq!(big.shape(), [1, 4, 4, 1]);
+        assert_eq!(big.at(0, 0, 0, 0), 0.0); // split 0 at (even, even)
+        assert_eq!(big.at(0, 0, 1, 0), 1.0); // split 1 at (even, odd)
+        assert_eq!(big.at(0, 1, 0, 0), 2.0); // split 2 at (odd, even)
+        assert_eq!(big.at(0, 3, 3, 0), 3.0); // split 3 at (odd, odd)
+    }
+}

@@ -1,0 +1,66 @@
+//! Naive Zero-Padding deconvolution (the paper's Figure 1(b) baseline):
+//! zero-insert the feature map, then run one dense stride-1 convolution
+//! with the 180-rotated filter. Numerically exact, computationally ~s^2x
+//! redundant — the inefficiency the paper attacks.
+
+use crate::tensor::{conv2d, zero_insert, Filter, Tensor};
+
+/// NZP-converted deconvolution: exact, but dense over the inflated map.
+pub fn nzp_deconv2d(x: &Tensor, f: &Filter, s: usize, p: usize, op: usize) -> Tensor {
+    let xd = zero_insert(x, s);
+    let pad = f.kh - 1 - p;
+    let full = conv2d(&xd, &f.rot180(), 1, pad);
+    // conv output side: (i-1)s+1 + 2(k-1-p) - k + 1 = (i-1)s + k - 2p ... = out - op
+    let oh = (x.h - 1) * s + f.kh - 2 * p + op;
+    let ow = (x.w - 1) * s + f.kw - 2 * p + op;
+    // output padding keeps `op` extra rows/cols at the bottom/right: they are
+    // part of the *full* (uncropped) deconv output, so re-derive from full.
+    if op == 0 {
+        return full;
+    }
+    let fullpad = conv2d(&zero_insert(x, s), &f.rot180(), 1, f.kh - 1);
+    fullpad.crop_padded(p, oh, p, ow)
+}
+
+/// The zero-inserted feature map itself (what the processor actually reads) —
+/// used by the simulators to account buffer traffic and skip opportunities.
+pub fn nzp_input(x: &Tensor, f: &Filter, s: usize, p: usize) -> Tensor {
+    let xd = zero_insert(x, s);
+    let pad = f.kh - 1 - p;
+    xd.pad(pad, pad, pad, pad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::deconv2d;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nzp_exact() {
+        let mut rng = Rng::new(7);
+        for (i, k, s, p, op) in [
+            (4, 4, 2, 1, 0),
+            (8, 5, 2, 2, 1),
+            (6, 3, 2, 1, 1),
+            (5, 3, 1, 1, 0),
+        ] {
+            let x = Tensor::randn(1, i, i, 4, &mut rng);
+            let f = Filter::randn(k, k, 4, 3, &mut rng);
+            let want = deconv2d(&x, &f, s, p, op);
+            let got = nzp_deconv2d(&x, &f, s, p, op);
+            assert_eq!(got.shape(), want.shape());
+            assert!(got.allclose(&want, 1e-4), "k{k} s{s}: {}", got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn nzp_input_sparsity() {
+        // stride-2 zero insertion makes ~3/4 of the map zero (plus halo).
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(1, 8, 8, 2, &mut rng);
+        let f = Filter::randn(4, 4, 2, 2, &mut rng);
+        let xin = nzp_input(&x, &f, 2, 1);
+        assert!(xin.sparsity() > 0.70, "sparsity {}", xin.sparsity());
+    }
+}

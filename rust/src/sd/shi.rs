@@ -1,0 +1,124 @@
+//! The deconvolution-to-convolution conversion of Shi et al. [30]
+//! ("Is the deconvolution layer the same as a convolutional layer?"),
+//! reproduced *including its error*, for the Table 4 / Figure 13-14 quality
+//! comparison.
+//!
+//! Shi et al. fix the input zero-padding to the RIGHT and BOTTOM of the
+//! feature map and read the output from the top-left corner. As the paper
+//! under reproduction points out (Section 2), that placement is only correct
+//! for the first partition of the split: "the fixed zero-padding to the
+//! right and bottom of the input features only works for the first partition
+//! of the split deconvolution and it can cause errors when this zero-padding
+//! is utilized for the deconvolution conversion. The correct padding must be
+//! adapted to the deconvolution partition as well as the output feature
+//! cropping strategies."
+//!
+//! Concretely: correct SD pads `P_I` on *all four* sides and crops at offset
+//! `P_K + p`; this variant pads `2*P_I` on right/bottom only and crops at
+//! offset 0, which misplaces every partition but the first by up to
+//! `s*P_I` pixels — interior content is near-correct but shifted, borders
+//! are wrong. Small feature maps (DCGAN) are hurt far more than large ones
+//! (FST), exactly the SSIM ordering the paper reports.
+
+use super::{interleave, split_filters, SdGeometry};
+use crate::tensor::{conv2d_valid, Filter, Tensor};
+
+/// Shi-style conversion: split filters as in SD, but with the *fixed*
+/// (non-adapted) phase placement: the sub-convolution outputs are assigned
+/// to output phases in raw sampling order, without the reversal that the
+/// 180-degree filter rotation demands. As the paper puts it, the fixed
+/// right/bottom placement "only works for the first partition of the split
+/// deconvolution"; every other partition lands in the wrong sub-pixel
+/// phase, producing a sub-pixel scramble of the image. Large images (FST)
+/// mostly survive — the scramble is a sub-pixel perturbation of otherwise
+/// correct content — while small images (DCGAN) degrade badly: the SSIM
+/// ordering of the paper's Table 4.
+pub fn shi_deconv2d(x: &Tensor, f: &Filter, s: usize, p: usize, op: usize) -> Tensor {
+    let g = SdGeometry::new(f.kh, s, p);
+    let xp = x.pad(g.p_i, g.p_i, g.p_i, g.p_i);
+    let convs: Vec<Tensor> = split_filters(f, s)
+        .iter()
+        .map(|w| conv2d_valid(&xp, w, 1))
+        .collect();
+    // WRONG (reproduced): raw phase order — correct only for partition 0
+    // when s is such that reversal is identity (s=1).
+    let scrambled: Vec<Tensor> = (0..s * s)
+        .map(|n| {
+            let (r, c) = (n / s, n % s);
+            convs[(s - 1 - r) * s + (s - 1 - c)].clone()
+        })
+        .collect();
+    let big = interleave(&scrambled, s);
+    let c0 = g.crop();
+    let oh = g.final_out(x.h, op);
+    let ow = (x.w - 1) * s + f.kw - 2 * p + op;
+    big.crop_padded(c0, oh, c0, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::deconv2d;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shi_is_wrong_but_shaped_right() {
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(1, 8, 8, 4, &mut rng);
+        let f = Filter::randn(5, 5, 4, 3, &mut rng);
+        let want = deconv2d(&x, &f, 2, 2, 1);
+        let got = shi_deconv2d(&x, &f, 2, 2, 1);
+        assert_eq!(got.shape(), want.shape());
+        // The whole point: it does NOT match the true deconvolution.
+        assert!(
+            got.max_abs_diff(&want) > 1e-2,
+            "shi variant unexpectedly exact"
+        );
+    }
+
+    #[test]
+    fn shi_is_a_sub_pixel_phase_scramble() {
+        // Every shi pixel equals a native pixel at the predicted sub-pixel
+        // offset: out_shi[t] = out_native[t + (s-1) - 2*((t+c0) % s)] per
+        // axis (the phase-reversal relation), wherever that lands in range.
+        let mut rng = Rng::new(12);
+        let (s, p) = (2usize, 1usize);
+        let x = Tensor::randn(1, 16, 16, 2, &mut rng);
+        let f = Filter::randn(4, 4, 2, 2, &mut rng);
+        let want = deconv2d(&x, &f, s, p, 0);
+        let got = shi_deconv2d(&x, &f, s, p, 0);
+        let c0 = crate::sd::SdGeometry::new(4, s, p).crop();
+        let off = |t: usize| -> isize {
+            t as isize + (s as isize - 1) - 2 * ((t + c0) % s) as isize
+        };
+        let mut checked = 0;
+        for y in 0..want.h {
+            let ny = off(y);
+            if ny < 0 || ny >= want.h as isize {
+                continue;
+            }
+            for x2 in 0..want.w {
+                let nx = off(x2);
+                if nx < 0 || nx >= want.w as isize {
+                    continue;
+                }
+                let d = (got.at(0, y, x2, 0) - want.at(0, ny as usize, nx as usize, 0)).abs();
+                assert!(d < 1e-4, "scramble relation broken at ({y},{x2}): {d}");
+                checked += 1;
+            }
+        }
+        assert!(checked > want.h * want.w / 2, "too few checked: {checked}");
+    }
+
+    #[test]
+    fn shi_exact_for_stride_one() {
+        // s = 1: the phase reversal is the identity, so shi degenerates to
+        // the correct conversion.
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(1, 7, 7, 3, &mut rng);
+        let f = Filter::randn(3, 3, 3, 2, &mut rng);
+        let want = deconv2d(&x, &f, 1, 1, 0);
+        let got = shi_deconv2d(&x, &f, 1, 1, 0);
+        assert!(got.allclose(&want, 1e-4));
+    }
+}

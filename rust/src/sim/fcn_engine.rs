@@ -1,0 +1,154 @@
+//! FCN-Engine baseline (Xu et al. [5], ICCAD'18): the paper's
+//! modified-hardware comparator. A 2D PE array with a bi-directional
+//! dataflow and small column buffers that lets the array run the *original*
+//! deconvolution directly: input activations are multiplied with each
+//! filter and overlapping partial products are exchanged between adjacent
+//! PEs through the added column buffers.
+//!
+//! Behavioral model (from the FCN-Engine paper + this paper's Section
+//! 5.2.2/5.2.3 characterization):
+//! * computes on the original (never zero-inflated) input;
+//! * produces the FULL (uncropped) deconvolution plane — "the output
+//!   feature maps on edge are redundant and need to be cropped, which
+//!   inevitably induces computing overhead, especially for smaller
+//!   deconvolution layers";
+//! * output rows advance in lockstep across the 7 concurrent y-positions,
+//!   so a row tile pays the WORST per-phase tap count among its rows
+//!   (ceil(K/s) kernel rows) — phase imbalance that SD avoids by giving
+//!   each phase its own (Wsparse-compressible) filter;
+//! * every cycle a partial product crosses a column buffer (read + write)
+//!   instead of staying in a PE register — "FCN requires additional
+//!   on-chip buffers ... so the overall energy consumption is higher than
+//!   that of SD-WAsparse in all the benchmark networks".
+
+use super::{ProcessorConfig, RunStats};
+use crate::nn::{LayerKind, LayerSpec};
+
+/// Kernel rows hitting full-plane output row `o` (phase-dependent).
+fn taps_1d(o: usize, k: usize, s: usize, i: usize) -> u64 {
+    (0..k)
+        .filter(|&d| o >= d && (o - d) % s == 0 && (o - d) / s < i)
+        .count() as u64
+}
+
+/// Simulate one deconvolution layer executed natively on FCN-Engine.
+pub fn simulate_layer(spec: &LayerSpec, cfg: &ProcessorConfig) -> RunStats {
+    assert_eq!(spec.kind, LayerKind::Deconv);
+    // full (uncropped) output plane
+    let full_h = (spec.in_h - 1) * spec.s + spec.k;
+    let full_w = (spec.in_w - 1) * spec.s + spec.k;
+
+    let row_taps: Vec<u64> = (0..full_h)
+        .map(|y| taps_1d(y, spec.k, spec.s, spec.in_h))
+        .collect();
+    let col_taps: Vec<u64> = (0..full_w)
+        .map(|x| taps_1d(x, spec.k, spec.s, spec.in_w))
+        .collect();
+    let col_total: u64 = col_taps.iter().sum();
+    let col_max_total: u64 = {
+        // columns also advance in lockstep within the array's x sweep at
+        // the granularity of one output column: each column pays its own
+        // tap count (x positions are sequential), no imbalance here.
+        col_total
+    };
+
+    // y-tiles of `cols` lockstep rows: the tile pays max(row taps) per row.
+    let mut tile_cost: u64 = 0; // sum over tiles of max_row_taps * rows_in_tile? no: lockstep => all rows wait
+    let mut y = 0;
+    while y < full_h {
+        let end = (y + cfg.cols).min(full_h);
+        let m = row_taps[y..end].iter().max().copied().unwrap_or(0);
+        tile_cost += m;
+        y = end;
+    }
+
+    let oc_tiles = spec.out_c.div_ceil(cfg.rows) as u64;
+    let cycles = oc_tiles * tile_cost * col_max_total * spec.in_c as u64;
+
+    let lanes = (cfg.rows * cfg.cols) as u64;
+    let mut stats = RunStats {
+        cycles,
+        macs_issued: cycles * lanes,
+        macs_useful: spec.macs(),
+        ..Default::default()
+    };
+
+    // buffer traffic: activations + weights as in the OS array, plus the
+    // column-buffer partial hand-off every cycle (one read + one write per
+    // active column per cycle, 8-bit partials)
+    stats.buf_act_rd = cycles * cfg.cols as u64;
+    stats.buf_wgt_rd = cycles * cfg.rows as u64;
+    stats.buf_out_rw = (full_h * full_w * spec.out_c) as u64 + 2 * cycles * cfg.cols as u64;
+
+    let weight_bytes = (spec.k * spec.k * spec.in_c * spec.out_c) as u64;
+    // the array computes (and writes back) the FULL uncropped plane; the
+    // host crops afterwards — the edge redundancy also costs DRAM traffic
+    stats.dram_bytes = (spec.in_h * spec.in_w * spec.in_c) as u64
+        + weight_bytes
+        + (full_h * full_w * spec.out_c) as u64;
+
+    stats
+}
+
+/// All deconv layers of a network on FCN-Engine.
+pub fn simulate_network(net: &crate::nn::NetworkSpec, cfg: &ProcessorConfig) -> RunStats {
+    let mut total = RunStats::default();
+    for l in net.deconv_layers() {
+        total.add(&simulate_layer(l, cfg));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerSpec;
+
+    #[test]
+    fn taps_1d_k4_s2_interior() {
+        // interior phases of k4 s2 alternate 2/2 kernel rows
+        assert_eq!(taps_1d(4, 4, 2, 8), 2);
+        assert_eq!(taps_1d(5, 4, 2, 8), 2);
+        // edges see fewer
+        assert_eq!(taps_1d(0, 4, 2, 8), 1);
+    }
+
+    #[test]
+    fn taps_1d_k5_s2_phases() {
+        // k5 s2: interior phases alternate 3 and 2 kernel rows
+        let a = taps_1d(6, 5, 2, 8);
+        let b = taps_1d(7, 5, 2, 8);
+        assert_eq!(a.max(b), 3);
+        assert_eq!(a.min(b), 2);
+    }
+
+    #[test]
+    fn edge_overhead_hurts_small_layers_more() {
+        let cfg = ProcessorConfig::default();
+        let small = LayerSpec::deconv("s", 4, 4, 64, 64, 4, 2, 1, 0);
+        let big = LayerSpec::deconv("b", 64, 64, 64, 64, 4, 2, 1, 0);
+        let st_s = simulate_layer(&small, &cfg);
+        let st_b = simulate_layer(&big, &cfg);
+        let ov_s = st_s.cycles as f64 * 1e9 / st_s.macs_useful as f64;
+        let ov_b = st_b.cycles as f64 * 1e9 / st_b.macs_useful as f64;
+        assert!(ov_s > ov_b, "small {ov_s} big {ov_b}");
+    }
+
+    #[test]
+    fn handoff_buffer_traffic_positive() {
+        let spec = LayerSpec::deconv("d", 8, 8, 16, 8, 4, 2, 1, 0);
+        let st = simulate_layer(&spec, &ProcessorConfig::default());
+        assert!(st.buf_out_rw > (spec.out_h() * spec.out_w() * spec.out_c) as u64);
+    }
+
+    #[test]
+    fn phase_imbalance_penalizes_expansion_kernels() {
+        // k5 (phases 3/2) pays the max phase in lockstep; k4 (2/2) doesn't.
+        let cfg = ProcessorConfig::default();
+        let k5 = LayerSpec::deconv("a", 16, 16, 64, 64, 5, 2, 2, 1);
+        let k4 = LayerSpec::deconv("b", 16, 16, 64, 64, 4, 2, 1, 0);
+        let c5 = simulate_layer(&k5, &cfg).cycles as f64 / k5.macs() as f64;
+        let c4 = simulate_layer(&k4, &cfg).cycles as f64 / k4.macs() as f64;
+        assert!(c5 > c4, "k5 {c5} k4 {c4}");
+    }
+}

@@ -1,0 +1,94 @@
+//! On-chip buffer capacity modeling: when a layer's working set exceeds the
+//! I/O or weight buffers, the layer is tiled and operands are re-fetched
+//! from DRAM. The paper's processors: 256 KB I/O buffer, 416 KB weight
+//! buffer (Section 5.1).
+
+use super::{ConvOp, ProcessorConfig};
+
+/// Number of weight tiles: when the filter exceeds the weight buffer, the
+/// weights are processed in tiles and the *activations* are re-read once
+/// per weight tile (standard weight-tiled inference loop order).
+pub fn weight_tiles(op: &ConvOp, cfg: &ProcessorConfig) -> u64 {
+    let weight_bytes = (op.k * op.k * op.ic * op.oc) as u64; // 8-bit
+    weight_bytes.div_ceil(cfg.weight_buffer_bytes as u64)
+}
+
+/// Number of activation tiles: when the (possibly zero-inflated) feature
+/// map exceeds the I/O buffer, activations are tiled and the *weights* are
+/// re-read once per activation tile.
+pub fn act_tiles(op: &ConvOp, cfg: &ProcessorConfig) -> u64 {
+    let act_bytes = (op.in_h * op.in_w * op.ic) as u64;
+    act_bytes.div_ceil(cfg.io_buffer_bytes as u64)
+}
+
+/// Legacy combined factor (dominant re-fetch dimension); kept for callers
+/// that want a single number.
+pub fn refetch_factor(op: &ConvOp, cfg: &ProcessorConfig) -> u64 {
+    weight_tiles(op, cfg).max(act_tiles(op, cfg))
+}
+
+/// DRAM bytes for one op: weights once per activation tile, (non-zero)
+/// input once per weight tile, output once.
+///
+/// Weight traffic counts the *compressed* stream (zero taps elided): this
+/// is the paper's "Compressed SD" storage format (Table 3), which removes
+/// the expansion zeros SD pads into its split filters. Dense filters are
+/// unaffected.
+pub fn dram_bytes(op: &ConvOp, cfg: &ProcessorConfig, out_elems: u64) -> u64 {
+    let nonzero_taps = op.wgt_zero.iter().filter(|z| !*z).count() as u64;
+    let weight_bytes = nonzero_taps * op.oc as u64;
+    let input_bytes = if op.charge_input {
+        (op.act_zero.iter().filter(|z| !*z).count() * op.ic) as u64
+    } else {
+        0
+    };
+    weight_bytes * act_tiles(op, cfg) + input_bytes * weight_tiles(op, cfg) + out_elems
+}
+
+/// Whether the op runs without tiling.
+pub fn fits_on_chip(op: &ConvOp, cfg: &ProcessorConfig) -> bool {
+    refetch_factor(op, cfg) == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ConvOp;
+
+    fn op(in_h: usize, in_w: usize, ic: usize, k: usize, oc: usize) -> ConvOp {
+        ConvOp {
+            in_h,
+            in_w,
+            ic,
+            k,
+            stride: 1,
+            oc,
+            act_zero: vec![false; in_h * in_w],
+            wgt_zero: vec![false; k * k * ic],
+            useful_macs: 0,
+            charge_input: true,
+        }
+    }
+
+    #[test]
+    fn small_layer_fits() {
+        let cfg = ProcessorConfig::default();
+        assert!(fits_on_chip(&op(16, 16, 64, 3, 64), &cfg));
+    }
+
+    #[test]
+    fn huge_weights_tile() {
+        let cfg = ProcessorConfig::default();
+        // 5x5x1024x512 = 13 MB >> 416 KB
+        let f = refetch_factor(&op(8, 8, 1024, 5, 512), &cfg);
+        assert!(f > 1, "factor {f}");
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        let cfg = ProcessorConfig::default();
+        let a = refetch_factor(&op(8, 8, 256, 3, 256), &cfg);
+        let b = refetch_factor(&op(8, 8, 1024, 3, 1024), &cfg);
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,181 @@
+//! Cycle-accurate architectural simulators of the two CNN-processor classes
+//! the paper evaluates on (Section 3 + Section 5.1):
+//!
+//! * [`dot_array`] — Diannao-style dot-production array: 16 neural
+//!   processing units x 16 multipliers + adder tree, 800 MHz, 8-bit.
+//! * [`pe2d`] — Eyeriss/TPU-style regular 2D PE array, 32x7,
+//!   output-stationary dataflow, 800 MHz, 8-bit.
+//! * [`fcn_engine`] — the FCN-Engine [5] modified-hardware baseline
+//!   (bi-directional dataflow, native deconvolution).
+//!
+//! The simulators *count cycles from the modeled dataflow over real operand
+//! zero patterns* rather than from analytic formulas, so zero-skip policies
+//! interact with data exactly the way the paper describes: aligned dataflow
+//! can only skip an operand group when the whole group is zero — which is
+//! why NZP's interleaved zeros are largely unskippable while SD's boundary
+//! halo zeros and expanded-filter zeros are.
+
+pub mod dot_array;
+pub mod energy;
+pub mod fcn_engine;
+pub mod memory;
+pub mod pe2d;
+pub mod workload;
+
+/// Sparse-aware optimization methods (paper Section 5.2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SkipPolicy {
+    /// no zero skipping (legacy processor)
+    None,
+    /// activation sparse optimization
+    ASparse,
+    /// weight sparse optimization
+    WSparse,
+    /// both
+    AWSparse,
+}
+
+impl SkipPolicy {
+    pub fn skips_act(&self) -> bool {
+        matches!(self, SkipPolicy::ASparse | SkipPolicy::AWSparse)
+    }
+
+    pub fn skips_wgt(&self) -> bool {
+        matches!(self, SkipPolicy::WSparse | SkipPolicy::AWSparse)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SkipPolicy::None => "dense",
+            SkipPolicy::ASparse => "Asparse",
+            SkipPolicy::WSparse => "Wsparse",
+            SkipPolicy::AWSparse => "WAsparse",
+        }
+    }
+}
+
+/// Counters produced by one simulated layer (or accumulated over a network).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// array-issue cycles
+    pub cycles: u64,
+    /// MAC slots issued (cycles x active lanes)
+    pub macs_issued: u64,
+    /// MAC slots doing useful (nonzero-operand) work
+    pub macs_useful: u64,
+    /// cycles eliminated by the skip policy
+    pub cycles_skipped: u64,
+    /// on-chip activation-buffer reads (bytes, 8-bit operands)
+    pub buf_act_rd: u64,
+    /// on-chip weight-buffer reads (bytes)
+    pub buf_wgt_rd: u64,
+    /// on-chip output/psum-buffer accesses (bytes)
+    pub buf_out_rw: u64,
+    /// DRAM traffic (bytes)
+    pub dram_bytes: u64,
+}
+
+impl RunStats {
+    pub fn add(&mut self, o: &RunStats) {
+        self.cycles += o.cycles;
+        self.macs_issued += o.macs_issued;
+        self.macs_useful += o.macs_useful;
+        self.cycles_skipped += o.cycles_skipped;
+        self.buf_act_rd += o.buf_act_rd;
+        self.buf_wgt_rd += o.buf_wgt_rd;
+        self.buf_out_rw += o.buf_out_rw;
+        self.dram_bytes += o.dram_bytes;
+    }
+
+    /// Wall-clock at the given core frequency.
+    pub fn time_us(&self, freq_mhz: u64) -> f64 {
+        self.cycles as f64 / freq_mhz as f64
+    }
+
+    /// Fraction of issued MAC slots that were useful.
+    pub fn utilization(&self) -> f64 {
+        if self.macs_issued == 0 {
+            0.0
+        } else {
+            self.macs_useful as f64 / self.macs_issued as f64
+        }
+    }
+}
+
+/// Hardware configuration shared by the simulators (paper Section 5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct ProcessorConfig {
+    /// dot array: multipliers per unit; 2D array: (unused)
+    pub d_in: usize,
+    /// dot array: number of units
+    pub d_out: usize,
+    /// 2D array: rows (output channels in flight)
+    pub rows: usize,
+    /// 2D array: columns (output pixels in flight)
+    pub cols: usize,
+    pub freq_mhz: u64,
+    pub io_buffer_bytes: usize,
+    pub weight_buffer_bytes: usize,
+}
+
+impl Default for ProcessorConfig {
+    fn default() -> Self {
+        ProcessorConfig {
+            d_in: 16,
+            d_out: 16,
+            rows: 32,
+            cols: 7,
+            freq_mhz: 800,
+            io_buffer_bytes: 256 * 1024,
+            weight_buffer_bytes: 416 * 1024,
+        }
+    }
+}
+
+/// A convolution operation as seen by a processor: operand zero structure +
+/// dimensions. Built by [`workload`] from a layer + deconv implementation.
+#[derive(Clone, Debug)]
+pub struct ConvOp {
+    /// input spatial dims (already padded/dilated as the impl requires)
+    pub in_h: usize,
+    pub in_w: usize,
+    pub ic: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub oc: usize,
+    /// zero-position map over the (padded) input: true = all channels zero
+    pub act_zero: Vec<bool>, // in_h * in_w
+    /// zero-tap map over the filter: true = w[kh,kw,ic,*] all zero
+    pub wgt_zero: Vec<bool>, // k * k * ic
+    /// original-layer useful MACs this op contributes (for utilization)
+    pub useful_macs: u64,
+    /// whether this op pays the input's DRAM fetch (the s^2 split
+    /// convolutions of one SD layer share a single input stream: only the
+    /// first charges it)
+    pub charge_input: bool,
+}
+
+impl ConvOp {
+    pub fn out_h(&self) -> usize {
+        (self.in_h - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w - self.k) / self.stride + 1
+    }
+
+    #[inline]
+    pub fn az(&self, y: usize, x: usize) -> bool {
+        self.act_zero[y * self.in_w + x]
+    }
+
+    #[inline]
+    pub fn wz(&self, kh: usize, kw: usize, ic: usize) -> bool {
+        self.wgt_zero[(kh * self.k + kw) * self.ic + ic]
+    }
+
+    /// Dense MAC count of this op.
+    pub fn dense_macs(&self) -> u64 {
+        (self.out_h() * self.out_w() * self.k * self.k * self.ic * self.oc) as u64
+    }
+}

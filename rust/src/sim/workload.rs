@@ -1,0 +1,176 @@
+//! Lower a deconvolution layer + implementation choice into the convolution
+//! operations a CNN processor actually executes, carrying the operand zero
+//! structure (the thing skip policies act on).
+
+use crate::nn::{LayerKind, LayerSpec};
+use crate::sd::{split_filters, SdGeometry};
+use crate::sim::ConvOp;
+use crate::tensor::{Filter, Tensor};
+use crate::util::rng::Rng;
+
+/// Deconvolution lowering choice (plus Direct for plain conv layers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lowering {
+    /// naive zero-padding conversion
+    Nzp,
+    /// split deconvolution (the paper)
+    Sd,
+    /// plain convolution layer (no conversion)
+    Direct,
+}
+
+fn zero_map(x: &Tensor) -> Vec<bool> {
+    let mut m = vec![true; x.h * x.w];
+    for n in 0..x.n {
+        for h in 0..x.h {
+            for w in 0..x.w {
+                if m[h * x.w + w] {
+                    let base = x.idx(n, h, w, 0);
+                    if x.data[base..base + x.c].iter().any(|v| *v != 0.0) {
+                        m[h * x.w + w] = false;
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+fn wgt_tap_zero(f: &Filter) -> Vec<bool> {
+    let mut m = vec![true; f.kh * f.kw * f.ic];
+    for kh in 0..f.kh {
+        for kw in 0..f.kw {
+            for ic in 0..f.ic {
+                let i = (kh * f.kw + kw) * f.ic + ic;
+                m[i] = (0..f.oc).all(|oc| f.at(kh, kw, ic, oc) == 0.0);
+            }
+        }
+    }
+    m
+}
+
+fn op_from(x: &Tensor, f: &Filter, stride: usize, useful_macs: u64) -> ConvOp {
+    ConvOp {
+        in_h: x.h,
+        in_w: x.w,
+        ic: x.c,
+        k: f.kh,
+        stride,
+        oc: f.oc,
+        act_zero: zero_map(x),
+        wgt_zero: wgt_tap_zero(f),
+        useful_macs,
+        charge_input: true,
+    }
+}
+
+/// Build the ConvOps for one layer under the given lowering. Activations are
+/// dense random (structural zeros come from the lowering itself); weights
+/// are dense random before splitting/rotation (expansion zeros come from the
+/// SD filter padding).
+pub fn lower_layer(spec: &LayerSpec, how: Lowering, rng: &mut Rng) -> Vec<ConvOp> {
+    match spec.kind {
+        LayerKind::Dense => Vec::new(), // negligible; not simulated
+        LayerKind::Conv => {
+            let x = Tensor::randn(1, spec.in_h, spec.in_w, spec.in_c, rng)
+                .pad(spec.p, spec.p, spec.p, spec.p);
+            let f = Filter::randn(spec.k, spec.k, spec.in_c, spec.out_c, rng);
+            vec![op_from(&x, &f, spec.s, spec.macs())]
+        }
+        LayerKind::Deconv => {
+            let x = Tensor::randn(1, spec.in_h, spec.in_w, spec.in_c, rng);
+            let f = Filter::randn(spec.k, spec.k, spec.in_c, spec.out_c, rng);
+            match how {
+                Lowering::Direct => panic!("deconv layers need Nzp or Sd lowering"),
+                Lowering::Nzp => {
+                    let xin = crate::sd::nzp::nzp_input(&x, &f, spec.s, spec.p);
+                    vec![op_from(&xin, &f.rot180(), 1, spec.macs())]
+                }
+                Lowering::Sd => {
+                    let g = SdGeometry::new(spec.k, spec.s, spec.p);
+                    let xp = x.pad(g.p_i, g.p_i, g.p_i, g.p_i);
+                    let per_split = spec.macs() / (g.n_splits() as u64);
+                    split_filters(&f, spec.s)
+                        .iter()
+                        .enumerate()
+                        .map(|(i, w)| {
+                            let mut op = op_from(&xp, w, 1, per_split);
+                            op.charge_input = i == 0; // shared input stream
+                            op
+                        })
+                        .collect()
+                }
+            }
+        }
+    }
+}
+
+/// All ops for a whole network's deconv layers (the paper's figures evaluate
+/// "the deconvolutional layers in" each benchmark).
+pub fn lower_network_deconvs(
+    net: &crate::nn::NetworkSpec,
+    how: Lowering,
+    seed: u64,
+) -> Vec<ConvOp> {
+    let mut rng = Rng::new(seed);
+    net.deconv_layers()
+        .flat_map(|l| lower_layer(l, how, &mut rng))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerSpec;
+
+    #[test]
+    fn nzp_op_has_structural_zeros() {
+        let spec = LayerSpec::deconv("d", 8, 8, 4, 4, 4, 2, 1, 0);
+        let mut rng = Rng::new(1);
+        let ops = lower_layer(&spec, Lowering::Nzp, &mut rng);
+        assert_eq!(ops.len(), 1);
+        let op = &ops[0];
+        // zero-inserted + halo: most positions zero
+        let zfrac = op.act_zero.iter().filter(|z| **z).count() as f64 / op.act_zero.len() as f64;
+        assert!(zfrac > 0.6, "zfrac {zfrac}");
+        // rotated dense filter: no zero taps
+        assert!(op.wgt_zero.iter().all(|z| !z));
+    }
+
+    #[test]
+    fn sd_ops_count_and_filter_zeros() {
+        // k5 s2: 4 splits of side 3, with one zero row+col in some splits
+        let spec = LayerSpec::deconv("d", 8, 8, 4, 4, 5, 2, 2, 1);
+        let mut rng = Rng::new(2);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        assert_eq!(ops.len(), 4);
+        let with_zero_taps = ops
+            .iter()
+            .filter(|o| o.wgt_zero.iter().any(|z| *z))
+            .count();
+        assert!(with_zero_taps >= 2, "expansion should zero some taps");
+        // interior activations dense; only halo zero
+        let op = &ops[0];
+        assert!(op.az(0, 0));
+        assert!(!op.az(op.in_h / 2, op.in_w / 2));
+    }
+
+    #[test]
+    fn divisible_filter_no_zero_taps() {
+        let spec = LayerSpec::deconv("d", 4, 4, 2, 2, 4, 2, 1, 0);
+        let mut rng = Rng::new(3);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        for op in &ops {
+            assert!(op.wgt_zero.iter().all(|z| !z), "k divisible by s: dense splits");
+        }
+    }
+
+    #[test]
+    fn network_lowering_counts() {
+        let net = crate::networks::sngan();
+        let nzp = lower_network_deconvs(&net, Lowering::Nzp, 1);
+        let sd = lower_network_deconvs(&net, Lowering::Sd, 1);
+        assert_eq!(nzp.len(), 3); // one op per deconv layer
+        assert_eq!(sd.len(), 12); // s^2 = 4 per layer
+    }
+}

@@ -1,0 +1,263 @@
+//! NHWC f32 tensor substrate + the convolution/deconvolution ops every other
+//! module builds on. Layout matches the python side (ref.py): activations
+//! NHWC, filters HWIO, deconvolution uses scatter semantics.
+
+mod ops;
+
+pub use ops::*;
+
+/// Dense 4-D tensor, NHWC layout, f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Tensor {
+            n,
+            h,
+            w,
+            c,
+            data: vec![0.0; n * h * w * c],
+        }
+    }
+
+    pub fn from_vec(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * h * w * c, "data length mismatch");
+        Tensor { n, h, w, c, data }
+    }
+
+    pub fn from_fn(n: usize, h: usize, w: usize, c: usize, mut f: impl FnMut() -> f32) -> Self {
+        let data = (0..n * h * w * c).map(|_| f()).collect();
+        Tensor { n, h, w, c, data }
+    }
+
+    pub fn randn(n: usize, h: usize, w: usize, c: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        Self::from_fn(n, h, w, c, || rng.normal())
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        ((n * self.h + h) * self.w + w) * self.c + c
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.idx(n, h, w, c)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        let i = self.idx(n, h, w, c);
+        &mut self.data[i]
+    }
+
+    pub fn shape(&self) -> [usize; 4] {
+        [self.n, self.h, self.w, self.c]
+    }
+
+    /// Zero-pad spatial dims: (top, bottom, left, right).
+    pub fn pad(&self, top: usize, bottom: usize, left: usize, right: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.n, self.h + top + bottom, self.w + left + right, self.c);
+        for n in 0..self.n {
+            for h in 0..self.h {
+                let src = self.idx(n, h, 0, 0);
+                let dst = out.idx(n, h + top, left, 0);
+                out.data[dst..dst + self.w * self.c]
+                    .copy_from_slice(&self.data[src..src + self.w * self.c]);
+            }
+        }
+        out
+    }
+
+    /// Spatial crop: rows [h0, h0+nh), cols [w0, w0+nw).
+    pub fn crop(&self, h0: usize, nh: usize, w0: usize, nw: usize) -> Tensor {
+        assert!(h0 + nh <= self.h && w0 + nw <= self.w, "crop out of range");
+        let mut out = Tensor::zeros(self.n, nh, nw, self.c);
+        for n in 0..self.n {
+            for h in 0..nh {
+                let src = self.idx(n, h0 + h, w0, 0);
+                let dst = out.idx(n, h, 0, 0);
+                out.data[dst..dst + nw * self.c]
+                    .copy_from_slice(&self.data[src..src + nw * self.c]);
+            }
+        }
+        out
+    }
+
+    /// Spatial crop that zero-fills out-of-range regions (needed when a
+    /// deconvolution's output_padding extends past the scatter grid, as
+    /// torch's ConvTranspose2d allows for output_padding < stride).
+    pub fn crop_padded(&self, h0: usize, nh: usize, w0: usize, nw: usize) -> Tensor {
+        if h0 + nh <= self.h && w0 + nw <= self.w {
+            return self.crop(h0, nh, w0, nw);
+        }
+        let mut out = Tensor::zeros(self.n, nh, nw, self.c);
+        for n in 0..self.n {
+            for h in 0..nh {
+                let sh = h0 + h;
+                if sh >= self.h {
+                    continue;
+                }
+                let cols = nw.min(self.w.saturating_sub(w0));
+                if cols == 0 {
+                    continue;
+                }
+                let src = self.idx(n, sh, w0, 0);
+                let dst = out.idx(n, h, 0, 0);
+                out.data[dst..dst + cols * self.c]
+                    .copy_from_slice(&self.data[src..src + cols * self.c]);
+            }
+        }
+        out
+    }
+
+    /// Max |a-b| over all elements (shapes must match).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape() == other.shape() && self.max_abs_diff(other) <= atol
+    }
+
+    /// Fraction of exactly-zero elements (drives the zero-skip simulators).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|v| **v == 0.0).count() as f64 / self.data.len() as f64
+    }
+}
+
+/// Convolution filter, HWIO layout, f32. Same layout for deconv filters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Filter {
+    pub kh: usize,
+    pub kw: usize,
+    pub ic: usize,
+    pub oc: usize,
+    pub data: Vec<f32>,
+}
+
+impl Filter {
+    pub fn zeros(kh: usize, kw: usize, ic: usize, oc: usize) -> Self {
+        Filter {
+            kh,
+            kw,
+            ic,
+            oc,
+            data: vec![0.0; kh * kw * ic * oc],
+        }
+    }
+
+    pub fn from_vec(kh: usize, kw: usize, ic: usize, oc: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), kh * kw * ic * oc);
+        Filter { kh, kw, ic, oc, data }
+    }
+
+    pub fn randn(kh: usize, kw: usize, ic: usize, oc: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let scale = 1.0 / ((kh * kw * ic) as f32).sqrt();
+        let data = (0..kh * kw * ic * oc).map(|_| rng.normal() * scale).collect();
+        Filter { kh, kw, ic, oc, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, kh: usize, kw: usize, ic: usize, oc: usize) -> usize {
+        ((kh * self.kw + kw) * self.ic + ic) * self.oc + oc
+    }
+
+    #[inline]
+    pub fn at(&self, kh: usize, kw: usize, ic: usize, oc: usize) -> f32 {
+        self.data[self.idx(kh, kw, ic, oc)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, kh: usize, kw: usize, ic: usize, oc: usize) -> &mut f32 {
+        let i = self.idx(kh, kw, ic, oc);
+        &mut self.data[i]
+    }
+
+    /// Rotate 180 degrees in the spatial plane (channels untouched).
+    pub fn rot180(&self) -> Filter {
+        let mut out = Filter::zeros(self.kh, self.kw, self.ic, self.oc);
+        for a in 0..self.kh {
+            for b in 0..self.kw {
+                for i in 0..self.ic {
+                    for o in 0..self.oc {
+                        *out.at_mut(self.kh - 1 - a, self.kw - 1 - b, i, o) = self.at(a, b, i, o);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn params(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn nonzero_params(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pad_and_crop_roundtrip() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(2, 3, 4, 2, &mut rng);
+        let p = x.pad(1, 2, 3, 0);
+        assert_eq!(p.shape(), [2, 6, 7, 2]);
+        let back = p.crop(1, 3, 3, 4);
+        assert!(back.allclose(&x, 0.0));
+        // padding is zeros
+        assert_eq!(p.at(0, 0, 0, 0), 0.0);
+        assert_eq!(p.at(1, 5, 6, 1), 0.0);
+    }
+
+    #[test]
+    fn rot180_involution() {
+        let mut rng = Rng::new(2);
+        let f = Filter::randn(3, 4, 2, 2, &mut rng);
+        assert_eq!(f.rot180().rot180(), f);
+        // corner check
+        assert_eq!(f.rot180().at(0, 0, 1, 0), f.at(2, 3, 1, 0));
+    }
+
+    #[test]
+    fn sparsity() {
+        let mut x = Tensor::zeros(1, 2, 2, 1);
+        x.data[0] = 1.0;
+        assert!((x.sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(1, 2, 2, 1, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Convolution / deconvolution ops over [`Tensor`] / [`Filter`].
+//!
+//! `conv2d` is the hot path: every deconvolution implementation (SD, NZP,
+//! Shi, Chang) lowers to it, and the quality evaluation (Table 4, Figs 13/14)
+//! runs entire generators through it. The inner loop is written as a
+//! channels-last dot/axpy over contiguous slices so the compiler
+//! auto-vectorizes it; see EXPERIMENTS.md #Perf for measurements.
+
+use super::{Filter, Tensor};
+
+/// Standard cross-correlation convolution (stride, symmetric zero padding).
+pub fn conv2d(x: &Tensor, f: &Filter, stride: usize, padding: usize) -> Tensor {
+    assert_eq!(x.c, f.ic, "channel mismatch");
+    let xp;
+    let x = if padding > 0 {
+        xp = x.pad(padding, padding, padding, padding);
+        &xp
+    } else {
+        x
+    };
+    conv2d_valid(x, f, stride)
+}
+
+/// Valid convolution, the vectorized core.
+///
+/// Accumulates output-channel vectors: for each (output pixel, tap, ic) the
+/// contribution `x * w[., oc]` is an axpy over the contiguous OC axis.
+pub fn conv2d_valid(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
+    assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
+    let oh = (x.h - f.kh) / stride + 1;
+    let ow = (x.w - f.kw) / stride + 1;
+    let mut out = Tensor::zeros(x.n, oh, ow, f.oc);
+    let oc = f.oc;
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = out.idx(n, oy, ox, 0);
+                let acc = &mut out.data[obase..obase + oc];
+                for dy in 0..f.kh {
+                    let iy = oy * stride + dy;
+                    for dx in 0..f.kw {
+                        let ixb = x.idx(n, iy, ox * stride + dx, 0);
+                        let xs = &x.data[ixb..ixb + x.c];
+                        let wbase = f.idx(dy, dx, 0, 0);
+                        for (ic, &xv) in xs.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue; // free win; also models zero-skip
+                            }
+                            let ws = &f.data[wbase + ic * oc..wbase + ic * oc + oc];
+                            for (a, &w) in acc.iter_mut().zip(ws) {
+                                *a += xv * w;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Transposed convolution (scatter semantics, torch ConvTranspose2d),
+/// with layer padding `p` and output padding `op`:
+/// out side = (i-1)*s + k - 2p + op.
+pub fn deconv2d(x: &Tensor, f: &Filter, stride: usize, padding: usize, out_pad: usize) -> Tensor {
+    let full_h = (x.h - 1) * stride + f.kh;
+    let full_w = (x.w - 1) * stride + f.kw;
+    let mut full = Tensor::zeros(x.n, full_h, full_w, f.oc);
+    let oc = f.oc;
+    for n in 0..x.n {
+        for iy in 0..x.h {
+            for ix in 0..x.w {
+                let xbase = x.idx(n, iy, ix, 0);
+                for dy in 0..f.kh {
+                    for dx in 0..f.kw {
+                        let obase = full.idx(n, iy * stride + dy, ix * stride + dx, 0);
+                        let wbase = f.idx(dy, dx, 0, 0);
+                        let acc = &mut full.data[obase..obase + oc];
+                        for ic in 0..x.c {
+                            let xv = x.data[xbase + ic];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let ws = &f.data[wbase + ic * oc..wbase + ic * oc + oc];
+                            for (a, &w) in acc.iter_mut().zip(ws) {
+                                *a += xv * w;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let out_h = full_h - 2 * padding + out_pad;
+    let out_w = full_w - 2 * padding + out_pad;
+    full.crop_padded(padding, out_h, padding, out_w)
+}
+
+/// Insert (stride-1) zeros between activations (NZP dilation step).
+pub fn zero_insert(x: &Tensor, stride: usize) -> Tensor {
+    if stride == 1 {
+        return x.clone();
+    }
+    let mut out = Tensor::zeros(x.n, (x.h - 1) * stride + 1, (x.w - 1) * stride + 1, x.c);
+    for n in 0..x.n {
+        for h in 0..x.h {
+            for w in 0..x.w {
+                let src = x.idx(n, h, w, 0);
+                let dst = out.idx(n, h * stride, w * stride, 0);
+                out.data[dst..dst + x.c].copy_from_slice(&x.data[src..src + x.c]);
+            }
+        }
+    }
+    out
+}
+
+/// Dense (fully-connected) layer: x viewed as (N, H*W*C) @ w (in x out).
+pub fn dense(x: &Tensor, w: &[f32], n_out: usize) -> Tensor {
+    let n_in = x.h * x.w * x.c;
+    assert_eq!(w.len(), n_in * n_out, "dense weight size");
+    let mut out = Tensor::zeros(x.n, 1, 1, n_out);
+    for n in 0..x.n {
+        let xrow = &x.data[n * n_in..(n + 1) * n_in];
+        let orow_base = n * n_out;
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * n_out..(i + 1) * n_out];
+            let orow = &mut out.data[orow_base..orow_base + n_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place tanh.
+pub fn tanh(x: &mut Tensor) {
+    for v in &mut x.data {
+        *v = v.tanh();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Scalar-loop conv for cross-checking the vectorized one.
+    fn conv2d_naive(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
+        let oh = (x.h - f.kh) / stride + 1;
+        let ow = (x.w - f.kw) / stride + 1;
+        let mut out = Tensor::zeros(x.n, oh, ow, f.oc);
+        for n in 0..x.n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for o in 0..f.oc {
+                        let mut acc = 0.0;
+                        for dy in 0..f.kh {
+                            for dx in 0..f.kw {
+                                for i in 0..x.c {
+                                    acc += x.at(n, oy * stride + dy, ox * stride + dx, i)
+                                        * f.at(dy, dx, i, o);
+                                }
+                            }
+                        }
+                        *out.at_mut(n, oy, ox, o) = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let mut rng = Rng::new(3);
+        for (h, w, ic, kh, kw, oc, s) in [
+            (6, 6, 3, 3, 3, 4, 1),
+            (8, 7, 2, 2, 3, 5, 2),
+            (5, 5, 1, 5, 5, 1, 1),
+        ] {
+            let x = Tensor::randn(2, h, w, ic, &mut rng);
+            let f = Filter::randn(kh, kw, ic, oc, &mut rng);
+            let a = conv2d_valid(&x, &f, s);
+            let b = conv2d_naive(&x, &f, s);
+            assert!(a.allclose(&b, 1e-4), "mismatch {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn deconv_known_values() {
+        // 1x1 input, 2x2 filter, stride 2: output is just the filter scaled.
+        let x = Tensor::from_vec(1, 1, 1, 1, vec![3.0]);
+        let f = Filter::from_vec(2, 2, 1, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = deconv2d(&x, &f, 2, 0, 0);
+        assert_eq!(y.shape(), [1, 2, 2, 1]);
+        assert_eq!(y.data, vec![3.0, 6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn deconv_overlap_accumulates() {
+        // 2x1 input, k=3 s=2: rows 2 overlaps (0*2+2 == 1*2+0).
+        let x = Tensor::from_vec(1, 2, 1, 1, vec![1.0, 1.0]);
+        let f = Filter::from_vec(3, 1, 1, 1, vec![1.0, 1.0, 1.0]);
+        let y = deconv2d(&x, &f, 2, 0, 0);
+        assert_eq!(y.shape(), [1, 5, 1, 1]);
+        assert_eq!(y.data, vec![1.0, 1.0, 2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn nzp_equals_deconv() {
+        // deconv(x, w, s, p) == conv(zero_insert(x), rot180(w), pad k-1-p)
+        let mut rng = Rng::new(9);
+        for (i, k, s, p) in [(4, 4, 2, 1), (5, 3, 2, 1), (3, 5, 2, 2), (4, 2, 2, 0)] {
+            let x = Tensor::randn(1, i, i, 3, &mut rng);
+            let f = Filter::randn(k, k, 3, 2, &mut rng);
+            let want = deconv2d(&x, &f, s, p, 0);
+            let xd = zero_insert(&x, s);
+            let got = conv2d(&xd, &f.rot180(), 1, k - 1 - p);
+            assert!(got.allclose(&want, 1e-4));
+        }
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        let x = Tensor::from_vec(1, 1, 2, 1, vec![2.0, 3.0]);
+        let w = vec![1.0, 10.0, 100.0, 1000.0]; // 2x2
+        let y = dense(&x, &w, 2);
+        assert_eq!(y.data, vec![2.0 + 300.0, 20.0 + 3000.0]);
+    }
+
+    #[test]
+    fn activations() {
+        let mut x = Tensor::from_vec(1, 1, 1, 3, vec![-1.0, 0.5, 2.0]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.5, 2.0]);
+        tanh(&mut x);
+        assert!((x.data[2] - 2.0f32.tanh()).abs() < 1e-6);
+    }
+}

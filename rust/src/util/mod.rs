@@ -1,0 +1,51 @@
+//! Small substrates the offline environment lacks crates for:
+//! deterministic RNG, a minimal JSON parser, timing helpers.
+
+pub mod json;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure wall-clock of `f` over `iters` iterations, returning seconds/iter
+/// (minimum over 3 repeats — robust to scheduler noise, standard practice).
+pub fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        best = best.min(dt);
+    }
+    best
+}
+
+/// Format a MAC count in human units (as in the paper's tables: millions).
+pub fn fmt_macs(macs: u64) -> String {
+    format!("{:.2}", macs as f64 / 1e6)
+}
+
+/// Geometric mean of a slice (used for figure-level speedup averages).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fmt_macs_millions() {
+        assert_eq!(fmt_macs(109_770_000), "109.77");
+    }
+}

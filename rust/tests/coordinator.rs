@@ -1,0 +1,206 @@
+//! Coordinator invariants, tested against a mock executor (no artifacts
+//! needed): no request is dropped or duplicated, responses carry the right
+//! payload, batch sizes respect the config, backpressure bounds the queue,
+//! and failures surface as disconnects rather than hangs.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use split_deconv::coordinator::{BatchExecutor, Server, ServerConfig};
+
+/// Mock backend: "image" = [sum(z), len(z), batch_marker]; records batches.
+struct MockExec {
+    batches: Arc<AtomicUsize>,
+    max_seen: Arc<AtomicUsize>,
+    fail_every: usize,
+    calls: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for MockExec {
+    fn supported_batches(&self) -> &[usize] {
+        &[1, 4]
+    }
+
+    fn z_len(&self) -> usize {
+        8
+    }
+
+    fn image_len(&self) -> usize {
+        3
+    }
+
+    fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.calls += 1;
+        if self.fail_every > 0 && self.calls % self.fail_every == 0 {
+            bail!("injected failure");
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        self.max_seen.fetch_max(batch.len(), Ordering::SeqCst);
+        Ok(batch
+            .iter()
+            .map(|z| vec![z.iter().sum::<f32>(), z.len() as f32, batch.len() as f32])
+            .collect())
+    }
+}
+
+fn server(cfg: ServerConfig, fail_every: usize, delay_ms: u64) -> (Server, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+    let batches = Arc::new(AtomicUsize::new(0));
+    let max_seen = Arc::new(AtomicUsize::new(0));
+    let (b2, m2) = (batches.clone(), max_seen.clone());
+    let s = Server::start_with(cfg, move || {
+        Ok(MockExec {
+            batches: b2,
+            max_seen: m2,
+            fail_every,
+            calls: 0,
+            delay: Duration::from_millis(delay_ms),
+        })
+    })
+    .unwrap();
+    (s, batches, max_seen)
+}
+
+#[test]
+fn every_request_gets_its_own_answer() {
+    let (s, _, _) = server(ServerConfig::default(), 0, 0);
+    let mut rxs = Vec::new();
+    for i in 0..40 {
+        let z = vec![i as f32; 8];
+        rxs.push((i, s.submit_blocking(z).unwrap()));
+    }
+    let mut ids = HashSet::new();
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // payload identity: sum of z = 8*i
+        assert_eq!(r.image[0], (8 * i) as f32);
+        assert_eq!(r.image[1], 8.0);
+        assert!(ids.insert(r.id), "duplicate response id {}", r.id);
+    }
+    assert_eq!(ids.len(), 40);
+    let m = s.metrics();
+    assert_eq!(m.served, 40);
+    assert_eq!(m.errors, 0);
+    s.shutdown();
+}
+
+#[test]
+fn batching_happens_under_load() {
+    let cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(20),
+        queue_cap: 64,
+    };
+    let (s, batches, max_seen) = server(cfg, 0, 1);
+    let mut rxs = Vec::new();
+    for i in 0..16 {
+        rxs.push(s.submit_blocking(vec![i as f32; 8]).unwrap());
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    }
+    let nb = batches.load(Ordering::SeqCst);
+    assert!(nb < 16, "no batching happened ({nb} batches for 16 reqs)");
+    assert!(max_seen.load(Ordering::SeqCst) <= 4, "batch size exceeded max");
+    s.shutdown();
+}
+
+#[test]
+fn batch_size_never_exceeds_config() {
+    let cfg = ServerConfig {
+        max_batch: 2,
+        batch_timeout: Duration::from_millis(10),
+        queue_cap: 64,
+    };
+    let (s, _, max_seen) = server(cfg, 0, 1);
+    let mut rxs = Vec::new();
+    for i in 0..20 {
+        rxs.push(s.submit_blocking(vec![i as f32; 8]).unwrap());
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    }
+    assert!(max_seen.load(Ordering::SeqCst) <= 2);
+    s.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 2,
+    };
+    // slow backend: 50ms per call, so the queue fills
+    let (s, _, _) = server(cfg, 0, 50);
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for i in 0..30 {
+        match s.submit(vec![i as f32; 8]) {
+            Ok(rx) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue_cap=2 with slow backend must reject");
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    assert_eq!(s.metrics().served, accepted);
+    s.shutdown();
+}
+
+#[test]
+fn failed_batch_disconnects_not_hangs() {
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 8,
+    };
+    let (s, _, _) = server(cfg, 2, 0); // every 2nd call fails
+    let mut disconnects = 0;
+    let mut ok = 0;
+    for i in 0..10 {
+        let rx = s.submit_blocking(vec![i as f32; 8]).unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(_) => ok += 1,
+            Err(_) => disconnects += 1,
+        }
+    }
+    assert!(ok > 0 && disconnects > 0, "ok {ok} disc {disconnects}");
+    assert_eq!(s.metrics().errors as usize, disconnects);
+    s.shutdown();
+}
+
+#[test]
+fn metrics_latency_percentiles_ordered() {
+    let (s, _, _) = server(ServerConfig::default(), 0, 1);
+    let mut rxs = Vec::new();
+    for i in 0..25 {
+        rxs.push(s.submit_blocking(vec![i as f32; 8]).unwrap());
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    }
+    let m = s.metrics();
+    assert!(m.p50_us <= m.p95_us && m.p95_us <= m.p99_us);
+    assert!(m.throughput_rps > 0.0);
+    s.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_and_fast() {
+    let (s, _, _) = server(ServerConfig::default(), 0, 0);
+    let t0 = std::time::Instant::now();
+    s.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(2));
+}

@@ -1,0 +1,147 @@
+//! End-to-end checks that the report generators reproduce the paper's
+//! published numbers (Tables 1-3 near-exactly; figures by band/ordering).
+
+use split_deconv::report;
+use split_deconv::sim::energy::EnergyModel;
+
+fn find<'a, T>(rows: &'a [T], name: &str, get: impl Fn(&T) -> &'static str) -> &'a T {
+    rows.iter().find(|r| get(r) == name).unwrap()
+}
+
+#[test]
+fn table1_matches_paper() {
+    let rows = report::table1();
+    let cases = [
+        ("DCGAN", 111.41, 109.77, 0.01),
+        ("SNGAN", 100.86, 100.66, 0.01),
+        ("GP-GAN", 240.39, 103.81, 0.01),
+        ("ArtGAN", 1268.77, 822.08, 0.16),
+        ("MDE", 2638.22, 849.35, 0.03),
+    ];
+    for (name, total, deconv, tol) in cases {
+        let r = find(&rows, name, |r| r.name);
+        assert!((r.total_m - total).abs() / total < tol, "{name} total {}", r.total_m);
+        assert!(
+            (r.deconv_m - deconv).abs() / deconv < 0.03,
+            "{name} deconv {}",
+            r.deconv_m
+        );
+    }
+}
+
+#[test]
+fn table2_matches_paper() {
+    let rows = report::table2();
+    let cases = [
+        ("DCGAN", 109.77, 439.09, 158.07),
+        ("ArtGAN", 822.08, 2030.04, 822.08),
+        ("SNGAN", 100.66, 402.65, 100.66),
+        ("GP-GAN", 103.81, 415.23, 103.81),
+        ("MDE", 849.35, 3397.39, 1509.95),
+        ("FST", 603.98, 2415.92, 1073.74),
+    ];
+    for (name, orig, nzp, sd) in cases {
+        let r = find(&rows, name, |r| r.name);
+        assert!((r.original_m - orig).abs() / orig < 0.03, "{name} orig {}", r.original_m);
+        assert!((r.nzp_m - nzp).abs() / nzp < 0.03, "{name} nzp {}", r.nzp_m);
+        assert!((r.sd_m - sd).abs() / sd < 0.03, "{name} sd {}", r.sd_m);
+    }
+}
+
+#[test]
+fn table3_matches_paper() {
+    let rows = report::table3();
+    // (name, orig, general SD, tol)
+    let cases = [
+        ("DCGAN", 1.03, 1.48, 0.05),
+        ("SNGAN", 2.63, 2.63, 0.05),
+        ("GP-GAN", 2.76, 2.76, 0.01),
+        ("MDE", 3.93, 6.99, 0.03),
+        ("FST", 0.09, 0.15, 0.1),
+    ];
+    for (name, orig, sd_gen, tol) in cases {
+        let r = find(&rows, name, |r| r.name);
+        assert!((r.original_m - orig).abs() / orig < tol, "{name} orig {}", r.original_m);
+        assert!(
+            (r.sd_general_m - sd_gen).abs() / sd_gen < tol,
+            "{name} general {}",
+            r.sd_general_m
+        );
+        // compressed ~= original (paper: "most of the redundant values
+        // have been removed after the compression")
+        assert!((r.sd_compressed_m - r.original_m).abs() / r.original_m < 0.01);
+    }
+}
+
+#[test]
+fn table4_ssim_ordering() {
+    // paper: SD == 1.0 both rows; Shi and Chang below 1; both baselines do
+    // better on FST (larger images) than on DCGAN.
+    let rows = report::quality::table4(4); // fast config: FST at 64x64
+    let dcgan = &rows[0];
+    let fst = &rows[1];
+    assert!(dcgan.ssim_sd > 0.999, "SD must be exact: {}", dcgan.ssim_sd);
+    assert!(fst.ssim_sd > 0.999);
+    assert!(dcgan.ssim_shi < 0.95, "shi should err: {}", dcgan.ssim_shi);
+    assert!(dcgan.ssim_chang < 0.95);
+    assert!(
+        fst.ssim_shi > dcgan.ssim_shi,
+        "larger images tolerate the wrong padding better: {} vs {}",
+        fst.ssim_shi,
+        dcgan.ssim_shi
+    );
+}
+
+#[test]
+fn sim_figures_have_expected_schemes_and_ordering() {
+    let f8 = report::fig8(42);
+    assert_eq!(f8.len(), 6);
+    for row in &f8 {
+        let perf = row.normalized_perf();
+        assert_eq!(perf[0].0, "NZP");
+        assert!((perf[0].1 - 1.0).abs() < 1e-9);
+        // SD >= NZP, SD-Asparse >= SD
+        assert!(perf[1].1 > 1.0, "{}: SD {}", row.name, perf[1].1);
+        assert!(perf[2].1 >= perf[1].1 * 0.99, "{}: Asparse regressed", row.name);
+    }
+    let f9 = report::fig9(42);
+    for row in &f9 {
+        let perf = row.normalized_perf();
+        let wasparse = perf.iter().find(|(l, _)| *l == "SD-WAsparse").unwrap().1;
+        assert!(wasparse > 1.5, "{}: SD-WAsparse {wasparse}", row.name);
+    }
+}
+
+#[test]
+fn energy_figures_reduce_vs_nzp() {
+    let m = EnergyModel::default();
+    for row in report::fig11(42) {
+        let e = row.normalized_energy(&m);
+        let wasparse = e.iter().find(|(l, _, _)| *l == "SD-WAsparse").unwrap().2;
+        assert!(wasparse < 0.95, "{}: SD-WAsparse energy {wasparse}", row.name);
+    }
+}
+
+#[test]
+fn commodity_tables_match_paper_anchors() {
+    let t5 = report::table5();
+    assert!((t5.last().unwrap().normalized - 1.98).abs() < 0.02);
+    let t6 = report::table6();
+    assert!((t6.last().unwrap().normalized - 5.72).abs() < 0.06);
+    let t7 = report::table7();
+    assert!((t7.last().unwrap().normalized - 15.45).abs() < 0.16);
+    let t8 = report::table8();
+    assert!((t8.last().unwrap().normalized - 5.22).abs() < 0.06);
+}
+
+#[test]
+fn fig15_fig17_speedups_in_band() {
+    let f15 = report::fig15();
+    let avg15 = report::average_speedup(&f15, "SD");
+    assert!(avg15 > 1.2 && avg15 < 2.4, "fig15 avg {avg15}"); // paper 1.51x
+    let f17 = report::fig17();
+    let avg17 = report::average_speedup(&f17, "SD");
+    assert!(avg17 > 1.2 && avg17 < 2.6, "fig17 avg {avg17}"); // paper 1.67x
+    let nat = report::average_speedup(&f17, "Native");
+    assert!(nat < avg17, "SD should beat native deconv on average");
+}

@@ -1,0 +1,142 @@
+//! Property tests: split deconvolution is bit-exact with the scatter
+//! transposed convolution over a broad random geometry sweep — the paper's
+//! central claim. (The offline registry has no proptest; this is a seeded
+//! random-case sweep with shrink-free reporting of the failing geometry.)
+
+use split_deconv::sd::{nzp::nzp_deconv2d, sd_deconv2d, split_filters, SdGeometry};
+use split_deconv::sd::{chang::chang_deconv2d, shi::shi_deconv2d};
+use split_deconv::tensor::{deconv2d, Filter, Tensor};
+use split_deconv::util::rng::Rng;
+
+struct Case {
+    i_h: usize,
+    i_w: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    op: usize,
+    ic: usize,
+    oc: usize,
+}
+
+fn random_case(rng: &mut Rng) -> Case {
+    let s = 1 + rng.below(4); // 1..=4
+    let k = (1 + rng.below(7)).max(s.min(7)); // 1..=7, >= enough for p
+    let p = rng.below(k); // 0..k-1
+    let op = if s > 1 { rng.below(s.min(2) + 1).min(s - 1) } else { 0 };
+    let mut c = Case {
+        i_h: 1 + rng.below(8),
+        i_w: 1 + rng.below(8),
+        k,
+        s,
+        p,
+        op,
+        ic: 1 + rng.below(5),
+        oc: 1 + rng.below(5),
+    };
+    // ensure positive output
+    while (c.i_h - 1) * c.s + c.k <= 2 * c.p {
+        c.i_h += 1;
+    }
+    while (c.i_w - 1) * c.s + c.k <= 2 * c.p {
+        c.i_w += 1;
+    }
+    c
+}
+
+#[test]
+fn sd_equals_deconv_300_random_geometries() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case_idx in 0..300 {
+        let c = random_case(&mut rng);
+        let x = Tensor::randn(1 + rng.below(2), c.i_h, c.i_w, c.ic, &mut rng);
+        let f = Filter::randn(c.k, c.k, c.ic, c.oc, &mut rng);
+        let want = deconv2d(&x, &f, c.s, c.p, c.op);
+        let got = sd_deconv2d(&x, &f, c.s, c.p, c.op);
+        assert_eq!(
+            got.shape(),
+            want.shape(),
+            "case {case_idx}: k{} s{} p{} op{} i{}x{}",
+            c.k, c.s, c.p, c.op, c.i_h, c.i_w
+        );
+        let d = got.max_abs_diff(&want);
+        assert!(
+            d < 2e-3,
+            "case {case_idx}: k{} s{} p{} op{} i{}x{} ic{} oc{}: diff {d}",
+            c.k, c.s, c.p, c.op, c.i_h, c.i_w, c.ic, c.oc
+        );
+    }
+}
+
+#[test]
+fn nzp_equals_deconv_100_random_geometries() {
+    let mut rng = Rng::new(0xBEEF);
+    for case_idx in 0..100 {
+        let c = random_case(&mut rng);
+        let x = Tensor::randn(1, c.i_h, c.i_w, c.ic, &mut rng);
+        let f = Filter::randn(c.k, c.k, c.ic, c.oc, &mut rng);
+        let want = deconv2d(&x, &f, c.s, c.p, c.op);
+        let got = nzp_deconv2d(&x, &f, c.s, c.p, c.op);
+        let d = got.max_abs_diff(&want);
+        assert!(d < 2e-3, "case {case_idx}: diff {d}");
+    }
+}
+
+#[test]
+fn split_filter_count_and_shape_invariants() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..50 {
+        let s = 1 + rng.below(4);
+        let k = 1 + rng.below(7);
+        let (ic, oc) = (1 + rng.below(4), 1 + rng.below(4));
+        let f = Filter::randn(k, k, ic, oc, &mut rng);
+        let g = SdGeometry::new(k, s, 0);
+        let splits = split_filters(&f, s);
+        assert_eq!(splits.len(), s * s);
+        // each split filter is K_T x K_T, channels preserved
+        for sp in &splits {
+            assert_eq!((sp.kh, sp.kw, sp.ic, sp.oc), (g.k_t, g.k_t, ic, oc));
+        }
+        // weight partition: every original weight appears exactly once
+        let total: usize = splits.iter().map(|sp| sp.nonzero_params()).sum();
+        assert_eq!(total, f.nonzero_params());
+    }
+}
+
+#[test]
+fn wrong_baselines_are_wrong_but_exact_ones_exact() {
+    // table-4 precondition: SD/NZP exact; Shi/Chang not (for s>1 geometries)
+    let mut rng = Rng::new(0xDEAD);
+    for _ in 0..30 {
+        let s = 2 + rng.below(2);
+        let k = (s + rng.below(4)).min(7);
+        let p = rng.below(k.min(3));
+        let i = 4 + rng.below(6);
+        let x = Tensor::randn(1, i, i, 3, &mut rng);
+        let f = Filter::randn(k, k, 3, 2, &mut rng);
+        let want = deconv2d(&x, &f, s, p, 0);
+        assert!(sd_deconv2d(&x, &f, s, p, 0).allclose(&want, 2e-3));
+        let shi = shi_deconv2d(&x, &f, s, p, 0);
+        let chang = chang_deconv2d(&x, &f, s, p, 0);
+        assert_eq!(shi.shape(), want.shape());
+        assert_eq!(chang.shape(), want.shape());
+        assert!(chang.max_abs_diff(&want) > 1e-3, "chang exact at k{k} s{s} p{p}");
+    }
+}
+
+#[test]
+fn sd_linear_in_input() {
+    // deconv is linear: SD(a*x) == a*SD(x); catches accumulation bugs
+    let mut rng = Rng::new(0xAB);
+    let x = Tensor::randn(1, 5, 5, 3, &mut rng);
+    let f = Filter::randn(4, 4, 3, 2, &mut rng);
+    let y1 = sd_deconv2d(&x, &f, 2, 1, 0);
+    let mut x2 = x.clone();
+    for v in &mut x2.data {
+        *v *= 3.0;
+    }
+    let y2 = sd_deconv2d(&x2, &f, 2, 1, 0);
+    for (a, b) in y1.data.iter().zip(&y2.data) {
+        assert!((3.0 * a - b).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,217 @@
+//! Simulator invariants, property-tested over random layer geometries:
+//! * cycle conservation: issued + skipped is policy-independent;
+//! * monotonicity: stronger skip policies never add cycles; more work never
+//!   removes cycles;
+//! * the paper's headline orderings hold across the whole benchmark suite.
+
+use split_deconv::networks;
+use split_deconv::nn::LayerSpec;
+use split_deconv::sim::energy::{energy, EnergyModel};
+use split_deconv::sim::workload::{lower_layer, lower_network_deconvs, Lowering};
+use split_deconv::sim::{dot_array, fcn_engine, pe2d, ProcessorConfig, SkipPolicy};
+use split_deconv::util::rng::Rng;
+
+fn random_deconv(rng: &mut Rng) -> LayerSpec {
+    let s = 1 + rng.below(3);
+    let k = (s + rng.below(4)).min(6).max(2);
+    let p = rng.below(k.min(2));
+    let i = 3 + rng.below(8);
+    let ic = 8 << rng.below(3);
+    let oc = 8 << rng.below(3);
+    LayerSpec::deconv("rand", i, i, ic, oc, k, s, p, 0)
+}
+
+#[test]
+fn cycle_conservation_pe2d() {
+    let mut rng = Rng::new(1);
+    let cfg = ProcessorConfig::default();
+    for _ in 0..20 {
+        let spec = random_deconv(&mut rng);
+        for how in [Lowering::Nzp, Lowering::Sd] {
+            let ops = lower_layer(&spec, how, &mut rng);
+            let totals: Vec<u64> = [
+                SkipPolicy::None,
+                SkipPolicy::ASparse,
+                SkipPolicy::WSparse,
+                SkipPolicy::AWSparse,
+            ]
+            .iter()
+            .map(|p| {
+                let st = pe2d::simulate(&ops, &cfg, *p);
+                st.cycles + st.cycles_skipped
+            })
+            .collect();
+            assert!(
+                totals.windows(2).all(|w| w[0] == w[1]),
+                "conservation violated: {totals:?} for {spec:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn stronger_policy_never_slower() {
+    let mut rng = Rng::new(2);
+    let cfg = ProcessorConfig::default();
+    for _ in 0..20 {
+        let spec = random_deconv(&mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let none = pe2d::simulate(&ops, &cfg, SkipPolicy::None).cycles;
+        let a = pe2d::simulate(&ops, &cfg, SkipPolicy::ASparse).cycles;
+        let w = pe2d::simulate(&ops, &cfg, SkipPolicy::WSparse).cycles;
+        let aw = pe2d::simulate(&ops, &cfg, SkipPolicy::AWSparse).cycles;
+        assert!(a <= none && w <= none && aw <= a && aw <= w, "{spec:?}");
+    }
+}
+
+#[test]
+fn more_channels_more_cycles() {
+    let mut rng = Rng::new(3);
+    let cfg = ProcessorConfig::default();
+    let small = LayerSpec::deconv("s", 8, 8, 32, 32, 4, 2, 1, 0);
+    let big = LayerSpec::deconv("b", 8, 8, 64, 64, 4, 2, 1, 0);
+    for how in [Lowering::Nzp, Lowering::Sd] {
+        let cs = dot_array::simulate(&lower_layer(&small, how, &mut rng), &cfg, SkipPolicy::None);
+        let cb = dot_array::simulate(&lower_layer(&big, how, &mut rng), &cfg, SkipPolicy::None);
+        assert!(cb.cycles > cs.cycles);
+    }
+}
+
+#[test]
+fn paper_speedup_band_dot_array() {
+    // Figure 8: SD ~2.5x over NZP on average (dense); band 1.5-6x per net
+    let cfg = ProcessorConfig::default();
+    let mut speedups = Vec::new();
+    for net in networks::all() {
+        let nzp = dot_array::simulate(
+            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &cfg,
+            SkipPolicy::None,
+        );
+        let sd = dot_array::simulate(
+            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &cfg,
+            SkipPolicy::None,
+        );
+        let s = nzp.cycles as f64 / sd.cycles as f64;
+        assert!(s > 1.2 && s < 6.5, "{}: {s}", net.name);
+        speedups.push(s);
+    }
+    let avg = split_deconv::util::geomean(&speedups);
+    assert!(avg > 1.8 && avg < 4.5, "avg {avg}");
+}
+
+#[test]
+fn paper_speedup_band_pe2d() {
+    // Figure 9: SD-WAsparse 2.41x-4.34x over NZP
+    let cfg = ProcessorConfig::default();
+    let mut speedups = Vec::new();
+    for net in networks::all() {
+        let nzp = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &cfg,
+            SkipPolicy::None,
+        );
+        let sd = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &cfg,
+            SkipPolicy::AWSparse,
+        );
+        speedups.push(nzp.cycles as f64 / sd.cycles as f64);
+    }
+    let avg = split_deconv::util::geomean(&speedups);
+    assert!(avg > 2.0 && avg < 5.0, "avg {avg} ({speedups:?})");
+}
+
+#[test]
+fn sd_wasparse_on_par_with_fcn() {
+    // Figure 9: "the performance of SD-WAsparse is on par with that of FCN"
+    let cfg = ProcessorConfig::default();
+    for net in networks::all() {
+        let sd = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &cfg,
+            SkipPolicy::AWSparse,
+        );
+        let fcn = fcn_engine::simulate_network(&net, &cfg);
+        let ratio = sd.cycles as f64 / fcn.cycles as f64;
+        assert!(
+            ratio > 0.4 && ratio < 2.5,
+            "{}: SD/FCN cycle ratio {ratio}",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn energy_reduction_band() {
+    // Section 5.2.3 / conclusion: SD cuts energy 27.7%-54.5% vs NZP
+    let cfg = ProcessorConfig::default();
+    let m = EnergyModel::default();
+    let mut reductions = Vec::new();
+    for net in networks::all() {
+        let nzp = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &cfg,
+            SkipPolicy::None,
+        );
+        let sd = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &cfg,
+            SkipPolicy::AWSparse,
+        );
+        let r = 1.0 - energy(&sd, &m).total_uj() / energy(&nzp, &m).total_uj();
+        reductions.push(r);
+    }
+    let avg = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    assert!(avg > 0.15 && avg < 0.65, "avg reduction {avg} ({reductions:?})");
+}
+
+#[test]
+fn fcn_energy_exceeds_sd_wasparse() {
+    // Section 5.2.3: FCN's extra column buffers make it costlier than SD
+    let cfg = ProcessorConfig::default();
+    let m = EnergyModel::default();
+    let mut fcn_higher = 0;
+    let nets = networks::all();
+    for net in &nets {
+        let sd = pe2d::simulate(
+            &lower_network_deconvs(net, Lowering::Sd, 42),
+            &cfg,
+            SkipPolicy::AWSparse,
+        );
+        let fcn = fcn_engine::simulate_network(net, &cfg);
+        if energy(&fcn, &m).total_uj() > energy(&sd, &m).total_uj() {
+            fcn_higher += 1;
+        }
+    }
+    assert!(
+        fcn_higher >= nets.len() - 1,
+        "FCN energy should exceed SD-WAsparse on (nearly) all benchmarks: {fcn_higher}/{}",
+        nets.len()
+    );
+}
+
+#[test]
+fn dram_independent_of_scheme() {
+    // Section 5.2.3: DRAM access volume ~same across approaches
+    let cfg = ProcessorConfig::default();
+    for net in networks::all() {
+        let nzp = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &cfg,
+            SkipPolicy::None,
+        );
+        let sd = pe2d::simulate(
+            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &cfg,
+            SkipPolicy::AWSparse,
+        );
+        let ratio = nzp.dram_bytes as f64 / sd.dram_bytes as f64;
+        assert!(
+            (0.6..1.7).contains(&ratio),
+            "{}: DRAM ratio {ratio}",
+            net.name
+        );
+    }
+}
