@@ -13,7 +13,7 @@ use split_deconv::runtime::{artifacts_available, default_artifact_dir};
 use split_deconv::sd::{interleave, sd_deconv2d, split_filters};
 use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
 use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
-use split_deconv::tensor::{conv2d_valid, deconv2d, Filter, Tensor};
+use split_deconv::tensor::{conv2d_naive, conv2d_valid, deconv2d, Filter, Tensor};
 use split_deconv::util::rng::Rng;
 use split_deconv::networks;
 
@@ -28,6 +28,33 @@ fn main() {
         let _ = conv2d_valid(&x, &f, 1);
     });
     println!("  -> {:.2} GMAC/s", macs / r.min_s / 1e9);
+
+    harness::section("GEMM kernel vs retained naive oracle (paper layer shapes)");
+    // The stride-1 split convolutions each SD-lowered deconv layer actually
+    // executes: DCGAN (k5 s2 -> K_T=3 splits) and FST (k3 s2 -> K_T=2).
+    let shapes: &[(&str, usize, usize, usize, usize, usize)] = &[
+        ("DCGAN deconv1 split 12x12x256 k3 -> 128", 12, 12, 256, 3, 128),
+        ("DCGAN deconv2 split 20x20x128 k3 -> 64", 20, 20, 128, 3, 64),
+        ("FST deconv1 split 65x65x128 k2 -> 64", 65, 65, 128, 2, 64),
+    ];
+    let mut worst = f64::INFINITY;
+    for &(name, h, w, ic, k, oc) in shapes {
+        let x = Tensor::randn(1, h, w, ic, &mut rng);
+        let f = Filter::randn(k, k, ic, oc, &mut rng);
+        let naive = harness::bench(&format!("naive {name}"), 3, || {
+            let _ = conv2d_naive(&x, &f, 1);
+        });
+        let gemm = harness::bench(&format!("gemm  {name}"), 20, || {
+            let _ = conv2d_valid(&x, &f, 1);
+        });
+        let speedup = naive.min_s / gemm.min_s;
+        worst = worst.min(speedup);
+        println!("  -> GEMM speedup over naive: {speedup:.1}x");
+    }
+    println!(
+        "worst-case GEMM-vs-naive speedup: {worst:.1}x (acceptance target: >= 4x) {}",
+        if worst >= 4.0 { "PASS" } else { "FAIL" }
+    );
 
     harness::section("SD transform pipeline vs direct deconv (DCGAN deconv2)");
     let x = Tensor::randn(1, 16, 16, 128, &mut rng);
@@ -56,6 +83,30 @@ fn main() {
     harness::bench("dot_array FST NZP Asparse", 5, || {
         let _ = dot_array::simulate(&ops_nzp, &cfg, SkipPolicy::ASparse);
     });
+
+    harness::section("serving path (CPU-native GEMM backend, end to end)");
+    {
+        let server = Server::start_native(
+            ServerConfig {
+                max_batch: 4,
+                batch_timeout: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+            7,
+        )
+        .expect("native server");
+        let mut zrng = Rng::new(3);
+        harness::bench("serve 8 requests (batched, native DCGAN)", 3, || {
+            let rxs: Vec<_> = (0..8)
+                .map(|_| server.submit_blocking(zrng.normal_vec(100)).unwrap())
+                .collect();
+            for rx in rxs {
+                let _ = rx.recv().unwrap();
+            }
+        });
+        println!("{}", server.metrics().summary());
+        server.shutdown();
+    }
 
     if artifacts_available() {
         harness::section("serving path (PJRT DCGAN, end to end)");

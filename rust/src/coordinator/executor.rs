@@ -1,14 +1,21 @@
 //! Batch executors: the interface between the coordinator (batching,
 //! routing, backpressure) and the compute backend.
 //!
-//! The production executor runs the AOT-compiled DCGAN generator through the
-//! PJRT runtime. Because PJRT handles are not `Send`, executors are
-//! constructed *inside* the dispatcher thread via a `Send` factory closure
-//! (see [`super::Server::start_with`]); tests plug in a mock.
+//! Two production executors: [`PjrtExecutor`] runs the AOT-compiled DCGAN
+//! generator through the PJRT runtime (requires `make artifacts`), and
+//! [`NativeExecutor`] runs the same generator through the rust tensor stack
+//! — split deconvolution lowered onto the im2col + GEMM convolution kernel —
+//! so the full serving path works from a fresh checkout. Because PJRT
+//! handles are not `Send`, executors are constructed *inside* the
+//! dispatcher thread via a `Send` factory closure (see
+//! [`super::Server::start_with`]); tests plug in a mock.
 
 use anyhow::{bail, Result};
 
+use crate::nn::NetworkSpec;
+use crate::report::quality::{build_weights, run_network_with, DeconvImpl, LayerWeights};
 use crate::runtime::Engine;
+use crate::tensor::Tensor;
 
 /// Runs batches of latent vectors into batches of images.
 pub trait BatchExecutor {
@@ -119,9 +126,107 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
+/// CPU-native executor: the DCGAN generator executed end to end by the rust
+/// tensor stack, with every deconvolution lowered through split
+/// deconvolution onto the im2col + GEMM conv kernel
+/// ([`crate::tensor::conv2d_gemm`]). The whole dynamic batch runs as ONE
+/// batched tensor pass (batch packed into the N axis), so the dispatcher's
+/// batching directly widens the GEMM — the serving-stack payoff of the
+/// kernel rewrite. Needs no artifacts; weights are seeded-random (the
+/// conversion-exactness property served here is weight-independent, see
+/// DESIGN.md section 6).
+pub struct NativeExecutor {
+    net: NetworkSpec,
+    /// generator weights, built once at construction (seeded, deterministic)
+    weights: Vec<LayerWeights>,
+    z_len: usize,
+    image_len: usize,
+    /// advisory only — see [`BatchExecutor::supported_batches`] impl note
+    batches: Vec<usize>,
+}
+
+impl NativeExecutor {
+    /// DCGAN generator (64x64x3 output, z length 100).
+    pub fn dcgan(weight_seed: u64) -> Self {
+        let net = crate::networks::dcgan();
+        let weights = build_weights(&net, weight_seed);
+        NativeExecutor {
+            net,
+            weights,
+            z_len: 100,
+            image_len: 64 * 64 * 3,
+            batches: vec![1, 2, 4, 8, 16],
+        }
+    }
+}
+
+impl BatchExecutor for NativeExecutor {
+    /// Advisory: the native path has no compiled-executable granularity —
+    /// [`BatchExecutor::execute`] on this executor accepts *any* batch
+    /// length with no padding or chunking. This list only serves batch
+    /// planners ([`plan_batch`]) that expect discrete sizes.
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn z_len(&self) -> usize {
+        self.z_len
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut z = Vec::with_capacity(batch.len() * self.z_len);
+        for req in batch {
+            if req.len() != self.z_len {
+                bail!("latent length {} != expected {}", req.len(), self.z_len);
+            }
+            z.extend_from_slice(req);
+        }
+        let input = Tensor::from_vec(batch.len(), 1, 1, self.z_len, z);
+        let img = run_network_with(&self.net, DeconvImpl::Sd, &self.weights, &input);
+        let per = img.len() / img.n;
+        debug_assert_eq!(per, self.image_len);
+        Ok((0..batch.len())
+            .map(|i| img.data[i * per..(i + 1) * per].to_vec())
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn native_executor_batch_equals_singles() {
+        let mut exec = NativeExecutor::dcgan(3);
+        let mut rng = crate::util::rng::Rng::new(41);
+        let zs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(100)).collect();
+        let batched = exec.execute(&zs).unwrap();
+        assert_eq!(batched.len(), 3);
+        assert_eq!(batched[0].len(), exec.image_len());
+        for (i, z) in zs.iter().enumerate() {
+            let single = exec.execute(std::slice::from_ref(z)).unwrap();
+            let max = batched[i]
+                .iter()
+                .zip(&single[0])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max < 1e-4, "request {i}: batch vs single diff {max}");
+        }
+    }
+
+    #[test]
+    fn native_executor_rejects_bad_latent() {
+        let mut exec = NativeExecutor::dcgan(3);
+        assert!(exec.execute(&[vec![0.0; 7]]).is_err());
+        assert!(exec.execute(&[]).unwrap().is_empty());
+    }
 
     #[test]
     fn plan_batch_picks_smallest_covering() {

@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-pub use executor::{BatchExecutor, PjrtExecutor};
+pub use executor::{BatchExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 
 /// Coordinator configuration.
@@ -128,6 +128,13 @@ impl Server {
         prefix: String,
     ) -> Result<Server> {
         Self::start_with(cfg, move || PjrtExecutor::new(artifact_dir, &prefix))
+    }
+
+    /// Start a server over the CPU-native executor: the DCGAN generator with
+    /// SD deconvolutions on the im2col + GEMM conv kernel. Works from a
+    /// fresh checkout (no artifacts needed).
+    pub fn start_native(cfg: ServerConfig, weight_seed: u64) -> Result<Server> {
+        Self::start_with(cfg, move || Ok(NativeExecutor::dcgan(weight_seed)))
     }
 
     /// Submit a latent vector. Returns a receiver for the response, or an

@@ -4,7 +4,9 @@
 //!   report <table1|table2|table3|table4|fig8|fig9|fig10|fig11|
 //!           table5|table6|table7|table8|fig15|fig16|fig17|all>
 //!   verify  [--limit N]        golden-check AOT artifacts via PJRT
-//!   serve   [--requests N] [--batch B]   run the DCGAN serving demo
+//!   serve   [--requests N] [--batch B] [--native]   run the DCGAN serving
+//!           demo (--native, or a missing artifacts/, uses the CPU-native
+//!           GEMM backend instead of PJRT)
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
@@ -14,7 +16,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 use split_deconv::coordinator::{Server, ServerConfig};
 use split_deconv::report;
-use split_deconv::runtime::{default_artifact_dir, Engine};
+use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
 use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
 use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
 use split_deconv::util::rng::Rng;
@@ -163,7 +165,13 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         batch_timeout: Duration::from_millis(2),
         queue_cap: 128,
     };
-    let server = Server::start_pjrt(cfg, default_artifact_dir(), "dcgan_sd".into())?;
+    let native = args.iter().any(|a| a == "--native") || !artifacts_available();
+    let server = if native {
+        println!("(CPU-native backend: SD deconvolutions on the GEMM conv kernel)");
+        Server::start_native(cfg, 7)?
+    } else {
+        Server::start_pjrt(cfg, default_artifact_dir(), "dcgan_sd".into())?
+    };
     println!("serving DCGAN (SD path) — {n} requests, max batch {max_batch}");
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();

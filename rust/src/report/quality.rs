@@ -90,37 +90,79 @@ fn smooth_filter(k: usize, ic: usize, oc: usize, s: usize, rng: &mut Rng) -> Fil
     f
 }
 
+/// Pre-built weights of one layer (see [`build_weights`]).
+pub enum LayerWeights {
+    /// dense-layer weight matrix, n_in x n_out row-major
+    Dense(Vec<f32>),
+    /// conv / deconv filter
+    Filter(Filter),
+}
+
+/// Build every layer's weights for a network, seeded per layer index — the
+/// exact draws [`run_network`] makes, factored out so long-lived callers
+/// (the coordinator's native executor) pay weight generation once instead
+/// of per batch.
+pub fn build_weights(net: &NetworkSpec, seed: u64) -> Vec<LayerWeights> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Rng::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9));
+            match l.kind {
+                LayerKind::Dense => {
+                    let n_in = l.in_h * l.in_w * l.in_c;
+                    let scale = std::f32::consts::SQRT_2 / (n_in as f32).sqrt();
+                    LayerWeights::Dense(
+                        (0..n_in * l.out_c).map(|_| rng.normal() * scale).collect(),
+                    )
+                }
+                LayerKind::Conv => {
+                    LayerWeights::Filter(smooth_filter(l.k, l.in_c, l.out_c, 1, &mut rng))
+                }
+                LayerKind::Deconv => {
+                    LayerWeights::Filter(smooth_filter(l.k, l.in_c, l.out_c, l.s, &mut rng))
+                }
+            }
+        })
+        .collect()
+}
+
 /// Execute a chain-structured network (DCGAN / SNGAN / ArtGAN / FST) on a
 /// given input, with deconvolutions computed by `imp`. Weights are seeded
 /// per layer index, so different `imp` runs see identical weights.
 /// Activation policy: ReLU between layers, tanh after the last (generator
 /// convention).
 pub fn run_network(net: &NetworkSpec, imp: DeconvImpl, seed: u64, input: &Tensor) -> Tensor {
+    run_network_with(net, imp, &build_weights(net, seed), input)
+}
+
+/// [`run_network`] with pre-built weights (from [`build_weights`]).
+pub fn run_network_with(
+    net: &NetworkSpec,
+    imp: DeconvImpl,
+    weights: &[LayerWeights],
+    input: &Tensor,
+) -> Tensor {
+    assert_eq!(weights.len(), net.layers.len(), "{}: weight count", net.name);
     let mut h = input.clone();
     let last = net.layers.len() - 1;
-    for (i, l) in net.layers.iter().enumerate() {
-        let mut rng = Rng::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9));
-        h = match l.kind {
-            LayerKind::Dense => {
+    for (i, (l, lw)) in net.layers.iter().zip(weights).enumerate() {
+        h = match (l.kind, lw) {
+            (LayerKind::Dense, LayerWeights::Dense(w)) => {
                 let n_in = l.in_h * l.in_w * l.in_c;
                 assert_eq!(h.len() / h.n, n_in, "{}.{}: dense input mismatch", net.name, l.name);
-                let scale = std::f32::consts::SQRT_2 / (n_in as f32).sqrt();
-                let w: Vec<f32> = (0..n_in * l.out_c).map(|_| rng.normal() * scale).collect();
-                dense(&h, &w, l.out_c)
+                dense(&h, w, l.out_c)
             }
-            LayerKind::Conv => {
-                let f = smooth_filter(l.k, l.in_c, l.out_c, 1, &mut rng);
-                conv2d(&h, &f, l.s, l.p)
-            }
-            LayerKind::Deconv => {
+            (LayerKind::Conv, LayerWeights::Filter(f)) => conv2d(&h, f, l.s, l.p),
+            (LayerKind::Deconv, LayerWeights::Filter(f)) => {
                 // reshape dense output into the deconv's expected map
                 if h.h * h.w * h.c != l.in_h * l.in_w * l.in_c {
                     panic!("{}.{}: shape mismatch", net.name, l.name);
                 }
                 let hv = Tensor::from_vec(h.n, l.in_h, l.in_w, l.in_c, h.data.clone());
-                let f = smooth_filter(l.k, l.in_c, l.out_c, l.s, &mut rng);
-                run_deconv(&hv, &f, l, imp)
+                run_deconv(&hv, f, l, imp)
             }
+            _ => panic!("{}.{}: weight kind mismatch", net.name, l.name),
         };
         // dense outputs reshape into the next layer's map implicitly (NHWC
         // flat layout already matches)

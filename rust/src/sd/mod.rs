@@ -12,17 +12,70 @@ pub mod shi;
 
 use crate::tensor::{conv2d_valid, Filter, Tensor};
 
-/// Derived sizes of one SD conversion (paper Eqs. 1–3, 9).
+/// Derived sizes of one SD conversion (paper Eqs. 1–3 and 9).
+///
+/// Splitting a `K x K`, stride-`S` deconvolution into `S*S` stride-1
+/// convolutions requires three derived quantities:
+///
+/// * **Eq. 1** — split-filter side `K_T = ceil(K / S)`: the deconv filter is
+///   sampled with stride `S` per output phase, so each sub-filter covers
+///   `K_T` taps per axis.
+/// * **Eq. 2** — filter zero-pad `P_K = S * K_T - K`, added to the *top and
+///   left* of the original filter so its side becomes divisible by `S`
+///   before sampling. These padded zeros are the "expansion zeros" the
+///   Wsparse skip policy later elides.
+/// * **Eq. 3** — input zero-pad `P_I = K_T - 1`, added to *all four sides*
+///   of the input feature map so every split convolution (run "valid")
+///   produces the full `I + K_T - 1` output side its phase needs.
+/// * **Eq. 9** — interleave crop offset `P_K + P`: after the `S*S` outputs
+///   are interleaved into the `S * (I + K_T - 1)` grid, the true
+///   deconvolution output starts `P_K + P` pixels in from the top-left
+///   (`P` is the deconvolution's own layer padding).
+///
+/// # Worked examples
+///
+/// The divisible case, SNGAN-style `K=4, S=2, P=1`:
+///
+/// ```
+/// use split_deconv::sd::SdGeometry;
+/// let g = SdGeometry::new(4, 2, 1);
+/// assert_eq!(g.k_t, 2); // Eq. 1: ceil(4/2)
+/// assert_eq!(g.p_k, 0); // Eq. 2: 2*2 - 4 — no expansion zeros
+/// assert_eq!(g.p_i, 1); // Eq. 3: 2 - 1
+/// assert_eq!(g.crop(), 1); // Eq. 9: 0 + 1
+/// assert_eq!(g.n_splits(), 4);
+/// // an 8x8 input: each split conv outputs 9x9, interleaved grid 18x18,
+/// // final deconv output (8-1)*2 + 4 - 2*1 = 16 per side
+/// assert_eq!(g.conv_out(8), 9);
+/// assert_eq!(g.big_out(8), 18);
+/// assert_eq!(g.final_out(8, 0), 16);
+/// ```
+///
+/// The expansion case, DCGAN's `K=5, S=2, P=2` deconvolutions:
+///
+/// ```
+/// use split_deconv::sd::SdGeometry;
+/// let g = SdGeometry::new(5, 2, 2);
+/// assert_eq!(g.k_t, 3); // Eq. 1: ceil(5/2)
+/// assert_eq!(g.p_k, 1); // Eq. 2: 2*3 - 5 — one zero row+column of taps
+/// assert_eq!(g.p_i, 2); // Eq. 3: 3 - 1
+/// assert_eq!(g.crop(), 3); // Eq. 9: 1 + 2
+/// // deconv1, 8x8 input with output padding 1: 16x16 output
+/// assert_eq!(g.final_out(8, 1), 16);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SdGeometry {
+    /// original deconvolution filter side `K`
     pub k: usize,
+    /// deconvolution stride `S`
     pub s: usize,
+    /// deconvolution layer padding `P`
     pub p: usize,
-    /// split filter side, ceil(k/s)
+    /// split filter side, `ceil(K/S)` (paper Eq. 1)
     pub k_t: usize,
-    /// filter zero-pad (top & left)
+    /// filter zero-pad on the top & left, `S*K_T - K` (paper Eq. 2)
     pub p_k: usize,
-    /// input feature zero-pad (all sides)
+    /// input feature zero-pad on all sides, `K_T - 1` (paper Eq. 3)
     pub p_i: usize,
 }
 
@@ -58,7 +111,7 @@ impl SdGeometry {
         (i - 1) * self.s + self.k - 2 * self.p + op
     }
 
-    /// Top/left crop into the interleaved grid.
+    /// Top/left crop into the interleaved grid, `P_K + P` (paper Eq. 9).
     pub fn crop(&self) -> usize {
         self.p_k + self.p
     }
@@ -132,6 +185,9 @@ pub fn interleave(convs: &[Tensor], s: usize) -> Tensor {
 
 /// Full SD pipeline: pad input (step 3) -> s^2 stride-1 convs -> interleave
 /// (step 4) -> crop. Bit-exact with `tensor::deconv2d(x, f, s, p, op)`.
+/// The per-split stride-1 convolutions run on the im2col + GEMM hot path
+/// ([`conv2d_valid`]) — the software analogue of mapping every split onto a
+/// fully utilized dense convolution engine.
 pub fn sd_deconv2d(x: &Tensor, f: &Filter, s: usize, p: usize, op: usize) -> Tensor {
     let g = SdGeometry::new(f.kh, s, p);
     let xp = x.pad(g.p_i, g.p_i, g.p_i, g.p_i);

@@ -1,10 +1,17 @@
 //! Convolution / deconvolution ops over [`Tensor`] / [`Filter`].
 //!
 //! `conv2d` is the hot path: every deconvolution implementation (SD, NZP,
-//! Shi, Chang) lowers to it, and the quality evaluation (Table 4, Figs 13/14)
-//! runs entire generators through it. The inner loop is written as a
-//! channels-last dot/axpy over contiguous slices so the compiler
-//! auto-vectorizes it; see EXPERIMENTS.md #Perf for measurements.
+//! Shi, Chang) lowers to it, the quality evaluation (Table 4, Figs 13/14)
+//! runs entire generators through it, and the coordinator's CPU-native
+//! executor serves batched DCGAN traffic on it. The core is
+//! [`conv2d_gemm`]: im2col packing into a per-thread scratch arena followed
+//! by a cache-blocked GEMM, parallelized over batch x output-row tiles with
+//! a scoped worker pool. The scalar reference kernel is retained as
+//! [`conv2d_naive`], the bit-exactness oracle (accumulation order in the
+//! GEMM micro-kernel is ascending-k per output element, identical to the
+//! oracle's loop order, so the two agree bit for bit). See EXPERIMENTS.md
+//! #Perf for measurements and `cargo bench --bench hotpath` for the
+//! GEMM-vs-naive speedup on the paper's DCGAN/FST layer shapes.
 
 use super::{Filter, Tensor};
 
@@ -21,37 +28,35 @@ pub fn conv2d(x: &Tensor, f: &Filter, stride: usize, padding: usize) -> Tensor {
     conv2d_valid(x, f, stride)
 }
 
-/// Valid convolution, the vectorized core.
-///
-/// Accumulates output-channel vectors: for each (output pixel, tap, ic) the
-/// contribution `x * w[., oc]` is an axpy over the contiguous OC axis.
+/// Valid convolution — the hot path. Dispatches to the im2col + GEMM kernel
+/// ([`conv2d_gemm`]); results are bit-identical to [`conv2d_naive`].
 pub fn conv2d_valid(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
+    conv2d_gemm(x, f, stride)
+}
+
+/// Scalar reference convolution: the bit-exactness oracle for the GEMM
+/// kernel (property-tested in rust/tests/conv_gemm.rs) and the baseline the
+/// hotpath bench reports speedup over. Deliberately the plain 7-deep loop.
+pub fn conv2d_naive(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
+    assert_eq!(x.c, f.ic, "channel mismatch");
     assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
     let oh = (x.h - f.kh) / stride + 1;
     let ow = (x.w - f.kw) / stride + 1;
     let mut out = Tensor::zeros(x.n, oh, ow, f.oc);
-    let oc = f.oc;
     for n in 0..x.n {
         for oy in 0..oh {
             for ox in 0..ow {
-                let obase = out.idx(n, oy, ox, 0);
-                let acc = &mut out.data[obase..obase + oc];
-                for dy in 0..f.kh {
-                    let iy = oy * stride + dy;
-                    for dx in 0..f.kw {
-                        let ixb = x.idx(n, iy, ox * stride + dx, 0);
-                        let xs = &x.data[ixb..ixb + x.c];
-                        let wbase = f.idx(dy, dx, 0, 0);
-                        for (ic, &xv) in xs.iter().enumerate() {
-                            if xv == 0.0 {
-                                continue; // free win; also models zero-skip
-                            }
-                            let ws = &f.data[wbase + ic * oc..wbase + ic * oc + oc];
-                            for (a, &w) in acc.iter_mut().zip(ws) {
-                                *a += xv * w;
+                for o in 0..f.oc {
+                    let mut acc = 0.0;
+                    for dy in 0..f.kh {
+                        for dx in 0..f.kw {
+                            for i in 0..x.c {
+                                acc += x.at(n, oy * stride + dy, ox * stride + dx, i)
+                                    * f.at(dy, dx, i, o);
                             }
                         }
                     }
+                    *out.at_mut(n, oy, ox, o) = acc;
                 }
             }
         }
@@ -59,9 +64,198 @@ pub fn conv2d_valid(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
     out
 }
 
+/// Per-thread im2col scratch target: keep one tile's panel ~L2-resident.
+const PANEL_BYTES: usize = 256 * 1024;
+
+/// Micro-kernel register-block height (output pixels per GEMM block).
+const MR: usize = 4;
+
+/// MAC count below which threading overhead outweighs the parallel win.
+const PARALLEL_MIN_MACS: usize = 1 << 21;
+
+/// One worker job: a tile of output rows of one batch image, owning the
+/// corresponding disjoint slice of the output buffer.
+struct Tile<'a> {
+    n: usize,
+    y0: usize,
+    rows: usize,
+    out: &'a mut [f32],
+}
+
+/// Per-thread scratch arena, reused across every tile a worker runs: the
+/// im2col panel and the micro-kernel accumulator block.
+#[derive(Default)]
+struct Scratch {
+    panel: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// Valid convolution as im2col + cache-blocked GEMM over a scoped worker
+/// pool.
+///
+/// The filter's HWIO layout already *is* the K x N GEMM operand
+/// (K = kh\*kw\*ic contiguous rows of N = oc), so only the activations are
+/// packed: each output pixel's receptive field is kh contiguous
+/// kw\*ic-float row segments, gathered into a panel held in the worker's
+/// scratch arena. Work is split into batch x output-row tiles sized so one
+/// panel stays ~L2-resident; tiles are drained from a shared queue by
+/// `min(cores, tiles)` scoped threads (set `SD_CONV_THREADS` to override).
+/// Every output element accumulates in ascending-k order with one f32
+/// accumulator, exactly the order of [`conv2d_naive`] — the two kernels are
+/// bit-identical, which rust/tests/conv_gemm.rs asserts with zero tolerance.
+pub fn conv2d_gemm(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
+    assert_eq!(x.c, f.ic, "channel mismatch");
+    assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
+    let oh = (x.h - f.kh) / stride + 1;
+    let ow = (x.w - f.kw) / stride + 1;
+    let kdim = f.kh * f.kw * f.ic;
+    let n_out = f.oc;
+    let mut out = Tensor::zeros(x.n, oh, ow, n_out);
+    if out.data.is_empty() {
+        return out;
+    }
+
+    let rows_per_tile = (PANEL_BYTES / (ow * kdim * 4).max(1)).clamp(1, oh);
+    let mut tiles: Vec<Tile> = Vec::new();
+    for (n, img) in out.data.chunks_mut(oh * ow * n_out).enumerate() {
+        for (t, slice) in img.chunks_mut(rows_per_tile * ow * n_out).enumerate() {
+            tiles.push(Tile {
+                n,
+                y0: t * rows_per_tile,
+                rows: slice.len() / (ow * n_out),
+                out: slice,
+            });
+        }
+    }
+
+    let macs = x.n * oh * ow * kdim * n_out;
+    let workers = worker_count(macs, tiles.len());
+    if workers <= 1 {
+        let mut scratch = Scratch::default();
+        for tile in tiles {
+            run_tile(x, f, stride, ow, tile, &mut scratch);
+        }
+    } else {
+        let queue = std::sync::Mutex::new(tiles);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    let mut scratch = Scratch::default();
+                    loop {
+                        // take the lock only to pop, not across the tile run
+                        let tile = queue.lock().unwrap().pop();
+                        match tile {
+                            Some(tile) => run_tile(x, f, stride, ow, tile, &mut scratch),
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Worker-pool size: 1 for small problems, else `SD_CONV_THREADS` or the
+/// machine's available parallelism, capped by the tile count.
+fn worker_count(macs: usize, tiles: usize) -> usize {
+    if tiles <= 1 || macs < PARALLEL_MIN_MACS {
+        return 1;
+    }
+    std::env::var("SD_CONV_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .clamp(1, tiles)
+}
+
+/// Pack one row tile's im2col panel into the scratch arena, then GEMM it
+/// against the filter into the tile's output slice.
+fn run_tile(x: &Tensor, f: &Filter, stride: usize, ow: usize, tile: Tile, s: &mut Scratch) {
+    let kdim = f.kh * f.kw * f.ic;
+    let seg = f.kw * x.c; // one contiguous input-row segment per kernel row
+    let m = tile.rows * ow;
+    // no zero-fill: the packing loop below overwrites every element
+    // (kh segments of kw*ic per pixel cover the full kdim)
+    s.panel.resize(m * kdim, 0.0);
+    for r in 0..tile.rows {
+        let oy = tile.y0 + r;
+        for ox in 0..ow {
+            let dst_base = (r * ow + ox) * kdim;
+            for dy in 0..f.kh {
+                let src = x.idx(tile.n, oy * stride + dy, ox * stride, 0);
+                let dst = dst_base + dy * seg;
+                s.panel[dst..dst + seg].copy_from_slice(&x.data[src..src + seg]);
+            }
+        }
+    }
+    gemm(&s.panel, &f.data, m, kdim, f.oc, tile.out, &mut s.acc);
+}
+
+/// `c = a (m x k) . b (k x n)`, row-major, `c` overwritten. Register-blocked
+/// MR rows at a time; per-element accumulation is ascending-k (bit-exact
+/// with the scalar oracle).
+fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32], acc: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if acc.len() != MR * n {
+        acc.resize(MR * n, 0.0);
+    }
+    let mut row = 0;
+    while row + MR <= m {
+        acc.fill(0.0);
+        {
+            let (a0, rest) = acc.split_at_mut(n);
+            let (a1, rest) = rest.split_at_mut(n);
+            let (a2, a3) = rest.split_at_mut(n);
+            let p0 = &a[row * k..(row + 1) * k];
+            let p1 = &a[(row + 1) * k..(row + 2) * k];
+            let p2 = &a[(row + 2) * k..(row + 3) * k];
+            let p3 = &a[(row + 3) * k..(row + 4) * k];
+            for kk in 0..k {
+                let (v0, v1, v2, v3) = (p0[kk], p1[kk], p2[kk], p3[kk]);
+                let brow = &b[kk * n..(kk + 1) * n];
+                for ((((&w, c0), c1), c2), c3) in brow
+                    .iter()
+                    .zip(a0.iter_mut())
+                    .zip(a1.iter_mut())
+                    .zip(a2.iter_mut())
+                    .zip(a3.iter_mut())
+                {
+                    *c0 += v0 * w;
+                    *c1 += v1 * w;
+                    *c2 += v2 * w;
+                    *c3 += v3 * w;
+                }
+            }
+        }
+        c[row * n..(row + MR) * n].copy_from_slice(&acc[..MR * n]);
+        row += MR;
+    }
+    while row < m {
+        let arow = &a[row * k..(row + 1) * k];
+        let crow = &mut c[row * n..(row + 1) * n];
+        crow.fill(0.0);
+        for kk in 0..k {
+            let v = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &w) in crow.iter_mut().zip(brow) {
+                *cv += v * w;
+            }
+        }
+        row += 1;
+    }
+}
+
 /// Transposed convolution (scatter semantics, torch ConvTranspose2d),
 /// with layer padding `p` and output padding `op`:
-/// out side = (i-1)*s + k - 2p + op.
+/// out side = (i-1)\*s + k - 2p + op.
 pub fn deconv2d(x: &Tensor, f: &Filter, stride: usize, padding: usize, out_pad: usize) -> Tensor {
     let full_h = (x.h - 1) * stride + f.kh;
     let full_w = (x.w - 1) * stride + f.kw;
@@ -114,7 +308,7 @@ pub fn zero_insert(x: &Tensor, stride: usize) -> Tensor {
     out
 }
 
-/// Dense (fully-connected) layer: x viewed as (N, H*W*C) @ w (in x out).
+/// Dense (fully-connected) layer: x viewed as (N, H\*W\*C) @ w (in x out).
 pub fn dense(x: &Tensor, w: &[f32], n_out: usize) -> Tensor {
     let n_in = x.h * x.w * x.c;
     assert_eq!(w.len(), n_in * n_out, "dense weight size");
@@ -157,32 +351,6 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    /// Scalar-loop conv for cross-checking the vectorized one.
-    fn conv2d_naive(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
-        let oh = (x.h - f.kh) / stride + 1;
-        let ow = (x.w - f.kw) / stride + 1;
-        let mut out = Tensor::zeros(x.n, oh, ow, f.oc);
-        for n in 0..x.n {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for o in 0..f.oc {
-                        let mut acc = 0.0;
-                        for dy in 0..f.kh {
-                            for dx in 0..f.kw {
-                                for i in 0..x.c {
-                                    acc += x.at(n, oy * stride + dy, ox * stride + dx, i)
-                                        * f.at(dy, dx, i, o);
-                                }
-                            }
-                        }
-                        *out.at_mut(n, oy, ox, o) = acc;
-                    }
-                }
-            }
-        }
-        out
-    }
-
     #[test]
     fn conv_matches_naive() {
         let mut rng = Rng::new(3);
@@ -196,6 +364,18 @@ mod tests {
             let a = conv2d_valid(&x, &f, s);
             let b = conv2d_naive(&x, &f, s);
             assert!(a.allclose(&b, 1e-4), "mismatch {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn gemm_is_bit_exact_with_naive() {
+        let mut rng = Rng::new(17);
+        let x = Tensor::randn(2, 9, 13, 5, &mut rng);
+        let f = Filter::randn(3, 2, 5, 7, &mut rng);
+        for s in [1, 2] {
+            let a = conv2d_gemm(&x, &f, s);
+            let b = conv2d_naive(&x, &f, s);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "stride {s} not bit-exact");
         }
     }
 

@@ -1,0 +1,220 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! implements exactly the subset of the real `anyhow` API this workspace
+//! uses: [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and
+//! the [`Context`] extension trait. Semantics match `anyhow` where the two
+//! overlap: any `std::error::Error + Send + Sync` converts via `?`, context
+//! wraps the cause chain, and `{:#}` renders the full chain separated by
+//! `": "`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with this crate's [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error, holding a cause chain.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(Message(message.to_string())),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            inner: Box::new(Wrapped {
+                context: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        let head: &(dyn StdError + 'static) = self.inner.as_ref();
+        Chain { next: Some(head) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(s) = source {
+                write!(f, ": {s}")?;
+                source = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// Iterator over an [`Error`]'s cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+struct Wrapped {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl fmt::Debug for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl StdError for Wrapped {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        let src: &(dyn StdError + 'static) = self.source.as_ref();
+        Some(src)
+    }
+}
+
+/// Attach context to the error of a `Result`, like `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("bad thing {}", 7);
+        assert_eq!(format!("{e}"), "bad thing 7");
+        fn f() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope");
+    }
+}
