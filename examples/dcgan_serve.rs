@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 4,
             batch_timeout: Duration::from_millis(2),
             queue_cap: 128,
+            model: "dcgan".to_string(),
         },
         default_artifact_dir(),
         "dcgan_sd".into(),

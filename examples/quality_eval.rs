@@ -38,7 +38,7 @@ fn main() {
     println!("{:<10} {:>8} {:>10} {:>12}", "Benchmark", "SD", "Shi [30]", "Chang [31]");
 
     // DCGAN (64x64) — Figure 13 panels
-    let native = dcgan_image(DeconvImpl::Native, 1, 2);
+    let native = dcgan_image(DeconvImpl::Native, 1, 2).expect("dcgan forward");
     let approaches = [
         (DeconvImpl::Sd, "dcgan_sd"),
         (DeconvImpl::Shi, "dcgan_shi"),
@@ -47,7 +47,7 @@ fn main() {
     let mut ssims = Vec::new();
     write_pgm("fig13_dcgan_native.pgm", &native).unwrap();
     for (imp, name) in approaches {
-        let img = dcgan_image(imp, 1, 2);
+        let img = dcgan_image(imp, 1, 2).expect("dcgan forward");
         ssims.push(ssim_tensor(&img, &native, 2.0));
         write_pgm(&format!("fig13_{name}.pgm"), &img).unwrap();
     }
@@ -57,7 +57,7 @@ fn main() {
     );
 
     // FST (256/fst_div) — Figure 14 panels
-    let native = fst_image(DeconvImpl::Native, 1, fst_div);
+    let native = fst_image(DeconvImpl::Native, 1, fst_div).expect("fst forward");
     let approaches = [
         (DeconvImpl::Sd, "fst_sd"),
         (DeconvImpl::Shi, "fst_shi"),
@@ -66,7 +66,7 @@ fn main() {
     let mut fssims = Vec::new();
     write_pgm("fig14_fst_native.pgm", &native).unwrap();
     for (imp, name) in approaches {
-        let img = fst_image(imp, 1, fst_div);
+        let img = fst_image(imp, 1, fst_div).expect("fst forward");
         fssims.push(ssim_tensor(&img, &native, 2.0));
         write_pgm(&format!("fig14_{name}.pgm"), &img).unwrap();
     }

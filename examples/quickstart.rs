@@ -61,8 +61,8 @@ fn main() {
     // 5. Simulated execution on an unmodified 2D PE array.
     let cfg = ProcessorConfig::default();
     let mut rng = Rng::new(8);
-    let nzp_ops = lower_layer(&spec, Lowering::Nzp, &mut rng);
-    let sd_ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+    let nzp_ops = lower_layer(&spec, Lowering::Nzp, &mut rng).unwrap();
+    let sd_ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
     let nzp_stats = pe2d::simulate(&nzp_ops, &cfg, SkipPolicy::None);
     let sd_stats = pe2d::simulate(&sd_ops, &cfg, SkipPolicy::AWSparse);
     println!("\nsimulated 2D PE array (32x7, 800 MHz):");

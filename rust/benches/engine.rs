@@ -1,0 +1,99 @@
+//! Bench target: compiled-plan engine vs the per-call interpreter paths,
+//! across all six benchmark networks — the serving hot path the `engine`
+//! subsystem optimizes.
+//!
+//! Three bars per network (batch 1, min over iters):
+//! * **per-call**   — `quality::run_network`: weights rebuilt, SD filters
+//!   re-split, plan recompiled on every forward call (the pre-engine
+//!   serving cost profile the ISSUE calls "the interpreter");
+//! * **interpreter** — the retained `run_network_with` oracle: weights
+//!   cached, but SD filters re-split and every intermediate re-allocated
+//!   per call;
+//! * **plan-cached** — `engine::Plan::forward` on a plan built once
+//!   (filters pre-split + packed, shapes precomputed, buffer arena reused).
+//!
+//! Acceptance (enforced with a nonzero exit code): plan-cached beats the
+//! **per-call** path on EVERY network; the weight-cached interpreter
+//! comparison is reported as an informational bar. MDE and FST run at half
+//! resolution (structure and code path identical) to keep the bench
+//! minutes-scale; the other four are full scale.
+//!
+//! `cargo bench --bench engine -- --json BENCH_engine.json` writes the
+//! per-network times/speedups for cross-PR tracking.
+
+#[path = "harness.rs"]
+mod harness;
+
+use split_deconv::engine::{build_weights, DeconvImpl, Plan};
+use split_deconv::networks;
+use split_deconv::nn::NetworkSpec;
+use split_deconv::report::quality::{run_network, run_network_with};
+use split_deconv::tensor::Tensor;
+use split_deconv::util::rng::Rng;
+
+fn bench_nets() -> Vec<(NetworkSpec, &'static str)> {
+    vec![
+        (networks::dcgan(), "DCGAN 64x64"),
+        (networks::artgan(), "ArtGAN 32x32"),
+        (networks::sngan(), "SNGAN 32x32"),
+        (networks::gpgan(), "GP-GAN 64x64"),
+        (networks::scaled(&networks::mde(), 2), "MDE 64x128 (1/2 res)"),
+        (networks::scaled(&networks::fst(), 2), "FST 128x128 (1/2 res)"),
+    ]
+}
+
+fn main() {
+    let mut sink = harness::JsonSink::from_args();
+    let mut rng = Rng::new(11);
+    let seed = 7u64;
+    let iters = 3;
+    let mut worst_per_call = f64::INFINITY;
+    let mut worst_interp = f64::INFINITY;
+
+    for (net, label) in bench_nets() {
+        harness::section(label);
+        let l0 = &net.layers[0];
+        let input = Tensor::randn(1, l0.in_h, l0.in_w, l0.in_c, &mut rng);
+        let weights = build_weights(&net, seed);
+        let mut plan = Plan::build(&net, &weights, DeconvImpl::Sd).expect("plan compiles");
+
+        let per_call = harness::bench(&format!("per-call      {label}"), iters, || {
+            let _ = run_network(&net, DeconvImpl::Sd, seed, &input).expect("per-call forward");
+        });
+        let interp = harness::bench(&format!("interpreter   {label}"), iters, || {
+            let _ = run_network_with(&net, DeconvImpl::Sd, &weights, &input)
+                .expect("interpreter forward");
+        });
+        let cached = harness::bench(&format!("plan-cached   {label}"), iters, || {
+            let _ = plan.forward(&input).expect("plan forward");
+        });
+
+        let s_per_call = per_call.min_s / cached.min_s;
+        let s_interp = interp.min_s / cached.min_s;
+        worst_per_call = worst_per_call.min(s_per_call);
+        worst_interp = worst_interp.min(s_interp);
+        println!(
+            "  -> plan-cached speedup: {s_per_call:.2}x vs per-call, {s_interp:.2}x vs interpreter"
+        );
+        sink.record(&per_call);
+        sink.record(&interp);
+        sink.record_speedup(&per_call, &cached);
+    }
+
+    harness::section("summary");
+    let pass = worst_per_call > 1.0;
+    println!(
+        "worst plan-cached speedup: {worst_per_call:.2}x vs per-call interpreter \
+         (acceptance: > 1x on every network) {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "worst plan-cached speedup vs weight-cached interpreter: {worst_interp:.2}x {}",
+        if worst_interp > 1.0 { "PASS" } else { "(informational)" }
+    );
+    sink.write("engine");
+    if !pass {
+        // real gate: a FAIL is a nonzero exit, visible to CI and scripts
+        std::process::exit(1);
+    }
+}

@@ -11,11 +11,11 @@ use split_deconv::util;
 
 fn main() {
     harness::section("Figure 10: energy, dot-production PE array");
-    let f10 = report::fig10(42);
+    let f10 = report::fig10(42).expect("fig10");
     report::print_energy_figure("", &f10);
 
     harness::section("Figure 11: energy, regular 2D PE array");
-    let f11 = report::fig11(42);
+    let f11 = report::fig11(42).expect("fig11");
     report::print_energy_figure("", &f11);
 
     let m = EnergyModel::default();
@@ -51,8 +51,8 @@ fn main() {
 
     harness::section("Generation cost");
     harness::bench("fig10+fig11 full regeneration", 3, || {
-        let _ = report::fig10(42);
-        let _ = report::fig11(42);
+        let _ = report::fig10(42).expect("fig10");
+        let _ = report::fig11(42).expect("fig11");
     });
     let _ = util::geomean(&reductions); // keep util linked
 }

@@ -12,7 +12,7 @@ use split_deconv::{networks, util};
 
 fn main() {
     harness::section("Figure 8: dot-production PE array (normalized to NZP)");
-    let rows = report::fig8(42);
+    let rows = report::fig8(42).expect("fig8 lowering");
     report::print_sim_figure("", &rows);
     let speedups: Vec<f64> = rows
         .iter()
@@ -26,7 +26,7 @@ fn main() {
     harness::section("Ablation: NZP with idealized group-aligned Asparse");
     let cfg = ProcessorConfig::default();
     for net in networks::all() {
-        let ops = lower_network_deconvs(&net, Lowering::Nzp, 42);
+        let ops = lower_network_deconvs(&net, Lowering::Nzp, 42).expect("NZP lowering");
         let dense = dot_array::simulate(&ops, &cfg, SkipPolicy::None);
         let skip = dot_array::simulate(&ops, &cfg, SkipPolicy::ASparse);
         println!(
@@ -38,7 +38,7 @@ fn main() {
 
     harness::section("Simulator throughput");
     let net = networks::dcgan();
-    let ops = lower_network_deconvs(&net, Lowering::Sd, 42);
+    let ops = lower_network_deconvs(&net, Lowering::Sd, 42).expect("SD lowering");
     let macs: u64 = ops.iter().map(|o| o.dense_macs()).sum();
     let r = harness::bench("simulate DCGAN SD deconvs (dot array)", 10, || {
         let _ = dot_array::simulate(&ops, &cfg, SkipPolicy::ASparse);

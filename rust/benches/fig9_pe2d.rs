@@ -13,7 +13,7 @@ use split_deconv::{networks, util};
 
 fn main() {
     harness::section("Figure 9: regular 2D PE array (normalized to NZP)");
-    let rows = report::fig9(42);
+    let rows = report::fig9(42).expect("fig9 lowering");
     report::print_sim_figure("", &rows);
     let wasparse: Vec<f64> = rows
         .iter()
@@ -33,7 +33,7 @@ fn main() {
     harness::section("Ablation: what each skip policy buys on SD");
     let cfg = ProcessorConfig::default();
     for net in networks::all() {
-        let ops = lower_network_deconvs(&net, Lowering::Sd, 42);
+        let ops = lower_network_deconvs(&net, Lowering::Sd, 42).expect("SD lowering");
         let dense = pe2d::simulate(&ops, &cfg, SkipPolicy::None).cycles as f64;
         let a = pe2d::simulate(&ops, &cfg, SkipPolicy::ASparse).cycles as f64;
         let w = pe2d::simulate(&ops, &cfg, SkipPolicy::WSparse).cycles as f64;
@@ -50,7 +50,7 @@ fn main() {
 
     harness::section("Simulator throughput");
     let net = networks::mde();
-    let ops = lower_network_deconvs(&net, Lowering::Sd, 42);
+    let ops = lower_network_deconvs(&net, Lowering::Sd, 42).expect("SD lowering");
     let macs: u64 = ops.iter().map(|o| o.dense_macs()).sum();
     let r = harness::bench("simulate MDE SD deconvs (2D array, WAsparse)", 5, || {
         let _ = pe2d::simulate(&ops, &cfg, SkipPolicy::AWSparse);

@@ -54,3 +54,89 @@ pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> BenchResult {
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// Machine-readable bench output. Every bench target accepts
+/// `cargo bench --bench <target> -- --json <path>` and writes a
+/// `BENCH_*.json`-style file with per-entry times (and speedups where the
+/// bench computes one), so the repo's perf trajectory can be tracked across
+/// PRs. Without the flag, `write` is a no-op.
+pub struct JsonSink {
+    path: Option<String>,
+    entries: Vec<String>,
+}
+
+impl JsonSink {
+    /// Parse `--json <path>` from the bench binary's argv. A missing or
+    /// flag-like path (starting with `-`) is diagnosed loudly rather than
+    /// silently disabling output or writing to a file named like a flag.
+    pub fn from_args() -> JsonSink {
+        let args: Vec<String> = std::env::args().collect();
+        let path = match args.iter().position(|a| a == "--json") {
+            None => None,
+            Some(i) => match args.get(i + 1) {
+                Some(p) if !p.starts_with('-') => Some(p.clone()),
+                _ => {
+                    eprintln!("warning: --json needs a file path argument; JSON output disabled");
+                    None
+                }
+            },
+        };
+        JsonSink { path, entries: Vec::new() }
+    }
+
+    /// Record one benchmark result.
+    pub fn record(&mut self, r: &BenchResult) {
+        self.push_entry(r, None);
+    }
+
+    /// Record an optimized result together with its speedup over a baseline
+    /// (min-over-iters ratio, the same number the bench prints). A
+    /// non-finite ratio (zero-time denominator) drops the speedup field
+    /// rather than emitting invalid JSON.
+    pub fn record_speedup(&mut self, baseline: &BenchResult, optimized: &BenchResult) {
+        let s = baseline.min_s / optimized.min_s;
+        self.push_entry(optimized, if s.is_finite() { Some(s) } else { None });
+    }
+
+    fn push_entry(&mut self, r: &BenchResult, speedup: Option<f64>) {
+        let mut e = format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ms\":{:.6},\"min_ms\":{:.6}",
+            json_escape(&r.name),
+            r.iters,
+            r.mean_s * 1e3,
+            r.min_s * 1e3
+        );
+        if let Some(s) = speedup {
+            e.push_str(&format!(",\"speedup\":{s:.4}"));
+        }
+        e.push('}');
+        self.entries.push(e);
+    }
+
+    /// Write `{"bench": ..., "results": [...]}` to the `--json` path, if set.
+    pub fn write(&self, bench: &str) {
+        let Some(path) = &self.path else { return };
+        let body = format!(
+            "{{\"bench\":\"{}\",\"results\":[\n  {}\n]}}\n",
+            json_escape(bench),
+            self.entries.join(",\n  ")
+        );
+        match std::fs::write(path, body) {
+            Ok(()) => println!("\nwrote bench JSON to {path}"),
+            Err(e) => eprintln!("failed to write bench JSON {path}: {e}"),
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

@@ -18,6 +18,7 @@ use split_deconv::util::rng::Rng;
 use split_deconv::networks;
 
 fn main() {
+    let mut sink = harness::JsonSink::from_args();
     let mut rng = Rng::new(1);
 
     harness::section("tensor conv core (the quality-eval hot loop)");
@@ -28,6 +29,7 @@ fn main() {
         let _ = conv2d_valid(&x, &f, 1);
     });
     println!("  -> {:.2} GMAC/s", macs / r.min_s / 1e9);
+    sink.record(&r);
 
     harness::section("GEMM kernel vs retained naive oracle (paper layer shapes)");
     // The stride-1 split convolutions each SD-lowered deconv layer actually
@@ -50,6 +52,8 @@ fn main() {
         let speedup = naive.min_s / gemm.min_s;
         worst = worst.min(speedup);
         println!("  -> GEMM speedup over naive: {speedup:.1}x");
+        sink.record(&naive);
+        sink.record_speedup(&naive, &gemm);
     }
     println!(
         "worst-case GEMM-vs-naive speedup: {worst:.1}x (acceptance target: >= 4x) {}",
@@ -75,8 +79,9 @@ fn main() {
 
     harness::section("simulator counting loops");
     let cfg = ProcessorConfig::default();
-    let ops_sd = lower_network_deconvs(&networks::fst(), Lowering::Sd, 42);
-    let ops_nzp = lower_network_deconvs(&networks::fst(), Lowering::Nzp, 42);
+    let ops_sd = lower_network_deconvs(&networks::fst(), Lowering::Sd, 42).expect("SD lowering");
+    let ops_nzp =
+        lower_network_deconvs(&networks::fst(), Lowering::Nzp, 42).expect("NZP lowering");
     harness::bench("pe2d FST SD WAsparse", 5, || {
         let _ = pe2d::simulate(&ops_sd, &cfg, SkipPolicy::AWSparse);
     });
@@ -84,19 +89,20 @@ fn main() {
         let _ = dot_array::simulate(&ops_nzp, &cfg, SkipPolicy::ASparse);
     });
 
-    harness::section("serving path (CPU-native GEMM backend, end to end)");
+    harness::section("serving path (CPU-native engine backend, end to end)");
     {
         let server = Server::start_native(
             ServerConfig {
                 max_batch: 4,
                 batch_timeout: Duration::from_millis(1),
                 queue_cap: 256,
+                model: "dcgan".to_string(),
             },
             7,
         )
         .expect("native server");
         let mut zrng = Rng::new(3);
-        harness::bench("serve 8 requests (batched, native DCGAN)", 3, || {
+        let serve = harness::bench("serve 8 requests (batched, native DCGAN)", 3, || {
             let rxs: Vec<_> = (0..8)
                 .map(|_| server.submit_blocking(zrng.normal_vec(100)).unwrap())
                 .collect();
@@ -104,6 +110,7 @@ fn main() {
                 let _ = rx.recv().unwrap();
             }
         });
+        sink.record(&serve);
         println!("{}", server.metrics().summary());
         server.shutdown();
     }
@@ -115,6 +122,7 @@ fn main() {
                 max_batch: 4,
                 batch_timeout: Duration::from_millis(1),
                 queue_cap: 256,
+                model: "dcgan".to_string(),
             },
             default_artifact_dir(),
             "dcgan_sd".into(),
@@ -134,4 +142,5 @@ fn main() {
     } else {
         println!("\n(serving bench skipped: run `make artifacts`)");
     }
+    sink.write("hotpath");
 }

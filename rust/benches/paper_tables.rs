@@ -14,7 +14,7 @@ fn main() {
     println!();
     report::print_table3();
     println!();
-    report::print_table4(2); // FST at 128x128 for tractable wall-clock
+    report::print_table4(2).expect("table4"); // FST at 128x128 for tractable wall-clock
     println!();
 
     harness::section("Generation cost");
@@ -24,6 +24,6 @@ fn main() {
         let _ = report::table3();
     });
     harness::bench("table 4 (full generator quality eval)", 3, || {
-        let _ = report::quality::table4(4);
+        let _ = report::quality::table4(4).expect("table4");
     });
 }

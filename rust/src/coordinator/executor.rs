@@ -3,19 +3,18 @@
 //!
 //! Two production executors: [`PjrtExecutor`] runs the AOT-compiled DCGAN
 //! generator through the PJRT runtime (requires `make artifacts`), and
-//! [`NativeExecutor`] runs the same generator through the rust tensor stack
-//! — split deconvolution lowered onto the im2col + GEMM convolution kernel —
-//! so the full serving path works from a fresh checkout. Because PJRT
-//! handles are not `Send`, executors are constructed *inside* the
-//! dispatcher thread via a `Send` factory closure (see
+//! [`NativeExecutor`] wraps a compiled [`Plan`] from the `engine`
+//! subsystem: any of the six benchmark networks, with split-deconvolution
+//! filters pre-split at plan time, executing on the im2col + GEMM
+//! convolution kernel — so the full serving path works from a fresh
+//! checkout. Because PJRT handles are not `Send`, executors are constructed
+//! *inside* the dispatcher thread via a `Send` factory closure (see
 //! [`super::Server::start_with`]); tests plug in a mock.
 
 use anyhow::{bail, Result};
 
-use crate::nn::NetworkSpec;
-use crate::report::quality::{build_weights, run_network_with, DeconvImpl, LayerWeights};
+use crate::engine::{DeconvImpl, Plan};
 use crate::runtime::Engine;
-use crate::tensor::Tensor;
 
 /// Runs batches of latent vectors into batches of images.
 pub trait BatchExecutor {
@@ -126,37 +125,36 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
-/// CPU-native executor: the DCGAN generator executed end to end by the rust
-/// tensor stack, with every deconvolution lowered through split
-/// deconvolution onto the im2col + GEMM conv kernel
-/// ([`crate::tensor::conv2d_gemm`]). The whole dynamic batch runs as ONE
-/// batched tensor pass (batch packed into the N axis), so the dispatcher's
-/// batching directly widens the GEMM — the serving-stack payoff of the
-/// kernel rewrite. Needs no artifacts; weights are seeded-random (the
-/// conversion-exactness property served here is weight-independent, see
-/// DESIGN.md section 6).
+/// CPU-native executor: a compiled [`Plan`] for any of the six benchmark
+/// networks — SD deconvolution filters pre-split and pre-packed at plan
+/// time, every layer on the im2col + GEMM conv kernel
+/// ([`crate::tensor::conv2d_gemm`]), intermediates in the plan's reusable
+/// buffer arena. The whole dynamic batch runs as ONE batched tensor pass
+/// (batch packed into the N axis), so the dispatcher's batching directly
+/// widens the GEMM — the serving-stack payoff of the engine subsystem.
+/// Needs no artifacts; weights are seeded-random (the conversion-exactness
+/// property served here is weight-independent, see DESIGN.md section 6).
 pub struct NativeExecutor {
-    net: NetworkSpec,
-    /// generator weights, built once at construction (seeded, deterministic)
-    weights: Vec<LayerWeights>,
-    z_len: usize,
-    image_len: usize,
+    plan: Plan,
     /// advisory only — see [`BatchExecutor::supported_batches`] impl note
     batches: Vec<usize>,
 }
 
 impl NativeExecutor {
+    /// Compile a plan for the named benchmark network (any spelling
+    /// [`crate::networks::by_name`] accepts). The plan is built once here;
+    /// every subsequent batch reuses it.
+    pub fn for_model(model: &str, weight_seed: u64) -> Result<Self> {
+        let net = crate::networks::by_name_or_err(model)?;
+        Ok(NativeExecutor {
+            plan: Plan::from_seed(&net, DeconvImpl::Sd, weight_seed)?,
+            batches: vec![1, 2, 4, 8, 16],
+        })
+    }
+
     /// DCGAN generator (64x64x3 output, z length 100).
     pub fn dcgan(weight_seed: u64) -> Self {
-        let net = crate::networks::dcgan();
-        let weights = build_weights(&net, weight_seed);
-        NativeExecutor {
-            net,
-            weights,
-            z_len: 100,
-            image_len: 64 * 64 * 3,
-            batches: vec![1, 2, 4, 8, 16],
-        }
+        Self::for_model("dcgan", weight_seed).expect("the DCGAN plan always compiles")
     }
 }
 
@@ -170,31 +168,15 @@ impl BatchExecutor for NativeExecutor {
     }
 
     fn z_len(&self) -> usize {
-        self.z_len
+        self.plan.input_len()
     }
 
     fn image_len(&self) -> usize {
-        self.image_len
+        self.plan.output_len()
     }
 
     fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        if batch.is_empty() {
-            return Ok(Vec::new());
-        }
-        let mut z = Vec::with_capacity(batch.len() * self.z_len);
-        for req in batch {
-            if req.len() != self.z_len {
-                bail!("latent length {} != expected {}", req.len(), self.z_len);
-            }
-            z.extend_from_slice(req);
-        }
-        let input = Tensor::from_vec(batch.len(), 1, 1, self.z_len, z);
-        let img = run_network_with(&self.net, DeconvImpl::Sd, &self.weights, &input);
-        let per = img.len() / img.n;
-        debug_assert_eq!(per, self.image_len);
-        Ok((0..batch.len())
-            .map(|i| img.data[i * per..(i + 1) * per].to_vec())
-            .collect())
+        self.plan.execute_batch(batch)
     }
 }
 

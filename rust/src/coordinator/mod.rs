@@ -37,6 +37,14 @@ pub struct ServerConfig {
     pub batch_timeout: Duration,
     /// bounded queue depth (backpressure limit)
     pub queue_cap: usize,
+    /// which benchmark model the *native* backend serves (any spelling
+    /// [`crate::networks::by_name`] accepts: dcgan, artgan, sngan, gpgan,
+    /// mde, fst) — [`Server::start_native`] compiles it into an
+    /// `engine::Plan`. The PJRT backend takes an explicit artifact prefix
+    /// instead (artifact families can outnumber models, e.g. `dcgan_sd` vs
+    /// `dcgan_nzp`); callers should derive it from
+    /// [`crate::networks::slug`], as the CLI does.
+    pub model: String,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +53,7 @@ impl Default for ServerConfig {
             max_batch: 4,
             batch_timeout: Duration::from_millis(2),
             queue_cap: 64,
+            model: "dcgan".to_string(),
         }
     }
 }
@@ -130,11 +139,14 @@ impl Server {
         Self::start_with(cfg, move || PjrtExecutor::new(artifact_dir, &prefix))
     }
 
-    /// Start a server over the CPU-native executor: the DCGAN generator with
-    /// SD deconvolutions on the im2col + GEMM conv kernel. Works from a
-    /// fresh checkout (no artifacts needed).
+    /// Start a server over the CPU-native engine executor: the generator
+    /// selected by `cfg.model` is compiled ONCE into an `engine::Plan` (SD
+    /// filters pre-split and packed at plan time) and serves every batch
+    /// from that plan. Works from a fresh checkout (no artifacts needed);
+    /// all six benchmark networks route here.
     pub fn start_native(cfg: ServerConfig, weight_seed: u64) -> Result<Server> {
-        Self::start_with(cfg, move || Ok(NativeExecutor::dcgan(weight_seed)))
+        let model = cfg.model.clone();
+        Self::start_with(cfg, move || NativeExecutor::for_model(&model, weight_seed))
     }
 
     /// Submit a latent vector. Returns a receiver for the response, or an

@@ -1,0 +1,499 @@
+//! Compiled-plan inference engine: the native execution subsystem behind the
+//! serving stack.
+//!
+//! A [`Plan`] is built **once** from a [`NetworkSpec`] + weights and then
+//! reused for every forward call, the decompose-once-serve-many structure of
+//! HUGE² (arXiv 1907.11210) applied to split deconvolution:
+//!
+//! * every layer is resolved to an op in a small registry — `Op::Dense`,
+//!   `Op::Conv` (im2col + GEMM), `Op::SdDeconv`, `Op::RefDeconv` — with
+//!   activations (ReLU between layers, tanh after the last) fused into
+//!   the step;
+//! * SD deconvolution filters are **pre-split and pre-packed at plan time**:
+//!   [`split_filters`] runs once per layer per plan, and each split's HWIO
+//!   data is exactly the `K x N` GEMM operand the conv kernel consumes, so
+//!   the per-request serving path no longer re-splits filters on every
+//!   forward call (the dominant per-request overhead of the old
+//!   `report::quality` interpreter);
+//! * all intermediate shapes are precomputed at build time, and execution
+//!   runs inside a reusable per-plan buffer arena (ping-pong activation
+//!   buffers, a shared pad scratch, per-split conv outputs) instead of
+//!   allocating per layer per call;
+//! * the SD interleave + crop steps are fused into one pass
+//!   ([`crate::sd::interleave_crop_into`]), skipping the intermediate
+//!   `s * (I + K_T - 1)` grid the interpreter materializes;
+//! * a whole dynamic batch executes as ONE pass per layer (batch packed into
+//!   the tensor N axis), so the coordinator's batching widens the GEMM.
+//!
+//! The engine is bit-identical to the retained interpreter oracle
+//! `report::quality::run_network_with` (zero-tolerance equivalence across
+//! all six benchmarks in rust/tests/engine_equivalence.rs), and
+//! `cargo bench --bench engine` measures plan-cached execution against the
+//! per-call paths.
+//!
+//! ## Chain bridging
+//!
+//! Two of the six reverse-engineered benchmarks are not expressible as a
+//! pure layer chain: MDE concatenates encoder skip connections into
+//! `upconv3`, and GP-GAN's fc bottleneck (8192 -> 4000) feeds a 4x4x512
+//! decoder entry through an unpublished reshape. At those points (and only
+//! when flat element counts disagree) both the engine and the oracle apply
+//! [`bridge_reshape`]: a deterministic truncate-or-zero-pad of each batch
+//! element's flat activation vector. This keeps the published Table 1-3
+//! MAC/parameter counts intact while making every benchmark runnable end to
+//! end; see DESIGN.md section 6.
+
+pub mod weights;
+
+pub use weights::{build_weights, smooth_filter, DeconvImpl, LayerWeights};
+
+use anyhow::{bail, Result};
+
+use crate::nn::{LayerKind, NetworkSpec};
+use crate::sd::{chang::chang_deconv2d, nzp::nzp_deconv2d, shi::shi_deconv2d};
+use crate::sd::{interleave_crop_into, split_filters, SdGeometry};
+use crate::tensor::{conv2d_valid_into, deconv2d, dense_into, relu, tanh, Filter, Tensor};
+
+/// Activation fused into each step: ReLU between layers, tanh after the
+/// last (generator convention — matches the interpreter oracle).
+enum Act {
+    Relu,
+    Tanh,
+}
+
+/// The op registry: what a layer lowers to at plan time.
+enum Op {
+    /// fully-connected layer, weights n_in x n_out row-major
+    Dense { w: Vec<f32>, n_out: usize },
+    /// standard convolution on the im2col + GEMM kernel
+    Conv { f: Filter, s: usize, p: usize },
+    /// split deconvolution with the `s*s` split filters pre-split and
+    /// pre-packed (each filter's HWIO data is the GEMM `K x N` operand)
+    SdDeconv { splits: Vec<Filter>, g: SdGeometry },
+    /// reference deconvolution lowerings (native oracle / NZP / Shi /
+    /// Chang) — kept in the registry so the quality evaluation runs every
+    /// conversion approach through the same execution path
+    RefDeconv { f: Filter, imp: DeconvImpl, s: usize, p: usize, out_pad: usize },
+}
+
+/// One compiled layer: op + fused activation + precomputed shapes.
+struct Step {
+    name: &'static str,
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    out_h: usize,
+    out_w: usize,
+    out_c: usize,
+    op: Op,
+    act: Act,
+}
+
+/// Reusable per-plan buffers: successive steps ping-pong through `spare`,
+/// SD deconvolutions share the `pad` scratch and per-split output slots.
+/// Buffers grow to the high-water mark of the plan's shapes and are reused
+/// across forward calls (no per-layer allocation on the hot path).
+struct Arena {
+    spare: Vec<f32>,
+    pad: Tensor,
+    splits: Vec<Tensor>,
+}
+
+impl Arena {
+    fn new() -> Arena {
+        Arena {
+            spare: Vec::new(),
+            pad: Tensor::zeros(0, 0, 0, 0),
+            splits: Vec::new(),
+        }
+    }
+}
+
+/// A network compiled for repeated execution: resolved ops, pre-split SD
+/// filters, precomputed shapes, and a reusable buffer arena.
+pub struct Plan {
+    name: &'static str,
+    steps: Vec<Step>,
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    out_len: usize,
+    arena: Arena,
+}
+
+impl Plan {
+    /// Compile a network + weights into an executable plan. Errors (rather
+    /// than panicking) on weight-count, weight-kind, and weight-shape
+    /// mismatches. This borrowed form clones each weight buffer once;
+    /// callers that do not need the weights afterwards should use
+    /// [`Plan::build_owned`] (or [`Plan::from_seed`]), which moves them.
+    pub fn build(net: &NetworkSpec, weights: &[LayerWeights], imp: DeconvImpl) -> Result<Plan> {
+        Plan::build_owned(net, weights.to_vec(), imp)
+    }
+
+    /// [`Plan::build`] consuming the weights — no buffer copies (GP-GAN's
+    /// bottleneck matrix alone is ~131 MB).
+    pub fn build_owned(
+        net: &NetworkSpec,
+        weights: Vec<LayerWeights>,
+        imp: DeconvImpl,
+    ) -> Result<Plan> {
+        if weights.len() != net.layers.len() {
+            bail!(
+                "{}: {} weight entries for {} layers",
+                net.name,
+                weights.len(),
+                net.layers.len()
+            );
+        }
+        let last = match net.layers.len().checked_sub(1) {
+            Some(last) => last,
+            None => bail!("{}: cannot compile an empty network", net.name),
+        };
+        let mut steps = Vec::with_capacity(net.layers.len());
+        for (i, (l, lw)) in net.layers.iter().zip(weights).enumerate() {
+            let op = match (l.kind, lw) {
+                (LayerKind::Dense, LayerWeights::Dense(w)) => {
+                    let n_in = l.in_h * l.in_w * l.in_c;
+                    if w.len() != n_in * l.out_c {
+                        bail!(
+                            "{}.{}: dense weight length {} != {} x {}",
+                            net.name,
+                            l.name,
+                            w.len(),
+                            n_in,
+                            l.out_c
+                        );
+                    }
+                    Op::Dense { w, n_out: l.out_c }
+                }
+                (LayerKind::Conv, LayerWeights::Filter(f)) => {
+                    check_filter(net.name, l.name, &f, l.k, l.in_c, l.out_c)?;
+                    Op::Conv { f, s: l.s, p: l.p }
+                }
+                (LayerKind::Deconv, LayerWeights::Filter(f)) => {
+                    check_filter(net.name, l.name, &f, l.k, l.in_c, l.out_c)?;
+                    match imp {
+                        DeconvImpl::Sd => Op::SdDeconv {
+                            splits: split_filters(&f, l.s),
+                            g: SdGeometry::new(l.k, l.s, l.p),
+                        },
+                        other => Op::RefDeconv {
+                            f,
+                            imp: other,
+                            s: l.s,
+                            p: l.p,
+                            out_pad: l.op,
+                        },
+                    }
+                }
+                _ => bail!(
+                    "{}.{}: weight kind does not match layer kind {:?}",
+                    net.name,
+                    l.name,
+                    l.kind
+                ),
+            };
+            steps.push(Step {
+                name: l.name,
+                in_h: l.in_h,
+                in_w: l.in_w,
+                in_c: l.in_c,
+                out_h: l.out_h(),
+                out_w: l.out_w(),
+                out_c: l.out_c,
+                op,
+                act: if i == last { Act::Tanh } else { Act::Relu },
+            });
+        }
+        let first = &steps[0];
+        let (in_h, in_w, in_c) = (first.in_h, first.in_w, first.in_c);
+        let last_step = &steps[last];
+        let out_len = last_step.out_h * last_step.out_w * last_step.out_c;
+        Ok(Plan {
+            name: net.name,
+            steps,
+            in_h,
+            in_w,
+            in_c,
+            out_len,
+            arena: Arena::new(),
+        })
+    }
+
+    /// [`Plan::build`] with weights drawn from [`build_weights`]`(net, seed)`.
+    pub fn from_seed(net: &NetworkSpec, imp: DeconvImpl, seed: u64) -> Result<Plan> {
+        Plan::build_owned(net, build_weights(net, seed), imp)
+    }
+
+    /// Network name this plan was compiled from.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Flat per-request input element count (the first layer's input view).
+    pub fn input_len(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    /// Flat per-request output element count.
+    pub fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Execute the whole plan on a batched input tensor (batch on the N
+    /// axis). One pass per layer; intermediate activations live in the
+    /// plan's buffer arena. The *network input* is validated strictly (a
+    /// wrong-sized request is an error); [`bridge_reshape`] only ever
+    /// applies between layers, at the documented chain-gap points.
+    pub fn forward(&mut self, input: &Tensor) -> Result<Tensor> {
+        self.forward_owned(input.clone())
+    }
+
+    /// [`Plan::forward`] consuming the input tensor (no copy) — the serving
+    /// path's entry point, where the packed batch has no other owner.
+    pub fn forward_owned(&mut self, input: Tensor) -> Result<Tensor> {
+        let per = input.h * input.w * input.c;
+        if per != self.input_len() {
+            bail!(
+                "{}: input has {} elements per request, expected {}",
+                self.name,
+                per,
+                self.input_len()
+            );
+        }
+        let mut h = input;
+        for step in &self.steps {
+            h = run_step(step, h, &mut self.arena)?;
+        }
+        Ok(h)
+    }
+
+    /// Serve a dynamic batch of flat per-request inputs: pack into one
+    /// tensor, run [`Plan::forward`] once, unpack one image per request.
+    pub fn execute_batch(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ilen = self.input_len();
+        let mut data = Vec::with_capacity(batch.len() * ilen);
+        for z in batch {
+            if z.len() != ilen {
+                bail!("{}: input length {} != expected {}", self.name, z.len(), ilen);
+            }
+            data.extend_from_slice(z);
+        }
+        let input = Tensor::from_vec(batch.len(), self.in_h, self.in_w, self.in_c, data);
+        let img = self.forward_owned(input)?;
+        debug_assert_eq!(img.len() / img.n, self.out_len);
+        let per = self.out_len;
+        Ok((0..batch.len())
+            .map(|i| img.data[i * per..(i + 1) * per].to_vec())
+            .collect())
+    }
+}
+
+fn check_filter(net: &str, layer: &str, f: &Filter, k: usize, ic: usize, oc: usize) -> Result<()> {
+    if (f.kh, f.kw, f.ic, f.oc) != (k, k, ic, oc) {
+        bail!(
+            "{net}.{layer}: filter shape {}x{}x{}x{} != spec {k}x{k}x{ic}x{oc}",
+            f.kh,
+            f.kw,
+            f.ic,
+            f.oc
+        );
+    }
+    Ok(())
+}
+
+/// Names of the layers whose declared input disagrees with the previous
+/// layer's declared output — the spec's chain gaps, and therefore the ONLY
+/// points where [`bridge_reshape`] can fire at run time (both the engine
+/// and the oracle validate every op's output against its own layer spec,
+/// so a kernel regression errors instead of bridging). For the canonical
+/// six benchmarks this is exactly `GP-GAN.dec1` and `MDE.upconv3`, locked
+/// by `engine_equivalence::only_the_documented_chain_gaps_bridge` — a
+/// layer-table typo that opened a new silent gap would fail that test.
+pub fn chain_gaps(net: &NetworkSpec) -> Vec<&'static str> {
+    let mut gaps = Vec::new();
+    let mut prev_out: Option<usize> = None;
+    for l in &net.layers {
+        let in_count = l.in_h * l.in_w * l.in_c;
+        if let Some(po) = prev_out {
+            if po != in_count {
+                gaps.push(l.name);
+            }
+        }
+        prev_out = Some(l.out_h() * l.out_w() * l.out_c);
+    }
+    gaps
+}
+
+/// Adapt an activation to the `ih x iw x ic` view the next layer expects.
+/// Matching flat counts reshape in place (no copy). Mismatched counts —
+/// the chain-spec's skip-connection / bottleneck-reshape points, see the
+/// module docs — truncate or zero-pad each batch element's flat vector,
+/// deterministically. Shared by the engine and the interpreter oracle so
+/// both paths stay bit-identical.
+pub fn bridge_reshape(h: Tensor, ih: usize, iw: usize, ic: usize) -> Tensor {
+    let want = ih * iw * ic;
+    let per = h.h * h.w * h.c;
+    if per == want {
+        return Tensor { n: h.n, h: ih, w: iw, c: ic, data: h.data };
+    }
+    let copy = per.min(want);
+    let mut out = Tensor::zeros(h.n, ih, iw, ic);
+    for n in 0..h.n {
+        out.data[n * want..n * want + copy].copy_from_slice(&h.data[n * per..n * per + copy]);
+    }
+    out
+}
+
+/// Wrap the arena's spare buffer as an (empty) tensor; the `*_into` ops
+/// reshape and fill it. The previous step's input buffer is returned to the
+/// arena at the end of [`run_step`], so successive steps ping-pong.
+fn take_tensor(slot: &mut Vec<f32>) -> Tensor {
+    Tensor { n: 0, h: 0, w: 0, c: 0, data: std::mem::take(slot) }
+}
+
+fn run_ref_deconv(
+    x: &Tensor,
+    f: &Filter,
+    imp: DeconvImpl,
+    s: usize,
+    p: usize,
+    op: usize,
+) -> Tensor {
+    match imp {
+        DeconvImpl::Native => deconv2d(x, f, s, p, op),
+        DeconvImpl::Nzp => nzp_deconv2d(x, f, s, p, op),
+        DeconvImpl::Shi => shi_deconv2d(x, f, s, p, op),
+        DeconvImpl::Chang => chang_deconv2d(x, f, s, p, op),
+        DeconvImpl::Sd => unreachable!("SD lowers to Op::SdDeconv at plan time"),
+    }
+}
+
+/// Execute one compiled step: bridge the input view, run the op into arena
+/// buffers, apply the fused activation, recycle the input buffer.
+fn run_step(step: &Step, h: Tensor, a: &mut Arena) -> Result<Tensor> {
+    let n = h.n;
+    let h = bridge_reshape(h, step.in_h, step.in_w, step.in_c);
+    let mut out = match &step.op {
+        Op::Dense { w, n_out } => {
+            let mut out = take_tensor(&mut a.spare);
+            dense_into(&h, w, *n_out, &mut out);
+            out
+        }
+        Op::Conv { f, s, p } => {
+            let mut out = take_tensor(&mut a.spare);
+            if *p > 0 {
+                h.pad_into(*p, *p, *p, *p, &mut a.pad);
+                conv2d_valid_into(&a.pad, f, *s, &mut out);
+            } else {
+                conv2d_valid_into(&h, f, *s, &mut out);
+            }
+            out
+        }
+        Op::SdDeconv { splits, g } => {
+            h.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.pad);
+            if a.splits.len() < splits.len() {
+                a.splits.resize_with(splits.len(), || Tensor::zeros(0, 0, 0, 0));
+            }
+            for (w, slot) in splits.iter().zip(a.splits.iter_mut()) {
+                conv2d_valid_into(&a.pad, w, 1, slot);
+            }
+            let mut out = take_tensor(&mut a.spare);
+            interleave_crop_into(
+                &a.splits[..splits.len()],
+                g.s,
+                g.crop(),
+                step.out_h,
+                step.out_w,
+                &mut out,
+            );
+            out
+        }
+        Op::RefDeconv { f, imp, s, p, out_pad } => run_ref_deconv(&h, f, *imp, *s, *p, *out_pad),
+    };
+    if out.n != n || out.h != step.out_h || out.w != step.out_w || out.c != step.out_c {
+        bail!(
+            "{}: produced {:?}, plan expected [{n}, {}, {}, {}]",
+            step.name,
+            out.shape(),
+            step.out_h,
+            step.out_w,
+            step.out_c
+        );
+    }
+    match step.act {
+        Act::Relu => relu(&mut out),
+        Act::Tanh => tanh(&mut out),
+    }
+    a.spare = h.data; // recycle the input buffer for the step after next
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_reports_io_shapes() {
+        let net = networks::dcgan();
+        let plan = Plan::from_seed(&net, DeconvImpl::Sd, 1).unwrap();
+        assert_eq!(plan.input_len(), 100);
+        assert_eq!(plan.output_len(), 64 * 64 * 3);
+        assert_eq!(plan.name(), "DCGAN");
+    }
+
+    #[test]
+    fn build_rejects_mismatched_weights() {
+        let net = networks::dcgan();
+        let mut w = build_weights(&net, 1);
+        w.pop();
+        assert!(Plan::build(&net, &w, DeconvImpl::Sd).is_err());
+        // kind mismatch: dense weights on a deconv layer
+        let mut w = build_weights(&net, 1);
+        w[1] = LayerWeights::Dense(vec![0.0; 4]);
+        assert!(Plan::build(&net, &w, DeconvImpl::Sd).is_err());
+    }
+
+    #[test]
+    fn execute_batch_validates_input_length() {
+        let net = networks::dcgan();
+        let mut plan = Plan::from_seed(&net, DeconvImpl::Sd, 1).unwrap();
+        assert!(plan.execute_batch(&[vec![0.0; 7]]).is_err());
+        assert!(plan.execute_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bridge_reshape_pads_and_truncates() {
+        let x = Tensor::from_vec(2, 1, 1, 3, vec![1., 2., 3., 4., 5., 6.]);
+        // exact count: pure reshape, same data
+        let r = bridge_reshape(x.clone(), 3, 1, 1);
+        assert_eq!(r.shape(), [2, 3, 1, 1]);
+        assert_eq!(r.data, x.data);
+        // pad: per-element zero fill
+        let p = bridge_reshape(x.clone(), 1, 1, 5);
+        assert_eq!(p.data, vec![1., 2., 3., 0., 0., 4., 5., 6., 0., 0.]);
+        // truncate: per-element prefix
+        let t = bridge_reshape(x, 1, 1, 2);
+        assert_eq!(t.data, vec![1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn forward_batch_rows_equal_single_rows() {
+        // batch packing must not change per-request results (bitwise)
+        let net = networks::dcgan();
+        let mut plan = Plan::from_seed(&net, DeconvImpl::Sd, 3).unwrap();
+        let mut rng = Rng::new(8);
+        let zs: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(100)).collect();
+        let batched = plan.execute_batch(&zs).unwrap();
+        for (i, z) in zs.iter().enumerate() {
+            let single = plan.execute_batch(std::slice::from_ref(z)).unwrap();
+            assert_eq!(batched[i], single[0], "request {i} differs");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Network weight substrate shared by the engine and the quality oracle.
+//!
+//! Weights are seeded-random (the repo carries no trained checkpoints — see
+//! DESIGN.md section 6): conversion *exactness*, the property both the
+//! serving path and Table 4 rely on, is weight-independent. [`build_weights`]
+//! seeds per layer index, so every consumer (compiled plans, the retained
+//! interpreter oracle, the quality evaluation) draws bit-identical weights
+//! for the same network + seed.
+
+use crate::nn::{LayerKind, NetworkSpec};
+use crate::tensor::Filter;
+use crate::util::rng::Rng;
+
+/// Deconvolution implementation used when executing a network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeconvImpl {
+    /// direct transposed convolution (the oracle)
+    Native,
+    /// split deconvolution (the paper; exact)
+    Sd,
+    /// naive zero padding (exact, redundant)
+    Nzp,
+    /// Shi et al. [30] fixed right/bottom padding (wrong on boundaries)
+    Shi,
+    /// Chang & Kang [31] approximate conversion
+    Chang,
+}
+
+impl DeconvImpl {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeconvImpl::Native => "native",
+            DeconvImpl::Sd => "SD",
+            DeconvImpl::Nzp => "NZP",
+            DeconvImpl::Shi => "Shi [30]",
+            DeconvImpl::Chang => "Chang [31]",
+        }
+    }
+}
+
+/// Pre-built weights of one layer (see [`build_weights`]).
+#[derive(Clone)]
+pub enum LayerWeights {
+    /// dense-layer weight matrix, n_in x n_out row-major
+    Dense(Vec<f32>),
+    /// conv / deconv filter
+    Filter(Filter),
+}
+
+/// Smooth, trained-like filter: gaussian spatial profile x near-identity
+/// channel mixing + moderate noise. Purely random filters decorrelate any
+/// perturbation within one layer, which collapses every inexact baseline to
+/// SSIM ~ 0 regardless of how wrong it is; trained generators are smooth
+/// upsamplers, where conversion errors stay local and SSIM grades severity
+/// — the regime Table 4 measures. Normalized so E[|out|] ~ E[|in|].
+pub fn smooth_filter(k: usize, ic: usize, oc: usize, s: usize, rng: &mut Rng) -> Filter {
+    let mut f = Filter::zeros(k, k, ic, oc);
+    let c = (k as f32 - 1.0) / 2.0;
+    let sigma = (k as f32 / 2.5).max(0.8);
+    let mut spatial_sum = 0.0;
+    let mut profile = vec![0.0f32; k * k];
+    for y in 0..k {
+        for x in 0..k {
+            let d2 = (y as f32 - c).powi(2) + (x as f32 - c).powi(2);
+            let v = (-d2 / (2.0 * sigma * sigma)).exp();
+            profile[y * k + x] = v;
+            spatial_sum += v;
+        }
+    }
+    for v in &mut profile {
+        *v /= spatial_sum; // spatial profile sums to 1
+    }
+    // deconv scatter divides each output among s^2 phases; compensate
+    let gain = (s * s) as f32;
+    for y in 0..k {
+        for x in 0..k {
+            for i in 0..ic {
+                for o in 0..oc {
+                    // near-identity channel routing with noise
+                    let ident = if i % oc == o { 1.0 } else { 0.0 };
+                    let mix = (ident * 0.8 + 0.4 * rng.normal()) / (ic as f32 / oc.min(ic) as f32);
+                    *f.at_mut(y, x, i, o) = profile[y * k + x] * mix * gain;
+                }
+            }
+        }
+    }
+    f
+}
+
+/// Build every layer's weights for a network, seeded per layer index — the
+/// exact draws the quality evaluation makes, factored out so long-lived
+/// callers ([`super::Plan`], the coordinator's native executor) pay weight
+/// generation once instead of per forward call.
+pub fn build_weights(net: &NetworkSpec, seed: u64) -> Vec<LayerWeights> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Rng::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9));
+            match l.kind {
+                LayerKind::Dense => {
+                    let n_in = l.in_h * l.in_w * l.in_c;
+                    let scale = std::f32::consts::SQRT_2 / (n_in as f32).sqrt();
+                    LayerWeights::Dense(
+                        (0..n_in * l.out_c).map(|_| rng.normal() * scale).collect(),
+                    )
+                }
+                LayerKind::Conv => {
+                    LayerWeights::Filter(smooth_filter(l.k, l.in_c, l.out_c, 1, &mut rng))
+                }
+                LayerKind::Deconv => {
+                    LayerWeights::Filter(smooth_filter(l.k, l.in_c, l.out_c, l.s, &mut rng))
+                }
+            }
+        })
+        .collect()
+}

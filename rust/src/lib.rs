@@ -9,16 +9,18 @@
 //! * **L2** (python, build time): JAX generator models, AOT-lowered to HLO
 //!   text under `artifacts/`.
 //! * **L3** (this crate): the [`coordinator`] serving stack over the
-//!   [`runtime`] PJRT engine, the [`sd`] transform and its baselines, the
-//!   cycle-accurate [`sim`] processor simulators, the [`commodity`] device
-//!   models, and the [`report`] generators for every table and figure in
-//!   the paper.
+//!   [`engine`] compiled-plan executor (all six benchmark networks, SD
+//!   filters pre-split at plan time) or the [`runtime`] PJRT engine, the
+//!   [`sd`] transform and its baselines, the cycle-accurate [`sim`]
+//!   processor simulators, the [`commodity`] device models, and the
+//!   [`report`] generators for every table and figure in the paper.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
 pub mod commodity;
 pub mod coordinator;
+pub mod engine;
 pub mod metrics;
 pub mod networks;
 pub mod nn;

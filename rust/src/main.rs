@@ -4,9 +4,11 @@
 //!   report <table1|table2|table3|table4|fig8|fig9|fig10|fig11|
 //!           table5|table6|table7|table8|fig15|fig16|fig17|all>
 //!   verify  [--limit N]        golden-check AOT artifacts via PJRT
-//!   serve   [--requests N] [--batch B] [--native]   run the DCGAN serving
-//!           demo (--native, or a missing artifacts/, uses the CPU-native
-//!           GEMM backend instead of PJRT)
+//!   serve   [--requests N] [--batch B] [--native]
+//!           [--model dcgan|artgan|sngan|gpgan|mde|fst]
+//!           run the serving demo for any benchmark network (--native, or a
+//!           missing artifacts/, compiles the model into an engine::Plan on
+//!           the CPU-native GEMM backend instead of PJRT)
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
@@ -70,23 +72,26 @@ fn report_cmd(which: &str, args: &[String]) -> Result<()> {
         println!();
     }
     if all || which == "table4" {
-        report::print_table4(2);
+        report::print_table4(2)?;
         println!();
     }
     if all || which == "fig8" {
-        report::print_sim_figure("Figure 8: dot-production PE array", &report::fig8(seed));
+        report::print_sim_figure("Figure 8: dot-production PE array", &report::fig8(seed)?);
         println!();
     }
     if all || which == "fig9" {
-        report::print_sim_figure("Figure 9: regular 2D PE array", &report::fig9(seed));
+        report::print_sim_figure("Figure 9: regular 2D PE array", &report::fig9(seed)?);
         println!();
     }
     if all || which == "fig10" {
-        report::print_energy_figure("Figure 10: energy, dot-production array", &report::fig10(seed));
+        report::print_energy_figure(
+            "Figure 10: energy, dot-production array",
+            &report::fig10(seed)?,
+        );
         println!();
     }
     if all || which == "fig11" {
-        report::print_energy_figure("Figure 11: energy, 2D PE array", &report::fig11(seed));
+        report::print_energy_figure("Figure 11: energy, 2D PE array", &report::fig11(seed)?);
         println!();
     }
     if all || which == "table5" {
@@ -160,23 +165,36 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let max_batch: usize = flag_value(args, "--batch")
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
+    let model = flag_value(args, "--model").unwrap_or("dcgan").to_string();
+    let net = networks::by_name_or_err(&model)?;
     let cfg = ServerConfig {
         max_batch,
         batch_timeout: Duration::from_millis(2),
         queue_cap: 128,
+        model,
     };
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
+    let z_len = net.input_elems();
     let server = if native {
-        println!("(CPU-native backend: SD deconvolutions on the GEMM conv kernel)");
+        println!(
+            "(CPU-native engine backend: {} compiled once into a Plan, SD filters pre-split)",
+            net.name
+        );
         Server::start_native(cfg, 7)?
     } else {
-        Server::start_pjrt(cfg, default_artifact_dir(), "dcgan_sd".into())?
+        // artifact families are keyed by the canonical slug, not the raw
+        // user spelling ("DC-GAN" must still find "dcgan_sd_b*")
+        let prefix = format!("{}_sd", networks::slug(net.name));
+        Server::start_pjrt(cfg, default_artifact_dir(), prefix)?
     };
-    println!("serving DCGAN (SD path) — {n} requests, max batch {max_batch}");
+    println!(
+        "serving {} (SD path) — {n} requests of {z_len} floats, max batch {max_batch}",
+        net.name
+    );
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();
     for _ in 0..n {
-        pending.push(server.submit_blocking(rng.normal_vec(100))?);
+        pending.push(server.submit_blocking(rng.normal_vec(z_len))?);
     }
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx.recv()?;
@@ -211,7 +229,7 @@ fn simulate_cmd(args: &[String]) -> Result<()> {
     let arch = flag_value(args, "--arch").unwrap_or("2d");
     let net = networks::by_name(net_name)
         .ok_or_else(|| anyhow::anyhow!("unknown network {net_name}"))?;
-    let ops = lower_network_deconvs(&net, how, 42);
+    let ops = lower_network_deconvs(&net, how, 42)?;
     let cfg = ProcessorConfig::default();
     let stats = match arch {
         "dot" => dot_array::simulate(&ops, &cfg, policy),

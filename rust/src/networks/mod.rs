@@ -171,8 +171,62 @@ pub fn all() -> Vec<NetworkSpec> {
     vec![dcgan(), artgan(), sngan(), gpgan(), mde(), fst()]
 }
 
+/// Canonical CLI slug for a network name: lowercase, `-`/`_` stripped
+/// (`"GP-GAN"` -> `"gpgan"`). Artifact prefixes and routing keys should be
+/// derived from this, never from a raw user spelling.
+pub fn slug(name: &str) -> String {
+    name.chars()
+        .filter(|c| *c != '-' && *c != '_')
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+/// Lookup by name, ignoring case and `-`/`_` separators, so the CLI accepts
+/// both `gpgan` and `GP-GAN`.
 pub fn by_name(name: &str) -> Option<NetworkSpec> {
-    all().into_iter().find(|n| n.name.eq_ignore_ascii_case(name))
+    let want = slug(name);
+    all().into_iter().find(|n| slug(n.name) == want)
+}
+
+/// [`by_name`], or the standard "unknown model" error listing the known
+/// slugs — the single source of that message for the CLI and the serving
+/// executor.
+pub fn by_name_or_err(name: &str) -> anyhow::Result<NetworkSpec> {
+    by_name(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown model {name}; expected one of {}", names().join("/"))
+    })
+}
+
+/// The CLI-facing model names, Table-1 order.
+pub fn names() -> Vec<&'static str> {
+    vec!["dcgan", "artgan", "sngan", "gpgan", "mde", "fst"]
+}
+
+/// Spatially scale a network's layer dims by `1/div` (channels, filters,
+/// strides, paddings unchanged): conv inputs clamp to `>= k` (valid conv
+/// needs the filter to fit), deconv inputs to `>= 1`. Structure — layer
+/// kinds, channel mix, SD geometry — is preserved, so tests and benches can
+/// exercise the big benchmarks (FST, MDE, ArtGAN) at tractable resolution
+/// through identical code paths.
+pub fn scaled(net: &NetworkSpec, div: usize) -> NetworkSpec {
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| match l.kind {
+            crate::nn::LayerKind::Dense => l.clone(),
+            crate::nn::LayerKind::Conv => LayerSpec {
+                in_h: (l.in_h / div).max(l.k),
+                in_w: (l.in_w / div).max(l.k),
+                ..l.clone()
+            },
+            crate::nn::LayerKind::Deconv => LayerSpec {
+                in_h: (l.in_h / div).max(1),
+                in_w: (l.in_w / div).max(1),
+                ..l.clone()
+            },
+        })
+        .collect();
+    NetworkSpec { name: net.name, layers }
 }
 
 #[cfg(test)]
@@ -246,6 +300,37 @@ mod tests {
                 prev = Some(l);
             }
         }
+    }
+
+    #[test]
+    fn by_name_accepts_cli_spellings() {
+        // names() must stay the slug-for-slug mirror of all()
+        assert_eq!(
+            super::names(),
+            all().iter().map(|n| super::slug(n.name)).collect::<Vec<_>>(),
+            "networks::names() out of sync with networks::all()"
+        );
+        for name in super::names() {
+            assert!(by_name(name).is_some(), "{name} should resolve");
+        }
+        assert_eq!(by_name("GP-GAN").unwrap().name, "GP-GAN");
+        assert_eq!(by_name("gpgan").unwrap().name, "GP-GAN");
+        assert!(by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn scaled_preserves_structure() {
+        let net = super::scaled(&fst(), 8);
+        let base = fst();
+        assert_eq!(net.layers.len(), base.layers.len());
+        for (l, b) in net.layers.iter().zip(&base.layers) {
+            assert_eq!(
+                (l.kind, l.in_c, l.out_c, l.k, l.s, l.p),
+                (b.kind, b.in_c, b.out_c, b.k, b.s, b.p)
+            );
+        }
+        // div 8 keeps FST's chain connected
+        assert_eq!(net.layers[0].in_h, 32);
     }
 
     #[test]

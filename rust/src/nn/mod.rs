@@ -166,6 +166,16 @@ pub struct NetworkSpec {
 }
 
 impl NetworkSpec {
+    /// Flat per-request input element count: the first layer's input view
+    /// (dense layers encode `n_in` as `1 x 1 x n_in`). This is the latent /
+    /// image length a serving client must submit.
+    pub fn input_elems(&self) -> usize {
+        self.layers
+            .first()
+            .map(|l| l.in_h * l.in_w * l.in_c)
+            .unwrap_or(0)
+    }
+
     pub fn deconv_layers(&self) -> impl Iterator<Item = &LayerSpec> {
         self.layers.iter().filter(|l| l.kind == LayerKind::Deconv)
     }

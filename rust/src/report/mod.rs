@@ -5,6 +5,8 @@
 
 pub mod quality;
 
+use anyhow::Result;
+
 use crate::commodity::{edge_tpu::EdgeTpu, ncs2, nzp_time_s, sd_time_s, EfficiencyModel};
 use crate::networks;
 use crate::nn::NetworkSpec;
@@ -119,66 +121,64 @@ impl SimRow {
 
 /// Figure 8: deconvolutional layers on the dot-production PE array.
 /// Schemes: NZP (legacy, no skip), SD (no skip), SD-Asparse.
-pub fn fig8(seed: u64) -> Vec<SimRow> {
+pub fn fig8(seed: u64) -> Result<Vec<SimRow>> {
     let cfg = ProcessorConfig::default();
-    networks::all()
-        .iter()
-        .map(|n| {
-            let nzp_ops = lower_network_deconvs(n, Lowering::Nzp, seed);
-            let sd_ops = lower_network_deconvs(n, Lowering::Sd, seed);
-            SimRow {
-                name: n.name,
-                runs: vec![
-                    ("NZP", dot_array::simulate(&nzp_ops, &cfg, SkipPolicy::None)),
-                    ("SD", dot_array::simulate(&sd_ops, &cfg, SkipPolicy::None)),
-                    (
-                        "SD-Asparse",
-                        dot_array::simulate(&sd_ops, &cfg, SkipPolicy::ASparse),
-                    ),
-                ],
-            }
-        })
-        .collect()
+    let mut rows = Vec::new();
+    for n in networks::all() {
+        let nzp_ops = lower_network_deconvs(&n, Lowering::Nzp, seed)?;
+        let sd_ops = lower_network_deconvs(&n, Lowering::Sd, seed)?;
+        rows.push(SimRow {
+            name: n.name,
+            runs: vec![
+                ("NZP", dot_array::simulate(&nzp_ops, &cfg, SkipPolicy::None)),
+                ("SD", dot_array::simulate(&sd_ops, &cfg, SkipPolicy::None)),
+                (
+                    "SD-Asparse",
+                    dot_array::simulate(&sd_ops, &cfg, SkipPolicy::ASparse),
+                ),
+            ],
+        });
+    }
+    Ok(rows)
 }
 
 /// Figure 9: deconvolutional layers on the regular 2D PE array.
 /// Schemes: NZP, SD-Asparse, SD-Wsparse, SD-WAsparse, FCN-Engine.
-pub fn fig9(seed: u64) -> Vec<SimRow> {
+pub fn fig9(seed: u64) -> Result<Vec<SimRow>> {
     let cfg = ProcessorConfig::default();
-    networks::all()
-        .iter()
-        .map(|n| {
-            let nzp_ops = lower_network_deconvs(n, Lowering::Nzp, seed);
-            let sd_ops = lower_network_deconvs(n, Lowering::Sd, seed);
-            SimRow {
-                name: n.name,
-                runs: vec![
-                    ("NZP", pe2d::simulate(&nzp_ops, &cfg, SkipPolicy::None)),
-                    (
-                        "SD-Asparse",
-                        pe2d::simulate(&sd_ops, &cfg, SkipPolicy::ASparse),
-                    ),
-                    (
-                        "SD-Wsparse",
-                        pe2d::simulate(&sd_ops, &cfg, SkipPolicy::WSparse),
-                    ),
-                    (
-                        "SD-WAsparse",
-                        pe2d::simulate(&sd_ops, &cfg, SkipPolicy::AWSparse),
-                    ),
-                    ("FCN", fcn_engine::simulate_network(n, &cfg)),
-                ],
-            }
-        })
-        .collect()
+    let mut rows = Vec::new();
+    for n in networks::all() {
+        let nzp_ops = lower_network_deconvs(&n, Lowering::Nzp, seed)?;
+        let sd_ops = lower_network_deconvs(&n, Lowering::Sd, seed)?;
+        rows.push(SimRow {
+            name: n.name,
+            runs: vec![
+                ("NZP", pe2d::simulate(&nzp_ops, &cfg, SkipPolicy::None)),
+                (
+                    "SD-Asparse",
+                    pe2d::simulate(&sd_ops, &cfg, SkipPolicy::ASparse),
+                ),
+                (
+                    "SD-Wsparse",
+                    pe2d::simulate(&sd_ops, &cfg, SkipPolicy::WSparse),
+                ),
+                (
+                    "SD-WAsparse",
+                    pe2d::simulate(&sd_ops, &cfg, SkipPolicy::AWSparse),
+                ),
+                ("FCN", fcn_engine::simulate_network(&n, &cfg)),
+            ],
+        });
+    }
+    Ok(rows)
 }
 
 /// Figures 10/11 reuse the fig8/fig9 stats with the energy model.
-pub fn fig10(seed: u64) -> Vec<SimRow> {
+pub fn fig10(seed: u64) -> Result<Vec<SimRow>> {
     fig8(seed)
 }
 
-pub fn fig11(seed: u64) -> Vec<SimRow> {
+pub fn fig11(seed: u64) -> Result<Vec<SimRow>> {
     fig9(seed)
 }
 
@@ -377,15 +377,16 @@ pub fn print_speedup_figure(title: &str, rows: &[SpeedupRow]) {
     }
 }
 
-pub fn print_table4(fst_div: usize) {
+pub fn print_table4(fst_div: usize) -> Result<()> {
     println!("Table 4: SSIM vs native deconvolution");
     println!("{:<10} {:>8} {:>10} {:>12}", "Benchmark", "SD", "Shi [30]", "Chang [31]");
-    for r in quality::table4(fst_div) {
+    for r in quality::table4(fst_div)? {
         println!(
             "{:<10} {:>8.3} {:>10.3} {:>12.3}",
             r.benchmark, r.ssim_sd, r.ssim_shi, r.ssim_chang
         );
     }
+    Ok(())
 }
 
 /// Networks helper re-export for benches.

@@ -3,42 +3,27 @@
 //! compare the produced images against the native-deconvolution output with
 //! SSIM.
 //!
+//! Forward passes run on the compiled-plan engine ([`crate::engine::Plan`]):
+//! every conversion approach is an op in the engine's registry, so there is
+//! ONE execution path from the quality evaluation to the serving stack. The
+//! pre-engine layer-by-layer interpreter is retained as
+//! [`run_network_with`], the bit-exactness oracle the engine is tested
+//! against (rust/tests/engine_equivalence.rs).
+//!
 //! Weights are seeded-random (we have no trained checkpoints — see DESIGN.md
 //! section 6): conversion *exactness* is weight-independent, which is the
 //! property Table 4 measures (SD == 1.0 exactly; Shi/Chang < 1 with the gap
 //! shrinking on larger images).
 
+use anyhow::{bail, Result};
+
+use crate::engine::{bridge_reshape, Plan};
 use crate::nn::{LayerKind, LayerSpec, NetworkSpec};
 use crate::sd::{chang::chang_deconv2d, nzp::nzp_deconv2d, sd_deconv2d, shi::shi_deconv2d};
 use crate::tensor::{conv2d, deconv2d, dense, relu, tanh, Filter, Tensor};
 use crate::util::rng::Rng;
 
-/// Deconvolution implementation used when executing a network.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum DeconvImpl {
-    /// direct transposed convolution (the oracle)
-    Native,
-    /// split deconvolution (the paper; exact)
-    Sd,
-    /// naive zero padding (exact, redundant)
-    Nzp,
-    /// Shi et al. [30] fixed right/bottom padding (wrong on boundaries)
-    Shi,
-    /// Chang & Kang [31] approximate conversion
-    Chang,
-}
-
-impl DeconvImpl {
-    pub fn label(&self) -> &'static str {
-        match self {
-            DeconvImpl::Native => "native",
-            DeconvImpl::Sd => "SD",
-            DeconvImpl::Nzp => "NZP",
-            DeconvImpl::Shi => "Shi [30]",
-            DeconvImpl::Chang => "Chang [31]",
-        }
-    }
-}
+pub use crate::engine::{build_weights, DeconvImpl, LayerWeights};
 
 fn run_deconv(x: &Tensor, f: &Filter, l: &LayerSpec, imp: DeconvImpl) -> Tensor {
     match imp {
@@ -50,120 +35,88 @@ fn run_deconv(x: &Tensor, f: &Filter, l: &LayerSpec, imp: DeconvImpl) -> Tensor 
     }
 }
 
-/// Smooth, trained-like filter: gaussian spatial profile x near-identity
-/// channel mixing + moderate noise. Purely random filters decorrelate any
-/// perturbation within one layer, which collapses every inexact baseline to
-/// SSIM ~ 0 regardless of how wrong it is; trained generators are smooth
-/// upsamplers, where conversion errors stay local and SSIM grades severity
-/// — the regime Table 4 measures. Normalized so E[|out|] ~ E[|in|].
-fn smooth_filter(k: usize, ic: usize, oc: usize, s: usize, rng: &mut Rng) -> Filter {
-    let mut f = Filter::zeros(k, k, ic, oc);
-    let c = (k as f32 - 1.0) / 2.0;
-    let sigma = (k as f32 / 2.5).max(0.8);
-    let mut spatial_sum = 0.0;
-    let mut profile = vec![0.0f32; k * k];
-    for y in 0..k {
-        for x in 0..k {
-            let d2 = (y as f32 - c).powi(2) + (x as f32 - c).powi(2);
-            let v = (-d2 / (2.0 * sigma * sigma)).exp();
-            profile[y * k + x] = v;
-            spatial_sum += v;
-        }
-    }
-    for v in &mut profile {
-        *v /= spatial_sum; // spatial profile sums to 1
-    }
-    // deconv scatter divides each output among s^2 phases; compensate
-    let gain = (s * s) as f32;
-    for y in 0..k {
-        for x in 0..k {
-            for i in 0..ic {
-                for o in 0..oc {
-                    // near-identity channel routing with noise
-                    let ident = if i % oc == o { 1.0 } else { 0.0 };
-                    let mix = (ident * 0.8 + 0.4 * rng.normal()) / (ic as f32 / oc.min(ic) as f32);
-                    *f.at_mut(y, x, i, o) = profile[y * k + x] * mix * gain;
-                }
-            }
-        }
-    }
-    f
+/// Execute a network on a given input with deconvolutions computed by
+/// `imp`, through a freshly compiled [`Plan`]. Weights are seeded per layer
+/// index, so different `imp` runs see identical weights. Long-lived callers
+/// should build the plan once and call [`Plan::forward`] directly.
+pub fn run_network(
+    net: &NetworkSpec,
+    imp: DeconvImpl,
+    seed: u64,
+    input: &Tensor,
+) -> Result<Tensor> {
+    Plan::build_owned(net, build_weights(net, seed), imp)?.forward(input)
 }
 
-/// Pre-built weights of one layer (see [`build_weights`]).
-pub enum LayerWeights {
-    /// dense-layer weight matrix, n_in x n_out row-major
-    Dense(Vec<f32>),
-    /// conv / deconv filter
-    Filter(Filter),
-}
-
-/// Build every layer's weights for a network, seeded per layer index — the
-/// exact draws [`run_network`] makes, factored out so long-lived callers
-/// (the coordinator's native executor) pay weight generation once instead
-/// of per batch.
-pub fn build_weights(net: &NetworkSpec, seed: u64) -> Vec<LayerWeights> {
-    net.layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| {
-            let mut rng = Rng::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9));
-            match l.kind {
-                LayerKind::Dense => {
-                    let n_in = l.in_h * l.in_w * l.in_c;
-                    let scale = std::f32::consts::SQRT_2 / (n_in as f32).sqrt();
-                    LayerWeights::Dense(
-                        (0..n_in * l.out_c).map(|_| rng.normal() * scale).collect(),
-                    )
-                }
-                LayerKind::Conv => {
-                    LayerWeights::Filter(smooth_filter(l.k, l.in_c, l.out_c, 1, &mut rng))
-                }
-                LayerKind::Deconv => {
-                    LayerWeights::Filter(smooth_filter(l.k, l.in_c, l.out_c, l.s, &mut rng))
-                }
-            }
-        })
-        .collect()
-}
-
-/// Execute a chain-structured network (DCGAN / SNGAN / ArtGAN / FST) on a
-/// given input, with deconvolutions computed by `imp`. Weights are seeded
-/// per layer index, so different `imp` runs see identical weights.
-/// Activation policy: ReLU between layers, tanh after the last (generator
-/// convention).
-pub fn run_network(net: &NetworkSpec, imp: DeconvImpl, seed: u64, input: &Tensor) -> Tensor {
-    run_network_with(net, imp, &build_weights(net, seed), input)
-}
-
-/// [`run_network`] with pre-built weights (from [`build_weights`]).
+/// The retained layer-by-layer interpreter — the engine's bit-exactness
+/// oracle. Executes a network with pre-built weights (from
+/// [`build_weights`]), no plan compilation, re-deriving SD splits on every
+/// call. Weight-count and weight-kind mismatches are errors (not panics),
+/// and the same [`bridge_reshape`] chain bridging as the engine applies
+/// (see `engine` module docs), so oracle and engine agree bit for bit.
 pub fn run_network_with(
     net: &NetworkSpec,
     imp: DeconvImpl,
     weights: &[LayerWeights],
     input: &Tensor,
-) -> Tensor {
-    assert_eq!(weights.len(), net.layers.len(), "{}: weight count", net.name);
+) -> Result<Tensor> {
+    if weights.len() != net.layers.len() {
+        bail!(
+            "{}: {} weight entries for {} layers",
+            net.name,
+            weights.len(),
+            net.layers.len()
+        );
+    }
+    if net.layers.is_empty() {
+        bail!("{}: cannot run an empty network", net.name);
+    }
+    // strict network-input validation, mirroring Plan::forward: bridging is
+    // for the documented *between-layer* chain gaps only
+    let per = input.h * input.w * input.c;
+    if per != net.input_elems() {
+        bail!(
+            "{}: input has {} elements per request, expected {}",
+            net.name,
+            per,
+            net.input_elems()
+        );
+    }
     let mut h = input.clone();
     let last = net.layers.len() - 1;
     for (i, (l, lw)) in net.layers.iter().zip(weights).enumerate() {
+        let hv = bridge_reshape(h, l.in_h, l.in_w, l.in_c);
         h = match (l.kind, lw) {
             (LayerKind::Dense, LayerWeights::Dense(w)) => {
-                let n_in = l.in_h * l.in_w * l.in_c;
-                assert_eq!(h.len() / h.n, n_in, "{}.{}: dense input mismatch", net.name, l.name);
-                dense(&h, w, l.out_c)
-            }
-            (LayerKind::Conv, LayerWeights::Filter(f)) => conv2d(&h, f, l.s, l.p),
-            (LayerKind::Deconv, LayerWeights::Filter(f)) => {
-                // reshape dense output into the deconv's expected map
-                if h.h * h.w * h.c != l.in_h * l.in_w * l.in_c {
-                    panic!("{}.{}: shape mismatch", net.name, l.name);
+                if w.len() != l.in_h * l.in_w * l.in_c * l.out_c {
+                    bail!("{}.{}: dense weight size mismatch", net.name, l.name);
                 }
-                let hv = Tensor::from_vec(h.n, l.in_h, l.in_w, l.in_c, h.data.clone());
-                run_deconv(&hv, f, l, imp)
+                dense(&hv, w, l.out_c)
             }
-            _ => panic!("{}.{}: weight kind mismatch", net.name, l.name),
+            (LayerKind::Conv, LayerWeights::Filter(f)) => conv2d(&hv, f, l.s, l.p),
+            (LayerKind::Deconv, LayerWeights::Filter(f)) => run_deconv(&hv, f, l, imp),
+            _ => bail!(
+                "{}.{}: weight kind does not match layer kind {:?}",
+                net.name,
+                l.name,
+                l.kind
+            ),
         };
+        // post-op shape validation (mirrors the engine's run_step check):
+        // every layer must produce its spec's declared output, so the
+        // between-layer bridge can only ever absorb gaps the layer table
+        // itself declares — a kernel regression is an error, not a bridge
+        if (h.h, h.w, h.c) != (l.out_h(), l.out_w(), l.out_c) {
+            bail!(
+                "{}.{}: produced {:?}, spec declares [{}, {}, {}]",
+                net.name,
+                l.name,
+                h.shape(),
+                l.out_h(),
+                l.out_w(),
+                l.out_c
+            );
+        }
         // dense outputs reshape into the next layer's map implicitly (NHWC
         // flat layout already matches)
         if i == last {
@@ -172,11 +125,11 @@ pub fn run_network_with(
             relu(&mut h);
         }
     }
-    h
+    Ok(h)
 }
 
 /// Generate a DCGAN image (64x64x3, values in [-1,1]) with seeded z.
-pub fn dcgan_image(imp: DeconvImpl, weight_seed: u64, z_seed: u64) -> Tensor {
+pub fn dcgan_image(imp: DeconvImpl, weight_seed: u64, z_seed: u64) -> Result<Tensor> {
     let net = crate::networks::dcgan();
     let mut rng = Rng::new(z_seed);
     let z = Tensor::randn(1, 1, 1, 100, &mut rng);
@@ -186,21 +139,11 @@ pub fn dcgan_image(imp: DeconvImpl, weight_seed: u64, z_seed: u64) -> Tensor {
 /// A reduced-scale FST network (spatial dims divided by `div`) so quality
 /// evaluation stays tractable; structure/filters identical.
 pub fn fst_scaled(div: usize) -> NetworkSpec {
-    let base = crate::networks::fst();
-    let layers = base
-        .layers
-        .iter()
-        .map(|l| LayerSpec {
-            in_h: (l.in_h / div).max(l.k),
-            in_w: (l.in_w / div).max(l.k),
-            ..l.clone()
-        })
-        .collect();
-    NetworkSpec { name: "FST", layers }
+    crate::networks::scaled(&crate::networks::fst(), div)
 }
 
 /// Run FST (scaled) on a seeded content image.
-pub fn fst_image(imp: DeconvImpl, weight_seed: u64, div: usize) -> Tensor {
+pub fn fst_image(imp: DeconvImpl, weight_seed: u64, div: usize) -> Result<Tensor> {
     let net = fst_scaled(div);
     let l0 = &net.layers[0];
     let mut rng = Rng::new(77);
@@ -229,13 +172,13 @@ pub struct QualityRow {
 /// Compute Table 4 (SSIM on DCGAN and FST). `fst_div` trades fidelity of the
 /// FST row for wall-clock (2 = 128x128 input; the paper used 256x256 — the
 /// ordering is scale-robust, see rust/tests/report_tables.rs).
-pub fn table4(fst_div: usize) -> Vec<QualityRow> {
+pub fn table4(fst_div: usize) -> Result<Vec<QualityRow>> {
     let mut rows = Vec::new();
     {
-        let native = dcgan_image(DeconvImpl::Native, 1, 2);
-        let sd = dcgan_image(DeconvImpl::Sd, 1, 2);
-        let shi = dcgan_image(DeconvImpl::Shi, 1, 2);
-        let chang = dcgan_image(DeconvImpl::Chang, 1, 2);
+        let native = dcgan_image(DeconvImpl::Native, 1, 2)?;
+        let sd = dcgan_image(DeconvImpl::Sd, 1, 2)?;
+        let shi = dcgan_image(DeconvImpl::Shi, 1, 2)?;
+        let chang = dcgan_image(DeconvImpl::Chang, 1, 2)?;
         rows.push(QualityRow {
             benchmark: "DCGAN",
             ssim_sd: crate::metrics::ssim_tensor(&sd, &native, 2.0),
@@ -244,10 +187,10 @@ pub fn table4(fst_div: usize) -> Vec<QualityRow> {
         });
     }
     {
-        let native = fst_image(DeconvImpl::Native, 1, fst_div);
-        let sd = fst_image(DeconvImpl::Sd, 1, fst_div);
-        let shi = fst_image(DeconvImpl::Shi, 1, fst_div);
-        let chang = fst_image(DeconvImpl::Chang, 1, fst_div);
+        let native = fst_image(DeconvImpl::Native, 1, fst_div)?;
+        let sd = fst_image(DeconvImpl::Sd, 1, fst_div)?;
+        let shi = fst_image(DeconvImpl::Shi, 1, fst_div)?;
+        let chang = fst_image(DeconvImpl::Chang, 1, fst_div)?;
         rows.push(QualityRow {
             benchmark: "FST",
             ssim_sd: crate::metrics::ssim_tensor(&sd, &native, 2.0),
@@ -255,7 +198,7 @@ pub fn table4(fst_div: usize) -> Vec<QualityRow> {
             ssim_chang: crate::metrics::ssim_tensor(&chang, &native, 2.0),
         });
     }
-    rows
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -264,20 +207,32 @@ mod tests {
 
     #[test]
     fn dcgan_sd_exact_nzp_exact() {
-        let native = dcgan_image(DeconvImpl::Native, 3, 4);
+        let native = dcgan_image(DeconvImpl::Native, 3, 4).unwrap();
         assert_eq!(native.shape(), [1, 64, 64, 3]);
-        let sd = dcgan_image(DeconvImpl::Sd, 3, 4);
+        let sd = dcgan_image(DeconvImpl::Sd, 3, 4).unwrap();
         assert!(sd.allclose(&native, 1e-3), "SD diff {}", sd.max_abs_diff(&native));
-        let nzp = dcgan_image(DeconvImpl::Nzp, 3, 4);
+        let nzp = dcgan_image(DeconvImpl::Nzp, 3, 4).unwrap();
         assert!(nzp.allclose(&native, 1e-3));
     }
 
     #[test]
     fn dcgan_shi_chang_not_exact() {
-        let native = dcgan_image(DeconvImpl::Native, 3, 4);
-        let shi = dcgan_image(DeconvImpl::Shi, 3, 4);
-        let chang = dcgan_image(DeconvImpl::Chang, 3, 4);
+        let native = dcgan_image(DeconvImpl::Native, 3, 4).unwrap();
+        let shi = dcgan_image(DeconvImpl::Shi, 3, 4).unwrap();
+        let chang = dcgan_image(DeconvImpl::Chang, 3, 4).unwrap();
         assert!(shi.max_abs_diff(&native) > 1e-2);
         assert!(chang.max_abs_diff(&native) > 1e-2);
+    }
+
+    #[test]
+    fn oracle_rejects_mismatched_weights() {
+        let net = crate::networks::dcgan();
+        let mut w = build_weights(&net, 1);
+        w.pop();
+        let z = Tensor::zeros(1, 1, 1, 100);
+        assert!(run_network_with(&net, DeconvImpl::Sd, &w, &z).is_err());
+        let mut w = build_weights(&net, 1);
+        w[1] = LayerWeights::Dense(vec![0.0; 4]);
+        assert!(run_network_with(&net, DeconvImpl::Sd, &w, &z).is_err());
     }
 }

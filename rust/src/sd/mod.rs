@@ -183,6 +183,66 @@ pub fn interleave(convs: &[Tensor], s: usize) -> Tensor {
     big
 }
 
+/// Fused steps 4 + 5 (Eqs. 10–13 + Eq. 9): interleave the `s*s` split
+/// outputs and crop the deconvolution window in ONE pass, writing only the
+/// surviving cells straight into `out` — the intermediate
+/// `s * (I + K_T - 1)` grid of [`interleave`] is never materialized. `out`
+/// is reshaped to `(n, oh, ow, oc)` in place (reusing capacity); cells past
+/// the interleave grid (output padding overhang) are zero, exactly like
+/// `crop_padded`. Bit-identical to
+/// `interleave(convs, s).crop_padded(crop, oh, crop, ow)` — property-tested
+/// in rust/tests/sd_exactness.rs. This runs on the engine's *per-request*
+/// hot path (once per SD deconv layer per forward call).
+pub fn interleave_crop_into(
+    convs: &[Tensor],
+    s: usize,
+    crop: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Tensor,
+) {
+    assert_eq!(convs.len(), s * s);
+    let t0 = &convs[0];
+    let (n, ch, cw, oc) = (t0.n, t0.h, t0.w, t0.c);
+    for t in convs {
+        assert_eq!(t.shape(), [n, ch, cw, oc], "split outputs must agree");
+    }
+    out.n = n;
+    out.h = oh;
+    out.w = ow;
+    out.c = oc;
+    out.data.clear();
+    out.data.resize(n * oh * ow * oc, 0.0);
+    for (idx, t) in convs.iter().enumerate() {
+        let (r, c) = (idx / s, idx % s);
+        for b in 0..n {
+            for y in 0..ch {
+                let ty = y * s + r;
+                if ty < crop {
+                    continue;
+                }
+                let ty = ty - crop;
+                if ty >= oh {
+                    break; // y ascending: every later row is cropped too
+                }
+                for x in 0..cw {
+                    let tx = x * s + c;
+                    if tx < crop {
+                        continue;
+                    }
+                    let tx = tx - crop;
+                    if tx >= ow {
+                        break;
+                    }
+                    let src = t.idx(b, y, x, 0);
+                    let dst = out.idx(b, ty, tx, 0);
+                    out.data[dst..dst + oc].copy_from_slice(&t.data[src..src + oc]);
+                }
+            }
+        }
+    }
+}
+
 /// Full SD pipeline: pad input (step 3) -> s^2 stride-1 convs -> interleave
 /// (step 4) -> crop. Bit-exact with `tensor::deconv2d(x, f, s, p, op)`.
 /// The per-split stride-1 convolutions run on the im2col + GEMM hot path
@@ -250,6 +310,23 @@ mod tests {
         let want = deconv2d(&x, &f, 2, 1, 1);
         let got = sd_deconv2d(&x, &f, 2, 1, 1);
         assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn interleave_crop_into_matches_two_step() {
+        let mut rng = Rng::new(31);
+        let cases = [(2, 5, 7, 3, 1), (2, 4, 4, 1, 0), (3, 3, 3, 2, 2), (1, 6, 6, 2, 0)];
+        for (s, ch, cw, crop, op) in cases {
+            let convs: Vec<Tensor> =
+                (0..s * s).map(|_| Tensor::randn(2, ch, cw, 3, &mut rng)).collect();
+            let big = interleave(&convs, s);
+            let (oh, ow) = (big.h - crop - 1 + op, big.w - crop + op);
+            let want = big.crop_padded(crop, oh, crop, ow);
+            let mut got = Tensor::zeros(0, 0, 0, 0);
+            interleave_crop_into(&convs, s, crop, oh, ow, &mut got);
+            assert_eq!(got.shape(), want.shape());
+            assert_eq!(got.max_abs_diff(&want), 0.0, "s{s} crop{crop} op{op}");
+        }
     }
 
     #[test]

@@ -98,7 +98,7 @@ mod tests {
         // no zeros anywhere: cycles = OH*OW*K^2*ceil(IC/16)*ceil(OC/16)
         let spec = LayerSpec::conv("c", 10, 10, 32, 32, 3, 1, 0);
         let mut rng = Rng::new(1);
-        let ops = lower_layer(&spec, Lowering::Direct, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Direct, &mut rng).unwrap();
         let st = simulate(&ops, &ProcessorConfig::default(), SkipPolicy::None);
         let want = (8 * 8 * 9 * 2 * 2) as u64;
         assert_eq!(st.cycles, want);
@@ -109,12 +109,12 @@ mod tests {
         let mut rng = Rng::new(2);
         let cfg = ProcessorConfig::default();
         let nzp = simulate(
-            &lower_layer(&dcgan_layer(), Lowering::Nzp, &mut rng),
+            &lower_layer(&dcgan_layer(), Lowering::Nzp, &mut rng).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
         let sd = simulate(
-            &lower_layer(&dcgan_layer(), Lowering::Sd, &mut rng),
+            &lower_layer(&dcgan_layer(), Lowering::Sd, &mut rng).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
@@ -129,7 +129,7 @@ mod tests {
         // NZP + idealized group-skip recovers some but far from all redundancy
         let mut rng = Rng::new(3);
         let cfg = ProcessorConfig::default();
-        let ops = lower_layer(&dcgan_layer(), Lowering::Nzp, &mut rng);
+        let ops = lower_layer(&dcgan_layer(), Lowering::Nzp, &mut rng).unwrap();
         let dense = simulate(&ops, &cfg, SkipPolicy::None);
         let skip = simulate(&ops, &cfg, SkipPolicy::ASparse);
         assert!(skip.cycles < dense.cycles);
@@ -141,7 +141,7 @@ mod tests {
         // dot array cannot skip weights: WSparse == None
         let mut rng = Rng::new(4);
         let cfg = ProcessorConfig::default();
-        let ops = lower_layer(&dcgan_layer(), Lowering::Sd, &mut rng);
+        let ops = lower_layer(&dcgan_layer(), Lowering::Sd, &mut rng).unwrap();
         let a = simulate(&ops, &cfg, SkipPolicy::WSparse);
         let b = simulate(&ops, &cfg, SkipPolicy::None);
         assert_eq!(a.cycles, b.cycles);
@@ -152,7 +152,7 @@ mod tests {
         // OC=3 wastes 13/16 output lanes: issued >> useful
         let spec = LayerSpec::deconv("d", 8, 8, 64, 3, 4, 2, 1, 0);
         let mut rng = Rng::new(5);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         let st = simulate(&ops, &ProcessorConfig::default(), SkipPolicy::None);
         assert!(st.utilization() < 0.35, "util {}", st.utilization());
     }

@@ -74,7 +74,7 @@ mod tests {
     fn dram_dominates_then_buffer_then_pe() {
         let spec = LayerSpec::deconv("d", 8, 8, 256, 128, 4, 2, 1, 0);
         let mut rng = Rng::new(1);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         let st = pe2d::simulate(&ops, &ProcessorConfig::default(), SkipPolicy::AWSparse);
         let e = energy(&st, &EnergyModel::default());
         assert!(e.pe_uj < e.buffer_uj, "pe {} buf {}", e.pe_uj, e.buffer_uj);
@@ -85,7 +85,7 @@ mod tests {
     fn skipping_reduces_buffer_energy() {
         let spec = LayerSpec::deconv("d", 8, 8, 256, 128, 5, 2, 2, 1);
         let mut rng = Rng::new(2);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         let cfg = ProcessorConfig::default();
         let dense = energy(&pe2d::simulate(&ops, &cfg, SkipPolicy::None), &EnergyModel::default());
         let skip = energy(
@@ -104,12 +104,16 @@ mod tests {
         let cfg = ProcessorConfig::default();
         let m = EnergyModel::default();
         let nzp = energy(
-            &pe2d::simulate(&lower_layer(&spec, Lowering::Nzp, &mut rng), &cfg, SkipPolicy::None),
+            &pe2d::simulate(
+                &lower_layer(&spec, Lowering::Nzp, &mut rng).unwrap(),
+                &cfg,
+                SkipPolicy::None,
+            ),
             &m,
         );
         let sd = energy(
             &pe2d::simulate(
-                &lower_layer(&spec, Lowering::Sd, &mut rng),
+                &lower_layer(&spec, Lowering::Sd, &mut rng).unwrap(),
                 &cfg,
                 SkipPolicy::AWSparse,
             ),

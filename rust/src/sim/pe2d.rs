@@ -114,7 +114,7 @@ mod tests {
     fn dense_cycle_formula() {
         let spec = LayerSpec::conv("c", 16, 16, 8, 64, 3, 1, 0);
         let mut rng = Rng::new(1);
-        let ops = lower_layer(&spec, Lowering::Direct, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Direct, &mut rng).unwrap();
         let st = simulate(&ops, &cfg(), SkipPolicy::None);
         // oc_tiles=2, oy_tiles=ceil(14/7)=2, ow=14, taps=9*8
         assert_eq!(st.cycles, 2 * 2 * 14 * 9 * 8);
@@ -125,7 +125,7 @@ mod tests {
         // k5 s2 SD: padded filters have zero taps; Wsparse elides them.
         let spec = LayerSpec::deconv("d", 8, 8, 64, 32, 5, 2, 2, 1);
         let mut rng = Rng::new(2);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         let dense = simulate(&ops, &cfg(), SkipPolicy::None);
         let wsp = simulate(&ops, &cfg(), SkipPolicy::WSparse);
         let ratio = dense.cycles as f64 / wsp.cycles as f64;
@@ -137,7 +137,7 @@ mod tests {
     fn nzp_asparse_skips_only_a_portion() {
         let spec = LayerSpec::deconv("d", 8, 8, 64, 32, 4, 2, 1, 0);
         let mut rng = Rng::new(3);
-        let ops = lower_layer(&spec, Lowering::Nzp, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Nzp, &mut rng).unwrap();
         let dense = simulate(&ops, &cfg(), SkipPolicy::None);
         let asp = simulate(&ops, &cfg(), SkipPolicy::ASparse);
         let recovered = 1.0 - asp.cycles as f64 / dense.cycles as f64;
@@ -152,12 +152,12 @@ mod tests {
         let spec = LayerSpec::deconv("d", 8, 8, 256, 128, 4, 2, 1, 0);
         let mut rng = Rng::new(4);
         let nzp = simulate(
-            &lower_layer(&spec, Lowering::Nzp, &mut rng),
+            &lower_layer(&spec, Lowering::Nzp, &mut rng).unwrap(),
             &cfg(),
             SkipPolicy::None,
         );
         let sd = simulate(
-            &lower_layer(&spec, Lowering::Sd, &mut rng),
+            &lower_layer(&spec, Lowering::Sd, &mut rng).unwrap(),
             &cfg(),
             SkipPolicy::AWSparse,
         );
@@ -171,7 +171,7 @@ mod tests {
         // conservation: cycles + skipped is policy-independent
         let spec = LayerSpec::deconv("d", 8, 8, 32, 32, 5, 2, 2, 1);
         let mut rng = Rng::new(5);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         let a = simulate(&ops, &cfg(), SkipPolicy::None);
         let b = simulate(&ops, &cfg(), SkipPolicy::AWSparse);
         assert_eq!(a.cycles + a.cycles_skipped, b.cycles + b.cycles_skipped);

@@ -2,6 +2,8 @@
 //! operations a CNN processor actually executes, carrying the operand zero
 //! structure (the thing skip policies act on).
 
+use anyhow::{bail, Result};
+
 use crate::nn::{LayerKind, LayerSpec};
 use crate::sd::{split_filters, SdGeometry};
 use crate::sim::ConvOp;
@@ -67,9 +69,11 @@ fn op_from(x: &Tensor, f: &Filter, stride: usize, useful_macs: u64) -> ConvOp {
 /// Build the ConvOps for one layer under the given lowering. Activations are
 /// dense random (structural zeros come from the lowering itself); weights
 /// are dense random before splitting/rotation (expansion zeros come from the
-/// SD filter padding).
-pub fn lower_layer(spec: &LayerSpec, how: Lowering, rng: &mut Rng) -> Vec<ConvOp> {
-    match spec.kind {
+/// SD filter padding). A deconv layer with [`Lowering::Direct`] is an error
+/// (legacy convolution processors cannot execute it), propagated to the
+/// caller rather than panicking.
+pub fn lower_layer(spec: &LayerSpec, how: Lowering, rng: &mut Rng) -> Result<Vec<ConvOp>> {
+    Ok(match spec.kind {
         LayerKind::Dense => Vec::new(), // negligible; not simulated
         LayerKind::Conv => {
             let x = Tensor::randn(1, spec.in_h, spec.in_w, spec.in_c, rng)
@@ -81,7 +85,10 @@ pub fn lower_layer(spec: &LayerSpec, how: Lowering, rng: &mut Rng) -> Vec<ConvOp
             let x = Tensor::randn(1, spec.in_h, spec.in_w, spec.in_c, rng);
             let f = Filter::randn(spec.k, spec.k, spec.in_c, spec.out_c, rng);
             match how {
-                Lowering::Direct => panic!("deconv layers need Nzp or Sd lowering"),
+                Lowering::Direct => bail!(
+                    "deconv layer {} cannot lower as Direct: pick Nzp or Sd",
+                    spec.name
+                ),
                 Lowering::Nzp => {
                     let xin = crate::sd::nzp::nzp_input(&x, &f, spec.s, spec.p);
                     vec![op_from(&xin, &f.rot180(), 1, spec.macs())]
@@ -102,7 +109,7 @@ pub fn lower_layer(spec: &LayerSpec, how: Lowering, rng: &mut Rng) -> Vec<ConvOp
                 }
             }
         }
-    }
+    })
 }
 
 /// All ops for a whole network's deconv layers (the paper's figures evaluate
@@ -111,11 +118,13 @@ pub fn lower_network_deconvs(
     net: &crate::nn::NetworkSpec,
     how: Lowering,
     seed: u64,
-) -> Vec<ConvOp> {
+) -> Result<Vec<ConvOp>> {
     let mut rng = Rng::new(seed);
-    net.deconv_layers()
-        .flat_map(|l| lower_layer(l, how, &mut rng))
-        .collect()
+    let mut ops = Vec::new();
+    for l in net.deconv_layers() {
+        ops.extend(lower_layer(l, how, &mut rng)?);
+    }
+    Ok(ops)
 }
 
 #[cfg(test)]
@@ -124,10 +133,21 @@ mod tests {
     use crate::nn::LayerSpec;
 
     #[test]
+    fn direct_lowering_of_deconv_is_an_error() {
+        let spec = LayerSpec::deconv("d", 8, 8, 4, 4, 4, 2, 1, 0);
+        let mut rng = Rng::new(7);
+        let err = lower_layer(&spec, Lowering::Direct, &mut rng);
+        assert!(err.is_err(), "Direct lowering of a deconv must error");
+        // plain conv layers lower fine under Direct
+        let conv = LayerSpec::conv("c", 8, 8, 4, 4, 3, 1, 1);
+        assert_eq!(lower_layer(&conv, Lowering::Direct, &mut rng).unwrap().len(), 1);
+    }
+
+    #[test]
     fn nzp_op_has_structural_zeros() {
         let spec = LayerSpec::deconv("d", 8, 8, 4, 4, 4, 2, 1, 0);
         let mut rng = Rng::new(1);
-        let ops = lower_layer(&spec, Lowering::Nzp, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Nzp, &mut rng).unwrap();
         assert_eq!(ops.len(), 1);
         let op = &ops[0];
         // zero-inserted + halo: most positions zero
@@ -142,7 +162,7 @@ mod tests {
         // k5 s2: 4 splits of side 3, with one zero row+col in some splits
         let spec = LayerSpec::deconv("d", 8, 8, 4, 4, 5, 2, 2, 1);
         let mut rng = Rng::new(2);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         assert_eq!(ops.len(), 4);
         let with_zero_taps = ops
             .iter()
@@ -159,7 +179,7 @@ mod tests {
     fn divisible_filter_no_zero_taps() {
         let spec = LayerSpec::deconv("d", 4, 4, 2, 2, 4, 2, 1, 0);
         let mut rng = Rng::new(3);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         for op in &ops {
             assert!(op.wgt_zero.iter().all(|z| !z), "k divisible by s: dense splits");
         }
@@ -168,8 +188,8 @@ mod tests {
     #[test]
     fn network_lowering_counts() {
         let net = crate::networks::sngan();
-        let nzp = lower_network_deconvs(&net, Lowering::Nzp, 1);
-        let sd = lower_network_deconvs(&net, Lowering::Sd, 1);
+        let nzp = lower_network_deconvs(&net, Lowering::Nzp, 1).unwrap();
+        let sd = lower_network_deconvs(&net, Lowering::Sd, 1).unwrap();
         assert_eq!(nzp.len(), 3); // one op per deconv layer
         assert_eq!(sd.len(), 12); // s^2 = 4 per layer
     }

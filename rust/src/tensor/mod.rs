@@ -72,7 +72,20 @@ impl Tensor {
 
     /// Zero-pad spatial dims: (top, bottom, left, right).
     pub fn pad(&self, top: usize, bottom: usize, left: usize, right: usize) -> Tensor {
-        let mut out = Tensor::zeros(self.n, self.h + top + bottom, self.w + left + right, self.c);
+        let mut out = Tensor::zeros(0, 0, 0, 0);
+        self.pad_into(top, bottom, left, right, &mut out);
+        out
+    }
+
+    /// [`Tensor::pad`] into a caller-provided tensor (reshaped, resized,
+    /// zeroed in place, reusing capacity) — the engine's arena-backed form.
+    pub fn pad_into(&self, top: usize, bottom: usize, left: usize, right: usize, out: &mut Tensor) {
+        out.n = self.n;
+        out.h = self.h + top + bottom;
+        out.w = self.w + left + right;
+        out.c = self.c;
+        out.data.clear();
+        out.data.resize(out.n * out.h * out.w * out.c, 0.0);
         for n in 0..self.n {
             for h in 0..self.h {
                 let src = self.idx(n, h, 0, 0);
@@ -81,7 +94,6 @@ impl Tensor {
                     .copy_from_slice(&self.data[src..src + self.w * self.c]);
             }
         }
-        out
     }
 
     /// Spatial crop: rows [h0, h0+nh), cols [w0, w0+nw).

@@ -34,6 +34,14 @@ pub fn conv2d_valid(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
     conv2d_gemm(x, f, stride)
 }
 
+/// [`conv2d_valid`] writing into a caller-provided tensor (reshaped and
+/// resized in place) — the engine's arena-backed entry point. Results are
+/// bit-identical to [`conv2d_valid`]: same tiling, same micro-kernel, same
+/// accumulation order; only the output buffer's provenance differs.
+pub fn conv2d_valid_into(x: &Tensor, f: &Filter, stride: usize, out: &mut Tensor) {
+    conv2d_gemm_into(x, f, stride, out)
+}
+
 /// Scalar reference convolution: the bit-exactness oracle for the GEMM
 /// kernel (property-tested in rust/tests/conv_gemm.rs) and the baseline the
 /// hotpath bench reports speedup over. Deliberately the plain 7-deep loop.
@@ -104,15 +112,29 @@ struct Scratch {
 /// accumulator, exactly the order of [`conv2d_naive`] — the two kernels are
 /// bit-identical, which rust/tests/conv_gemm.rs asserts with zero tolerance.
 pub fn conv2d_gemm(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
+    let mut out = Tensor::zeros(0, 0, 0, 0);
+    conv2d_gemm_into(x, f, stride, &mut out);
+    out
+}
+
+/// [`conv2d_gemm`] into a caller-provided tensor: `out` is reshaped to the
+/// convolution output shape and its buffer resized (reusing capacity);
+/// every element is overwritten.
+pub fn conv2d_gemm_into(x: &Tensor, f: &Filter, stride: usize, out: &mut Tensor) {
     assert_eq!(x.c, f.ic, "channel mismatch");
     assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
     let oh = (x.h - f.kh) / stride + 1;
     let ow = (x.w - f.kw) / stride + 1;
     let kdim = f.kh * f.kw * f.ic;
     let n_out = f.oc;
-    let mut out = Tensor::zeros(x.n, oh, ow, n_out);
+    out.n = x.n;
+    out.h = oh;
+    out.w = ow;
+    out.c = n_out;
+    out.data.clear();
+    out.data.resize(x.n * oh * ow * n_out, 0.0);
     if out.data.is_empty() {
-        return out;
+        return;
     }
 
     let rows_per_tile = (PANEL_BYTES / (ow * kdim * 4).max(1)).clamp(1, oh);
@@ -153,7 +175,6 @@ pub fn conv2d_gemm(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
             }
         });
     }
-    out
 }
 
 /// Worker-pool size: 1 for small problems, else `SD_CONV_THREADS` or the
@@ -310,9 +331,22 @@ pub fn zero_insert(x: &Tensor, stride: usize) -> Tensor {
 
 /// Dense (fully-connected) layer: x viewed as (N, H\*W\*C) @ w (in x out).
 pub fn dense(x: &Tensor, w: &[f32], n_out: usize) -> Tensor {
+    let mut out = Tensor::zeros(0, 0, 0, 0);
+    dense_into(x, w, n_out, &mut out);
+    out
+}
+
+/// [`dense`] into a caller-provided tensor (reshaped, resized, zeroed in
+/// place, reusing capacity). Accumulation order identical to [`dense`].
+pub fn dense_into(x: &Tensor, w: &[f32], n_out: usize, out: &mut Tensor) {
     let n_in = x.h * x.w * x.c;
     assert_eq!(w.len(), n_in * n_out, "dense weight size");
-    let mut out = Tensor::zeros(x.n, 1, 1, n_out);
+    out.n = x.n;
+    out.h = 1;
+    out.w = 1;
+    out.c = n_out;
+    out.data.clear();
+    out.data.resize(x.n * n_out, 0.0);
     for n in 0..x.n {
         let xrow = &x.data[n * n_in..(n + 1) * n_in];
         let orow_base = n * n_out;
@@ -327,7 +361,6 @@ pub fn dense(x: &Tensor, w: &[f32], n_out: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// In-place ReLU.
@@ -411,6 +444,26 @@ mod tests {
             let got = conv2d(&xd, &f.rot180(), 1, k - 1 - p);
             assert!(got.allclose(&want, 1e-4));
         }
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers_bit_exactly() {
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(2, 7, 9, 4, &mut rng);
+        let f = Filter::randn(3, 3, 4, 6, &mut rng);
+        // start from a deliberately wrong-shaped, dirty buffer
+        let mut out = Tensor::from_vec(1, 2, 2, 1, vec![9.0; 4]);
+        conv2d_valid_into(&x, &f, 2, &mut out);
+        let fresh = conv2d_valid(&x, &f, 2);
+        assert_eq!(out.shape(), fresh.shape());
+        assert_eq!(out.max_abs_diff(&fresh), 0.0);
+
+        let w: Vec<f32> = (0..x.h * x.w * x.c * 5).map(|_| rng.normal()).collect();
+        let mut dout = Tensor::from_vec(1, 1, 1, 3, vec![7.0; 3]);
+        dense_into(&x, &w, 5, &mut dout);
+        let dfresh = dense(&x, &w, 5);
+        assert_eq!(dout.shape(), dfresh.shape());
+        assert_eq!(dout.max_abs_diff(&dfresh), 0.0);
     }
 
     #[test]

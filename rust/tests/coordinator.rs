@@ -96,6 +96,7 @@ fn batching_happens_under_load() {
         max_batch: 4,
         batch_timeout: Duration::from_millis(20),
         queue_cap: 64,
+        ..ServerConfig::default()
     };
     let (s, batches, max_seen) = server(cfg, 0, 1);
     let mut rxs = Vec::new();
@@ -117,6 +118,7 @@ fn batch_size_never_exceeds_config() {
         max_batch: 2,
         batch_timeout: Duration::from_millis(10),
         queue_cap: 64,
+        ..ServerConfig::default()
     };
     let (s, _, max_seen) = server(cfg, 0, 1);
     let mut rxs = Vec::new();
@@ -136,6 +138,7 @@ fn backpressure_rejects_when_full() {
         max_batch: 1,
         batch_timeout: Duration::from_millis(1),
         queue_cap: 2,
+        ..ServerConfig::default()
     };
     // slow backend: 50ms per call, so the queue fills
     let (s, _, _) = server(cfg, 0, 50);
@@ -165,6 +168,7 @@ fn failed_batch_disconnects_not_hangs() {
         max_batch: 1,
         batch_timeout: Duration::from_millis(1),
         queue_cap: 8,
+        ..ServerConfig::default()
     };
     let (s, _, _) = server(cfg, 2, 0); // every 2nd call fails
     let mut disconnects = 0;

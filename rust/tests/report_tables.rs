@@ -77,7 +77,7 @@ fn table3_matches_paper() {
 fn table4_ssim_ordering() {
     // paper: SD == 1.0 both rows; Shi and Chang below 1; both baselines do
     // better on FST (larger images) than on DCGAN.
-    let rows = report::quality::table4(4); // fast config: FST at 64x64
+    let rows = report::quality::table4(4).unwrap(); // fast config: FST at 64x64
     let dcgan = &rows[0];
     let fst = &rows[1];
     assert!(dcgan.ssim_sd > 0.999, "SD must be exact: {}", dcgan.ssim_sd);
@@ -94,7 +94,7 @@ fn table4_ssim_ordering() {
 
 #[test]
 fn sim_figures_have_expected_schemes_and_ordering() {
-    let f8 = report::fig8(42);
+    let f8 = report::fig8(42).unwrap();
     assert_eq!(f8.len(), 6);
     for row in &f8 {
         let perf = row.normalized_perf();
@@ -104,7 +104,7 @@ fn sim_figures_have_expected_schemes_and_ordering() {
         assert!(perf[1].1 > 1.0, "{}: SD {}", row.name, perf[1].1);
         assert!(perf[2].1 >= perf[1].1 * 0.99, "{}: Asparse regressed", row.name);
     }
-    let f9 = report::fig9(42);
+    let f9 = report::fig9(42).unwrap();
     for row in &f9 {
         let perf = row.normalized_perf();
         let wasparse = perf.iter().find(|(l, _)| *l == "SD-WAsparse").unwrap().1;
@@ -115,7 +115,7 @@ fn sim_figures_have_expected_schemes_and_ordering() {
 #[test]
 fn energy_figures_reduce_vs_nzp() {
     let m = EnergyModel::default();
-    for row in report::fig11(42) {
+    for row in report::fig11(42).unwrap() {
         let e = row.normalized_energy(&m);
         let wasparse = e.iter().find(|(l, _, _)| *l == "SD-WAsparse").unwrap().2;
         assert!(wasparse < 0.95, "{}: SD-WAsparse energy {wasparse}", row.name);

@@ -3,7 +3,8 @@
 //! central claim. (The offline registry has no proptest; this is a seeded
 //! random-case sweep with shrink-free reporting of the failing geometry.)
 
-use split_deconv::sd::{nzp::nzp_deconv2d, sd_deconv2d, split_filters, SdGeometry};
+use split_deconv::sd::{interleave, interleave_crop_into, nzp::nzp_deconv2d, sd_deconv2d};
+use split_deconv::sd::{split_filters, SdGeometry};
 use split_deconv::sd::{chang::chang_deconv2d, shi::shi_deconv2d};
 use split_deconv::tensor::{deconv2d, Filter, Tensor};
 use split_deconv::util::rng::Rng;
@@ -121,6 +122,55 @@ fn wrong_baselines_are_wrong_but_exact_ones_exact() {
         assert_eq!(shi.shape(), want.shape());
         assert_eq!(chang.shape(), want.shape());
         assert!(chang.max_abs_diff(&want) > 1e-3, "chang exact at k{k} s{s} p{p}");
+    }
+}
+
+#[test]
+fn interleave_crop_roundtrips_against_nzp_geometry() {
+    // Property sweep: (1) interleave places every phase where the stride
+    // write demands (so phases round-trip exactly); (2) the SD crop window
+    // (Eq. 9 offset + final_out extent) matches the geometry of the naive
+    // zero-padding conversion — zero-inserted side (i-1)s+1, conv pad
+    // k-1-p, stride 1, plus output padding; (3) the engine's fused
+    // interleave+crop pass is bit-identical to interleave + crop_padded.
+    let mut rng = Rng::new(0x1EAF);
+    for case_idx in 0..100 {
+        let c = random_case(&mut rng);
+        let g = SdGeometry::new(c.k, c.s, c.p);
+        let (co_h, co_w) = (g.conv_out(c.i_h), g.conv_out(c.i_w));
+        let convs: Vec<Tensor> = (0..c.s * c.s)
+            .map(|_| Tensor::randn(1, co_h, co_w, c.ic, &mut rng))
+            .collect();
+        let big = interleave(&convs, c.s);
+        for y in 0..big.h {
+            for x in 0..big.w {
+                let split = &convs[(y % c.s) * c.s + (x % c.s)];
+                for ch in 0..c.ic {
+                    assert_eq!(
+                        big.at(0, y, x, ch),
+                        split.at(0, y / c.s, x / c.s, ch),
+                        "case {case_idx}: phase misplaced at ({y},{x})"
+                    );
+                }
+            }
+        }
+        let (oh, ow) = (g.final_out(c.i_h, c.op), g.final_out(c.i_w, c.op));
+        let nzp_oh = (c.i_h - 1) * c.s + 1 + 2 * (c.k - 1 - c.p) - c.k + 1 + c.op;
+        let nzp_ow = (c.i_w - 1) * c.s + 1 + 2 * (c.k - 1 - c.p) - c.k + 1 + c.op;
+        assert_eq!((oh, ow), (nzp_oh, nzp_ow), "case {case_idx}: crop extent != NZP output");
+        let want = big.crop_padded(g.crop(), oh, g.crop(), ow);
+        let mut fused = Tensor::zeros(0, 0, 0, 0);
+        interleave_crop_into(&convs, c.s, g.crop(), oh, ow, &mut fused);
+        assert_eq!(fused.shape(), want.shape(), "case {case_idx}");
+        assert_eq!(
+            fused.max_abs_diff(&want),
+            0.0,
+            "case {case_idx}: fused interleave+crop != two-step (k{} s{} p{} op{})",
+            c.k,
+            c.s,
+            c.p,
+            c.op
+        );
     }
 }
 

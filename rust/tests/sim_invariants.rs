@@ -28,7 +28,7 @@ fn cycle_conservation_pe2d() {
     for _ in 0..20 {
         let spec = random_deconv(&mut rng);
         for how in [Lowering::Nzp, Lowering::Sd] {
-            let ops = lower_layer(&spec, how, &mut rng);
+            let ops = lower_layer(&spec, how, &mut rng).unwrap();
             let totals: Vec<u64> = [
                 SkipPolicy::None,
                 SkipPolicy::ASparse,
@@ -55,7 +55,7 @@ fn stronger_policy_never_slower() {
     let cfg = ProcessorConfig::default();
     for _ in 0..20 {
         let spec = random_deconv(&mut rng);
-        let ops = lower_layer(&spec, Lowering::Sd, &mut rng);
+        let ops = lower_layer(&spec, Lowering::Sd, &mut rng).unwrap();
         let none = pe2d::simulate(&ops, &cfg, SkipPolicy::None).cycles;
         let a = pe2d::simulate(&ops, &cfg, SkipPolicy::ASparse).cycles;
         let w = pe2d::simulate(&ops, &cfg, SkipPolicy::WSparse).cycles;
@@ -71,8 +71,10 @@ fn more_channels_more_cycles() {
     let small = LayerSpec::deconv("s", 8, 8, 32, 32, 4, 2, 1, 0);
     let big = LayerSpec::deconv("b", 8, 8, 64, 64, 4, 2, 1, 0);
     for how in [Lowering::Nzp, Lowering::Sd] {
-        let cs = dot_array::simulate(&lower_layer(&small, how, &mut rng), &cfg, SkipPolicy::None);
-        let cb = dot_array::simulate(&lower_layer(&big, how, &mut rng), &cfg, SkipPolicy::None);
+        let small_ops = lower_layer(&small, how, &mut rng).unwrap();
+        let big_ops = lower_layer(&big, how, &mut rng).unwrap();
+        let cs = dot_array::simulate(&small_ops, &cfg, SkipPolicy::None);
+        let cb = dot_array::simulate(&big_ops, &cfg, SkipPolicy::None);
         assert!(cb.cycles > cs.cycles);
     }
 }
@@ -84,12 +86,12 @@ fn paper_speedup_band_dot_array() {
     let mut speedups = Vec::new();
     for net in networks::all() {
         let nzp = dot_array::simulate(
-            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &lower_network_deconvs(&net, Lowering::Nzp, 42).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
         let sd = dot_array::simulate(
-            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &lower_network_deconvs(&net, Lowering::Sd, 42).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
@@ -108,12 +110,12 @@ fn paper_speedup_band_pe2d() {
     let mut speedups = Vec::new();
     for net in networks::all() {
         let nzp = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &lower_network_deconvs(&net, Lowering::Nzp, 42).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
         let sd = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &lower_network_deconvs(&net, Lowering::Sd, 42).unwrap(),
             &cfg,
             SkipPolicy::AWSparse,
         );
@@ -129,7 +131,7 @@ fn sd_wasparse_on_par_with_fcn() {
     let cfg = ProcessorConfig::default();
     for net in networks::all() {
         let sd = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &lower_network_deconvs(&net, Lowering::Sd, 42).unwrap(),
             &cfg,
             SkipPolicy::AWSparse,
         );
@@ -151,12 +153,12 @@ fn energy_reduction_band() {
     let mut reductions = Vec::new();
     for net in networks::all() {
         let nzp = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &lower_network_deconvs(&net, Lowering::Nzp, 42).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
         let sd = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &lower_network_deconvs(&net, Lowering::Sd, 42).unwrap(),
             &cfg,
             SkipPolicy::AWSparse,
         );
@@ -176,7 +178,7 @@ fn fcn_energy_exceeds_sd_wasparse() {
     let nets = networks::all();
     for net in &nets {
         let sd = pe2d::simulate(
-            &lower_network_deconvs(net, Lowering::Sd, 42),
+            &lower_network_deconvs(net, Lowering::Sd, 42).unwrap(),
             &cfg,
             SkipPolicy::AWSparse,
         );
@@ -198,12 +200,12 @@ fn dram_independent_of_scheme() {
     let cfg = ProcessorConfig::default();
     for net in networks::all() {
         let nzp = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Nzp, 42),
+            &lower_network_deconvs(&net, Lowering::Nzp, 42).unwrap(),
             &cfg,
             SkipPolicy::None,
         );
         let sd = pe2d::simulate(
-            &lower_network_deconvs(&net, Lowering::Sd, 42),
+            &lower_network_deconvs(&net, Lowering::Sd, 42).unwrap(),
             &cfg,
             SkipPolicy::AWSparse,
         );
