@@ -97,6 +97,7 @@ fn main() {
                 batch_timeout: Duration::from_millis(1),
                 queue_cap: 256,
                 model: "dcgan".to_string(),
+                workers: 1,
             },
             7,
         )
@@ -123,6 +124,7 @@ fn main() {
                 batch_timeout: Duration::from_millis(1),
                 queue_cap: 256,
                 model: "dcgan".to_string(),
+                workers: 1,
             },
             default_artifact_dir(),
             "dcgan_sd".into(),

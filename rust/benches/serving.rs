@@ -1,0 +1,210 @@
+//! Bench target: multi-worker serving throughput — a closed-loop load
+//! generator over the native worker pool, the end-to-end payoff of the
+//! `Program`/`Scratch` split (one compile shared by N dispatcher workers).
+//!
+//! For every benchmark network and workers ∈ {1, 2, 4}: compile the model
+//! ONCE into an `Arc<Program>`, stand up a `Server` with that many
+//! dispatcher workers, and drive it with 8 closed-loop clients (each
+//! submits, waits for its response, submits again) until the request
+//! budget is spent. Reported per configuration: aggregate throughput
+//! (req/s), latency percentiles (p50/p95/p99 from the server's own
+//! metrics), mean batch size, and the per-worker batch spread.
+//!
+//! The GEMM kernel is pinned to ONE thread (`SD_CONV_THREADS=1`) for the
+//! whole bench: intra-op parallelism would let a single worker saturate
+//! the machine and mask the quantity under test, which is *inter-request*
+//! scaling of the worker pool. Identical bits either way — threading never
+//! changes results.
+//!
+//! Acceptance (enforced with a nonzero exit code): 4-worker aggregate
+//! throughput strictly above the 1-worker configuration for DCGAN and FST.
+//! MDE and FST run at reduced resolution (structure and code path
+//! identical) to keep the bench minutes-scale.
+//!
+//! `cargo bench --bench serving -- --json BENCH_serving.json` writes the
+//! per-configuration times/speedups for cross-PR tracking;
+//! `-- --smoke` runs a reduced matrix (2 nets, workers {1, 4}) as a CI
+//! gate.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use split_deconv::coordinator::{MetricsSnapshot, Server, ServerConfig};
+use split_deconv::engine::{DeconvImpl, Program};
+use split_deconv::networks;
+use split_deconv::nn::NetworkSpec;
+use split_deconv::util::rng::Rng;
+
+/// Closed-loop client threads (in-flight ceiling), independent of the
+/// worker count so every configuration sees the same offered load.
+const CLIENTS: usize = 8;
+
+/// (network, label, gated): `gated` nets enforce the 4-vs-1-worker
+/// acceptance check.
+fn bench_nets(smoke: bool) -> Vec<(NetworkSpec, &'static str, bool)> {
+    if smoke {
+        return vec![
+            (networks::dcgan(), "DCGAN 64x64", true),
+            (networks::scaled(&networks::fst(), 4), "FST 64x64 (1/4 res)", true),
+        ];
+    }
+    vec![
+        (networks::dcgan(), "DCGAN 64x64", true),
+        (networks::artgan(), "ArtGAN 32x32", false),
+        (networks::sngan(), "SNGAN 32x32", false),
+        (networks::gpgan(), "GP-GAN 64x64", false),
+        (networks::scaled(&networks::mde(), 2), "MDE 64x128 (1/2 res)", false),
+        (networks::scaled(&networks::fst(), 2), "FST 128x128 (1/2 res)", true),
+    ]
+}
+
+/// Drive `total` requests through the server from `CLIENTS` closed-loop
+/// clients; returns once every response has been received.
+fn closed_loop(server: &Server, total: usize, z_len: usize) {
+    let issued = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let issued = &issued;
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                loop {
+                    if issued.fetch_add(1, Ordering::Relaxed) >= total {
+                        return;
+                    }
+                    let rx = server.submit_blocking(rng.normal_vec(z_len)).expect("submit");
+                    // bounded wait: a hung pool must fail the bench (and
+                    // its CI gate) fast, not block forever in recv()
+                    let _ = rx
+                        .recv_timeout(Duration::from_secs(120))
+                        .expect("response within 120s");
+                }
+            });
+        }
+    });
+}
+
+/// One configuration: a fresh server over the SHARED program with
+/// `workers` dispatchers; warm-up round, then a timed closed-loop run.
+/// Returns (throughput req/s, wall seconds, metrics snapshot).
+fn measure(
+    program: &Arc<Program>,
+    model: &str,
+    workers: usize,
+    total: usize,
+) -> (f64, f64, MetricsSnapshot) {
+    // max_batch 4 (not 8): with 8 closed-loop clients this yields more
+    // executable calls per run, so the throughput sample the gate judges
+    // is averaged over more events
+    let cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 64,
+        model: model.to_string(),
+        workers,
+    };
+    let z_len = program.input_len();
+    let server = Server::start_native_program(cfg, program.clone()).expect("server start");
+    // warm-up: one round per client. Its CLIENTS cold samples stay in the
+    // metrics snapshot (percentiles are reported over warm-up + timed run;
+    // the request budget keeps them a small minority), while the reported
+    // THROUGHPUT is wall-clocked over the timed run only.
+    closed_loop(&server, CLIENTS, z_len);
+    let t0 = Instant::now();
+    closed_loop(&server, total, z_len);
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    server.shutdown();
+    (total as f64 / wall, wall, m)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut sink = harness::JsonSink::from_args();
+    // pin the conv kernel to one thread: the bench measures worker-pool
+    // scaling, not intra-op parallelism (see module docs)
+    std::env::set_var("SD_CONV_THREADS", "1");
+    let worker_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4] };
+    // 64 requests at max_batch 4 ≈ 16+ executable calls per configuration:
+    // the gate judges a mean over many batch events rather than a handful,
+    // and the 8 warm-up samples are a ~11% minority of the percentile
+    // snapshot
+    let total = 64;
+
+    let mut failures: Vec<String> = Vec::new();
+    for (net, label, gated) in bench_nets(smoke) {
+        harness::section(label);
+        let program =
+            Arc::new(Program::from_seed(&net, DeconvImpl::Sd, 7).expect("program compiles"));
+        let mut baseline: Option<harness::BenchResult> = None;
+        let mut tp_by_workers: Vec<(usize, f64)> = Vec::new();
+        for &w in worker_counts {
+            let (tp, wall, m) = measure(&program, net.name, w, total);
+            tp_by_workers.push((w, tp));
+            let spread: Vec<String> = m.worker_batches.iter().map(|b| b.to_string()).collect();
+            let r = harness::BenchResult {
+                name: format!("serving {label} w{w}"),
+                iters: total,
+                mean_s: wall / total as f64,
+                min_s: wall / total as f64,
+                stddev_s: 0.0,
+            };
+            println!(
+                "  workers={w}: {tp:7.2} req/s  p50={:7.0}us p95={:7.0}us p99={:7.0}us \
+                 mean_batch={:.2} worker_batches=[{}]",
+                m.p50_us,
+                m.p95_us,
+                m.p99_us,
+                m.mean_batch,
+                spread.join(",")
+            );
+            if let Some(b) = &baseline {
+                sink.record_speedup(b, &r);
+            } else {
+                sink.record(&r);
+                baseline = Some(r);
+            }
+        }
+        if gated {
+            let tp1 = tp_by_workers.iter().find(|(w, _)| *w == 1).map(|(_, t)| *t);
+            let tp4 = tp_by_workers.iter().find(|(w, _)| *w == 4).map(|(_, t)| *t);
+            if let (Some(mut tp1), Some(mut tp4)) = (tp1, tp4) {
+                println!("  -> 4-worker vs 1-worker throughput: {:.2}x", tp4 / tp1);
+                if tp4 <= tp1 {
+                    // one fresh re-measurement of both sides before
+                    // failing: on small shared CI runners a single sample
+                    // can be decided by scheduler noise, and a flaky
+                    // required gate is worse than a retried one. The gate
+                    // stays strict on the retry.
+                    println!("  gate miss — re-measuring once to rule out scheduler noise");
+                    tp1 = measure(&program, net.name, 1, total).0;
+                    tp4 = measure(&program, net.name, 4, total).0;
+                    println!("  -> retry: 4-worker vs 1-worker throughput: {:.2}x", tp4 / tp1);
+                }
+                if tp4 <= tp1 {
+                    failures.push(format!(
+                        "{label}: 4-worker throughput {tp4:.2} req/s not above \
+                         1-worker {tp1:.2} req/s"
+                    ));
+                }
+            }
+        }
+    }
+
+    harness::section("summary");
+    if failures.is_empty() {
+        println!("multi-worker scaling acceptance (4w > 1w on every gated network): PASS");
+    } else {
+        for f in &failures {
+            println!("FAIL: {f}");
+        }
+    }
+    sink.write("serving");
+    if !failures.is_empty() {
+        // real gate: a FAIL is a nonzero exit, visible to CI and scripts
+        std::process::exit(1);
+    }
+}

@@ -3,17 +3,21 @@
 //!
 //! Two production executors: [`PjrtExecutor`] runs the AOT-compiled DCGAN
 //! generator through the PJRT runtime (requires `make artifacts`), and
-//! [`NativeExecutor`] wraps a compiled [`Plan`] from the `engine`
-//! subsystem: any of the six benchmark networks, with split-deconvolution
-//! filters pre-split at plan time, executing on the im2col + GEMM
-//! convolution kernel — so the full serving path works from a fresh
-//! checkout. Because PJRT handles are not `Send`, executors are constructed
-//! *inside* the dispatcher thread via a `Send` factory closure (see
-//! [`super::Server::start_with`]); tests plug in a mock.
+//! [`NativeExecutor`] pairs a shared compiled [`Program`] from the
+//! `engine` subsystem (any of the six benchmark networks, with
+//! split-deconvolution filters pre-split at compile time, executing on the
+//! im2col + GEMM convolution kernel) with a private
+//! [`crate::engine::Scratch`] — so the full serving path works from a
+//! fresh checkout and N workers serve ONE compile. Because PJRT handles are not `Send`, executors are constructed
+//! *inside* each dispatcher thread via a `Send + Sync` factory closure
+//! called once per worker (see [`super::Server::start_with`]); tests plug
+//! in mocks.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::engine::{DeconvImpl, Plan};
+use crate::engine::{Plan, Program};
 use crate::runtime::Engine;
 
 /// Runs batches of latent vectors into batches of images.
@@ -38,6 +42,25 @@ pub fn plan_batch(supported: &[usize], n: usize) -> usize {
         }
     }
     *supported.last().unwrap()
+}
+
+/// Chunk `n` queued requests into per-executable calls: each chunk is
+/// `(take, exec_b)` — `take` real requests run on the `exec_b`-sized
+/// executable (zero-padded lanes when `take < exec_b`). The chunks
+/// partition `0..n` in order with no overlap or gap, so no request ever
+/// crosses a chunk boundary and none is executed twice (property-tested in
+/// rust/tests/batch_packing.rs).
+pub fn chunk_batches(supported: &[usize], n: usize) -> Vec<(usize, usize)> {
+    let mut chunks = Vec::new();
+    let mut cursor = 0;
+    while cursor < n {
+        let remaining = n - cursor;
+        let b = plan_batch(supported, remaining);
+        let take = remaining.min(b);
+        chunks.push((take, b));
+        cursor += take;
+    }
+    chunks
 }
 
 /// PJRT-backed executor for the DCGAN generator artifacts
@@ -99,17 +122,16 @@ impl BatchExecutor for PjrtExecutor {
     fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(batch.len());
         let mut cursor = 0;
-        while cursor < batch.len() {
-            let remaining = batch.len() - cursor;
-            let b = plan_batch(&self.batches, remaining);
-            let take = remaining.min(b);
+        for (take, b) in chunk_batches(&self.batches, batch.len()) {
             let name = self
                 .names
                 .iter()
                 .find(|(nb, _)| *nb == b)
                 .map(|(_, n)| n.clone())
                 .unwrap();
-            // pack + zero-pad to the executable's batch size
+            // pack + zero-pad to the executable's batch size; only the
+            // first `take` lanes are ever read back, so padding lanes
+            // cannot leak into a response
             let mut z = vec![0.0f32; b * self.z_len];
             for (i, req) in batch[cursor..cursor + take].iter().enumerate() {
                 z[i * self.z_len..(i + 1) * self.z_len].copy_from_slice(req);
@@ -125,15 +147,18 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
-/// CPU-native executor: a compiled [`Plan`] for any of the six benchmark
-/// networks — SD deconvolution filters pre-split and pre-packed at plan
-/// time, every layer on the im2col + GEMM conv kernel
-/// ([`crate::tensor::conv2d_gemm`]), intermediates in the plan's reusable
-/// buffer arena. The whole dynamic batch runs as ONE batched tensor pass
-/// (batch packed into the N axis), so the dispatcher's batching directly
-/// widens the GEMM — the serving-stack payoff of the engine subsystem.
-/// Needs no artifacts; weights are seeded-random (the conversion-exactness
-/// property served here is weight-independent, see DESIGN.md section 6).
+/// CPU-native executor: an [`engine::Plan`](Plan) (shared `Arc<Program>`
+/// + private `Scratch`) for any of the six benchmark networks — SD
+/// deconvolution filters pre-split and pre-packed at compile time, every
+/// layer on the im2col + GEMM conv kernel
+/// ([`crate::tensor::conv2d_gemm`]). The whole dynamic batch runs as ONE
+/// batched tensor pass (batch packed into the N axis), so the
+/// dispatcher's batching directly widens the GEMM — the serving-stack
+/// payoff of the engine subsystem. The program is immutable and shared:
+/// the worker pool holds one `Arc<Program>` and gives each worker its own
+/// executor via [`NativeExecutor::from_program`]. Needs no artifacts;
+/// weights are seeded-random (the conversion-exactness property served
+/// here is weight-independent, see DESIGN.md section 6).
 pub struct NativeExecutor {
     plan: Plan,
     /// advisory only — see [`BatchExecutor::supported_batches`] impl note
@@ -141,15 +166,31 @@ pub struct NativeExecutor {
 }
 
 impl NativeExecutor {
-    /// Compile a plan for the named benchmark network (any spelling
-    /// [`crate::networks::by_name`] accepts). The plan is built once here;
-    /// every subsequent batch reuses it.
+    /// Compile a program for the named benchmark network (any spelling
+    /// [`crate::networks::by_name`] accepts). The program is built once
+    /// here; every subsequent batch reuses it.
     pub fn for_model(model: &str, weight_seed: u64) -> Result<Self> {
         let net = crate::networks::by_name_or_err(model)?;
-        Ok(NativeExecutor {
-            plan: Plan::from_seed(&net, DeconvImpl::Sd, weight_seed)?,
+        let plan = Plan::from_seed(&net, crate::engine::DeconvImpl::Sd, weight_seed)?;
+        Ok(Self::from_plan(plan))
+    }
+
+    /// An executor over an already-compiled (shared) program, with a fresh
+    /// scratch — how the worker pool spawns N executors from ONE compile.
+    pub fn from_program(program: Arc<Program>) -> Self {
+        Self::from_plan(Plan::from_program(program))
+    }
+
+    fn from_plan(plan: Plan) -> Self {
+        NativeExecutor {
+            plan,
             batches: vec![1, 2, 4, 8, 16],
-        })
+        }
+    }
+
+    /// The shared compiled program (for spawning sibling executors).
+    pub fn program(&self) -> &Arc<Program> {
+        self.plan.program()
     }
 
     /// DCGAN generator (64x64x3 output, z length 100).
@@ -217,5 +258,22 @@ mod tests {
         assert_eq!(plan_batch(&s, 2), 4);
         assert_eq!(plan_batch(&s, 4), 4);
         assert_eq!(plan_batch(&s, 9), 4); // chunked by caller
+    }
+
+    #[test]
+    fn chunk_batches_partitions_in_order() {
+        assert_eq!(chunk_batches(&[1, 4], 9), vec![(4, 4), (4, 4), (1, 1)]);
+        assert_eq!(chunk_batches(&[2], 5), vec![(2, 2), (2, 2), (1, 2)]);
+        assert!(chunk_batches(&[1, 4], 0).is_empty());
+    }
+
+    #[test]
+    fn sibling_executors_share_one_program() {
+        let mut a = NativeExecutor::for_model("sngan", 2).unwrap();
+        let mut b = NativeExecutor::from_program(a.program().clone());
+        assert!(Arc::ptr_eq(a.program(), b.program()));
+        let mut rng = crate::util::rng::Rng::new(6);
+        let z = vec![rng.normal_vec(a.z_len())];
+        assert_eq!(a.execute(&z).unwrap(), b.execute(&z).unwrap());
     }
 }

@@ -1,5 +1,9 @@
-//! Serving metrics: throughput, latency distribution, batch-size histogram.
+//! Serving metrics: throughput, latency distribution (p50/p95/p99),
+//! batch-size histogram, per-worker batch/request counters, and the queue
+//! depth high-water mark. One `Metrics` is shared by every dispatcher
+//! worker (and the submitting side) behind an `Arc`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -12,6 +16,8 @@ struct Inner {
     batch_hist: [u64; 65], // index = batch size (cap 64)
     latencies_us: Vec<u64>,
     compute_us_total: u64,
+    worker_batches: Vec<u64>,
+    worker_served: Vec<u64>,
 }
 
 impl Default for Inner {
@@ -24,6 +30,8 @@ impl Default for Inner {
             batch_hist: [0; 65],
             latencies_us: Vec::new(),
             compute_us_total: 0,
+            worker_batches: Vec::new(),
+            worker_served: Vec::new(),
         }
     }
 }
@@ -32,15 +40,44 @@ impl Default for Inner {
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// queue-depth high-water mark, kept OUT of the mutex: it is updated
+    /// on every submit, and the scaled submit hot path must not serialize
+    /// on the same lock the N workers take per batch
+    max_queue_depth: AtomicU64,
 }
 
 impl Metrics {
-    pub fn record_batch(&self, size: usize, compute_us: u64) {
+    /// A sink with the per-worker counters pre-sized to `workers` (they
+    /// also grow on demand, so `Metrics::default()` still works for one-off
+    /// use).
+    pub fn new(workers: usize) -> Metrics {
+        let m = Metrics::default();
+        {
+            let mut i = m.inner.lock().unwrap();
+            i.worker_batches = vec![0; workers];
+            i.worker_served = vec![0; workers];
+        }
+        m
+    }
+
+    pub fn record_batch(&self, worker: usize, size: usize, compute_us: u64) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.served += size as u64;
         m.batch_hist[size.min(64)] += 1;
         m.compute_us_total += compute_us;
+        if m.worker_batches.len() <= worker {
+            m.worker_batches.resize(worker + 1, 0);
+            m.worker_served.resize(worker + 1, 0);
+        }
+        m.worker_batches[worker] += 1;
+        m.worker_served[worker] += size as u64;
+    }
+
+    /// Record an observed queue depth (called by the submit path with the
+    /// post-push depth); the snapshot keeps the high-water mark. Lock-free.
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, us: u64) {
@@ -86,6 +123,9 @@ impl Metrics {
             } else {
                 0.0
             },
+            worker_batches: m.worker_batches.clone(),
+            worker_served: m.worker_served.clone(),
+            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -103,14 +143,22 @@ pub struct MetricsSnapshot {
     pub p99_us: f64,
     pub batch_hist: [u64; 65],
     pub mean_compute_us: f64,
+    /// executable calls per dispatcher worker (index = worker id)
+    pub worker_batches: Vec<u64>,
+    /// requests served per dispatcher worker (index = worker id)
+    pub worker_served: Vec<u64>,
+    /// highest queue depth observed at submit time (<= `queue_cap` always)
+    pub max_queue_depth: u64,
 }
 
 impl MetricsSnapshot {
     pub fn summary(&self) -> String {
+        let workers: Vec<String> = self.worker_batches.iter().map(|b| b.to_string()).collect();
         format!(
-            "served={} batches={} errors={} mean_batch={:.2} p50={:.0}us p95={:.0}us p99={:.0}us mean_compute={:.0}us",
+            "served={} batches={} errors={} mean_batch={:.2} p50={:.0}us p95={:.0}us p99={:.0}us mean_compute={:.0}us worker_batches=[{}] max_queue_depth={}",
             self.served, self.batches, self.errors, self.mean_batch,
-            self.p50_us, self.p95_us, self.p99_us, self.mean_compute_us
+            self.p50_us, self.p95_us, self.p99_us, self.mean_compute_us,
+            workers.join(","), self.max_queue_depth
         )
     }
 }
@@ -121,12 +169,14 @@ mod tests {
 
     #[test]
     fn batch_accounting() {
-        let m = Metrics::default();
-        m.record_batch(4, 100);
-        m.record_batch(2, 50);
+        let m = Metrics::new(2);
+        m.record_batch(0, 4, 100);
+        m.record_batch(1, 2, 50);
         m.record_latency(10);
         m.record_latency(20);
         m.record_latency(30);
+        m.note_queue_depth(3);
+        m.note_queue_depth(1);
         let s = m.snapshot();
         assert_eq!(s.served, 6);
         assert_eq!(s.batches, 2);
@@ -135,5 +185,17 @@ mod tests {
         assert!((s.mean_batch - 3.0).abs() < 1e-9);
         assert_eq!(s.p50_us, 20.0);
         assert_eq!(s.p99_us, 30.0);
+        assert_eq!(s.worker_batches, vec![1, 1]);
+        assert_eq!(s.worker_served, vec![4, 2]);
+        assert_eq!(s.max_queue_depth, 3);
+    }
+
+    #[test]
+    fn worker_counters_grow_on_demand() {
+        let m = Metrics::default();
+        m.record_batch(3, 5, 10);
+        let s = m.snapshot();
+        assert_eq!(s.worker_batches, vec![0, 0, 0, 1]);
+        assert_eq!(s.worker_served, vec![0, 0, 0, 5]);
     }
 }

@@ -1,50 +1,67 @@
-//! L3 coordinator: the serving stack around the AOT-compiled generator.
+//! L3 coordinator: the serving stack around the compiled generator.
 //!
-//! A bounded request queue feeds a dispatcher thread that owns the compute
-//! backend (PJRT handles are not `Send`, so the backend is constructed
-//! inside the thread from a `Send` factory). The dispatcher implements
-//! *dynamic batching*: it blocks for the first request, then drains the
-//! queue up to `max_batch` or until `batch_timeout` elapses, packs the
-//! latents, runs one executable call, and fans responses back out.
-//! Backpressure is the bounded queue: `submit` fails fast when full.
+//! A shared bounded request queue ([`queue::BoundedQueue`]) feeds a pool of
+//! `ServerConfig.workers` dispatcher threads. Each worker owns its own
+//! compute backend — executors are constructed *inside* the worker thread
+//! from a `Send + Sync` factory called once per worker (PJRT handles are
+//! not `Send`; the native path shares ONE immutable
+//! [`crate::engine::Program`] behind an `Arc` and gives every worker its
+//! own `Scratch`). Each worker independently implements *dynamic
+//! batching*: block for the first request, drain the queue up to
+//! `max_batch` or until `batch_timeout` elapses, pack the latents, run one
+//! executable call, fan responses back out. Backpressure is the bounded
+//! queue: [`Server::submit`] fails fast when full.
 //!
-//! Invariants (tested in rust/tests/coordinator.rs):
-//! * every submitted request gets exactly one response (no drop/dup);
+//! Invariants (tested in rust/tests/coordinator.rs and
+//! rust/tests/coordinator_stress.rs, at any worker count):
+//! * every submitted request gets exactly one response (no drop/dup) —
+//!   including requests already accepted when [`Server::shutdown`] is
+//!   called (close-then-drain);
 //! * responses carry the request's own image (order-independent identity);
-//! * queue length never exceeds `queue_cap`;
-//! * batch sizes never exceed `max_batch`.
+//! * queue depth never exceeds `queue_cap`;
+//! * batch sizes never exceed `max_batch`;
+//! * a failed batch disconnects exactly its own requests' responders and
+//!   the pool keeps serving subsequent batches.
 
 pub mod executor;
 pub mod metrics;
+pub mod queue;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-pub use executor::{BatchExecutor, NativeExecutor, PjrtExecutor};
+use crate::engine::{DeconvImpl, Program};
+
+pub use executor::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use queue::{BoundedQueue, PopDeadline, PushError};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// maximum requests packed into one executable call
     pub max_batch: usize,
-    /// how long the batcher waits to fill a batch after the first arrival
+    /// how long a worker waits to fill a batch after the first arrival
     pub batch_timeout: Duration,
-    /// bounded queue depth (backpressure limit)
+    /// bounded queue depth (backpressure limit), shared by all workers
     pub queue_cap: usize,
     /// which benchmark model the *native* backend serves (any spelling
     /// [`crate::networks::by_name`] accepts: dcgan, artgan, sngan, gpgan,
-    /// mde, fst) — [`Server::start_native`] compiles it into an
-    /// `engine::Plan`. The PJRT backend takes an explicit artifact prefix
-    /// instead (artifact families can outnumber models, e.g. `dcgan_sd` vs
-    /// `dcgan_nzp`); callers should derive it from
-    /// [`crate::networks::slug`], as the CLI does.
+    /// mde, fst) — [`Server::start_native`] compiles it ONCE into an
+    /// `engine::Program` shared by every worker. The PJRT backend takes an
+    /// explicit artifact prefix instead (artifact families can outnumber
+    /// models, e.g. `dcgan_sd` vs `dcgan_nzp`); callers should derive it
+    /// from [`crate::networks::slug`], as the CLI does.
     pub model: String,
+    /// dispatcher threads draining the shared queue (clamped to >= 1).
+    /// Each owns its own executor: its own `Scratch` on the native path,
+    /// its own PJRT client on the artifact path.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +71,7 @@ impl Default for ServerConfig {
             batch_timeout: Duration::from_millis(2),
             queue_cap: 64,
             model: "dcgan".to_string(),
+            workers: 1,
         }
     }
 }
@@ -71,7 +89,8 @@ struct Request {
 pub struct Response {
     pub id: u64,
     pub image: Vec<f32>,
-    /// time spent waiting in queue + batcher
+    /// time spent waiting in queue + batcher (total latency minus the
+    /// batch's compute time)
     pub queue_us: u64,
     /// executable wall time for the whole batch
     pub compute_us: u64,
@@ -79,116 +98,171 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-enum Msg {
-    Req(Request),
-    Shutdown,
-}
-
 /// Handle to a running coordinator.
 pub struct Server {
-    tx: SyncSender<Msg>,
+    queue: Arc<BoundedQueue<Request>>,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
-    handle: Option<JoinHandle<()>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Server {
-    /// Start with a backend factory (runs inside the dispatcher thread).
+    /// Start a worker pool with a backend factory. The factory runs once
+    /// *inside each* dispatcher thread (`cfg.workers` times, receiving the
+    /// worker index); startup fails if any worker's backend fails to
+    /// construct.
     pub fn start_with<F, E>(cfg: ServerConfig, factory: F) -> Result<Server>
     where
-        F: FnOnce() -> Result<E> + Send + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
         E: BatchExecutor,
     {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_cap);
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
+        let workers = cfg.workers.max(1);
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let metrics = Arc::new(Metrics::new(workers));
+        let factory = Arc::new(factory);
+        let cfg = Arc::new(cfg);
         // report backend construction success/failure synchronously
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("sd-dispatcher".into())
-            .spawn(move || {
-                let exec = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let queue2 = queue.clone();
+            let metrics2 = metrics.clone();
+            let factory2 = factory.clone();
+            let cfg2 = cfg.clone();
+            let ready = ready_tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("sd-dispatcher-{w}"))
+                .spawn(move || {
+                    let exec = match (*factory2)(w) {
+                        Ok(e) => {
+                            let _ = ready.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    dispatch_loop(w, &queue2, exec, &cfg2, &metrics2);
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    queue.close();
+                    for h in handles {
+                        let _ = h.join();
                     }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                dispatch_loop(rx, exec, cfg, m2);
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("dispatcher died during startup"))??;
+                    return Err(e.into());
+                }
+            }
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            let failed = match ready_rx.recv() {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(e),
+                Err(_) => Some(anyhow!("dispatcher died during startup")),
+            };
+            if let Some(e) = failed {
+                queue.close();
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
+        }
         Ok(Server {
-            tx,
+            queue,
             next_id: AtomicU64::new(0),
             metrics,
-            handle: Some(handle),
+            handles: Mutex::new(handles),
         })
     }
 
-    /// Start the production PJRT server for a model artifact prefix.
+    /// Start the production PJRT server for a model artifact prefix. Every
+    /// worker constructs its own engine inside its thread (PJRT handles
+    /// are not `Send`).
     pub fn start_pjrt(
         cfg: ServerConfig,
         artifact_dir: std::path::PathBuf,
         prefix: String,
     ) -> Result<Server> {
-        Self::start_with(cfg, move || PjrtExecutor::new(artifact_dir, &prefix))
+        Self::start_with(cfg, move |_worker| {
+            PjrtExecutor::new(artifact_dir.clone(), &prefix)
+        })
     }
 
     /// Start a server over the CPU-native engine executor: the generator
-    /// selected by `cfg.model` is compiled ONCE into an `engine::Plan` (SD
-    /// filters pre-split and packed at plan time) and serves every batch
-    /// from that plan. Works from a fresh checkout (no artifacts needed);
-    /// all six benchmark networks route here.
+    /// selected by `cfg.model` is compiled ONCE into an immutable
+    /// `engine::Program` (SD filters pre-split and packed at compile time)
+    /// and shared by all `cfg.workers` workers via `Arc` — each worker
+    /// gets its own `Scratch`. Works from a fresh checkout (no artifacts
+    /// needed); all six benchmark networks route here.
     pub fn start_native(cfg: ServerConfig, weight_seed: u64) -> Result<Server> {
-        let model = cfg.model.clone();
-        Self::start_with(cfg, move || NativeExecutor::for_model(&model, weight_seed))
+        let net = crate::networks::by_name_or_err(&cfg.model)?;
+        let program = Arc::new(Program::from_seed(&net, DeconvImpl::Sd, weight_seed)?);
+        Self::start_native_program(cfg, program)
+    }
+
+    /// [`Server::start_native`] over an already-compiled (possibly shared,
+    /// possibly custom) program — one compile, N workers.
+    pub fn start_native_program(cfg: ServerConfig, program: Arc<Program>) -> Result<Server> {
+        Self::start_with(cfg, move |_worker| {
+            Ok(NativeExecutor::from_program(program.clone()))
+        })
     }
 
     /// Submit a latent vector. Returns a receiver for the response, or an
     /// error immediately if the queue is full (backpressure) or closed.
     pub fn submit(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
-            id,
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
             z,
             submitted: Instant::now(),
             resp: resp_tx,
         };
-        match self.tx.try_send(Msg::Req(req)) {
-            Ok(()) => Ok(resp_rx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        match self.queue.try_push(req) {
+            Ok(depth) => {
+                self.metrics.note_queue_depth(depth);
+                Ok(resp_rx)
+            }
+            Err(PushError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
+            Err(PushError::Closed(_)) => Err(anyhow!("server stopped")),
         }
     }
 
     /// Submit, blocking while the queue is full.
     pub fn submit_blocking(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Msg::Req(Request {
-                id,
-                z,
-                submitted: Instant::now(),
-                resp: resp_tx,
-            }))
-            .map_err(|_| anyhow!("server stopped"))?;
-        Ok(resp_rx)
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            z,
+            submitted: Instant::now(),
+            resp: resp_tx,
+        };
+        match self.queue.push(req) {
+            Ok(depth) => {
+                self.metrics.note_queue_depth(depth);
+                Ok(resp_rx)
+            }
+            Err(_) => Err(anyhow!("server stopped")),
+        }
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
+    /// Stop accepting new requests, then wait for the workers to drain the
+    /// queue: every already-accepted request still gets its response
+    /// (close-then-drain). Idempotent, and callable from any thread while
+    /// others still hold `&Server` (mid-flight shutdown is exercised in
+    /// rust/tests/coordinator_stress.rs).
+    pub fn shutdown(&self) {
+        self.queue.close();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -196,44 +270,37 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.queue.close();
+        if let Ok(handles) = self.handles.get_mut() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
         }
     }
 }
 
+/// One worker's dispatch loop: pop the first request (blocking), fill the
+/// batch until `max_batch` or the deadline, execute, fan out. Exits only
+/// when the queue is closed *and* drained, so accepted requests are never
+/// dropped by shutdown.
 fn dispatch_loop<E: BatchExecutor>(
-    rx: Receiver<Msg>,
+    worker: usize,
+    queue: &BoundedQueue<Request>,
     mut exec: E,
-    cfg: ServerConfig,
-    metrics: Arc<Metrics>,
+    cfg: &ServerConfig,
+    metrics: &Metrics,
 ) {
     loop {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Shutdown) | Err(_) => return,
+        let first = match queue.pop() {
+            Some(r) => r,
+            None => return, // closed and fully drained
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.batch_timeout;
-        let mut shutdown = false;
         while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => batch.push(r),
-                Ok(Msg::Shutdown) => {
-                    shutdown = true;
-                    break;
-                }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    shutdown = true;
-                    break;
-                }
+            match queue.pop_deadline(deadline) {
+                PopDeadline::Item(r) => batch.push(r),
+                PopDeadline::Timeout | PopDeadline::Closed => break,
             }
         }
 
@@ -242,12 +309,14 @@ fn dispatch_loop<E: BatchExecutor>(
         match exec.execute(&zs) {
             Ok(images) => {
                 let compute_us = t0.elapsed().as_micros() as u64;
-                metrics.record_batch(batch.len(), compute_us);
+                metrics.record_batch(worker, batch.len(), compute_us);
                 for (req, image) in batch.into_iter().zip(images) {
-                    let queue_us = req.submitted.elapsed().as_micros() as u64 - compute_us.min(
-                        req.submitted.elapsed().as_micros() as u64,
-                    );
+                    // sample elapsed() exactly once per request and derive
+                    // queue time from it — re-sampling could attribute the
+                    // batcher wait to neither bucket (regression-tested by
+                    // coordinator::queue_time_accounts_for_batch_wait)
                     let total_us = req.submitted.elapsed().as_micros() as u64;
+                    let queue_us = total_us.saturating_sub(compute_us);
                     metrics.record_latency(total_us);
                     let _ = req.resp.send(Response {
                         id: req.id,
@@ -260,13 +329,11 @@ fn dispatch_loop<E: BatchExecutor>(
             }
             Err(e) => {
                 metrics.record_error();
-                // drop the responders: receivers observe disconnection
-                eprintln!("batch execution failed: {e:#}");
+                // drop the responders: receivers observe disconnection,
+                // and only THIS batch's requests are affected — the loop
+                // (and the rest of the pool) keeps serving
+                eprintln!("worker {worker}: batch execution failed: {e:#}");
             }
-        }
-
-        if shutdown {
-            return;
         }
     }
 }

@@ -1,0 +1,259 @@
+//! A bounded multi-producer / multi-consumer queue (Mutex + Condvar — the
+//! offline registry has no crossbeam), the spine of the worker pool.
+//!
+//! `std::sync::mpsc` would force one consumer (its `Receiver` is neither
+//! `Sync` nor cloneable); this queue lets N dispatcher workers drain one
+//! shared request stream. Semantics the coordinator builds its invariants
+//! on:
+//!
+//! * **bounded**: at most `cap` items are ever queued; [`try_push`] fails
+//!   fast when full (backpressure), [`push`] blocks until space frees;
+//! * **close-then-drain**: [`close`] stops all pushes immediately, but
+//!   consumers keep popping until the queue is empty — an item accepted
+//!   before close is never dropped by the queue;
+//! * **deadline pops**: [`pop_deadline`] is the dynamic batcher's fill
+//!   primitive — wait for the next item only until the batch deadline.
+//!
+//! [`try_push`]: BoundedQueue::try_push
+//! [`push`]: BoundedQueue::push
+//! [`close`]: BoundedQueue::close
+//! [`pop_deadline`]: BoundedQueue::pop_deadline
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a non-blocking push was refused; the item is handed back.
+pub enum PushError<T> {
+    /// the queue is at capacity (backpressure — retry or reject upstream)
+    Full(T),
+    /// the queue was closed (server shutting down)
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+pub enum PopDeadline<T> {
+    /// an item arrived before the deadline
+    Item(T),
+    /// the deadline passed with the queue empty
+    Timeout,
+    /// the queue is closed **and** fully drained — no item can ever come
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+/// The shared bounded queue. Producers and consumers hold it behind an
+/// `Arc`; all methods take `&self`.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to >= 1).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                cap: cap.max(1),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Current queue depth (racy by nature — for metrics/tests).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push. On success returns the queue depth *including*
+    /// the new item (the backpressure high-water metric).
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(PushError::Closed(item));
+        }
+        if q.items.len() >= q.cap {
+            return Err(PushError::Full(item));
+        }
+        q.items.push_back(item);
+        let depth = q.items.len();
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Blocking push: waits while the queue is full. Returns the post-push
+    /// depth, or hands the item back if the queue is (or gets) closed.
+    pub fn push(&self, item: T) -> Result<usize, T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(item);
+            }
+            if q.items.len() < q.cap {
+                break;
+            }
+            q = self.not_full.wait(q).unwrap();
+        }
+        q.items.push_back(item);
+        let depth = q.items.len();
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Blocking pop: waits for an item; `None` only once the queue is
+    /// closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                drop(q);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Pop, waiting at most until `deadline`. Distinguishes "nothing yet"
+    /// ([`PopDeadline::Timeout`]) from "nothing ever again"
+    /// ([`PopDeadline::Closed`]) so the batcher can stop filling early on
+    /// shutdown.
+    pub fn pop_deadline(&self, deadline: Instant) -> PopDeadline<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                drop(q);
+                self.not_full.notify_one();
+                return PopDeadline::Item(item);
+            }
+            if q.closed {
+                return PopDeadline::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopDeadline::Timeout;
+            }
+            q = self.not_empty.wait_timeout(q, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Close the queue: every pending and future push fails, every blocked
+    /// producer/consumer wakes. Items already queued stay poppable
+    /// (close-then-drain).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_depth() {
+        let q = BoundedQueue::new(4);
+        assert!(q.is_empty());
+        assert_eq!(q.try_push(1).ok(), Some(1));
+        assert_eq!(q.try_push(2).ok(), Some(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_full_hands_item_back() {
+        let q = BoundedQueue::new(1);
+        assert!(q.try_push(7).is_ok());
+        match q.try_push(8) {
+            Err(PushError::Full(v)) => assert_eq!(v, 8),
+            _ => panic!("expected Full"),
+        }
+    }
+
+    #[test]
+    fn close_then_drain() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).ok().unwrap();
+        q.try_push(2).ok().unwrap();
+        q.close();
+        match q.try_push(3) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Closed"),
+        }
+        // items accepted before close are still served, in order
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_then_delivers() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let deadline = Instant::now() + Duration::from_millis(10);
+        match q.pop_deadline(deadline) {
+            PopDeadline::Timeout => {}
+            _ => panic!("expected Timeout"),
+        }
+        q.try_push(5).ok().unwrap();
+        match q.pop_deadline(Instant::now() + Duration::from_millis(10)) {
+            PopDeadline::Item(v) => assert_eq!(v, 5),
+            _ => panic!("expected Item"),
+        }
+        q.close();
+        match q.pop_deadline(Instant::now() + Duration::from_millis(10)) {
+            PopDeadline::Closed => {}
+            _ => panic!("expected Closed"),
+        }
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).ok().unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap().is_ok());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_wakes_blocked_producer_and_consumer() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).ok().unwrap();
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || qp.push(2));
+        let qc: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        let qc2 = qc.clone();
+        let consumer = std::thread::spawn(move || qc2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        qc.close();
+        // blocked producer hands its item back; blocked consumer sees None
+        assert_eq!(producer.join().unwrap().err(), Some(2));
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+}

@@ -1,7 +1,20 @@
 //! Compiled-plan inference engine: the native execution subsystem behind the
 //! serving stack.
 //!
-//! A [`Plan`] is built **once** from a [`NetworkSpec`] + weights and then
+//! The compiled state is split along the share/mutate line:
+//!
+//! * [`Program`] — the **immutable** compilation product (resolved ops,
+//!   pre-split + packed SD filters, precomputed shapes). It is `Send +
+//!   Sync` (compile-time asserted below) and is shared across dispatcher
+//!   workers behind an `Arc`: one compile serves N executors.
+//! * [`Scratch`] — the cheap **per-worker** buffer arena (ping-pong
+//!   activation buffers, pad scratch, per-split conv outputs). Each worker
+//!   owns one and passes it to [`Program::forward`].
+//! * [`Plan`] — the single-threaded convenience pairing of the two
+//!   (`Arc<Program>` + its own `Scratch`) with the original one-object
+//!   API; benches, tests, and the quality evaluation use it.
+//!
+//! A [`Program`] is built **once** from a [`NetworkSpec`] + weights and then
 //! reused for every forward call, the decompose-once-serve-many structure of
 //! HUGE² (arXiv 1907.11210) applied to split deconvolution:
 //!
@@ -16,8 +29,7 @@
 //!   forward call (the dominant per-request overhead of the old
 //!   `report::quality` interpreter);
 //! * all intermediate shapes are precomputed at build time, and execution
-//!   runs inside a reusable per-plan buffer arena (ping-pong activation
-//!   buffers, a shared pad scratch, per-split conv outputs) instead of
+//!   runs inside a reusable per-worker [`Scratch`] arena instead of
 //!   allocating per layer per call;
 //! * the SD interleave + crop steps are fused into one pass
 //!   ([`crate::sd::interleave_crop_into`]), skipping the intermediate
@@ -46,6 +58,8 @@
 pub mod weights;
 
 pub use weights::{build_weights, smooth_filter, DeconvImpl, LayerWeights};
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -89,19 +103,22 @@ struct Step {
     act: Act,
 }
 
-/// Reusable per-plan buffers: successive steps ping-pong through `spare`,
+/// Reusable per-worker buffers: successive steps ping-pong through `spare`,
 /// SD deconvolutions share the `pad` scratch and per-split output slots.
-/// Buffers grow to the high-water mark of the plan's shapes and are reused
-/// across forward calls (no per-layer allocation on the hot path).
-struct Arena {
+/// Buffers grow to the high-water mark of the program's shapes and are
+/// reused across forward calls (no per-layer allocation on the hot path).
+/// A `Scratch` is cheap to create (three empty buffers) — the serving
+/// stack gives each dispatcher worker its own while all workers share one
+/// [`Program`].
+pub struct Scratch {
     spare: Vec<f32>,
     pad: Tensor,
     splits: Vec<Tensor>,
 }
 
-impl Arena {
-    fn new() -> Arena {
-        Arena {
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch {
             spare: Vec::new(),
             pad: Tensor::zeros(0, 0, 0, 0),
             splits: Vec::new(),
@@ -109,35 +126,55 @@ impl Arena {
     }
 }
 
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch::new()
+    }
+}
+
 /// A network compiled for repeated execution: resolved ops, pre-split SD
-/// filters, precomputed shapes, and a reusable buffer arena.
-pub struct Plan {
+/// filters, precomputed shapes. Immutable after [`Program::build`] — all
+/// mutable execution state lives in the caller's [`Scratch`] — so one
+/// `Arc<Program>` serves any number of concurrent executors.
+pub struct Program {
     name: &'static str,
     steps: Vec<Step>,
     in_h: usize,
     in_w: usize,
     in_c: usize,
     out_len: usize,
-    arena: Arena,
 }
 
-impl Plan {
-    /// Compile a network + weights into an executable plan. Errors (rather
-    /// than panicking) on weight-count, weight-kind, and weight-shape
-    /// mismatches. This borrowed form clones each weight buffer once;
-    /// callers that do not need the weights afterwards should use
-    /// [`Plan::build_owned`] (or [`Plan::from_seed`]), which moves them.
-    pub fn build(net: &NetworkSpec, weights: &[LayerWeights], imp: DeconvImpl) -> Result<Plan> {
-        Plan::build_owned(net, weights.to_vec(), imp)
+// The serving stack shares one compiled Program across dispatcher workers
+// behind an `Arc`; a field that silently lost Send + Sync would break that
+// at a distance, so lock it down at compile time.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Program>();
+};
+
+impl Program {
+    /// Compile a network + weights into an executable program. Errors
+    /// (rather than panicking) on weight-count, weight-kind, and
+    /// weight-shape mismatches. This borrowed form clones each weight
+    /// buffer once; callers that do not need the weights afterwards should
+    /// use [`Program::build_owned`] (or [`Program::from_seed`]), which
+    /// moves them.
+    pub fn build(
+        net: &NetworkSpec,
+        weights: &[LayerWeights],
+        imp: DeconvImpl,
+    ) -> Result<Program> {
+        Program::build_owned(net, weights.to_vec(), imp)
     }
 
-    /// [`Plan::build`] consuming the weights — no buffer copies (GP-GAN's
+    /// [`Program::build`] consuming the weights — no buffer copies (GP-GAN's
     /// bottleneck matrix alone is ~131 MB).
     pub fn build_owned(
         net: &NetworkSpec,
         weights: Vec<LayerWeights>,
         imp: DeconvImpl,
-    ) -> Result<Plan> {
+    ) -> Result<Program> {
         if weights.len() != net.layers.len() {
             bail!(
                 "{}: {} weight entries for {} layers",
@@ -210,23 +247,23 @@ impl Plan {
         let (in_h, in_w, in_c) = (first.in_h, first.in_w, first.in_c);
         let last_step = &steps[last];
         let out_len = last_step.out_h * last_step.out_w * last_step.out_c;
-        Ok(Plan {
+        Ok(Program {
             name: net.name,
             steps,
             in_h,
             in_w,
             in_c,
             out_len,
-            arena: Arena::new(),
         })
     }
 
-    /// [`Plan::build`] with weights drawn from [`build_weights`]`(net, seed)`.
-    pub fn from_seed(net: &NetworkSpec, imp: DeconvImpl, seed: u64) -> Result<Plan> {
-        Plan::build_owned(net, build_weights(net, seed), imp)
+    /// [`Program::build`] with weights drawn from
+    /// [`build_weights`]`(net, seed)`.
+    pub fn from_seed(net: &NetworkSpec, imp: DeconvImpl, seed: u64) -> Result<Program> {
+        Program::build_owned(net, build_weights(net, seed), imp)
     }
 
-    /// Network name this plan was compiled from.
+    /// Network name this program was compiled from.
     pub fn name(&self) -> &'static str {
         self.name
     }
@@ -241,18 +278,19 @@ impl Plan {
         self.out_len
     }
 
-    /// Execute the whole plan on a batched input tensor (batch on the N
+    /// Execute the whole program on a batched input tensor (batch on the N
     /// axis). One pass per layer; intermediate activations live in the
-    /// plan's buffer arena. The *network input* is validated strictly (a
+    /// caller's [`Scratch`]. The *network input* is validated strictly (a
     /// wrong-sized request is an error); [`bridge_reshape`] only ever
     /// applies between layers, at the documented chain-gap points.
-    pub fn forward(&mut self, input: &Tensor) -> Result<Tensor> {
-        self.forward_owned(input.clone())
+    pub fn forward(&self, input: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        self.forward_owned(input.clone(), scratch)
     }
 
-    /// [`Plan::forward`] consuming the input tensor (no copy) — the serving
-    /// path's entry point, where the packed batch has no other owner.
-    pub fn forward_owned(&mut self, input: Tensor) -> Result<Tensor> {
+    /// [`Program::forward`] consuming the input tensor (no copy) — the
+    /// serving path's entry point, where the packed batch has no other
+    /// owner.
+    pub fn forward_owned(&self, input: Tensor, scratch: &mut Scratch) -> Result<Tensor> {
         let per = input.h * input.w * input.c;
         if per != self.input_len() {
             bail!(
@@ -264,14 +302,18 @@ impl Plan {
         }
         let mut h = input;
         for step in &self.steps {
-            h = run_step(step, h, &mut self.arena)?;
+            h = run_step(step, h, scratch)?;
         }
         Ok(h)
     }
 
     /// Serve a dynamic batch of flat per-request inputs: pack into one
-    /// tensor, run [`Plan::forward`] once, unpack one image per request.
-    pub fn execute_batch(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    /// tensor, run [`Program::forward`] once, unpack one image per request.
+    pub fn execute_batch(
+        &self,
+        batch: &[Vec<f32>],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Vec<f32>>> {
         if batch.is_empty() {
             return Ok(Vec::new());
         }
@@ -284,12 +326,88 @@ impl Plan {
             data.extend_from_slice(z);
         }
         let input = Tensor::from_vec(batch.len(), self.in_h, self.in_w, self.in_c, data);
-        let img = self.forward_owned(input)?;
+        let img = self.forward_owned(input, scratch)?;
         debug_assert_eq!(img.len() / img.n, self.out_len);
         let per = self.out_len;
         Ok((0..batch.len())
             .map(|i| img.data[i * per..(i + 1) * per].to_vec())
             .collect())
+    }
+}
+
+/// An `Arc<Program>` paired with its own [`Scratch`]: the single-threaded
+/// convenience view with the original one-object API. Benches, tests, and
+/// the quality evaluation use it; the multi-worker serving stack instead
+/// shares the program and gives each worker its own scratch (see
+/// [`Plan::from_program`] / [`Plan::program`]).
+pub struct Plan {
+    program: Arc<Program>,
+    scratch: Scratch,
+}
+
+impl Plan {
+    /// Compile a network + weights. See [`Program::build`].
+    pub fn build(net: &NetworkSpec, weights: &[LayerWeights], imp: DeconvImpl) -> Result<Plan> {
+        Ok(Plan::from_program(Arc::new(Program::build(net, weights, imp)?)))
+    }
+
+    /// [`Plan::build`] consuming the weights. See [`Program::build_owned`].
+    pub fn build_owned(
+        net: &NetworkSpec,
+        weights: Vec<LayerWeights>,
+        imp: DeconvImpl,
+    ) -> Result<Plan> {
+        Ok(Plan::from_program(Arc::new(Program::build_owned(net, weights, imp)?)))
+    }
+
+    /// [`Plan::build`] with weights drawn from [`build_weights`]`(net, seed)`.
+    pub fn from_seed(net: &NetworkSpec, imp: DeconvImpl, seed: u64) -> Result<Plan> {
+        Ok(Plan::from_program(Arc::new(Program::from_seed(net, imp, seed)?)))
+    }
+
+    /// Pair an already-compiled (possibly shared) program with a fresh
+    /// scratch. This is how sibling executors are spawned: `Arc` clones of
+    /// one program, one scratch each.
+    pub fn from_program(program: Arc<Program>) -> Plan {
+        Plan {
+            program,
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// The shared compiled program behind this plan.
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    /// Network name this plan was compiled from.
+    pub fn name(&self) -> &'static str {
+        self.program.name()
+    }
+
+    /// Flat per-request input element count (the first layer's input view).
+    pub fn input_len(&self) -> usize {
+        self.program.input_len()
+    }
+
+    /// Flat per-request output element count.
+    pub fn output_len(&self) -> usize {
+        self.program.output_len()
+    }
+
+    /// [`Program::forward`] against this plan's own scratch.
+    pub fn forward(&mut self, input: &Tensor) -> Result<Tensor> {
+        self.program.forward(input, &mut self.scratch)
+    }
+
+    /// [`Program::forward_owned`] against this plan's own scratch.
+    pub fn forward_owned(&mut self, input: Tensor) -> Result<Tensor> {
+        self.program.forward_owned(input, &mut self.scratch)
+    }
+
+    /// [`Program::execute_batch`] against this plan's own scratch.
+    pub fn execute_batch(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.program.execute_batch(batch, &mut self.scratch)
     }
 }
 
@@ -349,9 +467,9 @@ pub fn bridge_reshape(h: Tensor, ih: usize, iw: usize, ic: usize) -> Tensor {
     out
 }
 
-/// Wrap the arena's spare buffer as an (empty) tensor; the `*_into` ops
+/// Wrap the scratch's spare buffer as an (empty) tensor; the `*_into` ops
 /// reshape and fill it. The previous step's input buffer is returned to the
-/// arena at the end of [`run_step`], so successive steps ping-pong.
+/// scratch at the end of [`run_step`], so successive steps ping-pong.
 fn take_tensor(slot: &mut Vec<f32>) -> Tensor {
     Tensor { n: 0, h: 0, w: 0, c: 0, data: std::mem::take(slot) }
 }
@@ -373,9 +491,9 @@ fn run_ref_deconv(
     }
 }
 
-/// Execute one compiled step: bridge the input view, run the op into arena
-/// buffers, apply the fused activation, recycle the input buffer.
-fn run_step(step: &Step, h: Tensor, a: &mut Arena) -> Result<Tensor> {
+/// Execute one compiled step: bridge the input view, run the op into
+/// scratch buffers, apply the fused activation, recycle the input buffer.
+fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
     let n = h.n;
     let h = bridge_reshape(h, step.in_h, step.in_w, step.in_c);
     let mut out = match &step.op {
@@ -481,6 +599,21 @@ mod tests {
         // truncate: per-element prefix
         let t = bridge_reshape(x, 1, 1, 2);
         assert_eq!(t.data, vec![1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn shared_program_with_fresh_scratch_matches() {
+        let net = networks::dcgan();
+        let mut plan = Plan::from_seed(&net, DeconvImpl::Sd, 3).unwrap();
+        let mut rng = Rng::new(8);
+        let z = vec![rng.normal_vec(100)];
+        let want = plan.execute_batch(&z).unwrap();
+        // a sibling executor: same Arc<Program>, its own fresh Scratch
+        let mut sibling = Plan::from_program(plan.program().clone());
+        assert_eq!(sibling.execute_batch(&z).unwrap(), want);
+        // and the raw Program + Scratch API underneath
+        let mut scratch = Scratch::new();
+        assert_eq!(plan.program().execute_batch(&z, &mut scratch).unwrap(), want);
     }
 
     #[test]

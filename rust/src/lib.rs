@@ -8,9 +8,12 @@
 //!   compute shape every split deconvolution lowers to.
 //! * **L2** (python, build time): JAX generator models, AOT-lowered to HLO
 //!   text under `artifacts/`.
-//! * **L3** (this crate): the [`coordinator`] serving stack over the
-//!   [`engine`] compiled-plan executor (all six benchmark networks, SD
-//!   filters pre-split at plan time) or the [`runtime`] PJRT engine, the
+//! * **L3** (this crate): the [`coordinator`] serving stack — a shared
+//!   bounded queue feeding a pool of dynamic-batching dispatcher workers —
+//!   over the [`engine`] compiled executor (one immutable `Program` per
+//!   model, SD filters pre-split at compile time, shared across workers
+//!   with per-worker `Scratch`; all six benchmark networks) or the
+//!   [`runtime`] PJRT engine, the
 //!   [`sd`] transform and its baselines, the cycle-accurate [`sim`]
 //!   processor simulators, the [`commodity`] device models, and the
 //!   [`report`] generators for every table and figure in the paper.

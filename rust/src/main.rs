@@ -4,11 +4,13 @@
 //!   report <table1|table2|table3|table4|fig8|fig9|fig10|fig11|
 //!           table5|table6|table7|table8|fig15|fig16|fig17|all>
 //!   verify  [--limit N]        golden-check AOT artifacts via PJRT
-//!   serve   [--requests N] [--batch B] [--native]
+//!   serve   [--requests N] [--batch B] [--native] [--workers W]
 //!           [--model dcgan|artgan|sngan|gpgan|mde|fst]
 //!           run the serving demo for any benchmark network (--native, or a
-//!           missing artifacts/, compiles the model into an engine::Plan on
-//!           the CPU-native GEMM backend instead of PJRT)
+//!           missing artifacts/, compiles the model ONCE into an immutable
+//!           engine::Program on the CPU-native GEMM backend instead of
+//!           PJRT; --workers W drains the shared request queue with W
+//!           dispatcher threads, each with its own Scratch)
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
@@ -166,18 +168,23 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
     let model = flag_value(args, "--model").unwrap_or("dcgan").to_string();
+    let workers: usize = flag_value(args, "--workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
     let net = networks::by_name_or_err(&model)?;
     let cfg = ServerConfig {
         max_batch,
         batch_timeout: Duration::from_millis(2),
         queue_cap: 128,
         model,
+        workers,
     };
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
     let z_len = net.input_elems();
     let server = if native {
         println!(
-            "(CPU-native engine backend: {} compiled once into a Plan, SD filters pre-split)",
+            "(CPU-native engine backend: {} compiled once into a shared Program, \
+             SD filters pre-split, {workers} worker(s) with private Scratch)",
             net.name
         );
         Server::start_native(cfg, 7)?
@@ -188,7 +195,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         Server::start_pjrt(cfg, default_artifact_dir(), prefix)?
     };
     println!(
-        "serving {} (SD path) — {n} requests of {z_len} floats, max batch {max_batch}",
+        "serving {} (SD path) — {n} requests of {z_len} floats, max batch {max_batch}, \
+         {workers} worker(s)",
         net.name
     );
     let mut rng = Rng::new(7);

@@ -1,0 +1,105 @@
+//! Property tests for dynamic-batch packing: `plan_batch` +
+//! `chunk_batches` (the PJRT-style chunk / zero-pad logic) over arbitrary
+//! (supported, n) pairs, and the native path over every odd batch length.
+//!
+//! Properties locked down:
+//! * chunks partition `0..n` exactly — no request crosses a chunk
+//!   boundary, none is dropped or executed twice;
+//! * every chunk runs on a supported executable size, chosen as the
+//!   smallest covering size (`plan_batch` agreement);
+//! * zero-padding lanes never leak into returned images — neither in a
+//!   faithful mock of the PJRT pack/run/unpack path nor through the
+//!   `NativeExecutor` at odd batch lengths 1..17.
+
+use std::sync::Arc;
+
+use split_deconv::coordinator::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor};
+use split_deconv::engine::{DeconvImpl, Program};
+use split_deconv::util::rng::Rng;
+
+mod common;
+use common::tiny_net;
+
+#[test]
+fn chunks_partition_every_request_exactly_once() {
+    let mut rng = Rng::new(5);
+    for _ in 0..500 {
+        // arbitrary supported set: 1..=4 distinct ascending sizes in 1..=32
+        let mut supported: Vec<usize> = (0..1 + rng.below(4)).map(|_| 1 + rng.below(32)).collect();
+        supported.sort_unstable();
+        supported.dedup();
+        let n = rng.below(100);
+        let chunks = chunk_batches(&supported, n);
+        let total: usize = chunks.iter().map(|(take, _)| take).sum();
+        assert_eq!(total, n, "chunks of {supported:?} x {n} do not cover every request once");
+        for &(take, b) in &chunks {
+            assert!((1..=b).contains(&take), "chunk ({take}, {b}) malformed");
+            assert!(supported.contains(&b), "{b} not a supported size of {supported:?}");
+            // the chunk runs on the smallest covering executable
+            assert_eq!(b, plan_batch(&supported, take), "{supported:?} x {n}");
+        }
+    }
+}
+
+/// Faithful mock of the PJRT executable path: pack `take` requests into a
+/// `b`-lane zero-padded buffer, "run" it (identity per lane), unpack only
+/// the first `take` lanes — exactly the `PjrtExecutor::execute` shape.
+fn pjrt_style_roundtrip(supported: &[usize], reqs: &[Vec<f32>], z_len: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(reqs.len());
+    let mut cursor = 0;
+    for (take, b) in chunk_batches(supported, reqs.len()) {
+        let mut z = vec![0.0f32; b * z_len];
+        for (i, req) in reqs[cursor..cursor + take].iter().enumerate() {
+            z[i * z_len..(i + 1) * z_len].copy_from_slice(req);
+        }
+        let flat = z; // identity executable: lane j returns its own input
+        for i in 0..take {
+            out.push(flat[i * z_len..(i + 1) * z_len].to_vec());
+        }
+        cursor += take;
+    }
+    out
+}
+
+#[test]
+fn padding_lanes_never_leak_into_returned_images() {
+    let mut rng = Rng::new(9);
+    let z_len = 4;
+    for _ in 0..200 {
+        let mut supported: Vec<usize> = (0..1 + rng.below(3)).map(|_| 1 + rng.below(8)).collect();
+        supported.sort_unstable();
+        supported.dedup();
+        let n = rng.below(20);
+        // strictly positive latents: any all-zero output would be a
+        // padding lane leaking through
+        let reqs: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..z_len).map(|_| 1.0 + rng.uniform()).collect()).collect();
+        let out = pjrt_style_roundtrip(&supported, &reqs, z_len);
+        assert_eq!(out.len(), n, "one image per request, no padding lane returned");
+        for (i, (got, want)) in out.iter().zip(&reqs).enumerate() {
+            assert_eq!(got, want, "request {i} image corrupted by packing");
+        }
+    }
+}
+
+#[test]
+fn native_executor_odd_batch_lengths_match_singles_bitwise() {
+    // the native path takes ANY batch length with no padding or chunking;
+    // every length 1..17 (crossing each advisory supported size) must
+    // return one image per request, bit-identical to a batch-1 run
+    let program = Arc::new(Program::from_seed(&tiny_net(), DeconvImpl::Sd, 4).unwrap());
+    let mut exec = NativeExecutor::from_program(program);
+    let mut rng = Rng::new(12);
+    for n in 1..17 {
+        let reqs: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(16)).collect();
+        let batched = exec.execute(&reqs).unwrap();
+        assert_eq!(batched.len(), n, "batch length {n}: one image per request");
+        for (i, req) in reqs.iter().enumerate() {
+            let single = exec.execute(std::slice::from_ref(req)).unwrap();
+            assert_eq!(
+                batched[i], single[0],
+                "batch length {n}, request {i}: batched image differs from single"
+            );
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Helpers shared by the integration-test binaries (each test file pulls
+//! this in with `mod common;` — the directory form keeps cargo from
+//! treating it as a test target of its own).
+
+use split_deconv::nn::{LayerSpec, NetworkSpec};
+
+/// A small-but-real generator chain — dense 16 -> 4x4x8, then two
+/// stride-2 SD deconvolutions up to 16x16x3 — so concurrency/packing
+/// suites drive the production engine path at high request counts without
+/// benchmark-scale debug-build compute. ONE definition, shared by
+/// coordinator_stress.rs and batch_packing.rs, so the two suites cannot
+/// drift apart.
+pub fn tiny_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "tiny",
+        layers: vec![
+            LayerSpec::dense("fc", 16, 4 * 4 * 8),
+            LayerSpec::deconv("up1", 4, 4, 8, 4, 4, 2, 1, 0),
+            LayerSpec::deconv("up2", 8, 8, 4, 3, 4, 2, 1, 0),
+        ],
+    }
+}

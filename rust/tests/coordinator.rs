@@ -50,14 +50,19 @@ impl BatchExecutor for MockExec {
     }
 }
 
-fn server(cfg: ServerConfig, fail_every: usize, delay_ms: u64) -> (Server, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+fn server(
+    cfg: ServerConfig,
+    fail_every: usize,
+    delay_ms: u64,
+) -> (Server, Arc<AtomicUsize>, Arc<AtomicUsize>) {
     let batches = Arc::new(AtomicUsize::new(0));
     let max_seen = Arc::new(AtomicUsize::new(0));
     let (b2, m2) = (batches.clone(), max_seen.clone());
-    let s = Server::start_with(cfg, move || {
+    // the factory runs once per worker; the counters are shared
+    let s = Server::start_with(cfg, move |_worker| {
         Ok(MockExec {
-            batches: b2,
-            max_seen: m2,
+            batches: b2.clone(),
+            max_seen: m2.clone(),
             fail_every,
             calls: 0,
             delay: Duration::from_millis(delay_ms),
@@ -206,5 +211,65 @@ fn shutdown_is_idempotent_and_fast() {
     let (s, _, _) = server(ServerConfig::default(), 0, 0);
     let t0 = std::time::Instant::now();
     s.shutdown();
+    s.shutdown(); // second call must be a no-op, not a hang
     assert!(t0.elapsed() < Duration::from_secs(2));
+}
+
+#[test]
+fn queue_time_accounts_for_batch_wait() {
+    // Regression test for the queue_us accounting bug: a lone request
+    // waits out the FULL batch timeout before its (slow) batch runs. The
+    // old `elapsed - compute_us.min(elapsed)` dance re-sampled elapsed()
+    // and could report queue_us == 0 for exactly this case; the fixed
+    // accounting samples total_us once and derives
+    // queue_us = total_us.saturating_sub(compute_us).
+    let cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(60),
+        queue_cap: 8,
+        ..ServerConfig::default()
+    };
+    let (s, _, _) = server(cfg, 0, 25); // slow mock: 25ms per batch
+    let rx = s.submit_blocking(vec![1.0; 8]).unwrap();
+    let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert!(r.compute_us >= 25_000, "compute_us {} below the mock delay", r.compute_us);
+    // the 60ms batcher wait must land in queue_us, not vanish (generous
+    // scheduler slack below the configured timeout)
+    assert!(r.queue_us >= 40_000, "queue_us {} lost the batcher wait", r.queue_us);
+    s.shutdown();
+}
+
+#[test]
+fn multi_worker_pool_preserves_invariants() {
+    // the single-dispatcher invariants hold at workers=4: exactly one
+    // response per request, correct payloads, bounded batches, and the
+    // per-worker counters reconcile with the totals
+    let cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(5),
+        queue_cap: 64,
+        workers: 4,
+        ..ServerConfig::default()
+    };
+    let (s, _, max_seen) = server(cfg, 0, 1);
+    let mut rxs = Vec::new();
+    for i in 0..80 {
+        rxs.push((i, s.submit_blocking(vec![i as f32; 8]).unwrap()));
+    }
+    let mut ids = HashSet::new();
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.image[0], (8 * i) as f32, "request {i} got someone else's image");
+        assert!(ids.insert(r.id), "duplicate response id {}", r.id);
+    }
+    assert_eq!(ids.len(), 80);
+    assert!(max_seen.load(Ordering::SeqCst) <= 4);
+    let m = s.metrics();
+    assert_eq!(m.served, 80);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.worker_batches.len(), 4, "one batch counter per worker");
+    assert_eq!(m.worker_batches.iter().sum::<u64>(), m.batches);
+    assert_eq!(m.worker_served.iter().sum::<u64>(), m.served);
+    assert!(m.max_queue_depth <= 64);
+    s.shutdown();
 }

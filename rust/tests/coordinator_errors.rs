@@ -1,0 +1,129 @@
+//! Error-path coverage for the multi-worker pool: a backend that fails
+//! every k-th batch must disconnect exactly its own requests' responders
+//! (never deliver a wrong image), count each failed batch in
+//! `MetricsSnapshot.errors`, and leave the pool serving subsequent
+//! batches.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use split_deconv::coordinator::{BatchExecutor, Server, ServerConfig};
+
+/// Mock backend failing every `fail_every`-th call *of each worker's own
+/// instance*; shared counters record exactly how many batches/requests
+/// were failed across the pool.
+struct FlakyExec {
+    calls: usize,
+    fail_every: usize,
+    failed_batches: Arc<AtomicUsize>,
+    failed_requests: Arc<AtomicUsize>,
+}
+
+impl BatchExecutor for FlakyExec {
+    fn supported_batches(&self) -> &[usize] {
+        &[1, 4]
+    }
+
+    fn z_len(&self) -> usize {
+        8
+    }
+
+    fn image_len(&self) -> usize {
+        2
+    }
+
+    fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.calls += 1;
+        if self.fail_every > 0 && self.calls % self.fail_every == 0 {
+            self.failed_batches.fetch_add(1, Ordering::SeqCst);
+            self.failed_requests.fetch_add(batch.len(), Ordering::SeqCst);
+            bail!("injected failure (call {})", self.calls);
+        }
+        Ok(batch
+            .iter()
+            .map(|z| vec![z.iter().sum::<f32>(), z.len() as f32])
+            .collect())
+    }
+}
+
+fn flaky_server(
+    workers: usize,
+    fail_every: usize,
+) -> (Server, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+    let failed_batches = Arc::new(AtomicUsize::new(0));
+    let failed_requests = Arc::new(AtomicUsize::new(0));
+    let (fb, fr) = (failed_batches.clone(), failed_requests.clone());
+    let cfg = ServerConfig {
+        max_batch: 2,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 32,
+        workers,
+        ..ServerConfig::default()
+    };
+    let s = Server::start_with(cfg, move |_worker| {
+        Ok(FlakyExec {
+            calls: 0,
+            fail_every,
+            failed_batches: fb.clone(),
+            failed_requests: fr.clone(),
+        })
+    })
+    .unwrap();
+    (s, failed_batches, failed_requests)
+}
+
+#[test]
+fn failed_batches_disconnect_their_requests_and_pool_keeps_serving() {
+    let (s, failed_batches, failed_requests) = flaky_server(4, 3);
+    let mut ok = 0usize;
+    let mut disconnected = 0usize;
+    let total = 200usize;
+    for i in 0..total {
+        let z = vec![i as f32; 8];
+        let rx = s.submit_blocking(z).unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(r) => {
+                // a surviving response must carry ITS OWN image — a failed
+                // batch can never leak someone else's payload
+                assert_eq!(r.image[0], (8 * i) as f32, "request {i} got a wrong image");
+                assert_eq!(r.image[1], 8.0);
+                ok += 1;
+            }
+            Err(RecvTimeoutError::Disconnected) => disconnected += 1,
+            Err(RecvTimeoutError::Timeout) => panic!("request {i} hung"),
+        }
+    }
+    assert_eq!(ok + disconnected, total, "every request resolves exactly once");
+    assert!(ok > 0, "pool must keep serving around failures");
+    assert!(disconnected > 0, "fail_every=3 must fail some batches");
+    // failed requests observe disconnection 1:1, and errors count batches
+    assert_eq!(disconnected, failed_requests.load(Ordering::SeqCst));
+    let m = s.metrics();
+    assert_eq!(m.errors as usize, failed_batches.load(Ordering::SeqCst));
+    assert_eq!(m.served as usize, ok);
+    s.shutdown();
+}
+
+#[test]
+fn pool_survives_a_worker_whose_backend_always_fails() {
+    // fail_every=1: every batch of every worker fails; requests must all
+    // disconnect (not hang), errors must count every batch
+    let (s, failed_batches, _) = flaky_server(2, 1);
+    let mut disconnected = 0;
+    for i in 0..20 {
+        let rx = s.submit_blocking(vec![i as f32; 8]).unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(_) => panic!("fail_every=1 must never produce a response"),
+            Err(RecvTimeoutError::Disconnected) => disconnected += 1,
+            Err(RecvTimeoutError::Timeout) => panic!("request {i} hung"),
+        }
+    }
+    assert_eq!(disconnected, 20);
+    let m = s.metrics();
+    assert_eq!(m.errors as usize, failed_batches.load(Ordering::SeqCst));
+    assert_eq!(m.served, 0);
+    s.shutdown();
+}

@@ -9,8 +9,10 @@
 //! things the engine compiles) are identical, and DCGAN is additionally
 //! checked at full scale.
 
+use std::sync::Arc;
+
 use split_deconv::coordinator::{BatchExecutor, NativeExecutor, Server, ServerConfig};
-use split_deconv::engine::{build_weights, chain_gaps, DeconvImpl, Plan};
+use split_deconv::engine::{build_weights, chain_gaps, DeconvImpl, Plan, Program, Scratch};
 use split_deconv::networks;
 use split_deconv::nn::NetworkSpec;
 use split_deconv::report::quality::run_network_with;
@@ -143,13 +145,52 @@ fn native_executor_builds_plans_for_all_six_models() {
 }
 
 #[test]
+fn concurrent_workers_on_shared_program_match_oracle_bit_exactly() {
+    // two workers executing concurrently on the SAME Arc<Program> (each
+    // with its own Scratch) must both stay bit-identical to the
+    // single-threaded interpreter oracle — the soundness claim behind
+    // sharing one compile across the worker pool
+    let net = networks::scaled(&networks::dcgan(), 2);
+    let weights = build_weights(&net, 5);
+    let program = Arc::new(Program::build(&net, &weights, DeconvImpl::Sd).unwrap());
+    let inputs: Vec<Tensor> = (0..4).map(|i| input_for(&net, 1, 300 + i)).collect();
+    let want: Vec<Tensor> = inputs
+        .iter()
+        .map(|z| run_network_with(&net, DeconvImpl::Sd, &weights, z).unwrap())
+        .collect();
+    std::thread::scope(|s| {
+        for worker in 0..2 {
+            let program = &program;
+            let inputs = &inputs;
+            let want = &want;
+            s.spawn(move || {
+                let mut scratch = Scratch::new();
+                for round in 0..3 {
+                    for (z, w) in inputs.iter().zip(want) {
+                        let got = program.forward(z, &mut scratch).unwrap();
+                        assert_eq!(
+                            got.max_abs_diff(w),
+                            0.0,
+                            "worker {worker} round {round}: concurrent execution \
+                             not bit-identical to the oracle"
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
 fn coordinator_routes_models_by_name() {
-    // end-to-end: a non-DCGAN model served through the dynamic batcher
+    // end-to-end: a non-DCGAN model served through the dynamic batcher,
+    // with two workers sharing the compiled program
     let cfg = ServerConfig {
         max_batch: 2,
         batch_timeout: std::time::Duration::from_millis(1),
         queue_cap: 16,
         model: "sngan".to_string(),
+        workers: 2,
     };
     let net = networks::sngan();
     let server = Server::start_native(cfg, 3).unwrap();
