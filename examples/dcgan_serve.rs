@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             batch_timeout: Duration::from_millis(2),
             queue_cap: 128,
             model: "dcgan".to_string(),
-            workers: 1,
+            ..ServerConfig::default()
         },
         default_artifact_dir(),
         "dcgan_sd".into(),

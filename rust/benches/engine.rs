@@ -11,12 +11,18 @@
 //!   per call;
 //! * **plan-cached** — `engine::Plan::forward` on a plan built once
 //!   (filters pre-split + packed, shapes precomputed, buffer arena reused).
+//! * **int8-plan** — the same plan compiled at `Precision::Int8` (weights
+//!   quantized per-output-channel, SD sub-filters packed int8, activation
+//!   scales calibrated at build): the quantized serving mode's forward.
 //!
 //! Acceptance (enforced with a nonzero exit code): plan-cached beats the
 //! **per-call** path on EVERY network; the weight-cached interpreter
-//! comparison is reported as an informational bar. MDE and FST run at half
-//! resolution (structure and code path identical) to keep the bench
-//! minutes-scale; the other four are full scale.
+//! comparison is reported as an informational bar, as is the int8-vs-f32
+//! plan ratio (the *gated* int8-vs-f32 comparison is the GEMM-level one in
+//! `cargo bench --bench hotpath`, whose rows CI publishes as
+//! BENCH_quant.json). MDE and FST run at half resolution (structure and
+//! code path identical) to keep the bench minutes-scale; the other four
+//! are full scale.
 //!
 //! `cargo bench --bench engine -- --json BENCH_engine.json` writes the
 //! per-network times/speedups for cross-PR tracking.
@@ -24,7 +30,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use split_deconv::engine::{build_weights, DeconvImpl, Plan};
+use split_deconv::engine::{build_weights, DeconvImpl, Plan, Precision};
 use split_deconv::networks;
 use split_deconv::nn::NetworkSpec;
 use split_deconv::report::quality::{run_network, run_network_with};
@@ -49,6 +55,7 @@ fn main() {
     let iters = 3;
     let mut worst_per_call = f64::INFINITY;
     let mut worst_interp = f64::INFINITY;
+    let mut worst_int8 = f64::INFINITY;
 
     for (net, label) in bench_nets() {
         harness::section(label);
@@ -56,6 +63,9 @@ fn main() {
         let input = Tensor::randn(1, l0.in_h, l0.in_w, l0.in_c, &mut rng);
         let weights = build_weights(&net, seed);
         let mut plan = Plan::build(&net, &weights, DeconvImpl::Sd).expect("plan compiles");
+        let mut i8_plan =
+            Plan::build_owned_prec(&net, weights.clone(), DeconvImpl::Sd, Precision::Int8)
+                .expect("int8 plan compiles");
 
         let per_call = harness::bench(&format!("per-call      {label}"), iters, || {
             let _ = run_network(&net, DeconvImpl::Sd, seed, &input).expect("per-call forward");
@@ -67,17 +77,24 @@ fn main() {
         let cached = harness::bench(&format!("plan-cached   {label}"), iters, || {
             let _ = plan.forward(&input).expect("plan forward");
         });
+        let int8 = harness::bench(&format!("int8-plan     {label}"), iters, || {
+            let _ = i8_plan.forward(&input).expect("int8 plan forward");
+        });
 
         let s_per_call = per_call.min_s / cached.min_s;
         let s_interp = interp.min_s / cached.min_s;
+        let s_int8 = cached.min_s / int8.min_s;
         worst_per_call = worst_per_call.min(s_per_call);
         worst_interp = worst_interp.min(s_interp);
+        worst_int8 = worst_int8.min(s_int8);
         println!(
-            "  -> plan-cached speedup: {s_per_call:.2}x vs per-call, {s_interp:.2}x vs interpreter"
+            "  -> plan-cached speedup: {s_per_call:.2}x vs per-call, {s_interp:.2}x vs \
+             interpreter; int8 plan {s_int8:.2}x vs f32 plan"
         );
         sink.record(&per_call);
         sink.record(&interp);
         sink.record_speedup(&per_call, &cached);
+        sink.record_speedup(&cached, &int8);
     }
 
     harness::section("summary");
@@ -90,6 +107,10 @@ fn main() {
     println!(
         "worst plan-cached speedup vs weight-cached interpreter: {worst_interp:.2}x {}",
         if worst_interp > 1.0 { "PASS" } else { "(informational)" }
+    );
+    println!(
+        "worst int8-vs-f32 plan ratio: {worst_int8:.2}x {}",
+        if worst_int8 > 1.0 { "PASS" } else { "(informational; gated at GEMM level in hotpath)" }
     );
     sink.write("engine");
     if !pass {

@@ -9,11 +9,16 @@ mod harness;
 use std::time::Duration;
 
 use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::quant::{
+    absmax, conv2d_i8_into, pack_sd_splits, quantize_into, scale_for_absmax, Epilogue, QTensor,
+};
 use split_deconv::runtime::{artifacts_available, default_artifact_dir};
-use split_deconv::sd::{interleave, sd_deconv2d, split_filters};
+use split_deconv::sd::{interleave, sd_deconv2d, split_filters, SdGeometry};
 use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
 use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
-use split_deconv::tensor::{conv2d_naive, conv2d_valid, deconv2d, Filter, Tensor};
+use split_deconv::tensor::{
+    conv2d_naive, conv2d_valid, conv2d_valid_into, deconv2d, relu, Filter, Tensor,
+};
 use split_deconv::util::rng::Rng;
 use split_deconv::networks;
 
@@ -60,6 +65,79 @@ fn main() {
         if worst >= 4.0 { "PASS" } else { "FAIL" }
     );
 
+    harness::section("int8 GEMM vs f32 GEMM (quantized SD layers, DCGAN + FST)");
+    // The engine's real quantized workload per SD deconv layer: the s^2
+    // pre-split sub-filters run stride-1 over the padded (ReLU-zero-rich)
+    // input. The f32 side runs the f32 splits through conv2d_valid, the
+    // int8 side quantizes the input and runs the packed int8 splits
+    // (structural-zero rows skipped — the Wsparse edge). Gate: int8 beats
+    // f32 on every one of these layers (one re-measure to absorb scheduler
+    // noise), enforced with a nonzero exit code; rows land in the --json
+    // output (CI publishes BENCH_quant.json).
+    let i8_layers: &[(&str, usize, usize, usize, usize)] = &[
+        // (label, input side, ic, k, oc) — deconv stride 2 throughout
+        ("DCGAN deconv1 8x8x256 k5 -> 128", 8, 256, 5, 128),
+        ("DCGAN deconv2 16x16x128 k5 -> 64", 16, 128, 5, 64),
+        ("FST deconv1 64x64x128 k3 -> 64", 64, 128, 3, 64),
+    ];
+    let mut i8_failures: Vec<String> = Vec::new();
+    for &(name, side, ic, k, oc) in i8_layers {
+        let g = SdGeometry::new(k, 2, k / 2);
+        let mut x = Tensor::randn(1, side, side, ic, &mut rng);
+        relu(&mut x); // post-ReLU zeros, as the engine sees mid-network
+        let xp = x.pad(g.p_i, g.p_i, g.p_i, g.p_i);
+        let f = Filter::randn(k, k, ic, oc, &mut rng);
+        let f32_splits = split_filters(&f, 2);
+        let i8_splits = pack_sd_splits(&f, 2);
+        let in_scale = scale_for_absmax(absmax(&xp.data));
+        let mut out = Tensor::zeros(0, 0, 0, 0);
+        let mut qx = QTensor::empty();
+        let run_gate = |f32r: &harness::BenchResult, i8r: &harness::BenchResult| {
+            f32r.min_s / i8r.min_s
+        };
+        let mut f32r = harness::bench(&format!("f32  splits {name}"), 10, || {
+            for w in &f32_splits {
+                conv2d_valid_into(&xp, w, 1, &mut out);
+            }
+        });
+        let mut i8r = harness::bench(&format!("int8 splits {name}"), 10, || {
+            quantize_into(&xp, in_scale, &mut qx);
+            for w in &i8_splits {
+                conv2d_i8_into(&qx, w, 1, Epilogue::none(), &mut out);
+            }
+        });
+        let mut speedup = run_gate(&f32r, &i8r);
+        println!("  -> int8-vs-f32 GEMM speedup: {speedup:.2}x");
+        if speedup <= 1.0 {
+            println!("  gate miss — re-measuring once to rule out scheduler noise");
+            f32r = harness::bench(&format!("f32  splits {name} (retry)"), 10, || {
+                for w in &f32_splits {
+                    conv2d_valid_into(&xp, w, 1, &mut out);
+                }
+            });
+            i8r = harness::bench(&format!("int8 splits {name} (retry)"), 10, || {
+                quantize_into(&xp, in_scale, &mut qx);
+                for w in &i8_splits {
+                    conv2d_i8_into(&qx, w, 1, Epilogue::none(), &mut out);
+                }
+            });
+            speedup = run_gate(&f32r, &i8r);
+            println!("  -> retry: int8-vs-f32 GEMM speedup: {speedup:.2}x");
+        }
+        sink.record(&f32r);
+        sink.record_speedup(&f32r, &i8r);
+        if speedup <= 1.0 {
+            i8_failures.push(format!("{name}: int8 GEMM {speedup:.2}x of f32 (needs > 1x)"));
+        }
+    }
+    println!(
+        "int8-vs-f32 GEMM gate (int8 > f32 on DCGAN + FST SD layers): {}",
+        if i8_failures.is_empty() { "PASS" } else { "FAIL" }
+    );
+    for f in &i8_failures {
+        println!("FAIL: {f}");
+    }
+
     harness::section("SD transform pipeline vs direct deconv (DCGAN deconv2)");
     let x = Tensor::randn(1, 16, 16, 128, &mut rng);
     let w = Filter::randn(5, 5, 128, 64, &mut rng);
@@ -97,7 +175,7 @@ fn main() {
                 batch_timeout: Duration::from_millis(1),
                 queue_cap: 256,
                 model: "dcgan".to_string(),
-                workers: 1,
+                ..ServerConfig::default()
             },
             7,
         )
@@ -124,7 +202,7 @@ fn main() {
                 batch_timeout: Duration::from_millis(1),
                 queue_cap: 256,
                 model: "dcgan".to_string(),
-                workers: 1,
+                ..ServerConfig::default()
             },
             default_artifact_dir(),
             "dcgan_sd".into(),
@@ -145,4 +223,8 @@ fn main() {
         println!("\n(serving bench skipped: run `make artifacts`)");
     }
     sink.write("hotpath");
+    if !i8_failures.is_empty() {
+        // real gate: a FAIL is a nonzero exit, visible to CI and scripts
+        std::process::exit(1);
+    }
 }

@@ -105,6 +105,7 @@ fn measure(
         queue_cap: 64,
         model: model.to_string(),
         workers,
+        ..ServerConfig::default()
     };
     let z_len = program.input_len();
     let server = Server::start_native_program(cfg, program.clone()).expect("server start");

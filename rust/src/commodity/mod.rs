@@ -14,7 +14,7 @@ pub mod host;
 pub mod ncs2;
 
 use crate::nn::{LayerSpec, NetworkSpec};
-use crate::sd::SdGeometry;
+use crate::quant::sd_pack_shape;
 
 /// A device's efficiency model: GMACPS as a function of (square) feature-map
 /// side and filter side, factorized as base * f(fmap) * g(filter), which is
@@ -94,12 +94,19 @@ pub fn nzp_time_s_derated<M: EfficiencyModel>(m: &M, net: &NetworkSpec, derate: 
 /// small K_T filter at roughly input resolution, plus the host-side output
 /// reorganization (per the paper's measurement protocol: "we only take the
 /// split deconvolution computing time and the data reorganization time").
+///
+/// The filter geometry (sub-filter side, per-split conv output, MAC count)
+/// comes from [`sd_pack_shape`] — the **actual packed sub-filter shapes**
+/// the quantized engine executes, read off a real `split_filters` packing —
+/// rather than re-deriving the `SdGeometry` closed forms here. The devices
+/// these models describe run int8, so the packed (quantized) geometry is
+/// the ground truth.
 pub fn sd_time_s<M: EfficiencyModel>(m: &M, net: &NetworkSpec, host_reorg_gbps: f64) -> f64 {
     net.deconv_layers()
         .map(|l| {
-            let g = SdGeometry::new(l.k, l.s, l.p);
-            let conv_side = ((l.in_h + l.in_w) / 2 + g.k_t - 1).max(1);
-            let compute = m.time_s(l.sd_macs(), conv_side, g.k_t);
+            let pack = sd_pack_shape(l);
+            let conv_side = ((pack.conv_h + pack.conv_w) / 2).max(1);
+            let compute = m.time_s(pack.table_macs(l), conv_side, pack.k_t);
             // reorganization: one pass over the output bytes on the host
             let out_bytes = (l.out_h() * l.out_w() * l.out_c) as f64;
             compute + out_bytes / (host_reorg_gbps * 1e9)
@@ -108,6 +115,7 @@ pub fn sd_time_s<M: EfficiencyModel>(m: &M, net: &NetworkSpec, host_reorg_gbps: 
 }
 
 /// Per-layer times of one deconv layer (used by reports for breakdowns).
+/// SD geometry routed through [`sd_pack_shape`] like [`sd_time_s`].
 pub fn layer_times_s<M: EfficiencyModel>(
     m: &M,
     l: &LayerSpec,
@@ -115,10 +123,11 @@ pub fn layer_times_s<M: EfficiencyModel>(
 ) -> (f64, f64) {
     let fmap = ((l.out_h() + l.out_w()) / 2).max(1);
     let nzp = m.time_s(l.nzp_macs(), fmap, l.k);
-    let g = SdGeometry::new(l.k, l.s, l.p);
-    let conv_side = ((l.in_h + l.in_w) / 2 + g.k_t - 1).max(1);
+    let pack = sd_pack_shape(l);
+    let conv_side = ((pack.conv_h + pack.conv_w) / 2).max(1);
     let out_bytes = (l.out_h() * l.out_w() * l.out_c) as f64;
-    let sd = m.time_s(l.sd_macs(), conv_side, g.k_t) + out_bytes / (host_reorg_gbps * 1e9);
+    let sd =
+        m.time_s(pack.table_macs(l), conv_side, pack.k_t) + out_bytes / (host_reorg_gbps * 1e9);
     (nzp, sd)
 }
 
@@ -132,5 +141,25 @@ mod tests {
         assert_eq!(interp(&pts, 1.0), 1.0);
         assert_eq!(interp(&pts, 5.0), 3.0);
         assert!((interp(&pts, 3.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sd_times_follow_the_packed_filter_geometry() {
+        // the SD estimate must be exactly what the packed sub-filter
+        // shapes imply (one probe layer per SD case: expansion and
+        // divisible), with the MAC count read off the packing
+        let t = super::edge_tpu::EdgeTpu;
+        for l in [
+            LayerSpec::deconv("d", 8, 8, 256, 128, 5, 2, 2, 1),
+            LayerSpec::deconv("d", 4, 4, 512, 256, 4, 2, 1, 0),
+        ] {
+            let pack = sd_pack_shape(&l);
+            assert_eq!(pack.table_macs(&l), l.sd_macs());
+            let (_, sd) = layer_times_s(&t, &l, 8.0);
+            let conv_side = ((pack.conv_h + pack.conv_w) / 2).max(1);
+            let want = t.time_s(pack.table_macs(&l), conv_side, pack.k_t)
+                + (l.out_h() * l.out_w() * l.out_c) as f64 / (8.0 * 1e9);
+            assert!((sd - want).abs() <= want * 1e-12, "sd {sd} want {want}");
+        }
     }
 }

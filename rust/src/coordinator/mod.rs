@@ -35,7 +35,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{DeconvImpl, Program};
+use crate::engine::{DeconvImpl, Precision, Program};
 
 pub use executor::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
@@ -62,6 +62,12 @@ pub struct ServerConfig {
     /// Each owns its own executor: its own `Scratch` on the native path,
     /// its own PJRT client on the artifact path.
     pub workers: usize,
+    /// numeric precision of the *native* backend's compiled program
+    /// ([`Precision::Int8`] = the quantized serving mode: int8 weights and
+    /// activations, i32 accumulate, prepared once at compile time and
+    /// shared across workers like any other program). The PJRT backend
+    /// ignores this — its precision is baked into the artifacts.
+    pub precision: Precision,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +78,7 @@ impl Default for ServerConfig {
             queue_cap: 64,
             model: "dcgan".to_string(),
             workers: 1,
+            precision: Precision::F32,
         }
     }
 }
@@ -194,13 +201,19 @@ impl Server {
 
     /// Start a server over the CPU-native engine executor: the generator
     /// selected by `cfg.model` is compiled ONCE into an immutable
-    /// `engine::Program` (SD filters pre-split and packed at compile time)
-    /// and shared by all `cfg.workers` workers via `Arc` — each worker
+    /// `engine::Program` (SD filters pre-split and packed at compile time,
+    /// at `cfg.precision` — int8 constants and calibration included) and
+    /// shared by all `cfg.workers` workers via `Arc` — each worker
     /// gets its own `Scratch`. Works from a fresh checkout (no artifacts
     /// needed); all six benchmark networks route here.
     pub fn start_native(cfg: ServerConfig, weight_seed: u64) -> Result<Server> {
         let net = crate::networks::by_name_or_err(&cfg.model)?;
-        let program = Arc::new(Program::from_seed(&net, DeconvImpl::Sd, weight_seed)?);
+        let program = Arc::new(Program::from_seed_prec(
+            &net,
+            DeconvImpl::Sd,
+            weight_seed,
+            cfg.precision,
+        )?);
         Self::start_native_program(cfg, program)
     }
 

@@ -59,14 +59,21 @@ pub mod weights;
 
 pub use weights::{build_weights, smooth_filter, DeconvImpl, LayerWeights};
 
+pub use crate::quant::Precision;
+
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::nn::{LayerKind, NetworkSpec};
+use crate::quant::{
+    conv2d_i8_scaled_into, quantize_dense, quantize_filter, quantize_into, scale_for_absmax,
+    Epilogue, QFilter, QTensor,
+};
 use crate::sd::{chang::chang_deconv2d, nzp::nzp_deconv2d, shi::shi_deconv2d};
 use crate::sd::{interleave_crop_into, split_filters, SdGeometry};
 use crate::tensor::{conv2d_valid_into, deconv2d, dense_into, relu, tanh, Filter, Tensor};
+use crate::util::rng::Rng;
 
 /// Activation fused into each step: ReLU between layers, tanh after the
 /// last (generator convention — matches the interpreter oracle).
@@ -88,6 +95,16 @@ enum Op {
     /// Chang) — kept in the registry so the quality evaluation runs every
     /// conversion approach through the same execution path
     RefDeconv { f: Filter, imp: DeconvImpl, s: usize, p: usize, out_pad: usize },
+    /// int8 lowering of `Dense` and `Conv` (`Precision::Int8`): quantized
+    /// constants prepared at compile time, activations quantized at the
+    /// calibrated `in_scale`, i8 im2col + i32 GEMM with the fused
+    /// requantize(+ReLU) epilogue. A dense layer is a 1x1 convolution over
+    /// its `1 x 1 x n_in` view, so one quantized op serves both.
+    QConv { qf: QFilter, in_scale: f32, s: usize, p: usize },
+    /// int8 lowering of `SdDeconv`: the pre-split sub-filters packed as
+    /// int8 at compile time, each split running on the int8 conv kernel —
+    /// the SD path itself (not just plain conv) runs quantized.
+    QSdDeconv { splits: Vec<QFilter>, g: SdGeometry, in_scale: f32 },
 }
 
 /// One compiled layer: op + fused activation + precomputed shapes.
@@ -105,15 +122,22 @@ struct Step {
 
 /// Reusable per-worker buffers: successive steps ping-pong through `spare`,
 /// SD deconvolutions share the `pad` scratch and per-split output slots.
-/// Buffers grow to the high-water mark of the program's shapes and are
-/// reused across forward calls (no per-layer allocation on the hot path).
-/// A `Scratch` is cheap to create (three empty buffers) — the serving
-/// stack gives each dispatcher worker its own while all workers share one
-/// [`Program`].
+/// Int8 programs additionally use the i8 arenas `qin` / `qpad` (quantized
+/// activations and their padded view; the kernel's i32 accumulators live in
+/// its own per-thread scratch). Buffers grow to the high-water mark of the
+/// program's shapes and are reused across forward calls (no per-layer
+/// allocation on the hot path). A `Scratch` is cheap to create (empty
+/// buffers) — the serving stack gives each dispatcher worker its own while
+/// all workers share one [`Program`].
 pub struct Scratch {
     spare: Vec<f32>,
     pad: Tensor,
     splits: Vec<Tensor>,
+    qin: QTensor,
+    qpad: QTensor,
+    /// per-column requantization scales of the current int8 op
+    /// (`in_scale * weight_scale[o]`) — rebuilt per step, reusing capacity
+    colscale: Vec<f32>,
 }
 
 impl Scratch {
@@ -122,6 +146,9 @@ impl Scratch {
             spare: Vec::new(),
             pad: Tensor::zeros(0, 0, 0, 0),
             splits: Vec::new(),
+            qin: QTensor::empty(),
+            qpad: QTensor::empty(),
+            colscale: Vec::new(),
         }
     }
 }
@@ -139,11 +166,24 @@ impl Default for Scratch {
 pub struct Program {
     name: &'static str,
     steps: Vec<Step>,
+    precision: Precision,
     in_h: usize,
     in_w: usize,
     in_c: usize,
     out_len: usize,
 }
+
+/// Latents per calibration sweep batch (see [`Program::build_owned_prec`]).
+const CALIB_BATCH: usize = 6;
+
+/// Seed of the calibration sweep — fixed, so a model + weight seed always
+/// compiles to the same quantized constants.
+const CALIB_SEED: u64 = 0xCA11B;
+
+/// Headroom multiplier on the swept activation absmax: serving inputs are
+/// not the calibration inputs, and saturating a fresh latent's outlier
+/// costs more image quality than spending ~10% of the i8 range on margin.
+const CALIB_MARGIN: f32 = 1.1;
 
 // The serving stack shares one compiled Program across dispatcher workers
 // behind an `Arc`; a field that silently lost Send + Sync would break that
@@ -168,12 +208,43 @@ impl Program {
         Program::build_owned(net, weights.to_vec(), imp)
     }
 
+    /// [`Program::build`] at an explicit [`Precision`].
+    pub fn build_prec(
+        net: &NetworkSpec,
+        weights: &[LayerWeights],
+        imp: DeconvImpl,
+        precision: Precision,
+    ) -> Result<Program> {
+        Program::build_owned_prec(net, weights.to_vec(), imp, precision)
+    }
+
     /// [`Program::build`] consuming the weights — no buffer copies (GP-GAN's
     /// bottleneck matrix alone is ~131 MB).
     pub fn build_owned(
         net: &NetworkSpec,
         weights: Vec<LayerWeights>,
         imp: DeconvImpl,
+    ) -> Result<Program> {
+        Program::build_owned_prec(net, weights, imp, Precision::F32)
+    }
+
+    /// [`Program::build_owned`] at an explicit [`Precision`].
+    ///
+    /// `Precision::Int8` compiles the **quantized** program: the f32 steps
+    /// are built first, a seeded latent sweep (`CALIB_BATCH` latents,
+    /// seed `CALIB_SEED`) runs through them once to calibrate each
+    /// step's per-tensor activation scale, and every `Dense` / `Conv` /
+    /// `SdDeconv` op is then lowered to its int8 form with all quantized
+    /// constants (per-output-channel weights, packed SD sub-filters,
+    /// activation scales) prepared here, at compile time — the serving hot
+    /// path never quantizes a weight or inspects a statistic. Reference
+    /// deconvolution lowerings (`DeconvImpl` other than `Sd`) stay f32:
+    /// they exist as quality baselines, not serving paths.
+    pub fn build_owned_prec(
+        net: &NetworkSpec,
+        weights: Vec<LayerWeights>,
+        imp: DeconvImpl,
+        precision: Precision,
     ) -> Result<Program> {
         if weights.len() != net.layers.len() {
             bail!(
@@ -247,14 +318,19 @@ impl Program {
         let (in_h, in_w, in_c) = (first.in_h, first.in_w, first.in_c);
         let last_step = &steps[last];
         let out_len = last_step.out_h * last_step.out_w * last_step.out_c;
-        Ok(Program {
+        let mut program = Program {
             name: net.name,
             steps,
+            precision: Precision::F32,
             in_h,
             in_w,
             in_c,
             out_len,
-        })
+        };
+        if precision == Precision::Int8 {
+            program.quantize_steps()?;
+        }
+        Ok(program)
     }
 
     /// [`Program::build`] with weights drawn from
@@ -263,9 +339,68 @@ impl Program {
         Program::build_owned(net, build_weights(net, seed), imp)
     }
 
+    /// [`Program::from_seed`] at an explicit [`Precision`].
+    pub fn from_seed_prec(
+        net: &NetworkSpec,
+        imp: DeconvImpl,
+        seed: u64,
+        precision: Precision,
+    ) -> Result<Program> {
+        Program::build_owned_prec(net, build_weights(net, seed), imp, precision)
+    }
+
+    /// Lower every quantizable op to its int8 form (see
+    /// [`Program::build_owned_prec`]): calibrate activation scales with a
+    /// seeded latent sweep through the still-f32 steps, then replace the
+    /// ops with quantized-constant versions.
+    fn quantize_steps(&mut self) -> Result<()> {
+        // calibration sweep: per-step input absmax over one seeded batch
+        let mut rng = Rng::new(CALIB_SEED);
+        let mut h = Tensor::from_fn(CALIB_BATCH, self.in_h, self.in_w, self.in_c, || rng.normal());
+        let mut scratch = Scratch::new();
+        let mut absmaxes = Vec::with_capacity(self.steps.len());
+        for step in &self.steps {
+            absmaxes.push(crate::quant::absmax(&h.data));
+            h = run_step(step, h, &mut scratch)?;
+        }
+        let steps = std::mem::take(&mut self.steps);
+        self.steps = steps
+            .into_iter()
+            .zip(absmaxes)
+            .map(|(mut step, am)| {
+                let in_scale = scale_for_absmax(am * CALIB_MARGIN);
+                step.op = match step.op {
+                    Op::Dense { w, n_out } => {
+                        let n_in = w.len() / n_out;
+                        Op::QConv { qf: quantize_dense(w, n_in, n_out), in_scale, s: 1, p: 0 }
+                    }
+                    Op::Conv { f, s, p } => {
+                        Op::QConv { qf: quantize_filter(&f), in_scale, s, p }
+                    }
+                    Op::SdDeconv { splits, g } => Op::QSdDeconv {
+                        splits: splits.iter().map(quantize_filter).collect(),
+                        g,
+                        in_scale,
+                    },
+                    // reference deconv lowerings stay f32 (quality
+                    // baselines, not serving paths)
+                    other => other,
+                };
+                step
+            })
+            .collect();
+        self.precision = Precision::Int8;
+        Ok(())
+    }
+
     /// Network name this program was compiled from.
     pub fn name(&self) -> &'static str {
         self.name
+    }
+
+    /// Numeric precision this program was compiled at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Flat per-request input element count (the first layer's input view).
@@ -360,9 +495,39 @@ impl Plan {
         Ok(Plan::from_program(Arc::new(Program::build_owned(net, weights, imp)?)))
     }
 
+    /// [`Plan::build_owned`] at an explicit [`Precision`]. See
+    /// [`Program::build_owned_prec`].
+    pub fn build_owned_prec(
+        net: &NetworkSpec,
+        weights: Vec<LayerWeights>,
+        imp: DeconvImpl,
+        precision: Precision,
+    ) -> Result<Plan> {
+        Ok(Plan::from_program(Arc::new(Program::build_owned_prec(
+            net, weights, imp, precision,
+        )?)))
+    }
+
     /// [`Plan::build`] with weights drawn from [`build_weights`]`(net, seed)`.
     pub fn from_seed(net: &NetworkSpec, imp: DeconvImpl, seed: u64) -> Result<Plan> {
         Ok(Plan::from_program(Arc::new(Program::from_seed(net, imp, seed)?)))
+    }
+
+    /// [`Plan::from_seed`] at an explicit [`Precision`].
+    pub fn from_seed_prec(
+        net: &NetworkSpec,
+        imp: DeconvImpl,
+        seed: u64,
+        precision: Precision,
+    ) -> Result<Plan> {
+        Ok(Plan::from_program(Arc::new(Program::from_seed_prec(
+            net, imp, seed, precision,
+        )?)))
+    }
+
+    /// Numeric precision of the underlying program.
+    pub fn precision(&self) -> Precision {
+        self.program.precision()
     }
 
     /// Pair an already-compiled (possibly shared) program with a fresh
@@ -493,14 +658,16 @@ fn run_ref_deconv(
 
 /// Execute one compiled step: bridge the input view, run the op into
 /// scratch buffers, apply the fused activation, recycle the input buffer.
+/// Quantized ops fuse their mid-layer ReLU into the kernel's requantize
+/// epilogue (`act_done`); every other op gets the activation applied here.
 fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
     let n = h.n;
     let h = bridge_reshape(h, step.in_h, step.in_w, step.in_c);
-    let mut out = match &step.op {
+    let (mut out, act_done) = match &step.op {
         Op::Dense { w, n_out } => {
             let mut out = take_tensor(&mut a.spare);
-            dense_into(&h, w, *n_out, &mut out);
-            out
+            dense_into(&h, w, *n_out, &mut out)?;
+            (out, false)
         }
         Op::Conv { f, s, p } => {
             let mut out = take_tensor(&mut a.spare);
@@ -510,7 +677,7 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
             } else {
                 conv2d_valid_into(&h, f, *s, &mut out);
             }
-            out
+            (out, false)
         }
         Op::SdDeconv { splits, g } => {
             h.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.pad);
@@ -529,9 +696,57 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
                 step.out_w,
                 &mut out,
             );
-            out
+            (out, false)
         }
-        Op::RefDeconv { f, imp, s, p, out_pad } => run_ref_deconv(&h, f, *imp, *s, *p, *out_pad),
+        Op::RefDeconv { f, imp, s, p, out_pad } => {
+            (run_ref_deconv(&h, f, *imp, *s, *p, *out_pad), false)
+        }
+        Op::QConv { qf, in_scale, s, p } => {
+            // quantize at the calibrated per-tensor scale, convolve on the
+            // int8 kernel with the mid-layer ReLU fused into the
+            // requantize epilogue; the per-column scales go into a reused
+            // scratch buffer (compile-time constants, no per-layer alloc)
+            quantize_into(&h, *in_scale, &mut a.qin);
+            a.colscale.clear();
+            a.colscale.extend(qf.scales.iter().map(|&sc| *in_scale * sc));
+            let epi = match step.act {
+                Act::Relu => Epilogue::relu(),
+                Act::Tanh => Epilogue::none(),
+            };
+            let mut out = take_tensor(&mut a.spare);
+            if *p > 0 {
+                a.qin.pad_into(*p, *p, *p, *p, &mut a.qpad);
+                conv2d_i8_scaled_into(&a.qpad, qf, *s, &a.colscale, epi, &mut out);
+            } else {
+                conv2d_i8_scaled_into(&a.qin, qf, *s, &a.colscale, epi, &mut out);
+            }
+            (out, matches!(step.act, Act::Relu))
+        }
+        Op::QSdDeconv { splits, g, in_scale } => {
+            // one quantize + pad of the input, then every packed int8
+            // sub-filter runs a stride-1 int8 convolution; the splits
+            // requantize to f32 and interleave exactly like the f32 path
+            quantize_into(&h, *in_scale, &mut a.qin);
+            a.qin.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.qpad);
+            if a.splits.len() < splits.len() {
+                a.splits.resize_with(splits.len(), || Tensor::zeros(0, 0, 0, 0));
+            }
+            for (w, slot) in splits.iter().zip(a.splits.iter_mut()) {
+                a.colscale.clear();
+                a.colscale.extend(w.scales.iter().map(|&sc| *in_scale * sc));
+                conv2d_i8_scaled_into(&a.qpad, w, 1, &a.colscale, Epilogue::none(), slot);
+            }
+            let mut out = take_tensor(&mut a.spare);
+            interleave_crop_into(
+                &a.splits[..splits.len()],
+                g.s,
+                g.crop(),
+                step.out_h,
+                step.out_w,
+                &mut out,
+            );
+            (out, false)
+        }
     };
     if out.n != n || out.h != step.out_h || out.w != step.out_w || out.c != step.out_c {
         bail!(
@@ -544,7 +759,8 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
         );
     }
     match step.act {
-        Act::Relu => relu(&mut out),
+        Act::Relu if !act_done => relu(&mut out),
+        Act::Relu => {}
         Act::Tanh => tanh(&mut out),
     }
     a.spare = h.data; // recycle the input buffer for the step after next
@@ -614,6 +830,47 @@ mod tests {
         // and the raw Program + Scratch API underneath
         let mut scratch = Scratch::new();
         assert_eq!(plan.program().execute_batch(&z, &mut scratch).unwrap(), want);
+    }
+
+    #[test]
+    fn int8_plan_compiles_and_tracks_f32() {
+        let net = networks::scaled(&networks::dcgan(), 2);
+        let mut f32_plan = Plan::from_seed(&net, DeconvImpl::Sd, 3).unwrap();
+        let mut i8_plan = Plan::from_seed_prec(&net, DeconvImpl::Sd, 3, Precision::Int8).unwrap();
+        assert_eq!(f32_plan.precision(), Precision::F32);
+        assert_eq!(i8_plan.precision(), Precision::Int8);
+        assert_eq!(i8_plan.input_len(), f32_plan.input_len());
+        assert_eq!(i8_plan.output_len(), f32_plan.output_len());
+        let mut rng = Rng::new(12);
+        let z = vec![rng.normal_vec(i8_plan.input_len())];
+        let a = f32_plan.execute_batch(&z).unwrap();
+        let b = i8_plan.execute_batch(&z).unwrap();
+        // same geometry; values close but NOT identical (it really
+        // quantized). The strict accuracy bar is the SSIM gate in
+        // rust/tests/quant.rs.
+        assert_eq!(a[0].len(), b[0].len());
+        let max = a[0]
+            .iter()
+            .zip(&b[0])
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max > 0.0, "int8 path produced bit-identical f32 output");
+        assert!(max < 0.25, "int8 drifted {max} from f32 on tanh output");
+    }
+
+    #[test]
+    fn int8_batch_rows_equal_single_rows() {
+        // the quantized path must stay deterministic and batch-invariant:
+        // per-tensor scales are calibrated constants, not batch statistics
+        let net = networks::scaled(&networks::dcgan(), 2);
+        let mut plan = Plan::from_seed_prec(&net, DeconvImpl::Sd, 3, Precision::Int8).unwrap();
+        let mut rng = Rng::new(9);
+        let zs: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(100)).collect();
+        let batched = plan.execute_batch(&zs).unwrap();
+        for (i, z) in zs.iter().enumerate() {
+            let single = plan.execute_batch(std::slice::from_ref(z)).unwrap();
+            assert_eq!(batched[i], single[0], "int8 request {i} differs");
+        }
     }
 
     #[test]

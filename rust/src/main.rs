@@ -1,16 +1,19 @@
 //! `repro` — CLI for the split-deconvolution reproduction.
 //!
 //! Subcommands:
-//!   report <table1|table2|table3|table4|fig8|fig9|fig10|fig11|
+//!   report <table1|table2|table3|table4|quant|fig8|fig9|fig10|fig11|
 //!           table5|table6|table7|table8|fig15|fig16|fig17|all>
 //!   verify  [--limit N]        golden-check AOT artifacts via PJRT
 //!   serve   [--requests N] [--batch B] [--native] [--workers W]
 //!           [--model dcgan|artgan|sngan|gpgan|mde|fst]
+//!           [--precision f32|int8]
 //!           run the serving demo for any benchmark network (--native, or a
 //!           missing artifacts/, compiles the model ONCE into an immutable
 //!           engine::Program on the CPU-native GEMM backend instead of
 //!           PJRT; --workers W drains the shared request queue with W
-//!           dispatcher threads, each with its own Scratch)
+//!           dispatcher threads, each with its own Scratch; --precision
+//!           int8 compiles the quantized program — int8 weights +
+//!           activations, i32 accumulate, calibrated at compile time)
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
@@ -19,6 +22,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::engine::Precision;
 use split_deconv::report;
 use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
 use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
@@ -75,6 +79,10 @@ fn report_cmd(which: &str, args: &[String]) -> Result<()> {
     }
     if all || which == "table4" {
         report::print_table4(2)?;
+        println!();
+    }
+    if all || which == "quant" {
+        report::print_quant_table(2)?;
         println!();
     }
     if all || which == "fig8" {
@@ -171,6 +179,11 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let workers: usize = flag_value(args, "--workers")
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
+    let precision = match flag_value(args, "--precision") {
+        None => Precision::F32,
+        Some(p) => Precision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {p}; expected f32 or int8"))?,
+    };
     let net = networks::by_name_or_err(&model)?;
     let cfg = ServerConfig {
         max_batch,
@@ -178,14 +191,19 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         queue_cap: 128,
         model,
         workers,
+        precision,
     };
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
+    if precision == Precision::Int8 && !native {
+        bail!("--precision int8 is a native-backend mode; add --native");
+    }
     let z_len = net.input_elems();
     let server = if native {
         println!(
-            "(CPU-native engine backend: {} compiled once into a shared Program, \
+            "(CPU-native engine backend: {} compiled once into a shared {} Program, \
              SD filters pre-split, {workers} worker(s) with private Scratch)",
-            net.name
+            net.name,
+            precision.label()
         );
         Server::start_native(cfg, 7)?
     } else {
@@ -195,9 +213,10 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         Server::start_pjrt(cfg, default_artifact_dir(), prefix)?
     };
     println!(
-        "serving {} (SD path) — {n} requests of {z_len} floats, max batch {max_batch}, \
+        "serving {} (SD path, {}) — {n} requests of {z_len} floats, max batch {max_batch}, \
          {workers} worker(s)",
-        net.name
+        net.name,
+        precision.label()
     );
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();

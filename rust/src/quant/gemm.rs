@@ -1,0 +1,410 @@
+//! Int8 im2col + i32-accumulate convolution kernel with a fused
+//! requantize + bias + activation epilogue — the quantized twin of
+//! [`crate::tensor::conv2d_gemm_into`].
+//!
+//! Structure is deliberately identical to the f32 hot path: im2col packing
+//! of the i8 activations into a per-thread panel, a cache-blocked GEMM
+//! register-blocked `MR` output pixels at a time, work split into
+//! batch x output-row tiles drained from a shared queue by a scoped worker
+//! pool (`SD_CONV_THREADS` overrides the width). Differences:
+//!
+//! * the panel holds i8 (4x more rows fit in the same L2 budget);
+//! * accumulation is i32 — exact, so tile order and register blocking can
+//!   never change a result bit (integer addition is associative), which is
+//!   why [`conv2d_i8_naive`] is a *zero-tolerance* oracle;
+//! * the paper's AWSparse skip policy runs in software, and is *exact*
+//!   here for the same reason: the `K` loop visits only the filter rows
+//!   that are not structurally zero (`QFilter::nz_rows` — SD expansion
+//!   zeros, Wsparse) and skips quantized-zero activation values (post-ReLU
+//!   maps and the SD input halo, ASparse), because a zero i32 contribution
+//!   is exactly nothing. This is the int8 kernel's structural edge over
+//!   the f32 GEMM, which executes every MAC (skipping f32 terms is not
+//!   bit-safe: adding 0.0 can flip a -0.0 accumulator);
+//! * the epilogue requantizes each i32 accumulator straight to f32 through
+//!   the precomputed per-column scale `act_scale * weight_scale[col]`,
+//!   adding an optional per-channel bias and applying ReLU in the same
+//!   pass ([`Epilogue`]) — no separate f32 requantization sweep over the
+//!   output.
+
+use crate::tensor::ops::{worker_count, PANEL_BYTES};
+use crate::tensor::Tensor;
+
+use super::scheme::{QFilter, QTensor};
+
+/// Micro-kernel register-block height (output pixels per GEMM block).
+const MR: usize = 4;
+
+/// Fused epilogue of the int8 kernel: what happens to each i32 accumulator
+/// on its way to the f32 output buffer. Requantization (the per-column
+/// scale) always runs; bias and ReLU are optional and fused into the same
+/// store.
+#[derive(Clone, Copy, Default)]
+pub struct Epilogue<'a> {
+    /// per-output-channel bias added after requantization
+    pub bias: Option<&'a [f32]>,
+    /// clamp negatives to zero in the same pass (mid-layer ReLU)
+    pub relu: bool,
+}
+
+impl<'a> Epilogue<'a> {
+    /// Plain requantization: no bias, no activation.
+    pub fn none() -> Epilogue<'a> {
+        Epilogue::default()
+    }
+
+    /// Requantize + ReLU (the generator's mid-layer fusion).
+    pub fn relu() -> Epilogue<'a> {
+        Epilogue { bias: None, relu: true }
+    }
+
+    #[inline]
+    fn apply(&self, col: usize, v: f32) -> f32 {
+        let v = match self.bias {
+            Some(b) => v + b[col],
+            None => v,
+        };
+        if self.relu {
+            v.max(0.0)
+        } else {
+            v
+        }
+    }
+}
+
+/// One worker job: a tile of output rows of one batch image, owning the
+/// corresponding disjoint slice of the f32 output buffer.
+struct Tile<'a> {
+    n: usize,
+    y0: usize,
+    rows: usize,
+    out: &'a mut [f32],
+}
+
+/// Per-thread scratch arena: the i8 im2col panel and the i32 accumulator
+/// block — the int8 twins of the f32 kernel's `panel`/`acc`.
+#[derive(Default)]
+struct Scratch {
+    panel: Vec<i8>,
+    acc: Vec<i32>,
+}
+
+/// Valid int8 convolution into a caller-provided f32 tensor (reshaped and
+/// resized in place, reusing capacity): i8 im2col panels, i32-accumulate
+/// GEMM, fused requantize/bias/ReLU epilogue. Bit-identical to
+/// [`conv2d_i8_naive`] (asserted with zero tolerance in
+/// rust/tests/quant.rs). Computes the requantization scales
+/// (`x.scale * f.scales[o]`) into a fresh buffer per call; hot-path
+/// callers that can reuse one should use [`conv2d_i8_scaled_into`].
+pub fn conv2d_i8_into(x: &QTensor, f: &QFilter, stride: usize, epi: Epilogue, out: &mut Tensor) {
+    // requantization scales, one multiply per output element in the
+    // epilogue: activation per-tensor scale x weight per-channel scale
+    let colscale: Vec<f32> = f.scales.iter().map(|&s| x.scale * s).collect();
+    conv2d_i8_scaled_into(x, f, stride, &colscale, epi, out);
+}
+
+/// [`conv2d_i8_into`] with the per-column requantization scales
+/// precomputed by the caller (`colscale[o] = x.scale * f.scales[o]`,
+/// length `f.oc`) — the engine's entry point: the products are
+/// compile-time constants there, and writing them into a reused
+/// `Scratch` buffer keeps per-layer allocation off the forward path.
+pub fn conv2d_i8_scaled_into(
+    x: &QTensor,
+    f: &QFilter,
+    stride: usize,
+    colscale: &[f32],
+    epi: Epilogue,
+    out: &mut Tensor,
+) {
+    assert_eq!(x.c, f.ic, "channel mismatch");
+    assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
+    assert_eq!(colscale.len(), f.oc, "colscale length");
+    if let Some(b) = epi.bias {
+        assert_eq!(b.len(), f.oc, "bias length");
+    }
+    let oh = (x.h - f.kh) / stride + 1;
+    let ow = (x.w - f.kw) / stride + 1;
+    let kdim = f.kh * f.kw * f.ic;
+    let n_out = f.oc;
+    out.n = x.n;
+    out.h = oh;
+    out.w = ow;
+    out.c = n_out;
+    out.data.clear();
+    out.data.resize(x.n * oh * ow * n_out, 0.0);
+    if out.data.is_empty() {
+        return;
+    }
+
+    let rows_per_tile = (PANEL_BYTES / (ow * kdim).max(1)).clamp(1, oh);
+    let mut tiles: Vec<Tile> = Vec::new();
+    for (n, img) in out.data.chunks_mut(oh * ow * n_out).enumerate() {
+        for (t, slice) in img.chunks_mut(rows_per_tile * ow * n_out).enumerate() {
+            tiles.push(Tile {
+                n,
+                y0: t * rows_per_tile,
+                rows: slice.len() / (ow * n_out),
+                out: slice,
+            });
+        }
+    }
+
+    let macs = x.n * oh * ow * kdim * n_out;
+    let workers = worker_count(macs, tiles.len());
+    if workers <= 1 {
+        let mut scratch = Scratch::default();
+        for tile in tiles {
+            run_tile(x, f, stride, ow, colscale, epi, tile, &mut scratch);
+        }
+    } else {
+        let queue = std::sync::Mutex::new(tiles);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    let mut scratch = Scratch::default();
+                    loop {
+                        let tile = queue.lock().unwrap().pop();
+                        match tile {
+                            Some(tile) => {
+                                run_tile(x, f, stride, ow, colscale, epi, tile, &mut scratch)
+                            }
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Pack one row tile's i8 im2col panel, then GEMM it against the i8 filter
+/// with the requantizing epilogue into the tile's f32 output slice.
+#[allow(clippy::too_many_arguments)] // mirrors the f32 kernel's tile runner
+fn run_tile(
+    x: &QTensor,
+    f: &QFilter,
+    stride: usize,
+    ow: usize,
+    colscale: &[f32],
+    epi: Epilogue,
+    tile: Tile,
+    s: &mut Scratch,
+) {
+    let kdim = f.kh * f.kw * f.ic;
+    let seg = f.kw * x.c; // one contiguous input-row segment per kernel row
+    let m = tile.rows * ow;
+    s.panel.resize(m * kdim, 0);
+    for r in 0..tile.rows {
+        let oy = tile.y0 + r;
+        for ox in 0..ow {
+            let dst_base = (r * ow + ox) * kdim;
+            for dy in 0..f.kh {
+                let src = x.idx(tile.n, oy * stride + dy, ox * stride, 0);
+                let dst = dst_base + dy * seg;
+                s.panel[dst..dst + seg].copy_from_slice(&x.data[src..src + seg]);
+            }
+        }
+    }
+    gemm_i8(&s.panel, &f.data, m, kdim, f.oc, &f.nz_rows, colscale, epi, tile.out, &mut s.acc);
+}
+
+/// `c = epilogue(a (m x k) . b (k x n))`: i8 operands, i32 accumulation,
+/// f32 output through the per-column requantization scale. Register-blocked
+/// MR rows at a time. The `K` loop walks only `nz_rows` — the filter rows
+/// that are not entirely zero (the Wsparse structural-zero skip; see
+/// [`super::QFilter::nz_rows`]). i32 accumulation is exact, so neither the
+/// blocking nor the skip can change a bit of the result.
+#[allow(clippy::too_many_arguments)] // GEMM argument list mirrors the f32 kernel
+fn gemm_i8(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    nz_rows: &[u32],
+    colscale: &[f32],
+    epi: Epilogue,
+    c: &mut [f32],
+    acc: &mut Vec<i32>,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(colscale.len(), n);
+    if acc.len() != MR * n {
+        acc.resize(MR * n, 0);
+    }
+    let mut row = 0;
+    while row + MR <= m {
+        acc.fill(0);
+        {
+            let (a0, rest) = acc.split_at_mut(n);
+            let (a1, rest) = rest.split_at_mut(n);
+            let (a2, a3) = rest.split_at_mut(n);
+            let p0 = &a[row * k..(row + 1) * k];
+            let p1 = &a[(row + 1) * k..(row + 2) * k];
+            let p2 = &a[(row + 2) * k..(row + 3) * k];
+            let p3 = &a[(row + 3) * k..(row + 4) * k];
+            for &kk in nz_rows {
+                let kk = kk as usize;
+                let (v0, v1, v2, v3) =
+                    (p0[kk] as i32, p1[kk] as i32, p2[kk] as i32, p3[kk] as i32);
+                // activation-zero skip (the ASparse half of the paper's
+                // AWSparse policy): post-ReLU maps and the SD input halo
+                // quantize to exact zeros, and skipping a zero i32
+                // contribution is exact
+                if v0 == 0 && v1 == 0 && v2 == 0 && v3 == 0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for ((((&w, c0), c1), c2), c3) in brow
+                    .iter()
+                    .zip(a0.iter_mut())
+                    .zip(a1.iter_mut())
+                    .zip(a2.iter_mut())
+                    .zip(a3.iter_mut())
+                {
+                    let w = w as i32;
+                    *c0 += v0 * w;
+                    *c1 += v1 * w;
+                    *c2 += v2 * w;
+                    *c3 += v3 * w;
+                }
+            }
+        }
+        for r in 0..MR {
+            let crow = &mut c[(row + r) * n..(row + r + 1) * n];
+            let arow = &acc[r * n..(r + 1) * n];
+            for (col, ((cv, &av), &sc)) in
+                crow.iter_mut().zip(arow).zip(colscale).enumerate()
+            {
+                *cv = epi.apply(col, av as f32 * sc);
+            }
+        }
+        row += MR;
+    }
+    while row < m {
+        let arow = &a[row * k..(row + 1) * k];
+        let acc1 = &mut acc[..n];
+        acc1.fill(0);
+        for &kk in nz_rows {
+            let kk = kk as usize;
+            let v = arow[kk] as i32;
+            if v == 0 {
+                continue; // activation-zero skip, exact in i32
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &w) in acc1.iter_mut().zip(brow) {
+                *cv += v * (w as i32);
+            }
+        }
+        let crow = &mut c[row * n..(row + 1) * n];
+        for (col, ((cv, &av), &sc)) in crow.iter_mut().zip(acc1.iter()).zip(colscale).enumerate()
+        {
+            *cv = epi.apply(col, av as f32 * sc);
+        }
+        row += 1;
+    }
+}
+
+/// Scalar reference int8 convolution: the plain 7-deep loop with i32
+/// accumulation and the identical epilogue expression — the zero-tolerance
+/// oracle for [`conv2d_i8_into`] (i32 accumulation is exact, and the
+/// epilogue computes `acc as f32 * (x.scale * f.scales[o])` in the same
+/// operation order, so the two kernels agree bit for bit).
+pub fn conv2d_i8_naive(x: &QTensor, f: &QFilter, stride: usize, epi: Epilogue) -> Tensor {
+    assert_eq!(x.c, f.ic, "channel mismatch");
+    assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
+    let oh = (x.h - f.kh) / stride + 1;
+    let ow = (x.w - f.kw) / stride + 1;
+    let colscale: Vec<f32> = f.scales.iter().map(|&s| x.scale * s).collect();
+    let fidx = |kh: usize, kw: usize, ic: usize, oc: usize| {
+        ((kh * f.kw + kw) * f.ic + ic) * f.oc + oc
+    };
+    let mut out = Tensor::zeros(x.n, oh, ow, f.oc);
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for o in 0..f.oc {
+                    let mut acc: i32 = 0;
+                    for dy in 0..f.kh {
+                        for dx in 0..f.kw {
+                            for i in 0..x.c {
+                                let xv = x.data[x.idx(n, oy * stride + dy, ox * stride + dx, i)]
+                                    as i32;
+                                let wv = f.data[fidx(dy, dx, i, o)] as i32;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    *out.at_mut(n, oy, ox, o) = epi.apply(o, acc as f32 * colscale[o]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheme::{absmax, quantize_filter, quantize_into, scale_for_absmax};
+    use super::*;
+    use crate::tensor::Filter;
+    use crate::util::rng::Rng;
+
+    fn qpair(h: usize, w: usize, ic: usize, k: usize, oc: usize, seed: u64) -> (QTensor, QFilter) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(2, h, w, ic, &mut rng);
+        let f = Filter::randn(k, k, ic, oc, &mut rng);
+        let mut qx = QTensor::empty();
+        quantize_into(&x, scale_for_absmax(absmax(&x.data)), &mut qx);
+        (qx, quantize_filter(&f))
+    }
+
+    #[test]
+    fn blocked_kernel_is_bit_exact_with_naive() {
+        for (i, &(h, w, ic, k, oc, s)) in
+            [(6, 6, 3, 3, 4, 1), (9, 13, 5, 3, 7, 2), (5, 5, 1, 5, 1, 1)].iter().enumerate()
+        {
+            let (qx, qf) = qpair(h, w, ic, k, oc, 31 + i as u64);
+            let mut got = Tensor::zeros(0, 0, 0, 0);
+            conv2d_i8_into(&qx, &qf, s, Epilogue::none(), &mut got);
+            let want = conv2d_i8_naive(&qx, &qf, s, Epilogue::none());
+            assert_eq!(got.shape(), want.shape());
+            assert_eq!(got.max_abs_diff(&want), 0.0, "case {i} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn epilogue_fuses_bias_and_relu() {
+        let (qx, qf) = qpair(6, 6, 3, 3, 4, 77);
+        let bias: Vec<f32> = (0..4).map(|i| i as f32 - 1.5).collect();
+        let epi = Epilogue { bias: Some(&bias), relu: true };
+        let mut fused = Tensor::zeros(0, 0, 0, 0);
+        conv2d_i8_into(&qx, &qf, 1, epi, &mut fused);
+        // reference: plain requantize, then bias, then relu, separately
+        let mut plain = Tensor::zeros(0, 0, 0, 0);
+        conv2d_i8_into(&qx, &qf, 1, Epilogue::none(), &mut plain);
+        for (i, v) in plain.data.iter_mut().enumerate() {
+            *v = (*v + bias[i % 4]).max(0.0);
+        }
+        assert_eq!(fused.max_abs_diff(&plain), 0.0);
+        assert!(fused.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn quantized_conv_tracks_f32_conv() {
+        // not bit-exact (that is the point of quantization) but close:
+        // the i8 result must stay within a few quantization steps of f32
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(1, 8, 8, 16, &mut rng);
+        let f = Filter::randn(3, 3, 16, 8, &mut rng);
+        let want = crate::tensor::conv2d_valid(&x, &f, 1);
+        let mut qx = QTensor::empty();
+        quantize_into(&x, scale_for_absmax(absmax(&x.data)), &mut qx);
+        let mut got = Tensor::zeros(0, 0, 0, 0);
+        conv2d_i8_into(&qx, &quantize_filter(&f), 1, Epilogue::none(), &mut got);
+        let denom = absmax(&want.data).max(1e-6);
+        let rel = got.max_abs_diff(&want) / denom;
+        assert!(rel < 0.05, "relative error {rel}");
+    }
+}

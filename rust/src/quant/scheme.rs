@@ -1,0 +1,368 @@
+//! Quantization scheme: symmetric int8, per-output-channel for weights,
+//! per-tensor for activations.
+//!
+//! The scheme is the one the paper's Section 5.3 deployment targets (Edge
+//! TPU / NCS2 class int8 MAC arrays) actually use:
+//!
+//! * **Weights** — per-output-channel symmetric: channel `o` of a filter is
+//!   mapped through `q = round(w / scale[o])` with
+//!   `scale[o] = absmax_o / 127`, so every channel spends the full i8 range
+//!   on its own dynamic range and the zero point is exactly 0 (padding and
+//!   ReLU zeros stay exact).
+//! * **Activations** — per-tensor symmetric: one scale for the whole
+//!   feature map, calibrated at *compile* time from a seeded latent sweep
+//!   through the f32 program (see `engine::Program::build_owned_prec`), so
+//!   the serving hot path never inspects activation statistics.
+//! * **Accumulation** — i32. The largest contraction in the six benchmarks
+//!   (GP-GAN's 8192-wide bottleneck) peaks at `8192 * 127 * 127 < 2^28`,
+//!   far inside i32.
+//! * **Requantization** — `acc_i32 as f32 * (act_scale * scale[o])`, fused
+//!   with bias add and ReLU into the GEMM epilogue ([`super::Epilogue`]).
+//!
+//! # Examples
+//!
+//! Round-trip error of the symmetric scheme is bounded by half a step:
+//!
+//! ```
+//! use split_deconv::quant::{quantize_into, QTensor};
+//! use split_deconv::tensor::Tensor;
+//! let x = Tensor::from_vec(1, 1, 1, 4, vec![-1.27, -0.4, 0.004, 1.0]);
+//! let scale = 1.27 / 127.0; // absmax / 127
+//! let mut q = QTensor::empty();
+//! quantize_into(&x, scale, &mut q);
+//! assert_eq!(q.data, vec![-127, -40, 0, 100]);
+//! for (v, qv) in x.data.iter().zip(&q.data) {
+//!     assert!((v - *qv as f32 * scale).abs() <= scale / 2.0 + 1e-6);
+//! }
+//! ```
+//!
+//! Per-output-channel filter scales come from each channel's own absmax:
+//!
+//! ```
+//! use split_deconv::quant::quantize_filter;
+//! use split_deconv::tensor::Filter;
+//! // 1x1x1x2 filter: channel 0 holds 0.5, channel 1 holds -2.0
+//! let f = Filter::from_vec(1, 1, 1, 2, vec![0.5, -2.0]);
+//! let qf = quantize_filter(&f);
+//! assert_eq!(qf.data, vec![127, -127]); // both channels use the full range
+//! assert!((qf.scales[0] - 0.5 / 127.0).abs() < 1e-9);
+//! assert!((qf.scales[1] - 2.0 / 127.0).abs() < 1e-9);
+//! ```
+
+use crate::nn::LayerSpec;
+use crate::sd::split_filters;
+use crate::tensor::{Filter, Tensor};
+
+/// Numeric precision of a compiled program / serving stack.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 end to end (the reference path)
+    #[default]
+    F32,
+    /// int8 weights + activations, i32 accumulate, f32 requantize
+    Int8,
+}
+
+impl Precision {
+    /// Parse a CLI spelling (`f32` / `int8`, case-insensitive).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float" => Some(Precision::F32),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Quantized activation tensor: NHWC i8 payload + the per-tensor scale that
+/// maps it back to f32 (`v ~= q * scale`). Zero point is always 0
+/// (symmetric), so spatial zero-padding needs no offset handling.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+impl QTensor {
+    /// An empty (0-shaped) tensor — the arena slot form.
+    pub fn empty() -> QTensor {
+        QTensor { n: 0, h: 0, w: 0, c: 0, scale: 1.0, data: Vec::new() }
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        ((n * self.h + h) * self.w + w) * self.c + c
+    }
+
+    /// Zero-pad spatial dims into a caller-provided tensor (reshaped,
+    /// resized, zeroed in place, reusing capacity) — mirror of
+    /// [`Tensor::pad_into`]. Padding is exact: the symmetric scheme's zero
+    /// point is 0.
+    pub fn pad_into(
+        &self,
+        top: usize,
+        bottom: usize,
+        left: usize,
+        right: usize,
+        out: &mut QTensor,
+    ) {
+        out.n = self.n;
+        out.h = self.h + top + bottom;
+        out.w = self.w + left + right;
+        out.c = self.c;
+        out.scale = self.scale;
+        out.data.clear();
+        out.data.resize(out.n * out.h * out.w * out.c, 0);
+        for n in 0..self.n {
+            for h in 0..self.h {
+                let src = self.idx(n, h, 0, 0);
+                let dst = out.idx(n, h + top, left, 0);
+                out.data[dst..dst + self.w * self.c]
+                    .copy_from_slice(&self.data[src..src + self.w * self.c]);
+            }
+        }
+    }
+}
+
+/// Quantized filter: HWIO i8 payload + per-output-channel scales. Exactly
+/// like the f32 [`Filter`], the HWIO data *is* the `K x N` GEMM operand
+/// (`K = kh*kw*ic` contiguous rows of `N = oc`), so the int8 conv kernel
+/// consumes it with no repacking.
+#[derive(Clone, Debug)]
+pub struct QFilter {
+    pub kh: usize,
+    pub kw: usize,
+    pub ic: usize,
+    pub oc: usize,
+    /// per-output-channel requantization scales, length `oc`
+    pub scales: Vec<f32>,
+    pub data: Vec<i8>,
+    /// indices of the GEMM `K`-rows (`kh*kw*ic` taps) that are not entirely
+    /// zero across the output channels. The int8 GEMM iterates only these:
+    /// the paper's Wsparse skip policy applied in software. SD sub-filters
+    /// of the expansion case carry whole rows/columns of structural zeros
+    /// (`P_K > 0` — ~31% of DCGAN's split taps, ~44% of FST's), and the
+    /// symmetric scheme maps exact zeros to exact zeros, so skipping them
+    /// changes no bit of the i32 accumulation.
+    pub nz_rows: Vec<u32>,
+}
+
+/// Quantize one f32 value at a given scale: round-to-nearest, clamped to
+/// the symmetric i8 range [-127, 127] (-128 unused, keeping negation safe).
+#[inline]
+pub fn quantize_value(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Per-tensor activation scale for a given absolute maximum.
+/// A zero (or non-finite) absmax maps to scale 1.0: the tensor is all
+/// zeros, and any positive scale represents it exactly.
+#[inline]
+pub fn scale_for_absmax(absmax: f32) -> f32 {
+    if absmax > 0.0 && absmax.is_finite() {
+        absmax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Largest |v| over a slice.
+pub fn absmax(data: &[f32]) -> f32 {
+    data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Quantize an f32 activation tensor at a fixed (calibrated) per-tensor
+/// scale into a caller-provided [`QTensor`] (reshaped/resized in place,
+/// reusing capacity). Values beyond `127 * scale` saturate — the calibrated
+/// serving path's documented behavior for out-of-sweep outliers.
+pub fn quantize_into(x: &Tensor, scale: f32, out: &mut QTensor) {
+    out.n = x.n;
+    out.h = x.h;
+    out.w = x.w;
+    out.c = x.c;
+    out.scale = scale;
+    out.data.clear();
+    let inv = 1.0 / scale;
+    out.data.extend(x.data.iter().map(|&v| quantize_value(v, inv)));
+}
+
+/// Quantize a filter with per-output-channel symmetric scales
+/// (`scale[o] = absmax_o / 127`). Channels that are entirely zero get scale
+/// 1.0 (and all-zero payload).
+pub fn quantize_filter(f: &Filter) -> QFilter {
+    let mut chan_absmax = vec![0.0f32; f.oc];
+    for row in f.data.chunks_exact(f.oc) {
+        for (m, &v) in chan_absmax.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    let scales: Vec<f32> = chan_absmax.iter().map(|&m| scale_for_absmax(m)).collect();
+    let inv: Vec<f32> = scales.iter().map(|s| 1.0 / s).collect();
+    let mut data = Vec::with_capacity(f.data.len());
+    let mut nz_rows = Vec::new();
+    for (r, row) in f.data.chunks_exact(f.oc).enumerate() {
+        data.extend(row.iter().zip(&inv).map(|(&v, &i)| quantize_value(v, i)));
+        if data[r * f.oc..(r + 1) * f.oc].iter().any(|&q| q != 0) {
+            nz_rows.push(r as u32);
+        }
+    }
+    QFilter { kh: f.kh, kw: f.kw, ic: f.ic, oc: f.oc, scales, data, nz_rows }
+}
+
+/// Quantize a dense weight matrix (`n_in x n_out` row-major) with
+/// per-output-column scales. A dense layer *is* a 1x1 convolution over a
+/// `1 x 1 x n_in` map, and the row-major matrix *is* that filter's HWIO
+/// payload, so this reuses [`quantize_filter`] verbatim — the engine lowers
+/// int8 dense layers onto the int8 conv kernel through this. Takes the
+/// buffer by value: the engine owns it at lowering time, and GP-GAN's
+/// bottleneck matrix (~131 MB) must not be copied just to be quantized.
+pub fn quantize_dense(w: Vec<f32>, n_in: usize, n_out: usize) -> QFilter {
+    assert_eq!(w.len(), n_in * n_out, "dense weight size");
+    quantize_filter(&Filter::from_vec(1, 1, n_in, n_out, w))
+}
+
+/// Split a deconvolution filter into its `s*s` SD sub-filters and pack each
+/// as int8 (per-output-channel scales per sub-filter) — the compile-time
+/// step that makes the SD path itself run quantized: every split's packed
+/// HWIO payload is the `K x N` operand of one int8 stride-1 convolution.
+pub fn pack_sd_splits(f: &Filter, s: usize) -> Vec<QFilter> {
+    split_filters(f, s).iter().map(quantize_filter).collect()
+}
+
+/// Geometry of the packed SD sub-filters of one deconvolution layer, read
+/// off an **actual packing** (a unit-channel probe filter run through the
+/// same [`split_filters`] path the engine compiles) rather than re-derived
+/// from the closed-form `SdGeometry` equations. The `commodity` efficiency
+/// models consume this, so their MAC-time estimates follow the filter
+/// geometry the quantized engine really executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SdPackShape {
+    /// packed sub-filter side (`K_T`)
+    pub k_t: usize,
+    /// number of sub-filters (`s*s`)
+    pub n_splits: usize,
+    /// per-split stride-1 conv output height (`in_h + K_T - 1`)
+    pub conv_h: usize,
+    /// per-split stride-1 conv output width (`in_w + K_T - 1`)
+    pub conv_w: usize,
+}
+
+impl SdPackShape {
+    /// Table-2-convention MACs of the split convolutions
+    /// (`IH*IW * n_splits*K_T^2 * IC*OC` — interior compute, boundary halo
+    /// excluded), derived from the packed sub-filter sizes.
+    pub fn table_macs(&self, l: &LayerSpec) -> u64 {
+        (l.in_h * l.in_w * self.n_splits * self.k_t * self.k_t * l.in_c * l.out_c) as u64
+    }
+}
+
+/// [`SdPackShape`] of a deconvolution layer, obtained by actually packing a
+/// probe filter of the layer's spatial shape (channels collapsed to 1x1 —
+/// splitting is channel-independent).
+pub fn sd_pack_shape(l: &LayerSpec) -> SdPackShape {
+    let splits = split_filters(&Filter::zeros(l.k, l.k, 1, 1), l.s);
+    let k_t = splits[0].kh;
+    SdPackShape {
+        k_t,
+        n_splits: splits.len(),
+        conv_h: l.in_h + k_t - 1,
+        conv_w: l.in_w + k_t - 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_roundtrip_within_half_step() {
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(1, 5, 5, 7, &mut rng);
+        let scale = scale_for_absmax(absmax(&x.data));
+        let mut q = QTensor::empty();
+        quantize_into(&x, scale, &mut q);
+        for (&v, &qv) in x.data.iter().zip(&q.data) {
+            let back = qv as f32 * scale;
+            assert!(
+                (v - back).abs() <= scale / 2.0 + scale * 1e-5,
+                "v={v} back={back} scale={scale}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_tensor_scale_is_safe() {
+        let x = Tensor::zeros(1, 2, 2, 1);
+        let scale = scale_for_absmax(absmax(&x.data));
+        let mut q = QTensor::empty();
+        quantize_into(&x, scale, &mut q);
+        assert!(q.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn filter_channels_use_full_range() {
+        let mut rng = Rng::new(5);
+        let f = Filter::randn(3, 3, 4, 6, &mut rng);
+        let qf = quantize_filter(&f);
+        // every channel's largest |q| is exactly 127 (its absmax maps there)
+        for o in 0..f.oc {
+            let maxq = (0..f.kh * f.kw * f.ic)
+                .map(|r| (qf.data[r * f.oc + o] as i32).abs())
+                .max()
+                .unwrap();
+            assert_eq!(maxq, 127, "channel {o}");
+        }
+    }
+
+    #[test]
+    fn qtensor_pad_matches_f32_pad() {
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(2, 3, 4, 2, &mut rng);
+        let scale = scale_for_absmax(absmax(&x.data));
+        let mut q = QTensor::empty();
+        quantize_into(&x, scale, &mut q);
+        let mut qp = QTensor::empty();
+        q.pad_into(1, 2, 3, 0, &mut qp);
+        let xp = x.pad(1, 2, 3, 0);
+        assert_eq!([qp.n, qp.h, qp.w, qp.c], xp.shape());
+        // padded zeros are exact zeros; interior cells match direct quant
+        let mut qref = QTensor::empty();
+        quantize_into(&xp, scale, &mut qref);
+        assert_eq!(qp.data, qref.data);
+    }
+
+    #[test]
+    fn sd_pack_shape_matches_real_packing() {
+        use crate::sd::SdGeometry;
+        for (k, s, p) in [(5, 2, 2), (4, 2, 1), (3, 2, 1), (2, 2, 0)] {
+            let l = LayerSpec::deconv("d", 8, 6, 3, 4, k, s, p, 0);
+            let shape = sd_pack_shape(&l);
+            let g = SdGeometry::new(k, s, p);
+            assert_eq!(shape.k_t, g.k_t);
+            assert_eq!(shape.n_splits, g.n_splits());
+            assert_eq!(shape.conv_h, g.conv_out(8));
+            assert_eq!(shape.conv_w, g.conv_out(6));
+            assert_eq!(shape.table_macs(&l), l.sd_macs());
+        }
+    }
+
+    #[test]
+    fn precision_parses_cli_spellings() {
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("F32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+}

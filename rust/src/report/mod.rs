@@ -389,6 +389,18 @@ pub fn print_table4(fst_div: usize) -> Result<()> {
     Ok(())
 }
 
+/// Int8 accuracy table: SSIM of the int8-quantized engine against the f32
+/// engine on all six benchmarks (the quantized serving mode's quality
+/// check; gated >= 0.97 in rust/tests/quant.rs).
+pub fn print_quant_table(big_div: usize) -> Result<()> {
+    println!("Quantization: int8 engine vs f32 engine (SSIM, SD path)");
+    println!("{:<10} {:>12}", "Benchmark", "SSIM int8");
+    for r in quality::quant_table(7, big_div)? {
+        println!("{:<10} {:>12.4}", r.benchmark, r.ssim);
+    }
+    Ok(())
+}
+
 /// Networks helper re-export for benches.
 pub fn all_networks() -> Vec<NetworkSpec> {
     networks::all()

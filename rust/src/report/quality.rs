@@ -17,7 +17,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::engine::{bridge_reshape, Plan};
+use crate::engine::{bridge_reshape, Plan, Precision};
 use crate::nn::{LayerKind, LayerSpec, NetworkSpec};
 use crate::sd::{chang::chang_deconv2d, nzp::nzp_deconv2d, sd_deconv2d, shi::shi_deconv2d};
 use crate::tensor::{conv2d, deconv2d, dense, relu, tanh, Filter, Tensor};
@@ -91,7 +91,7 @@ pub fn run_network_with(
                 if w.len() != l.in_h * l.in_w * l.in_c * l.out_c {
                     bail!("{}.{}: dense weight size mismatch", net.name, l.name);
                 }
-                dense(&hv, w, l.out_c)
+                dense(&hv, w, l.out_c)?
             }
             (LayerKind::Conv, LayerWeights::Filter(f)) => conv2d(&hv, f, l.s, l.p),
             (LayerKind::Deconv, LayerWeights::Filter(f)) => run_deconv(&hv, f, l, imp),
@@ -199,6 +199,52 @@ pub fn table4(fst_div: usize) -> Result<Vec<QualityRow>> {
         });
     }
     Ok(rows)
+}
+
+/// One int8-accuracy row: SSIM of the int8-quantized engine output against
+/// the f32 engine output (SD path both sides, identical weights and input).
+pub struct QuantRow {
+    pub benchmark: &'static str,
+    pub ssim: f64,
+}
+
+/// SSIM of the int8 engine vs the f32 engine for one network on a seeded
+/// input: both programs compile from the same weights, the int8 side with
+/// its compile-time calibration, and run the same forward. Dynamic range 2
+/// (tanh outputs in [-1, 1]).
+pub fn int8_vs_f32_ssim(net: &NetworkSpec, weight_seed: u64, z_seed: u64) -> Result<f64> {
+    let l0 = &net.layers[0];
+    let mut rng = Rng::new(z_seed);
+    let input = Tensor::randn(1, l0.in_h, l0.in_w, l0.in_c, &mut rng);
+    let weights = build_weights(net, weight_seed);
+    let mut fplan = Plan::build(net, &weights, DeconvImpl::Sd)?;
+    let mut qplan = Plan::build_owned_prec(net, weights, DeconvImpl::Sd, Precision::Int8)?;
+    let f = fplan.forward(&input)?;
+    let q = qplan.forward(&input)?;
+    Ok(crate::metrics::ssim_tensor(&q, &f, 2.0))
+}
+
+/// The int8 accuracy table (EXPERIMENTS.md #Quantization): int8-vs-f32
+/// SSIM for all six benchmarks. MDE and FST run spatially scaled by
+/// `big_div` (structure, channel mix, and SD geometry identical) to keep
+/// the full-resolution pair tractable; pass 1 for full scale.
+pub fn quant_table(weight_seed: u64, big_div: usize) -> Result<Vec<QuantRow>> {
+    let nets = vec![
+        crate::networks::dcgan(),
+        crate::networks::artgan(),
+        crate::networks::sngan(),
+        crate::networks::gpgan(),
+        crate::networks::scaled(&crate::networks::mde(), big_div),
+        crate::networks::scaled(&crate::networks::fst(), big_div),
+    ];
+    nets.iter()
+        .map(|net| {
+            Ok(QuantRow {
+                benchmark: net.name,
+                ssim: int8_vs_f32_ssim(net, weight_seed, 2)?,
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]

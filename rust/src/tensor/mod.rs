@@ -2,7 +2,7 @@
 //! module builds on. Layout matches the python side (ref.py): activations
 //! NHWC, filters HWIO, deconvolution uses scatter semantics.
 
-mod ops;
+pub(crate) mod ops;
 
 pub use ops::*;
 

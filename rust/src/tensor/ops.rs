@@ -73,7 +73,9 @@ pub fn conv2d_naive(x: &Tensor, f: &Filter, stride: usize) -> Tensor {
 }
 
 /// Per-thread im2col scratch target: keep one tile's panel ~L2-resident.
-const PANEL_BYTES: usize = 256 * 1024;
+/// Shared with the int8 kernel (`quant::gemm`), which fits 4x the rows in
+/// the same budget (i8 elements).
+pub(crate) const PANEL_BYTES: usize = 256 * 1024;
 
 /// Micro-kernel register-block height (output pixels per GEMM block).
 const MR: usize = 4;
@@ -178,8 +180,10 @@ pub fn conv2d_gemm_into(x: &Tensor, f: &Filter, stride: usize, out: &mut Tensor)
 }
 
 /// Worker-pool size: 1 for small problems, else `SD_CONV_THREADS` or the
-/// machine's available parallelism, capped by the tile count.
-fn worker_count(macs: usize, tiles: usize) -> usize {
+/// machine's available parallelism, capped by the tile count. ONE policy
+/// for both the f32 and the int8 (`quant::gemm`) kernels, so f32-vs-int8
+/// benches compare kernels, not thread policies.
+pub(crate) fn worker_count(macs: usize, tiles: usize) -> usize {
     if tiles <= 1 || macs < PARALLEL_MIN_MACS {
         return 1;
     }
@@ -330,17 +334,27 @@ pub fn zero_insert(x: &Tensor, stride: usize) -> Tensor {
 }
 
 /// Dense (fully-connected) layer: x viewed as (N, H\*W\*C) @ w (in x out).
-pub fn dense(x: &Tensor, w: &[f32], n_out: usize) -> Tensor {
+/// A weight buffer whose length disagrees with `n_in * n_out` is an error
+/// (not a panic — the serving stack routes it through the coordinator's
+/// failed-batch path).
+pub fn dense(x: &Tensor, w: &[f32], n_out: usize) -> anyhow::Result<Tensor> {
     let mut out = Tensor::zeros(0, 0, 0, 0);
-    dense_into(x, w, n_out, &mut out);
-    out
+    dense_into(x, w, n_out, &mut out)?;
+    Ok(out)
 }
 
 /// [`dense`] into a caller-provided tensor (reshaped, resized, zeroed in
 /// place, reusing capacity). Accumulation order identical to [`dense`].
-pub fn dense_into(x: &Tensor, w: &[f32], n_out: usize, out: &mut Tensor) {
+pub fn dense_into(x: &Tensor, w: &[f32], n_out: usize, out: &mut Tensor) -> anyhow::Result<()> {
     let n_in = x.h * x.w * x.c;
-    assert_eq!(w.len(), n_in * n_out, "dense weight size");
+    if w.len() != n_in * n_out {
+        anyhow::bail!(
+            "dense weight length {} != n_in {} x n_out {}",
+            w.len(),
+            n_in,
+            n_out
+        );
+    }
     out.n = x.n;
     out.h = 1;
     out.w = 1;
@@ -361,6 +375,7 @@ pub fn dense_into(x: &Tensor, w: &[f32], n_out: usize, out: &mut Tensor) {
             }
         }
     }
+    Ok(())
 }
 
 /// In-place ReLU.
@@ -460,8 +475,8 @@ mod tests {
 
         let w: Vec<f32> = (0..x.h * x.w * x.c * 5).map(|_| rng.normal()).collect();
         let mut dout = Tensor::from_vec(1, 1, 1, 3, vec![7.0; 3]);
-        dense_into(&x, &w, 5, &mut dout);
-        let dfresh = dense(&x, &w, 5);
+        dense_into(&x, &w, 5, &mut dout).unwrap();
+        let dfresh = dense(&x, &w, 5).unwrap();
         assert_eq!(dout.shape(), dfresh.shape());
         assert_eq!(dout.max_abs_diff(&dfresh), 0.0);
     }
@@ -470,8 +485,23 @@ mod tests {
     fn dense_matches_manual() {
         let x = Tensor::from_vec(1, 1, 2, 1, vec![2.0, 3.0]);
         let w = vec![1.0, 10.0, 100.0, 1000.0]; // 2x2
-        let y = dense(&x, &w, 2);
+        let y = dense(&x, &w, 2).unwrap();
         assert_eq!(y.data, vec![2.0 + 300.0, 20.0 + 3000.0]);
+    }
+
+    #[test]
+    fn dense_weight_length_mismatch_is_an_error_not_a_panic() {
+        // regression: this used to be a slice-index panic (pre-PR-2 style);
+        // it must flow as anyhow::Error like the rest of the kernel sweep
+        let x = Tensor::from_vec(1, 1, 2, 1, vec![2.0, 3.0]);
+        let short = vec![1.0, 10.0, 100.0]; // needs 2x2 = 4
+        assert!(dense(&x, &short, 2).is_err());
+        let mut out = Tensor::zeros(0, 0, 0, 0);
+        assert!(dense_into(&x, &short, 2, &mut out).is_err());
+        // and a correct call after the failed one still works
+        let w = vec![1.0, 10.0, 100.0, 1000.0];
+        assert!(dense_into(&x, &w, 2, &mut out).is_ok());
+        assert_eq!(out.data, vec![302.0, 3020.0]);
     }
 
     #[test]

@@ -191,6 +191,7 @@ fn coordinator_routes_models_by_name() {
         queue_cap: 16,
         model: "sngan".to_string(),
         workers: 2,
+        ..ServerConfig::default()
     };
     let net = networks::sngan();
     let server = Server::start_native(cfg, 3).unwrap();

@@ -1,0 +1,306 @@
+//! Quant subsystem acceptance tests: the scheme's property bounds, the
+//! int8 GEMM's zero-tolerance oracles, the SSIM accuracy gate of the
+//! quantized engine (>= 0.97 vs f32 on all six benchmarks), and the
+//! quantized serving mode end to end.
+//!
+//! The big benchmarks run spatially scaled (same factors as
+//! rust/tests/engine_equivalence.rs) so the debug-mode suite stays
+//! minutes-scale; scaling changes resolutions only — layer kinds, channel
+//! mixes, SD geometries, and the quantization scheme are identical, and
+//! DCGAN is additionally gated at full scale. Full-resolution SSIM numbers
+//! are recorded in EXPERIMENTS.md (#Quantization) from release runs of
+//! `repro report quant`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::engine::{DeconvImpl, Plan, Precision, Program};
+use split_deconv::networks;
+use split_deconv::nn::NetworkSpec;
+use split_deconv::quant::{
+    absmax, conv2d_i8_into, conv2d_i8_naive, pack_sd_splits, quantize_filter, quantize_into,
+    scale_for_absmax, Epilogue, QFilter, QTensor,
+};
+use split_deconv::report::quality;
+use split_deconv::tensor::{Filter, Tensor};
+use split_deconv::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Scheme property tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantize_dequantize_roundtrip_error_at_most_half_a_step() {
+    let mut rng = Rng::new(41);
+    for (n, h, w, c) in [(1, 3, 3, 2), (2, 7, 5, 9), (1, 1, 1, 64), (3, 4, 4, 1)] {
+        let x = Tensor::randn(n, h, w, c, &mut rng);
+        let scale = scale_for_absmax(absmax(&x.data));
+        let mut q = QTensor::empty();
+        quantize_into(&x, scale, &mut q);
+        for (&v, &qv) in x.data.iter().zip(&q.data) {
+            let err = (v - qv as f32 * scale).abs();
+            assert!(
+                err <= scale / 2.0 + scale * 1e-5,
+                "[{n},{h},{w},{c}] v={v}: round-trip error {err} > scale/2 = {}",
+                scale / 2.0
+            );
+        }
+    }
+}
+
+#[test]
+fn per_channel_scales_are_monotone_in_channel_absmax() {
+    // scale[o] = absmax_o / 127: a channel with a larger dynamic range must
+    // never get a smaller quantization step
+    let mut rng = Rng::new(42);
+    for trial in 0..8 {
+        let f = Filter::randn(3, 3, 4, 10, &mut rng);
+        let qf = quantize_filter(&f);
+        let mut chan_absmax = vec![0.0f32; f.oc];
+        for row in f.data.chunks_exact(f.oc) {
+            for (m, &v) in chan_absmax.iter_mut().zip(row) {
+                *m = m.max(v.abs());
+            }
+        }
+        let mut order: Vec<usize> = (0..f.oc).collect();
+        order.sort_by(|&a, &b| chan_absmax[a].total_cmp(&chan_absmax[b]));
+        for pair in order.windows(2) {
+            assert!(
+                qf.scales[pair[0]] <= qf.scales[pair[1]] + f32::EPSILON,
+                "trial {trial}: scales not monotone in channel absmax"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 GEMM oracles
+// ---------------------------------------------------------------------------
+
+/// Widened-f32 reference: the same contraction with every i8 operand
+/// widened to f32. All products are integers <= 127*127 and every partial
+/// sum here stays below 2^24 (k*k*ic <= 1000 in the shapes used), the
+/// range where f32 integer arithmetic is exact — so this must agree with
+/// the i32 kernel bit for bit.
+fn conv2d_i8_widened_f32(x: &QTensor, f: &QFilter, stride: usize) -> Tensor {
+    let oh = (x.h - f.kh) / stride + 1;
+    let ow = (x.w - f.kw) / stride + 1;
+    let colscale: Vec<f32> = f.scales.iter().map(|&s| x.scale * s).collect();
+    let fidx =
+        |kh: usize, kw: usize, ic: usize, oc: usize| ((kh * f.kw + kw) * f.ic + ic) * f.oc + oc;
+    let mut out = Tensor::zeros(x.n, oh, ow, f.oc);
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for o in 0..f.oc {
+                    let mut acc = 0.0f32;
+                    for dy in 0..f.kh {
+                        for dx in 0..f.kw {
+                            for i in 0..x.c {
+                                let xv =
+                                    x.data[x.idx(n, oy * stride + dy, ox * stride + dx, i)] as f32;
+                                let wv = f.data[fidx(dy, dx, i, o)] as f32;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    *out.at_mut(n, oy, ox, o) = acc * colscale[o];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn i8_gemm_bit_exact_with_widened_f32_reference_on_random_shapes() {
+    let mut rng = Rng::new(77);
+    // k*k*ic kept <= 1000 so the widened-f32 sums stay exactly representable
+    for &(h, w, ic, k, oc, s) in &[
+        (7usize, 9usize, 8usize, 3usize, 5usize, 1usize),
+        (6, 6, 24, 2, 9, 2),
+        (10, 10, 4, 5, 6, 1),
+        (5, 8, 100, 3, 7, 2),
+    ] {
+        let x = Tensor::randn(2, h, w, ic, &mut rng);
+        let f = Filter::randn(k, k, ic, oc, &mut rng);
+        let mut qx = QTensor::empty();
+        quantize_into(&x, scale_for_absmax(absmax(&x.data)), &mut qx);
+        let qf = quantize_filter(&f);
+        let mut got = Tensor::zeros(0, 0, 0, 0);
+        conv2d_i8_into(&qx, &qf, s, Epilogue::none(), &mut got);
+        let want = conv2d_i8_widened_f32(&qx, &qf, s);
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "shape ({h},{w},{ic},k{k},oc{oc},s{s}) not bit-exact vs widened f32"
+        );
+    }
+}
+
+#[test]
+fn i8_gemm_bit_exact_with_naive_oracle_on_packed_sd_splits() {
+    // the engine's real operands: SD sub-filters of the expansion case
+    // carry structural zero rows (nz_rows skip) and the padded input halo
+    // carries quantized-zero activations (value skip) — both skips must
+    // leave the result bit-identical to the unskipped naive oracle
+    let mut rng = Rng::new(55);
+    let f = Filter::randn(5, 5, 6, 4, &mut rng); // DCGAN-style k5 s2
+    let splits = pack_sd_splits(&f, 2);
+    assert_eq!(splits.len(), 4);
+    assert!(
+        splits.iter().any(|q| q.nz_rows.len() < q.kh * q.kw * q.ic),
+        "expansion-case splits must expose structural zero rows to skip"
+    );
+    let x = Tensor::randn(2, 6, 6, 6, &mut rng);
+    let mut relu_x = x.clone();
+    split_deconv::tensor::relu(&mut relu_x); // realistic zero-rich input
+    let mut qx = QTensor::empty();
+    quantize_into(&relu_x, scale_for_absmax(absmax(&relu_x.data)), &mut qx);
+    let mut qpad = QTensor::empty();
+    qx.pad_into(2, 2, 2, 2, &mut qpad); // SD halo: p_i = k_t - 1 = 2
+    for (i, qf) in splits.iter().enumerate() {
+        let mut got = Tensor::zeros(0, 0, 0, 0);
+        conv2d_i8_into(&qpad, qf, 1, Epilogue::none(), &mut got);
+        let want = conv2d_i8_naive(&qpad, qf, 1, Epilogue::none());
+        assert_eq!(got.max_abs_diff(&want), 0.0, "split {i} not bit-exact");
+    }
+}
+
+#[test]
+fn quantized_filter_preserves_structural_zeros() {
+    // Eq. 2 expansion zeros must survive quantization exactly (symmetric
+    // scheme: 0 -> 0), or the Wsparse skip would be unsound
+    let mut rng = Rng::new(60);
+    let f = Filter::randn(5, 5, 3, 4, &mut rng);
+    for (split, qsplit) in split_deconv::sd::split_filters(&f, 2)
+        .iter()
+        .zip(pack_sd_splits(&f, 2))
+    {
+        for (&v, &q) in split.data.iter().zip(&qsplit.data) {
+            if v == 0.0 {
+                assert_eq!(q, 0, "structural zero quantized to {q}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSIM accuracy gate (the acceptance bar of the quantized engine)
+// ---------------------------------------------------------------------------
+
+/// Debug-scale variants of all six benchmarks (same factors as
+/// engine_equivalence) plus full-scale DCGAN.
+fn gate_nets() -> Vec<NetworkSpec> {
+    vec![
+        networks::dcgan(),
+        networks::scaled(&networks::dcgan(), 2),
+        networks::scaled(&networks::sngan(), 2),
+        networks::scaled(&networks::artgan(), 8),
+        networks::scaled(&networks::gpgan(), 4),
+        networks::scaled(&networks::mde(), 8),
+        networks::scaled(&networks::fst(), 16),
+    ]
+}
+
+#[test]
+fn int8_engine_ssim_vs_f32_at_least_0_97_on_all_six_nets() {
+    for net in gate_nets() {
+        let ssim = quality::int8_vs_f32_ssim(&net, 5, 23).unwrap();
+        assert!(
+            ssim >= 0.97,
+            "{}: int8-vs-f32 SSIM {ssim:.4} below the 0.97 gate",
+            net.name
+        );
+        assert!(ssim <= 1.0 + 1e-9, "{}: SSIM {ssim} out of range", net.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized serving mode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_serving_matches_the_int8_plan_bit_for_bit() {
+    // a 2-worker pool over a shared int8 Program must serve exactly what a
+    // single-threaded int8 plan computes (calibrated scales are compile-
+    // time constants, so batching and worker identity cannot leak in)
+    let net = networks::scaled(&networks::dcgan(), 2);
+    let program =
+        Arc::new(Program::from_seed_prec(&net, DeconvImpl::Sd, 7, Precision::Int8).unwrap());
+    assert_eq!(program.precision(), Precision::Int8);
+    let cfg = ServerConfig {
+        max_batch: 2,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 16,
+        workers: 2,
+        precision: Precision::Int8,
+        ..ServerConfig::default()
+    };
+    let server = Server::start_native_program(cfg, program.clone()).unwrap();
+    let mut plan = Plan::from_program(program);
+    let mut rng = Rng::new(5);
+    let zs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(plan.input_len())).collect();
+    let rxs: Vec<_> = zs
+        .iter()
+        .map(|z| server.submit_blocking(z.clone()).unwrap())
+        .collect();
+    for (z, rx) in zs.iter().zip(rxs) {
+        let resp = rx.recv().unwrap();
+        let want = plan.execute_batch(std::slice::from_ref(z)).unwrap();
+        assert_eq!(resp.image, want[0], "served int8 image != int8 plan output");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn serve_native_int8_smoke_on_full_scale_models() {
+    // the ServerConfig.precision knob end to end through start_native's
+    // by-name routing (full-scale compile + calibration + serve); the
+    // remaining four models go through the same code path and are covered
+    // at full scale by the CI serve --precision int8 step
+    for model in ["dcgan", "sngan"] {
+        let cfg = ServerConfig {
+            max_batch: 2,
+            batch_timeout: Duration::from_millis(1),
+            queue_cap: 8,
+            model: model.to_string(),
+            workers: 1,
+            precision: Precision::Int8,
+        };
+        let net = networks::by_name(model).unwrap();
+        let server = Server::start_native(cfg, 3).unwrap();
+        let mut rng = Rng::new(9);
+        let rx = server
+            .submit_blocking(rng.normal_vec(net.input_elems()))
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(!resp.image.is_empty(), "{model}: empty int8 image");
+        assert!(
+            resp.image.iter().all(|v| v.is_finite() && v.abs() <= 1.0 + 1e-5),
+            "{model}: int8 tanh output out of range"
+        );
+        server.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epilogue fusion property
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_relu_epilogue_equals_requantize_then_relu() {
+    let mut rng = Rng::new(91);
+    let x = Tensor::randn(1, 8, 8, 5, &mut rng);
+    let f = Filter::randn(3, 3, 5, 6, &mut rng);
+    let mut qx = QTensor::empty();
+    quantize_into(&x, scale_for_absmax(absmax(&x.data)), &mut qx);
+    let qf: QFilter = quantize_filter(&f);
+    let mut fused = Tensor::zeros(0, 0, 0, 0);
+    conv2d_i8_into(&qx, &qf, 1, Epilogue::relu(), &mut fused);
+    let mut plain = conv2d_i8_naive(&qx, &qf, 1, Epilogue::none());
+    split_deconv::tensor::relu(&mut plain);
+    assert_eq!(fused.max_abs_diff(&plain), 0.0);
+}
