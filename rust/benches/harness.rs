@@ -86,7 +86,7 @@ impl JsonSink {
 
     /// Record one benchmark result.
     pub fn record(&mut self, r: &BenchResult) {
-        self.push_entry(r, None);
+        self.push_entry(r, None, None);
     }
 
     /// Record an optimized result together with its speedup over a baseline
@@ -95,10 +95,31 @@ impl JsonSink {
     /// rather than emitting invalid JSON.
     pub fn record_speedup(&mut self, baseline: &BenchResult, optimized: &BenchResult) {
         let s = baseline.min_s / optimized.min_s;
-        self.push_entry(optimized, if s.is_finite() { Some(s) } else { None });
+        self.push_entry(optimized, if s.is_finite() { Some(s) } else { None }, None);
     }
 
-    fn push_entry(&mut self, r: &BenchResult, speedup: Option<f64>) {
+    /// Record a result with its achieved GFLOP/s (from min-over-iters).
+    pub fn record_gflops(&mut self, r: &BenchResult, gflops: f64) {
+        self.push_entry(r, None, if gflops.is_finite() { Some(gflops) } else { None });
+    }
+
+    /// Record a result with both a speedup over `baseline` and its
+    /// achieved GFLOP/s — the hotpath GEMM table's row shape.
+    pub fn record_speedup_gflops(
+        &mut self,
+        baseline: &BenchResult,
+        optimized: &BenchResult,
+        gflops: f64,
+    ) {
+        let s = baseline.min_s / optimized.min_s;
+        self.push_entry(
+            optimized,
+            if s.is_finite() { Some(s) } else { None },
+            if gflops.is_finite() { Some(gflops) } else { None },
+        );
+    }
+
+    fn push_entry(&mut self, r: &BenchResult, speedup: Option<f64>, gflops: Option<f64>) {
         let mut e = format!(
             "{{\"name\":\"{}\",\"iters\":{},\"mean_ms\":{:.6},\"min_ms\":{:.6}",
             json_escape(&r.name),
@@ -108,6 +129,9 @@ impl JsonSink {
         );
         if let Some(s) = speedup {
             e.push_str(&format!(",\"speedup\":{s:.4}"));
+        }
+        if let Some(g) = gflops {
+            e.push_str(&format!(",\"gflops\":{g:.3}"));
         }
         e.push('}');
         self.entries.push(e);

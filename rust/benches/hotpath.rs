@@ -1,7 +1,9 @@
 //! Bench target: hot-path microbenchmarks for the section-Perf optimization
-//! pass — the rust conv core, the SD transform pipeline, the interleave
-//! (stride-write) step, the simulators' counting loops, and (when artifacts
-//! exist) the serving path end-to-end.
+//! pass — the rust conv core (SIMD-vs-scalar microkernel gate, GFLOP/s and
+//! packing-time columns, int8-vs-f32 gate), the SD transform pipeline, the
+//! interleave (stride-write) step, the simulators' counting loops, and
+//! (when artifacts exist) the serving path end-to-end. CI publishes the
+//! `--json` rows as BENCH_hotpath.json at the repo root.
 
 #[path = "harness.rs"]
 mod harness;
@@ -10,14 +12,16 @@ use std::time::Duration;
 
 use split_deconv::coordinator::{Server, ServerConfig};
 use split_deconv::quant::{
-    absmax, conv2d_i8_into, pack_sd_splits, quantize_into, scale_for_absmax, Epilogue, QTensor,
+    absmax, conv2d_i8_into, pack_sd_splits, quantize_into, scale_for_absmax, Epilogue, QPackedB,
+    QTensor,
 };
 use split_deconv::runtime::{artifacts_available, default_artifact_dir};
 use split_deconv::sd::{interleave, sd_deconv2d, split_filters, SdGeometry};
 use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
 use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
 use split_deconv::tensor::{
-    conv2d_naive, conv2d_valid, conv2d_valid_into, deconv2d, relu, Filter, Tensor,
+    active_backend, conv2d_naive, conv2d_valid, conv2d_valid_into, deconv2d, force_backend, relu,
+    Filter, GemmBackend, PackedB, Tensor,
 };
 use split_deconv::util::rng::Rng;
 use split_deconv::networks;
@@ -36,44 +40,111 @@ fn main() {
     println!("  -> {:.2} GMAC/s", macs / r.min_s / 1e9);
     sink.record(&r);
 
-    harness::section("GEMM kernel vs retained naive oracle (paper layer shapes)");
+    harness::section("GEMM microkernel: SIMD vs retained scalar kernel (paper layer shapes)");
     // The stride-1 split convolutions each SD-lowered deconv layer actually
     // executes: DCGAN (k5 s2 -> K_T=3 splits) and FST (k3 s2 -> K_T=2).
+    // Columns per shape: naive oracle, plan-time packing cost, scalar
+    // kernel GFLOP/s, SIMD kernel GFLOP/s + speedup. Gate (the PR-5
+    // acceptance bar, enforced with a nonzero exit like the int8 gate
+    // below, one retry for scheduler noise): SIMD >= 2x scalar on every
+    // shape when AVX2+FMA is available.
+    let simd_available = active_backend() == GemmBackend::Avx2;
+    println!("active GEMM backend: {}", active_backend().label());
     let shapes: &[(&str, usize, usize, usize, usize, usize)] = &[
         ("DCGAN deconv1 split 12x12x256 k3 -> 128", 12, 12, 256, 3, 128),
         ("DCGAN deconv2 split 20x20x128 k3 -> 64", 20, 20, 128, 3, 64),
         ("FST deconv1 split 65x65x128 k2 -> 64", 65, 65, 128, 2, 64),
     ];
-    let mut worst = f64::INFINITY;
+    let mut simd_failures: Vec<String> = Vec::new();
     for &(name, h, w, ic, k, oc) in shapes {
         let x = Tensor::randn(1, h, w, ic, &mut rng);
         let f = Filter::randn(k, k, ic, oc, &mut rng);
+        let kdim = k * k * ic;
+        let (oh, ow) = (h - k + 1, w - k + 1);
+        let flops = (2 * oh * ow * kdim * oc) as f64;
         let naive = harness::bench(&format!("naive {name}"), 3, || {
             let _ = conv2d_naive(&x, &f, 1);
         });
-        let gemm = harness::bench(&format!("gemm  {name}"), 20, || {
+        sink.record(&naive);
+        // plan-time packing cost (what the engine pays once per weight at
+        // Program compile time, and direct callers pay per call)
+        let pack = harness::bench(&format!("pack  {name}"), 50, || {
+            let _ = PackedB::pack(&f.data, kdim, oc);
+        });
+        sink.record(&pack);
+        force_backend(Some(GemmBackend::Scalar));
+        let mut scalar = harness::bench(&format!("scalar {name}"), 10, || {
             let _ = conv2d_valid(&x, &f, 1);
         });
-        let speedup = naive.min_s / gemm.min_s;
-        worst = worst.min(speedup);
-        println!("  -> GEMM speedup over naive: {speedup:.1}x");
-        sink.record(&naive);
-        sink.record_speedup(&naive, &gemm);
+        force_backend(None);
+        println!(
+            "  -> scalar kernel {0:.2} GFLOP/s; naive-vs-scalar {1:.1}x; packing {2:.3} ms",
+            flops / scalar.min_s / 1e9,
+            naive.min_s / scalar.min_s,
+            pack.min_s * 1e3
+        );
+        if simd_available {
+            force_backend(Some(GemmBackend::Avx2));
+            let mut simd = harness::bench(&format!("simd   {name}"), 20, || {
+                let _ = conv2d_valid(&x, &f, 1);
+            });
+            force_backend(None);
+            let mut speedup = scalar.min_s / simd.min_s;
+            if speedup < 2.0 {
+                println!("  gate miss — re-measuring once to rule out scheduler noise");
+                force_backend(Some(GemmBackend::Scalar));
+                let s2 = harness::bench(&format!("scalar {name} (retry)"), 10, || {
+                    let _ = conv2d_valid(&x, &f, 1);
+                });
+                force_backend(Some(GemmBackend::Avx2));
+                let v2 = harness::bench(&format!("simd   {name} (retry)"), 20, || {
+                    let _ = conv2d_valid(&x, &f, 1);
+                });
+                force_backend(None);
+                speedup = s2.min_s / v2.min_s;
+                // the retried pair replaces the noisy one everywhere:
+                // gate, printed ratio, AND the published JSON rows, so
+                // BENCH_hotpath.json can never contradict the exit code
+                scalar = s2;
+                simd = v2;
+            }
+            sink.record_gflops(&scalar, flops / scalar.min_s / 1e9);
+            let simd_gflops = flops / simd.min_s / 1e9;
+            sink.record_speedup_gflops(&scalar, &simd, simd_gflops);
+            println!(
+                "  -> SIMD kernel {simd_gflops:.2} GFLOP/s; SIMD-vs-scalar {speedup:.2}x"
+            );
+            if speedup < 2.0 {
+                simd_failures.push(format!(
+                    "{name}: SIMD {speedup:.2}x of scalar (gate: >= 2x)"
+                ));
+            }
+        } else {
+            sink.record_gflops(&scalar, flops / scalar.min_s / 1e9);
+        }
     }
-    println!(
-        "worst-case GEMM-vs-naive speedup: {worst:.1}x (acceptance target: >= 4x) {}",
-        if worst >= 4.0 { "PASS" } else { "FAIL" }
-    );
+    if simd_available {
+        println!(
+            "SIMD-vs-scalar GEMM gate (>= 2x on DCGAN + FST SD layers): {}",
+            if simd_failures.is_empty() { "PASS" } else { "FAIL" }
+        );
+        for f in &simd_failures {
+            println!("FAIL: {f}");
+        }
+    } else {
+        println!("SIMD-vs-scalar GEMM gate: SKIP (no AVX2+FMA on this machine)");
+    }
 
     harness::section("int8 GEMM vs f32 GEMM (quantized SD layers, DCGAN + FST)");
     // The engine's real quantized workload per SD deconv layer: the s^2
     // pre-split sub-filters run stride-1 over the padded (ReLU-zero-rich)
     // input. The f32 side runs the f32 splits through conv2d_valid, the
     // int8 side quantizes the input and runs the packed int8 splits
-    // (structural-zero rows skipped — the Wsparse edge). Gate: int8 beats
-    // f32 on every one of these layers (one re-measure to absorb scheduler
+    // (structural-zero rows skipped — the Wsparse edge). Both sides run
+    // their SIMD microkernels where available. Gate: int8 beats f32 on
+    // every one of these layers (one re-measure to absorb scheduler
     // noise), enforced with a nonzero exit code; rows land in the --json
-    // output (CI publishes BENCH_quant.json).
+    // output (CI publishes BENCH_hotpath.json).
     let i8_layers: &[(&str, usize, usize, usize, usize)] = &[
         // (label, input side, ic, k, oc) — deconv stride 2 throughout
         ("DCGAN deconv1 8x8x256 k5 -> 128", 8, 256, 5, 128),
@@ -89,6 +160,14 @@ fn main() {
         let f = Filter::randn(k, k, ic, oc, &mut rng);
         let f32_splits = split_filters(&f, 2);
         let i8_splits = pack_sd_splits(&f, 2);
+        // plan-time int8 packing cost (pair-interleave + structural-zero
+        // compression of every split, what the int8 engine pays at compile)
+        let qpack = harness::bench(&format!("pack  int8 splits {name}"), 50, || {
+            for qf in &i8_splits {
+                let _ = QPackedB::pack(qf);
+            }
+        });
+        sink.record(&qpack);
         let in_scale = scale_for_absmax(absmax(&xp.data));
         let mut out = Tensor::zeros(0, 0, 0, 0);
         let mut qx = QTensor::empty();
@@ -223,8 +302,8 @@ fn main() {
         println!("\n(serving bench skipped: run `make artifacts`)");
     }
     sink.write("hotpath");
-    if !i8_failures.is_empty() {
-        // real gate: a FAIL is a nonzero exit, visible to CI and scripts
+    if !i8_failures.is_empty() || !simd_failures.is_empty() {
+        // real gates: a FAIL is a nonzero exit, visible to CI and scripts
         std::process::exit(1);
     }
 }

@@ -22,12 +22,16 @@
 //!   `Op::Conv` (im2col + GEMM), `Op::SdDeconv`, `Op::RefDeconv` — with
 //!   activations (ReLU between layers, tanh after the last) fused into
 //!   the step;
-//! * SD deconvolution filters are **pre-split and pre-packed at plan time**:
-//!   [`split_filters`] runs once per layer per plan, and each split's HWIO
-//!   data is exactly the `K x N` GEMM operand the conv kernel consumes, so
-//!   the per-request serving path no longer re-splits filters on every
-//!   forward call (the dominant per-request overhead of the old
-//!   `report::quality` interpreter);
+//! * **every GEMM weight is packed at plan time**: SD deconvolution
+//!   filters are pre-split ([`split_filters`] runs once per layer per
+//!   plan) and each split — like every plain conv filter and dense matrix
+//!   — is then packed into the microkernel's NR-wide panel operand
+//!   ([`crate::tensor::gemm::PackedB`]; int8 programs additionally pack
+//!   the SIMD kernel's pair-interleaved [`QPackedB`]), so the per-request
+//!   serving path neither re-splits nor re-packs a weight on any forward
+//!   call (re-splitting was the dominant per-request overhead of the old
+//!   `report::quality` interpreter; per-call packing is what the direct
+//!   `tensor::conv2d` paths still pay);
 //! * all intermediate shapes are precomputed at build time, and execution
 //!   runs inside a reusable per-worker [`Scratch`] arena instead of
 //!   allocating per layer per call;
@@ -57,7 +61,9 @@
 
 pub mod weights;
 
-pub use weights::{build_weights, smooth_filter, DeconvImpl, LayerWeights};
+pub use weights::{
+    build_weights, pack_filter, pack_filters, smooth_filter, DeconvImpl, LayerWeights,
+};
 
 pub use crate::quant::Precision;
 
@@ -67,12 +73,15 @@ use anyhow::{bail, Result};
 
 use crate::nn::{LayerKind, NetworkSpec};
 use crate::quant::{
-    conv2d_i8_scaled_into, quantize_dense, quantize_filter, quantize_into, scale_for_absmax,
-    Epilogue, QFilter, QTensor,
+    conv2d_i8_prepacked_into, quantize_dense, quantize_filter, quantize_into, scale_for_absmax,
+    Epilogue, QFilter, QPackedB, QTensor,
 };
 use crate::sd::{chang::chang_deconv2d, nzp::nzp_deconv2d, shi::shi_deconv2d};
 use crate::sd::{interleave_crop_into, split_filters, SdGeometry};
-use crate::tensor::{conv2d_valid_into, deconv2d, dense_into, relu, tanh, Filter, Tensor};
+use crate::tensor::gemm::PackedB;
+use crate::tensor::{
+    conv2d_packed_valid_into, deconv2d, dense_packed_into, relu, tanh, Filter, Tensor,
+};
 use crate::util::rng::Rng;
 
 /// Activation fused into each step: ReLU between layers, tanh after the
@@ -82,29 +91,40 @@ enum Act {
     Tanh,
 }
 
-/// The op registry: what a layer lowers to at plan time.
+/// The op registry: what a layer lowers to at plan time. Every GEMM-backed
+/// op carries its weight operand **pre-packed** into the microkernel's
+/// panel layout (`PackedB` / `QPackedB`), built here at compile time — the
+/// per-request path never packs a weight.
 enum Op {
-    /// fully-connected layer, weights n_in x n_out row-major
-    Dense { w: Vec<f32>, n_out: usize },
-    /// standard convolution on the im2col + GEMM kernel
-    Conv { f: Filter, s: usize, p: usize },
+    /// fully-connected layer on the packed-panel GEMM (batch on the M
+    /// axis); the packed operand is the only weight copy the program
+    /// keeps, and carries the full geometry (`k` = n_in, `n` = n_out)
+    Dense { packed: PackedB },
+    /// standard convolution on the im2col + GEMM kernel; the packed
+    /// panels are the only weight copy the program keeps (`kh`/`kw` carry
+    /// the im2col geometry; channel counts are recoverable from the
+    /// operand, and int8 lowering unpacks losslessly)
+    Conv { kh: usize, kw: usize, packed: PackedB, s: usize, p: usize },
     /// split deconvolution with the `s*s` split filters pre-split and
-    /// pre-packed (each filter's HWIO data is the GEMM `K x N` operand)
-    SdDeconv { splits: Vec<Filter>, g: SdGeometry },
+    /// packed into panel operands (one per stride-1 sub-convolution;
+    /// every split is `g.k_t` square, so — like `Conv` — the packed
+    /// operands are the only copy kept)
+    SdDeconv { packed: Vec<PackedB>, g: SdGeometry },
     /// reference deconvolution lowerings (native oracle / NZP / Shi /
     /// Chang) — kept in the registry so the quality evaluation runs every
     /// conversion approach through the same execution path
     RefDeconv { f: Filter, imp: DeconvImpl, s: usize, p: usize, out_pad: usize },
     /// int8 lowering of `Dense` and `Conv` (`Precision::Int8`): quantized
-    /// constants prepared at compile time, activations quantized at the
+    /// constants prepared at compile time (including the SIMD kernel's
+    /// pair-interleaved packed operand), activations quantized at the
     /// calibrated `in_scale`, i8 im2col + i32 GEMM with the fused
     /// requantize(+ReLU) epilogue. A dense layer is a 1x1 convolution over
     /// its `1 x 1 x n_in` view, so one quantized op serves both.
-    QConv { qf: QFilter, in_scale: f32, s: usize, p: usize },
-    /// int8 lowering of `SdDeconv`: the pre-split sub-filters packed as
-    /// int8 at compile time, each split running on the int8 conv kernel —
-    /// the SD path itself (not just plain conv) runs quantized.
-    QSdDeconv { splits: Vec<QFilter>, g: SdGeometry, in_scale: f32 },
+    QConv { qf: QFilter, packed: QPackedB, in_scale: f32, s: usize, p: usize },
+    /// int8 lowering of `SdDeconv`: the pre-split sub-filters quantized
+    /// and packed at compile time, each split running on the int8 conv
+    /// kernel — the SD path itself (not just plain conv) runs quantized.
+    QSdDeconv { splits: Vec<QFilter>, packed: Vec<QPackedB>, g: SdGeometry, in_scale: f32 },
 }
 
 /// One compiled layer: op + fused activation + precomputed shapes.
@@ -273,19 +293,23 @@ impl Program {
                             l.out_c
                         );
                     }
-                    Op::Dense { w, n_out: l.out_c }
+                    // plan-time packing; the packed panels are the only
+                    // copy the program keeps (GP-GAN's bottleneck matrix
+                    // is ~131 MB — no second buffer)
+                    Op::Dense { packed: PackedB::pack(&w, n_in, l.out_c) }
                 }
                 (LayerKind::Conv, LayerWeights::Filter(f)) => {
                     check_filter(net.name, l.name, &f, l.k, l.in_c, l.out_c)?;
-                    Op::Conv { f, s: l.s, p: l.p }
+                    let packed = pack_filter(&f);
+                    Op::Conv { kh: f.kh, kw: f.kw, packed, s: l.s, p: l.p }
                 }
                 (LayerKind::Deconv, LayerWeights::Filter(f)) => {
                     check_filter(net.name, l.name, &f, l.k, l.in_c, l.out_c)?;
                     match imp {
-                        DeconvImpl::Sd => Op::SdDeconv {
-                            splits: split_filters(&f, l.s),
-                            g: SdGeometry::new(l.k, l.s, l.p),
-                        },
+                        DeconvImpl::Sd => {
+                            let packed = pack_filters(&split_filters(&f, l.s));
+                            Op::SdDeconv { packed, g: SdGeometry::new(l.k, l.s, l.p) }
+                        }
                         other => Op::RefDeconv {
                             f,
                             imp: other,
@@ -370,18 +394,35 @@ impl Program {
             .map(|(mut step, am)| {
                 let in_scale = scale_for_absmax(am * CALIB_MARGIN);
                 step.op = match step.op {
-                    Op::Dense { w, n_out } => {
-                        let n_in = w.len() / n_out;
-                        Op::QConv { qf: quantize_dense(w, n_in, n_out), in_scale, s: 1, p: 0 }
+                    Op::Dense { packed } => {
+                        // the f32 program keeps only the packed panels;
+                        // unpack once here (lossless) to quantize
+                        let (n_in, n_out) = (packed.k, packed.n);
+                        let qf = quantize_dense(packed.unpack(), n_in, n_out);
+                        let qpacked = QPackedB::pack(&qf);
+                        Op::QConv { qf, packed: qpacked, in_scale, s: 1, p: 0 }
                     }
-                    Op::Conv { f, s, p } => {
-                        Op::QConv { qf: quantize_filter(&f), in_scale, s, p }
+                    Op::Conv { kh, kw, packed, s, p } => {
+                        // reconstruct the HWIO payload losslessly from the
+                        // packed panels (the f32 program keeps no raw copy)
+                        let ic = packed.k / (kh * kw);
+                        let f = Filter::from_vec(kh, kw, ic, packed.n, packed.unpack());
+                        let qf = quantize_filter(&f);
+                        let qpacked = QPackedB::pack(&qf);
+                        Op::QConv { qf, packed: qpacked, in_scale, s, p }
                     }
-                    Op::SdDeconv { splits, g } => Op::QSdDeconv {
-                        splits: splits.iter().map(quantize_filter).collect(),
-                        g,
-                        in_scale,
-                    },
+                    Op::SdDeconv { packed, g } => {
+                        let qsplits: Vec<QFilter> = packed
+                            .iter()
+                            .map(|pb| {
+                                let ic = pb.k / (g.k_t * g.k_t);
+                                let w = Filter::from_vec(g.k_t, g.k_t, ic, pb.n, pb.unpack());
+                                quantize_filter(&w)
+                            })
+                            .collect();
+                        let qpacked = qsplits.iter().map(QPackedB::pack).collect();
+                        Op::QSdDeconv { splits: qsplits, packed: qpacked, g, in_scale }
+                    }
                     // reference deconv lowerings stay f32 (quality
                     // baselines, not serving paths)
                     other => other,
@@ -664,32 +705,33 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
     let n = h.n;
     let h = bridge_reshape(h, step.in_h, step.in_w, step.in_c);
     let (mut out, act_done) = match &step.op {
-        Op::Dense { w, n_out } => {
+        Op::Dense { packed } => {
             let mut out = take_tensor(&mut a.spare);
-            dense_into(&h, w, *n_out, &mut out)?;
+            dense_packed_into(&h, packed, &mut out)?;
             (out, false)
         }
-        Op::Conv { f, s, p } => {
+        Op::Conv { kh, kw, packed, s, p } => {
             let mut out = take_tensor(&mut a.spare);
             if *p > 0 {
                 h.pad_into(*p, *p, *p, *p, &mut a.pad);
-                conv2d_valid_into(&a.pad, f, *s, &mut out);
+                conv2d_packed_valid_into(&a.pad, *kh, *kw, *s, packed, &mut out);
             } else {
-                conv2d_valid_into(&h, f, *s, &mut out);
+                conv2d_packed_valid_into(&h, *kh, *kw, *s, packed, &mut out);
             }
             (out, false)
         }
-        Op::SdDeconv { splits, g } => {
+        Op::SdDeconv { packed, g } => {
             h.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.pad);
-            if a.splits.len() < splits.len() {
-                a.splits.resize_with(splits.len(), || Tensor::zeros(0, 0, 0, 0));
+            if a.splits.len() < packed.len() {
+                a.splits.resize_with(packed.len(), || Tensor::zeros(0, 0, 0, 0));
             }
-            for (w, slot) in splits.iter().zip(a.splits.iter_mut()) {
-                conv2d_valid_into(&a.pad, w, 1, slot);
+            for (pb, slot) in packed.iter().zip(a.splits.iter_mut()) {
+                // every SD split filter is g.k_t square (Eq. 1)
+                conv2d_packed_valid_into(&a.pad, g.k_t, g.k_t, 1, pb, slot);
             }
             let mut out = take_tensor(&mut a.spare);
             interleave_crop_into(
-                &a.splits[..splits.len()],
+                &a.splits[..packed.len()],
                 g.s,
                 g.crop(),
                 step.out_h,
@@ -701,7 +743,7 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
         Op::RefDeconv { f, imp, s, p, out_pad } => {
             (run_ref_deconv(&h, f, *imp, *s, *p, *out_pad), false)
         }
-        Op::QConv { qf, in_scale, s, p } => {
+        Op::QConv { qf, packed, in_scale, s, p } => {
             // quantize at the calibrated per-tensor scale, convolve on the
             // int8 kernel with the mid-layer ReLU fused into the
             // requantize epilogue; the per-column scales go into a reused
@@ -716,13 +758,13 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
             let mut out = take_tensor(&mut a.spare);
             if *p > 0 {
                 a.qin.pad_into(*p, *p, *p, *p, &mut a.qpad);
-                conv2d_i8_scaled_into(&a.qpad, qf, *s, &a.colscale, epi, &mut out);
+                conv2d_i8_prepacked_into(&a.qpad, qf, packed, *s, &a.colscale, epi, &mut out);
             } else {
-                conv2d_i8_scaled_into(&a.qin, qf, *s, &a.colscale, epi, &mut out);
+                conv2d_i8_prepacked_into(&a.qin, qf, packed, *s, &a.colscale, epi, &mut out);
             }
             (out, matches!(step.act, Act::Relu))
         }
-        Op::QSdDeconv { splits, g, in_scale } => {
+        Op::QSdDeconv { splits, packed, g, in_scale } => {
             // one quantize + pad of the input, then every packed int8
             // sub-filter runs a stride-1 int8 convolution; the splits
             // requantize to f32 and interleave exactly like the f32 path
@@ -731,10 +773,10 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
             if a.splits.len() < splits.len() {
                 a.splits.resize_with(splits.len(), || Tensor::zeros(0, 0, 0, 0));
             }
-            for (w, slot) in splits.iter().zip(a.splits.iter_mut()) {
+            for ((w, pb), slot) in splits.iter().zip(packed).zip(a.splits.iter_mut()) {
                 a.colscale.clear();
                 a.colscale.extend(w.scales.iter().map(|&sc| *in_scale * sc));
-                conv2d_i8_scaled_into(&a.qpad, w, 1, &a.colscale, Epilogue::none(), slot);
+                conv2d_i8_prepacked_into(&a.qpad, w, pb, 1, &a.colscale, Epilogue::none(), slot);
             }
             let mut out = take_tensor(&mut a.spare);
             interleave_crop_into(

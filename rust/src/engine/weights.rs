@@ -8,6 +8,7 @@
 //! for the same network + seed.
 
 use crate::nn::{LayerKind, NetworkSpec};
+use crate::tensor::gemm::PackedB;
 use crate::tensor::Filter;
 use crate::util::rng::Rng;
 
@@ -85,6 +86,22 @@ pub fn smooth_filter(k: usize, ic: usize, oc: usize, s: usize, rng: &mut Rng) ->
         }
     }
     f
+}
+
+/// Pack a filter's HWIO payload into the GEMM microkernel's panel operand
+/// (`K = kh*kw*ic` rows of `N = oc`) — the plan-time weight-packing step:
+/// run once per conv / SD-split filter at `Program` compile time, so the
+/// serving hot path streams panel-contiguous weights instead of repacking
+/// (or striding across) the raw HWIO buffer on every call.
+pub fn pack_filter(f: &Filter) -> PackedB {
+    PackedB::pack(&f.data, f.kh * f.kw * f.ic, f.oc)
+}
+
+/// [`pack_filter`] over a pre-split SD filter bank (one packed operand per
+/// stride-1 sub-convolution), stored beside the splits in the compiled
+/// program.
+pub fn pack_filters(splits: &[Filter]) -> Vec<PackedB> {
+    splits.iter().map(pack_filter).collect()
 }
 
 /// Build every layer's weights for a network, seeded per layer index — the

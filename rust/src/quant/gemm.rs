@@ -3,36 +3,65 @@
 //! [`crate::tensor::conv2d_gemm_into`].
 //!
 //! Structure is deliberately identical to the f32 hot path: im2col packing
-//! of the i8 activations into a per-thread panel, a cache-blocked GEMM
+//! of the i8 activations into a per-thread panel, a microkernel GEMM
 //! register-blocked `MR` output pixels at a time, work split into
-//! batch x output-row tiles drained from a shared queue by a scoped worker
-//! pool (`SD_CONV_THREADS` overrides the width). Differences:
+//! batch x output-row tiles drained from a lock-free atomic cursor by the
+//! persistent worker pool (`runtime::pool`; `SD_CONV_THREADS` overrides
+//! the width through the shared `worker_count` policy). Like the f32 side,
+//! the kernel is runtime-dispatched: an AVX2 `madd`-based microkernel over
+//! a pre-packed operand ([`QPackedB`]) with the portable scalar loop as
+//! fallback. Differences from f32:
 //!
 //! * the panel holds i8 (4x more rows fit in the same L2 budget);
-//! * accumulation is i32 — exact, so tile order and register blocking can
-//!   never change a result bit (integer addition is associative), which is
-//!   why [`conv2d_i8_naive`] is a *zero-tolerance* oracle;
+//! * accumulation is i32 — **exact**, so backend, tile order, register
+//!   blocking, and skip granularity can never change a result bit (integer
+//!   addition is associative), which is why [`conv2d_i8_naive`] remains a
+//!   *zero-tolerance* oracle for BOTH backends (unlike the f32 kernel,
+//!   whose SIMD backend is ULP-bounded — see `tensor::gemm`);
 //! * the paper's AWSparse skip policy runs in software, and is *exact*
-//!   here for the same reason: the `K` loop visits only the filter rows
-//!   that are not structurally zero (`QFilter::nz_rows` — SD expansion
-//!   zeros, Wsparse) and skips quantized-zero activation values (post-ReLU
-//!   maps and the SD input halo, ASparse), because a zero i32 contribution
-//!   is exactly nothing. This is the int8 kernel's structural edge over
-//!   the f32 GEMM, which executes every MAC (skipping f32 terms is not
-//!   bit-safe: adding 0.0 can flip a -0.0 accumulator);
+//!   here for the same reason: structurally-zero filter rows
+//!   ([`QFilter::nz_rows`] — SD expansion zeros, Wsparse) are skipped by
+//!   the scalar kernel and **removed at pack time** by [`QPackedB`]
+//!   (the SIMD kernel never visits them), and quantized-zero activation
+//!   values (post-ReLU maps and the SD input halo, ASparse) are skipped at
+//!   row-pair granularity, because a zero i32 contribution is exactly
+//!   nothing. This is the int8 kernel's structural edge over the f32 GEMM,
+//!   which executes every MAC (skipping f32 terms is not bit-safe: adding
+//!   0.0 can flip a -0.0 accumulator);
 //! * the epilogue requantizes each i32 accumulator straight to f32 through
 //!   the precomputed per-column scale `act_scale * weight_scale[col]`,
 //!   adding an optional per-channel bias and applying ReLU in the same
-//!   pass ([`Epilogue`]) — no separate f32 requantization sweep over the
-//!   output.
+//!   pass ([`Epilogue`]); both backends store their accumulators and run
+//!   the one scalar epilogue loop, so the f32 results are bit-identical
+//!   across backends too.
+//!
+//! ## [`QPackedB`] layout
+//!
+//! The SIMD kernel processes **two** contraction rows per step with
+//! `_mm256_madd_epi16` (i16 pair dot products into i32 lanes — exact: each
+//! product is at most 127·127 and the pair sum at most 2·127², far inside
+//! i32). The packed operand serves that shape directly: the non-zero
+//! filter rows are paired `(k₀,k₁)` and each 16-column panel stores, per
+//! pair, the 32 bytes `[b[k₀][c], b[k₁][c]]` interleaved per column. An
+//! odd non-zero row count is padded with an all-zero partner row (exact).
+//! The engine packs every quantized weight once at `Program` compile time
+//! ([`conv2d_i8_prepacked_into`]); the direct call paths pack per call
+//! into a reused thread-local.
 
-use crate::tensor::ops::{worker_count, PANEL_BYTES};
+use std::cell::RefCell;
+use std::sync::atomic::Ordering;
+
+use crate::tensor::gemm::{parallel_drain, SendPtr};
+use crate::tensor::ops::{worker_count, TileMap};
 use crate::tensor::Tensor;
 
 use super::scheme::{QFilter, QTensor};
 
 /// Micro-kernel register-block height (output pixels per GEMM block).
 const MR: usize = 4;
+
+/// Column width of one packed int8 panel (i32 lanes across two AVX regs).
+const NR8: usize = 16;
 
 /// Fused epilogue of the int8 kernel: what happens to each i32 accumulator
 /// on its way to the f32 output buffer. Requantization (the per-column
@@ -71,17 +100,106 @@ impl<'a> Epilogue<'a> {
     }
 }
 
-/// One worker job: a tile of output rows of one batch image, owning the
-/// corresponding disjoint slice of the f32 output buffer.
-struct Tile<'a> {
-    n: usize,
-    y0: usize,
-    rows: usize,
-    out: &'a mut [f32],
+/// A quantized filter's GEMM operand packed for the SIMD kernel:
+/// structural-zero rows removed, surviving rows paired, 16-column panels
+/// with per-column `(k₀,k₁)` byte interleave (see the module docs). Packed
+/// once per weight at engine compile time, or per call into a thread-local
+/// on the direct paths. On machines without AVX2 the scalar kernel reads
+/// the plain [`QFilter`] payload instead and this operand is unused.
+#[derive(Clone, Debug, Default)]
+pub struct QPackedB {
+    /// contraction length of the unpacked operand (`kh*kw*ic`)
+    pub k: usize,
+    /// logical column count (`oc`)
+    pub n: usize,
+    /// paired non-zero row indices, length `2 * pairs()`; an odd tail is
+    /// padded with a repeat of the last index whose packed bytes are zero
+    kidx: Vec<u32>,
+    /// `panels() * pairs() * 32` bytes: panel `p`, pair `q`, column `j`,
+    /// row-of-pair `w` at `(p*pairs + q)*32 + j*2 + w`
+    data: Vec<i8>,
+}
+
+impl QPackedB {
+    /// An empty operand — the reusable-slot form.
+    pub fn empty() -> QPackedB {
+        QPackedB::default()
+    }
+
+    /// Pack a quantized filter's `K x N` HWIO payload.
+    pub fn pack(qf: &QFilter) -> QPackedB {
+        let mut p = QPackedB::empty();
+        p.pack_into(qf);
+        p
+    }
+
+    /// [`QPackedB::pack`] reusing this instance's buffers.
+    pub fn pack_into(&mut self, qf: &QFilter) {
+        let k = qf.kh * qf.kw * qf.ic;
+        let n = qf.oc;
+        debug_assert_eq!(qf.data.len(), k * n);
+        self.k = k;
+        self.n = n;
+        let nz = &qf.nz_rows;
+        let pairs = nz.len().div_ceil(2);
+        self.kidx.clear();
+        for q in 0..pairs {
+            self.kidx.push(nz[2 * q]);
+            // odd tail: partner index repeats, partner bytes stay zero —
+            // a zero i32 contribution, so the pad is exact
+            self.kidx.push(*nz.get(2 * q + 1).unwrap_or(&nz[2 * q]));
+        }
+        let panels = n.div_ceil(NR8);
+        self.data.clear();
+        self.data.resize(panels * pairs * 32, 0);
+        for p in 0..panels {
+            let col0 = p * NR8;
+            let cols = NR8.min(n - col0);
+            for q in 0..pairs {
+                let base = (p * pairs + q) * 32;
+                let k0 = nz[2 * q] as usize;
+                let k1 = nz.get(2 * q + 1).map(|&v| v as usize);
+                for j in 0..cols {
+                    self.data[base + 2 * j] = qf.data[k0 * n + col0 + j];
+                    if let Some(k1) = k1 {
+                        self.data[base + 2 * j + 1] = qf.data[k1 * n + col0 + j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of packed row pairs (non-zero rows, halved and rounded up).
+    pub fn pairs(&self) -> usize {
+        self.kidx.len() / 2
+    }
+
+    /// Number of 16-column panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(NR8)
+    }
+
+    /// Packed payload size in bytes (the plan-time memory cost).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.kidx.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Which operand the accumulation blocks read — the backend dispatch,
+/// resolved once per conv call.
+#[derive(Clone, Copy)]
+enum I8Kernel<'a> {
+    /// portable fallback: plain HWIO payload + non-zero row list
+    Scalar { b: &'a [i8], nz: &'a [u32] },
+    /// AVX2 madd microkernel over the packed pair-interleaved operand
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    Packed { qp: &'a QPackedB },
 }
 
 /// Per-thread scratch arena: the i8 im2col panel and the i32 accumulator
-/// block — the int8 twins of the f32 kernel's `panel`/`acc`.
+/// block — the int8 twins of the f32 kernel's panel (the f32 SIMD path
+/// accumulates in registers; the int8 path stages i32 accumulators here so
+/// one scalar epilogue serves both backends bit-identically).
 #[derive(Default)]
 struct Scratch {
     panel: Vec<i8>,
@@ -91,7 +209,7 @@ struct Scratch {
 /// Valid int8 convolution into a caller-provided f32 tensor (reshaped and
 /// resized in place, reusing capacity): i8 im2col panels, i32-accumulate
 /// GEMM, fused requantize/bias/ReLU epilogue. Bit-identical to
-/// [`conv2d_i8_naive`] (asserted with zero tolerance in
+/// [`conv2d_i8_naive`] on every backend (asserted with zero tolerance in
 /// rust/tests/quant.rs). Computes the requantization scales
 /// (`x.scale * f.scales[o]`) into a fresh buffer per call; hot-path
 /// callers that can reuse one should use [`conv2d_i8_scaled_into`].
@@ -102,15 +220,81 @@ pub fn conv2d_i8_into(x: &QTensor, f: &QFilter, stride: usize, epi: Epilogue, ou
     conv2d_i8_scaled_into(x, f, stride, &colscale, epi, out);
 }
 
+thread_local! {
+    /// Call-time weight packing slot of the direct (non-engine) int8
+    /// paths, reused across calls on each thread.
+    static QPACK_SLOT: RefCell<QPackedB> = RefCell::new(QPackedB::empty());
+
+    /// Per-thread tile scratch (i8 panel + i32 accumulators), persistent
+    /// across conv calls and pool jobs — mirrors the f32 driver's
+    /// persistent panel.
+    static TILE_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
 /// [`conv2d_i8_into`] with the per-column requantization scales
 /// precomputed by the caller (`colscale[o] = x.scale * f.scales[o]`,
-/// length `f.oc`) — the engine's entry point: the products are
-/// compile-time constants there, and writing them into a reused
-/// `Scratch` buffer keeps per-layer allocation off the forward path.
+/// length `f.oc`). Packs the weight for the SIMD kernel per call (reused
+/// thread-local); the engine pre-packs at compile time and calls
+/// [`conv2d_i8_prepacked_into`].
 pub fn conv2d_i8_scaled_into(
     x: &QTensor,
     f: &QFilter,
     stride: usize,
+    colscale: &[f32],
+    epi: Epilogue,
+    out: &mut Tensor,
+) {
+    if use_simd_kernel() {
+        QPACK_SLOT.with(|slot| {
+            let mut packed = slot.borrow_mut();
+            packed.pack_into(f);
+            let qp: &QPackedB = &packed;
+            conv_i8_driver(x, f, stride, I8Kernel::Packed { qp }, colscale, epi, out);
+        });
+    } else {
+        let kernel = I8Kernel::Scalar { b: &f.data, nz: &f.nz_rows };
+        conv_i8_driver(x, f, stride, kernel, colscale, epi, out);
+    }
+}
+
+/// [`conv2d_i8_scaled_into`] against a weight **pre-packed** with
+/// [`QPackedB::pack`] — the engine's entry point (all quantized constants,
+/// including this packing, are prepared at `Program` compile time). On
+/// machines without AVX2 the packed operand is ignored and the scalar
+/// kernel reads the plain [`QFilter`]; results are bit-identical either
+/// way.
+pub fn conv2d_i8_prepacked_into(
+    x: &QTensor,
+    f: &QFilter,
+    packed: &QPackedB,
+    stride: usize,
+    colscale: &[f32],
+    epi: Epilogue,
+    out: &mut Tensor,
+) {
+    debug_assert_eq!(packed.k, f.kh * f.kw * f.ic, "packed operand k mismatch");
+    debug_assert_eq!(packed.n, f.oc, "packed operand n mismatch");
+    let kernel = if use_simd_kernel() {
+        I8Kernel::Packed { qp: packed }
+    } else {
+        I8Kernel::Scalar { b: &f.data, nz: &f.nz_rows }
+    };
+    conv_i8_driver(x, f, stride, kernel, colscale, epi, out);
+}
+
+/// True when the AVX2 int8 microkernel should run. Follows the f32
+/// dispatch (including its bench/test override), so one `force_backend`
+/// call pins both kernels.
+fn use_simd_kernel() -> bool {
+    crate::tensor::gemm::active_backend() == crate::tensor::gemm::GemmBackend::Avx2
+}
+
+/// Shared driver: shape math, tiling, worker policy, tile draining.
+fn conv_i8_driver(
+    x: &QTensor,
+    f: &QFilter,
+    stride: usize,
+    kernel: I8Kernel,
     colscale: &[f32],
     epi: Epilogue,
     out: &mut Tensor,
@@ -129,51 +313,42 @@ pub fn conv2d_i8_scaled_into(
     out.h = oh;
     out.w = ow;
     out.c = n_out;
-    out.data.clear();
+    // no clear(): resize only zero-fills a grown tail; every element is
+    // overwritten by exactly one tile below
     out.data.resize(x.n * oh * ow * n_out, 0.0);
     if out.data.is_empty() {
         return;
     }
 
-    let rows_per_tile = (PANEL_BYTES / (ow * kdim).max(1)).clamp(1, oh);
-    let mut tiles: Vec<Tile> = Vec::new();
-    for (n, img) in out.data.chunks_mut(oh * ow * n_out).enumerate() {
-        for (t, slice) in img.chunks_mut(rows_per_tile * ow * n_out).enumerate() {
-            tiles.push(Tile {
-                n,
-                y0: t * rows_per_tile,
-                rows: slice.len() / (ow * n_out),
-                out: slice,
-            });
-        }
-    }
-
+    let map = TileMap::new(x.n, oh, ow, kdim, std::mem::size_of::<i8>());
     let macs = x.n * oh * ow * kdim * n_out;
-    let workers = worker_count(macs, tiles.len());
-    if workers <= 1 {
-        let mut scratch = Scratch::default();
-        for tile in tiles {
-            run_tile(x, f, stride, ow, colscale, epi, tile, &mut scratch);
-        }
-    } else {
-        let queue = std::sync::Mutex::new(tiles);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| {
-                    let mut scratch = Scratch::default();
-                    loop {
-                        let tile = queue.lock().unwrap().pop();
-                        match tile {
-                            Some(tile) => {
-                                run_tile(x, f, stride, ow, colscale, epi, tile, &mut scratch)
-                            }
-                            None => break,
-                        }
-                    }
-                });
+    let workers = worker_count(macs, map.tiles);
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    parallel_drain(workers, &|cursor| {
+        // per-thread persistent scratch (tile tasks never re-enter a conv
+        // kernel, so the borrow cannot conflict)
+        TILE_SCRATCH.with(|slot| {
+            let mut scratch = slot.borrow_mut();
+            loop {
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t >= map.tiles {
+                    break;
+                }
+                let (img, y0, rows) = map.tile(t);
+                // SAFETY: tile t was claimed by exactly one fetch_add
+                // winner; its rows*ow x n_out output block is disjoint
+                // from every other tile's, and the pool barrier keeps
+                // `out` alive until all tiles finish.
+                let c = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        out_ptr.get().add((img * oh + y0) * ow * n_out),
+                        rows * ow * n_out,
+                    )
+                };
+                run_tile(x, f, stride, ow, img, y0, rows, kernel, colscale, epi, c, &mut scratch);
             }
         });
-    }
+    });
 }
 
 /// Pack one row tile's i8 im2col panel, then GEMM it against the i8 filter
@@ -184,125 +359,180 @@ fn run_tile(
     f: &QFilter,
     stride: usize,
     ow: usize,
+    img: usize,
+    y0: usize,
+    rows: usize,
+    kernel: I8Kernel,
     colscale: &[f32],
     epi: Epilogue,
-    tile: Tile,
+    c: &mut [f32],
     s: &mut Scratch,
 ) {
     let kdim = f.kh * f.kw * f.ic;
     let seg = f.kw * x.c; // one contiguous input-row segment per kernel row
-    let m = tile.rows * ow;
+    let m = rows * ow;
+    let n = f.oc;
+    // no zero-fill: the packing loop overwrites every element
     s.panel.resize(m * kdim, 0);
-    for r in 0..tile.rows {
-        let oy = tile.y0 + r;
+    for r in 0..rows {
+        let oy = y0 + r;
         for ox in 0..ow {
             let dst_base = (r * ow + ox) * kdim;
             for dy in 0..f.kh {
-                let src = x.idx(tile.n, oy * stride + dy, ox * stride, 0);
+                let src = x.idx(img, oy * stride + dy, ox * stride, 0);
                 let dst = dst_base + dy * seg;
                 s.panel[dst..dst + seg].copy_from_slice(&x.data[src..src + seg]);
             }
         }
     }
-    gemm_i8(&s.panel, &f.data, m, kdim, f.oc, &f.nz_rows, colscale, epi, tile.out, &mut s.acc);
-}
-
-/// `c = epilogue(a (m x k) . b (k x n))`: i8 operands, i32 accumulation,
-/// f32 output through the per-column requantization scale. Register-blocked
-/// MR rows at a time. The `K` loop walks only `nz_rows` — the filter rows
-/// that are not entirely zero (the Wsparse structural-zero skip; see
-/// [`super::QFilter::nz_rows`]). i32 accumulation is exact, so neither the
-/// blocking nor the skip can change a bit of the result.
-#[allow(clippy::too_many_arguments)] // GEMM argument list mirrors the f32 kernel
-fn gemm_i8(
-    a: &[i8],
-    b: &[i8],
-    m: usize,
-    k: usize,
-    n: usize,
-    nz_rows: &[u32],
-    colscale: &[f32],
-    epi: Epilogue,
-    c: &mut [f32],
-    acc: &mut Vec<i32>,
-) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    debug_assert_eq!(colscale.len(), n);
-    if acc.len() != MR * n {
-        acc.resize(MR * n, 0);
+    if s.acc.len() < MR * n {
+        s.acc.resize(MR * n, 0);
     }
     let mut row = 0;
-    while row + MR <= m {
-        acc.fill(0);
-        {
-            let (a0, rest) = acc.split_at_mut(n);
-            let (a1, rest) = rest.split_at_mut(n);
-            let (a2, a3) = rest.split_at_mut(n);
-            let p0 = &a[row * k..(row + 1) * k];
-            let p1 = &a[(row + 1) * k..(row + 2) * k];
-            let p2 = &a[(row + 2) * k..(row + 3) * k];
-            let p3 = &a[(row + 3) * k..(row + 4) * k];
-            for &kk in nz_rows {
-                let kk = kk as usize;
-                let (v0, v1, v2, v3) =
-                    (p0[kk] as i32, p1[kk] as i32, p2[kk] as i32, p3[kk] as i32);
-                // activation-zero skip (the ASparse half of the paper's
-                // AWSparse policy): post-ReLU maps and the SD input halo
-                // quantize to exact zeros, and skipping a zero i32
-                // contribution is exact
-                if v0 == 0 && v1 == 0 && v2 == 0 && v3 == 0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for ((((&w, c0), c1), c2), c3) in brow
-                    .iter()
-                    .zip(a0.iter_mut())
-                    .zip(a1.iter_mut())
-                    .zip(a2.iter_mut())
-                    .zip(a3.iter_mut())
-                {
-                    let w = w as i32;
-                    *c0 += v0 * w;
-                    *c1 += v1 * w;
-                    *c2 += v2 * w;
-                    *c3 += v3 * w;
-                }
+    while row < m {
+        let rows_now = (m - row).min(MR);
+        let acc = &mut s.acc[..rows_now * n];
+        match kernel {
+            I8Kernel::Scalar { b, nz } => {
+                acc_block_scalar(&s.panel, row, rows_now, kdim, b, nz, n, acc)
+            }
+            I8Kernel::Packed { qp } => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: dispatch guarantees AVX2 (use_simd_kernel);
+                // panel rows [row, row+rows_now) and acc[..rows_now*n]
+                // are in bounds by construction above.
+                unsafe {
+                    acc_block_avx2(&s.panel, row, rows_now, kdim, qp, n, acc)
+                };
+                #[cfg(not(target_arch = "x86_64"))]
+                unreachable!("the packed int8 kernel only dispatches on x86_64");
             }
         }
-        for r in 0..MR {
+        // ONE epilogue for both backends: requantize + bias + ReLU, per
+        // element, in a fixed operation order — so backend choice can
+        // never change an output bit
+        for r in 0..rows_now {
             let crow = &mut c[(row + r) * n..(row + r + 1) * n];
             let arow = &acc[r * n..(r + 1) * n];
-            for (col, ((cv, &av), &sc)) in
-                crow.iter_mut().zip(arow).zip(colscale).enumerate()
-            {
+            for (col, ((cv, &av), &sc)) in crow.iter_mut().zip(arow).zip(colscale).enumerate() {
                 *cv = epi.apply(col, av as f32 * sc);
             }
         }
-        row += MR;
+        row += rows_now;
     }
-    while row < m {
-        let arow = &a[row * k..(row + 1) * k];
-        let acc1 = &mut acc[..n];
-        acc1.fill(0);
-        for &kk in nz_rows {
-            let kk = kk as usize;
-            let v = arow[kk] as i32;
+}
+
+/// Portable accumulation block: `acc[r][*] = Σ_k a[row+r][k] * b[k][*]`
+/// over the non-zero filter rows, with the activation-zero skip (the
+/// ASparse half of the paper's AWSparse policy: post-ReLU maps and the SD
+/// input halo quantize to exact zeros, and skipping a zero i32
+/// contribution is exact).
+#[allow(clippy::too_many_arguments)] // GEMM block arguments mirror the f32 kernel
+fn acc_block_scalar(
+    a: &[i8],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    b: &[i8],
+    nz: &[u32],
+    n: usize,
+    acc: &mut [i32],
+) {
+    acc.fill(0);
+    for &kk in nz {
+        let kk = kk as usize;
+        let mut vs = [0i32; MR];
+        let mut any = 0i32;
+        for (r, v) in vs.iter_mut().enumerate().take(rows) {
+            *v = a[(row0 + r) * k + kk] as i32;
+            any |= *v;
+        }
+        if any == 0 {
+            continue; // all MR activations quantized-zero: skip, exact
+        }
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (r, &v) in vs.iter().enumerate().take(rows) {
             if v == 0 {
-                continue; // activation-zero skip, exact in i32
+                continue;
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cv, &w) in acc1.iter_mut().zip(brow) {
-                *cv += v * (w as i32);
+            let accr = &mut acc[r * n..(r + 1) * n];
+            for (av, &w) in accr.iter_mut().zip(brow) {
+                *av += v * (w as i32);
             }
         }
-        let crow = &mut c[row * n..(row + 1) * n];
-        for (col, ((cv, &av), &sc)) in crow.iter_mut().zip(acc1.iter()).zip(colscale).enumerate()
-        {
-            *cv = epi.apply(col, av as f32 * sc);
+    }
+}
+
+/// AVX2 accumulation block over the pair-interleaved packed operand:
+/// `_mm256_madd_epi16` computes each column's exact two-row i32 dot
+/// product; structural zeros were removed at pack time (Wsparse) and
+/// all-zero activation pairs are skipped (ASparse) — both exact, so this
+/// is bit-identical to [`acc_block_scalar`].
+///
+/// # Safety
+///
+/// Caller must ensure AVX2 is available, `a` holds at least
+/// `(row0+rows)*k` elements, and `acc` holds `rows * n` elements.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn acc_block_avx2(
+    a: &[i8],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    qp: &QPackedB,
+    n: usize,
+    acc: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(qp.k, k);
+    debug_assert_eq!(qp.n, n);
+    let pairs = qp.pairs();
+    let ap = a.as_ptr();
+    let dp = qp.data.as_ptr();
+    for p in 0..qp.panels() {
+        let col0 = p * NR8;
+        let cols = NR8.min(n - col0);
+        let mut accv = [[_mm256_setzero_si256(); 2]; MR];
+        for q in 0..pairs {
+            let k0 = *qp.kidx.get_unchecked(2 * q) as usize;
+            let k1 = *qp.kidx.get_unchecked(2 * q + 1) as usize;
+            // a-side pair per row, packed as [lo=a(k0), hi=a(k1)] i16s
+            let mut avals = [0i32; MR];
+            let mut any = 0i32;
+            for (r, slot) in avals.iter_mut().enumerate().take(rows) {
+                let a0 = *ap.add((row0 + r) * k + k0) as i32;
+                let a1 = *ap.add((row0 + r) * k + k1) as i32;
+                any |= a0 | a1;
+                *slot = ((a1 & 0xffff) << 16) | (a0 & 0xffff);
+            }
+            if any == 0 {
+                continue; // every activation of the pair is zero: exact skip
+            }
+            let raw = _mm256_loadu_si256(dp.add((p * pairs + q) * 32) as *const __m256i);
+            // bytes -> i16 pairs: lanes [c0k0, c0k1, c1k0, ...] for
+            // columns 0..7 (lo) and 8..15 (hi)
+            let lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(raw));
+            let hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(raw));
+            for (r, accr) in accv.iter_mut().enumerate().take(rows) {
+                let va = _mm256_set1_epi32(avals[r]);
+                accr[0] = _mm256_add_epi32(accr[0], _mm256_madd_epi16(lo, va));
+                accr[1] = _mm256_add_epi32(accr[1], _mm256_madd_epi16(hi, va));
+            }
         }
-        row += 1;
+        for (r, accr) in accv.iter().enumerate().take(rows) {
+            if cols == NR8 {
+                let dst = acc.as_mut_ptr().add(r * n + col0);
+                _mm256_storeu_si256(dst as *mut __m256i, accr[0]);
+                _mm256_storeu_si256(dst.add(8) as *mut __m256i, accr[1]);
+            } else {
+                let mut buf = [0i32; NR8];
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, accr[0]);
+                _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, accr[1]);
+                acc[r * n + col0..r * n + col0 + cols].copy_from_slice(&buf[..cols]);
+            }
+        }
     }
 }
 
@@ -310,7 +540,7 @@ fn gemm_i8(
 /// accumulation and the identical epilogue expression — the zero-tolerance
 /// oracle for [`conv2d_i8_into`] (i32 accumulation is exact, and the
 /// epilogue computes `acc as f32 * (x.scale * f.scales[o])` in the same
-/// operation order, so the two kernels agree bit for bit).
+/// operation order, so the kernels agree bit for bit on every backend).
 pub fn conv2d_i8_naive(x: &QTensor, f: &QFilter, stride: usize, epi: Epilogue) -> Tensor {
     assert_eq!(x.c, f.ic, "channel mismatch");
     assert!(x.h >= f.kh && x.w >= f.kw, "filter larger than input");
@@ -372,6 +602,40 @@ mod tests {
             assert_eq!(got.shape(), want.shape());
             assert_eq!(got.max_abs_diff(&want), 0.0, "case {i} not bit-exact");
         }
+    }
+
+    #[test]
+    fn prepacked_entry_is_bit_exact_with_naive_and_scalar() {
+        // oc = 21 exercises the partial tail panel; odd nz count exercises
+        // the zero-padded pair tail
+        let (qx, qf) = qpair(8, 9, 5, 3, 21, 97);
+        let packed = QPackedB::pack(&qf);
+        assert_eq!(packed.n, 21);
+        assert_eq!(packed.panels(), 2);
+        let colscale: Vec<f32> = qf.scales.iter().map(|&s| qx.scale * s).collect();
+        let mut got = Tensor::zeros(0, 0, 0, 0);
+        conv2d_i8_prepacked_into(&qx, &qf, &packed, 1, &colscale, Epilogue::none(), &mut got);
+        let want = conv2d_i8_naive(&qx, &qf, 1, Epilogue::none());
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got.max_abs_diff(&want), 0.0, "prepacked path not bit-exact");
+    }
+
+    #[test]
+    fn packed_operand_drops_structural_zero_rows() {
+        let mut rng = Rng::new(5);
+        // SD expansion-case splits carry structurally zero rows
+        let f = Filter::randn(5, 5, 3, 4, &mut rng);
+        let splits = super::super::scheme::pack_sd_splits(&f, 2);
+        let with_zeros = splits
+            .iter()
+            .find(|q| q.nz_rows.len() < q.kh * q.kw * q.ic)
+            .expect("an expansion split with structural zeros");
+        let packed = QPackedB::pack(with_zeros);
+        assert_eq!(packed.pairs(), with_zeros.nz_rows.len().div_ceil(2));
+        assert!(
+            packed.pairs() * 2 < with_zeros.kh * with_zeros.kw * with_zeros.ic + 2,
+            "packing must not reintroduce structurally-zero rows"
+        );
     }
 
     #[test]

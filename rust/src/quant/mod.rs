@@ -18,8 +18,10 @@
 //!   spec), SD sub-filter packing ([`pack_sd_splits`]), and the packed
 //!   geometry probe ([`sd_pack_shape`]) the `commodity` models consume.
 //! * [`gemm`] — [`conv2d_i8_into`], the int8 twin of the f32 hot path
-//!   (same tiling, same thread pool), with [`conv2d_i8_naive`] as its
-//!   zero-tolerance oracle.
+//!   (same tiling, same persistent worker pool, same runtime SIMD
+//!   dispatch; [`QPackedB`] is the compile-time-packed operand of the
+//!   AVX2 microkernel), with [`conv2d_i8_naive`] as its zero-tolerance
+//!   oracle on every backend.
 //!
 //! The engine threads a [`Precision`] knob through `Program::build*`:
 //! `Precision::Int8` lowers dense layers and convolutions onto
@@ -33,7 +35,10 @@
 pub mod gemm;
 pub mod scheme;
 
-pub use gemm::{conv2d_i8_into, conv2d_i8_naive, conv2d_i8_scaled_into, Epilogue};
+pub use gemm::{
+    conv2d_i8_into, conv2d_i8_naive, conv2d_i8_prepacked_into, conv2d_i8_scaled_into, Epilogue,
+    QPackedB,
+};
 pub use scheme::{
     absmax, pack_sd_splits, quantize_dense, quantize_filter, quantize_into, quantize_value,
     scale_for_absmax, sd_pack_shape, Precision, QFilter, QTensor, SdPackShape,

@@ -5,6 +5,11 @@
 //! Interchange format is HLO *text*: jax >= 0.5 serializes HloModuleProto
 //! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! This module also hosts [`pool`], the persistent worker pool the native
+//! GEMM kernels (f32 and int8) drain their tile queues on.
+
+pub mod pool;
 
 use std::collections::HashMap;
 use std::fs;

@@ -1,0 +1,308 @@
+//! Persistent shared worker pool for the GEMM kernels.
+//!
+//! The f32 and int8 convolution kernels used to spawn a fresh
+//! `std::thread::scope` pool on **every** conv call — one `clone()` of the
+//! thread stack, scheduler handshake, and teardown per layer per forward
+//! pass. This module replaces that with ONE process-wide pool ([`global`])
+//! whose threads are spawned lazily on first parallel kernel call and then
+//! parked between jobs, so the steady-state serving path pays a condvar
+//! wake instead of a `pthread_create` per layer. The pool is shared by the
+//! f32 kernel, the int8 kernel, and (transitively) every coordinator
+//! dispatcher worker executing an engine program — the thread-width policy
+//! stays the single `worker_count` / `SD_CONV_THREADS` knob in
+//! `tensor::ops`.
+//!
+//! ## Execution model
+//!
+//! [`Pool::run`] takes a *work function* and a helper count. The work
+//! function is the whole job: internally it drains an atomic tile cursor
+//! until no tiles remain (the drain closures the conv/dense drivers in
+//! `tensor::ops` and `quant::gemm` hand to `tensor::gemm::parallel_drain`),
+//! so it is safe — and cheap — for any number of threads to call it
+//! concurrently or repeatedly; a call after the cursor is exhausted
+//! returns immediately.
+//! `run` hands the function to `helpers` pool threads, calls it once on
+//! the caller thread too, and returns only when every helper invocation
+//! has finished. Tile ownership (each tile claimed by exactly one
+//! `fetch_add` winner) is what makes results independent of how many
+//! threads actually participate — the determinism contract of the kernels.
+//!
+//! ## Why the `unsafe`
+//!
+//! Pool threads are `'static` but kernel jobs borrow stack data (the
+//! input/output tensors of the conv call). `run` erases the borrow's
+//! lifetime to hand it to the pool, which is sound for exactly the reason
+//! `std::thread::scope` is: `run` does not return until every helper that
+//! received the reference has finished with it (the completion latch
+//! below), so the borrow never outlives the frame that owns the data.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Upper bound on pool threads, a sanity cap well above any sane
+/// `SD_CONV_THREADS` (the policy already clamps to the tile count).
+const MAX_THREADS: usize = 64;
+
+/// One submitted job: a lifetime-erased work function plus the completion
+/// latch the submitting thread blocks on.
+struct Job {
+    /// Lifetime-erased pointer to the caller's `&(dyn Fn() + Sync)` work
+    /// function. Valid until `remaining` hits zero — [`Pool::run`] keeps
+    /// the referent alive on its stack until then.
+    work: *const (dyn Fn() + Sync),
+    /// Helper invocations not yet *started* (tickets left to claim).
+    tickets: AtomicUsize,
+    /// Set if any helper invocation panicked (the submitter re-panics
+    /// after the join, mirroring `thread::scope`).
+    panicked: AtomicBool,
+    /// Helper invocations not yet *finished*; the submitter waits for 0.
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+// SAFETY: `work` points at a `Sync` closure (shared calls are safe), and
+// the pointer itself is only dereferenced while the submitter provably
+// keeps the referent alive (see module docs). Jobs move between threads
+// behind an Arc, never aliased mutably.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Shared {
+    /// Pending jobs. A job stays at the front until its last ticket is
+    /// claimed, so helpers drain one job fully before the next.
+    queue: Mutex<VecDeque<std::sync::Arc<Job>>>,
+    work_ready: Condvar,
+    /// Threads spawned so far (monotone, capped at [`MAX_THREADS`]).
+    threads: AtomicUsize,
+}
+
+/// The persistent pool. One process-wide instance behind [`global`];
+/// constructible separately only for isolated tests.
+pub struct Pool {
+    shared: std::sync::Arc<Shared>,
+}
+
+impl Pool {
+    pub fn new() -> Pool {
+        Pool {
+            shared: std::sync::Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                work_ready: Condvar::new(),
+                threads: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Number of pool threads spawned so far (lazily grown by [`Pool::run`]).
+    pub fn thread_count(&self) -> usize {
+        self.shared.threads.load(Ordering::Relaxed)
+    }
+
+    /// Run `work` on `helpers` pool threads *and* the calling thread,
+    /// returning when all `helpers + 1` invocations have completed.
+    /// `helpers == 0` degenerates to a plain call. `work` must be
+    /// re-entrant across threads (drain-a-shared-cursor shaped — see the
+    /// module docs).
+    pub fn run(&self, helpers: usize, work: &(dyn Fn() + Sync)) {
+        if helpers == 0 {
+            work();
+            return;
+        }
+        self.ensure_threads(helpers);
+        // SAFETY: the transmute erases the borrow lifetime of `work`. The
+        // completion wait below guarantees every pool-thread dereference
+        // of this pointer happens-before `run` returns, so the referent
+        // (and everything it borrows) outlives all uses — the
+        // `thread::scope` argument, with the latch playing the role of
+        // the scope join.
+        let erased: *const (dyn Fn() + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(work) };
+        let job = std::sync::Arc::new(Job {
+            work: erased,
+            tickets: AtomicUsize::new(helpers),
+            panicked: AtomicBool::new(false),
+            remaining: Mutex::new(helpers),
+            done: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(job.clone());
+        }
+        self.shared.work_ready.notify_all();
+        // The caller is a full participant, not just a waiter. Its panic
+        // (if any) is held until the helpers have joined — unwinding past
+        // the borrow while helpers still hold it would be the exact
+        // use-after-free the barrier exists to prevent.
+        let caller_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work));
+        {
+            let mut remaining = job.remaining.lock().unwrap();
+            while *remaining > 0 {
+                remaining = job.done.wait(remaining).unwrap();
+            }
+        }
+        if let Err(payload) = caller_result {
+            std::panic::resume_unwind(payload);
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("a kernel pool worker panicked (see stderr for the worker backtrace)");
+        }
+    }
+
+    /// Lazily grow the pool to at least `want` threads (capped).
+    fn ensure_threads(&self, want: usize) {
+        let want = want.min(MAX_THREADS);
+        while self.shared.threads.load(Ordering::Relaxed) < want {
+            let have = self.shared.threads.fetch_add(1, Ordering::Relaxed);
+            if have >= want {
+                self.shared.threads.fetch_sub(1, Ordering::Relaxed);
+                break;
+            }
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name(format!("gemm-pool-{have}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawning a gemm pool thread");
+        }
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Pool {
+        Pool::new()
+    }
+}
+
+fn worker_loop(shared: std::sync::Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // claim one ticket from the front job; pop it once its
+                // last ticket is taken so later jobs become visible
+                if let Some(front) = q.front() {
+                    let left = front.tickets.fetch_sub(1, Ordering::AcqRel);
+                    debug_assert!(left >= 1);
+                    let job = front.clone();
+                    if left == 1 {
+                        q.pop_front();
+                    }
+                    break job;
+                }
+                q = shared.work_ready.wait(q).unwrap();
+            }
+        };
+        // SAFETY: the submitter blocks in `Pool::run` until this
+        // invocation decrements `remaining`, keeping the referent alive
+        // for the duration of this call (see module docs). A panic is
+        // caught so `remaining` always reaches 0 (no hung submitter) and
+        // re-raised on the submitting thread.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe { (*job.work)() }));
+        if result.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut remaining = job.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            job.done.notify_all();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide kernel pool. Threads are spawned on first use and live
+/// for the process; between jobs they block on a condvar (no spinning).
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(Pool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_work_on_caller_and_helpers() {
+        let pool = Pool::new();
+        let calls = AtomicUsize::new(0);
+        pool.run(3, &|| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        // caller + 3 helpers, every invocation completed before return
+        assert_eq!(calls.load(Ordering::Relaxed), 4);
+        assert!(pool.thread_count() >= 1);
+    }
+
+    #[test]
+    fn pool_with_zero_helpers_is_a_plain_call() {
+        let pool = Pool::new();
+        let calls = AtomicUsize::new(0);
+        pool.run(0, &|| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.thread_count(), 0, "no threads spawned for inline runs");
+    }
+
+    #[test]
+    fn cursor_draining_jobs_complete_exactly() {
+        // the kernels' actual usage shape: N tiles, each claimed by exactly
+        // one fetch_add winner, any number of threads draining
+        let pool = Pool::new();
+        for round in 0..50 {
+            let tiles = 17 + round % 5;
+            let cursor = AtomicUsize::new(0);
+            let sum = AtomicU64::new(0);
+            pool.run(4, &|| loop {
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t >= tiles {
+                    break;
+                }
+                sum.fetch_add(t as u64 + 1, Ordering::Relaxed);
+            });
+            let want = (tiles * (tiles + 1) / 2) as u64;
+            assert_eq!(sum.load(Ordering::Relaxed), want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|| panic!("boom"));
+        }));
+        assert!(result.is_err(), "a panicking job must fail the submitter");
+        // the pool must remain functional for the next job
+        let calls = AtomicUsize::new(0);
+        pool.run(2, &|| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pool() {
+        let pool = std::sync::Arc::new(Pool::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let cursor = AtomicUsize::new(0);
+                        let hits = AtomicUsize::new(0);
+                        pool.run(2, &|| loop {
+                            if cursor.fetch_add(1, Ordering::Relaxed) >= 8 {
+                                break;
+                            }
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        });
+                        assert_eq!(hits.load(Ordering::Relaxed), 8);
+                    }
+                });
+            }
+        });
+        assert!(pool.thread_count() <= MAX_THREADS);
+    }
+}

@@ -1,0 +1,557 @@
+//! Cache-blocked MR x NR microkernel GEMM with packed-B panels and runtime
+//! SIMD dispatch — the f32 compute core under every convolution and dense
+//! layer (the int8 twin lives in `quant::gemm`).
+//!
+//! ## Structure
+//!
+//! * **Packing** ([`PackedB`]): the `K x N` right-hand operand (a filter's
+//!   HWIO payload, or a dense weight matrix) is reorganized once into
+//!   [`NR`]-wide column panels — panel `p`, row `kk` holds the `NR`
+//!   contiguous values `b[kk][p*NR .. p*NR+NR]` (zero-padded past `n`).
+//!   Every k-step of the microkernel then issues two aligned-stream loads
+//!   instead of striding across the full `N` row, and the panel the kernel
+//!   is working on stays cache-resident across all `M` rows. The engine
+//!   packs **all** conv / dense / SD-split weights once at `Program` compile
+//!   time; the non-engine call paths pack per call (O(K·N), amortized
+//!   against the O(M·K·N) GEMM).
+//! * **Microkernel**: an MR x [`NR`] register block — MR rows of A
+//!   broadcast against two [`NR`]/2-wide B vectors, accumulating in
+//!   registers across the whole K loop. The AVX2+FMA variant is selected at
+//!   runtime behind one `is_x86_feature_detected!` gate ([`active_backend`])
+//!   with a portable scalar fallback that doubles as the numerics oracle.
+//!
+//! ## Numerics policy
+//!
+//! Every output element is accumulated in **ascending-k order with a single
+//! accumulator** in both kernels — per-element operation *order* never
+//! depends on the element's position in the block, the tile, the batch, or
+//! on how many worker threads participate. Consequences, in the order the
+//! test suites rely on them:
+//!
+//! * **Determinism**: results are bit-identical for any `SD_CONV_THREADS`,
+//!   any tile schedule, any batch packing, on every run (asserted across
+//!   thread counts on all six benchmark networks in
+//!   rust/tests/gemm_numerics.rs).
+//! * **Scalar = oracle**: the scalar kernel performs `acc + a*b` with one
+//!   rounding per multiply and per add, exactly the operation sequence of
+//!   the seven-loop `conv2d_naive` reference — on machines without AVX2 the
+//!   fast path remains *bit-exact* vs naive.
+//! * **SIMD = ULP-bounded**: the AVX2 kernel uses FMA (`fl(a*b + acc)`,
+//!   one rounding per step instead of two), so its results differ from the
+//!   scalar oracle by rounding only. The documented bound, checked against
+//!   an f64-referenced result in rust/tests/gemm_numerics.rs: the error
+//!   obeys the standard forward bound `|ŷ − y| ≤ k·ε·Σ|aᵢbᵢ|`, and on
+//!   well-conditioned elements the divergence stays within
+//!   [`ulp_bound`]`(k)` ULPs of the f64 reference.
+//!
+//! See DESIGN.md §10 for the full layout / dispatch / policy writeup and
+//! `cargo bench --bench hotpath` for achieved GFLOP/s vs the scalar kernel.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Microkernel panel width (output channels per packed panel). Two 8-lane
+/// AVX registers; the scalar kernel uses the same width so both backends
+/// walk identical panels.
+pub const NR: usize = 16;
+
+/// Microkernel register-block height (A rows per block) of the SIMD path:
+/// 6 rows x 2 B vectors = 12 independent FMA chains, enough to cover FMA
+/// latency on two issue ports.
+const MR: usize = 6;
+
+/// Scalar-kernel row block (kept at the old kernel's height; the scalar
+/// path's accumulators live in stack arrays, not registers).
+const MR_SCALAR: usize = 4;
+
+/// Which microkernel implementation executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmBackend {
+    /// portable mul+add kernel — bit-exact with `conv2d_naive`, retained as
+    /// the numerics oracle and the bench baseline
+    Scalar,
+    /// AVX2 + FMA microkernel (runtime-detected)
+    Avx2,
+}
+
+impl GemmBackend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GemmBackend::Scalar => "scalar",
+            GemmBackend::Avx2 => "avx2+fma",
+        }
+    }
+}
+
+/// 0 = auto (detected), 1 = force scalar, 2 = force avx2 (honored only when
+/// detected). Bench/test hook — see [`force_backend`].
+static BACKEND_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn detected_backend() -> GemmBackend {
+    static DETECTED: OnceLock<GemmBackend> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return GemmBackend::Avx2;
+            }
+        }
+        GemmBackend::Scalar
+    })
+}
+
+/// The backend the GEMM entry points dispatch to: the runtime-detected one
+/// (AVX2+FMA where available), unless a bench/test override is in force.
+pub fn active_backend() -> GemmBackend {
+    match BACKEND_OVERRIDE.load(Ordering::Relaxed) {
+        1 => GemmBackend::Scalar,
+        2 if detected_backend() == GemmBackend::Avx2 => GemmBackend::Avx2,
+        _ => detected_backend(),
+    }
+}
+
+/// Force a specific backend (`None` restores auto-detection). A forced
+/// `Avx2` on a machine without AVX2 falls back to the detected backend.
+/// This is the hotpath bench's SIMD-vs-scalar measurement hook and a test
+/// hook; it is process-global, so callers must not rely on it across
+/// concurrent measurements.
+pub fn force_backend(backend: Option<GemmBackend>) {
+    let v = match backend {
+        None => 0,
+        Some(GemmBackend::Scalar) => 1,
+        Some(GemmBackend::Avx2) => 2,
+    };
+    BACKEND_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// A `K x N` GEMM right-hand operand packed into [`NR`]-wide column panels
+/// (see the module docs). Packed once per weight at engine compile time, or
+/// per call (into a reused thread-local) on the non-engine paths.
+#[derive(Clone, Debug, Default)]
+pub struct PackedB {
+    /// contraction length (rows of the unpacked operand)
+    pub k: usize,
+    /// logical column count (columns of the unpacked operand)
+    pub n: usize,
+    /// `panels() * k * NR` values: panel `p`, row `kk`, lane `j` at
+    /// `(p * k + kk) * NR + j`, zero past column `n`
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// An empty (0 x 0) operand — the reusable-slot form.
+    pub fn empty() -> PackedB {
+        PackedB::default()
+    }
+
+    /// Pack a row-major `k x n` matrix.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        let mut p = PackedB::empty();
+        p.pack_into(b, k, n);
+        p
+    }
+
+    /// [`PackedB::pack`] reusing this instance's buffer capacity.
+    pub fn pack_into(&mut self, b: &[f32], k: usize, n: usize) {
+        assert_eq!(b.len(), k * n, "packed operand size");
+        self.k = k;
+        self.n = n;
+        let panels = n.div_ceil(NR);
+        self.data.clear();
+        self.data.resize(panels * k * NR, 0.0);
+        for p in 0..panels {
+            let col0 = p * NR;
+            let cols = NR.min(n - col0);
+            for kk in 0..k {
+                let src = kk * n + col0;
+                let dst = (p * k + kk) * NR;
+                self.data[dst..dst + cols].copy_from_slice(&b[src..src + cols]);
+                // lanes past `cols` stay zero: the kernel computes them and
+                // the store step drops them
+            }
+        }
+    }
+
+    /// Number of [`NR`]-wide panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Packed payload size in bytes (the plan-time memory cost).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Reconstruct the row-major `k x n` matrix (drops the zero padding).
+    /// Used once at int8 lowering time, where the engine quantizes from the
+    /// packed form instead of carrying a second f32 copy of the weights.
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut b = vec![0.0f32; self.k * self.n];
+        for p in 0..self.panels() {
+            let col0 = p * NR;
+            let cols = NR.min(self.n - col0);
+            for kk in 0..self.k {
+                let src = (p * self.k + kk) * NR;
+                b[kk * self.n + col0..kk * self.n + col0 + cols]
+                    .copy_from_slice(&self.data[src..src + cols]);
+            }
+        }
+        b
+    }
+
+    /// One panel's `k * NR` slice.
+    #[inline]
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+/// `c = a (m x k) . b (k x n)`, row-major `a`/`c`, `b` pre-packed; `c` is
+/// fully overwritten. Dispatches to the active backend.
+pub fn gemm_packed(a: &[f32], b: &PackedB, m: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * b.k, "gemm a size");
+    assert_eq!(c.len(), m * b.n, "gemm c size");
+    // SAFETY: `c` is exclusively borrowed and sized m x n; all panels are
+    // written, each exactly once.
+    unsafe { gemm_panels_raw(active_backend(), a, b, m, c.as_mut_ptr(), 0, b.panels()) }
+}
+
+/// [`gemm_packed`] computing only panels `[p_lo, p_hi)` — columns
+/// `[p_lo*NR, min(p_hi*NR, n))` of every row of `c`. `c` is the base
+/// pointer of the full `m x n` row-major output; the panel range's columns
+/// are written, nothing else is touched.
+///
+/// This is the parallel building block: disjoint panel ranges write
+/// disjoint columns, so worker threads share one output buffer without
+/// locks (and, because each element's accumulation never leaves its panel,
+/// without any effect on results).
+///
+/// # Safety
+///
+/// `c` must be valid for writes of `m * b.n` elements, and no other thread
+/// may concurrently write the same panel range.
+pub(crate) unsafe fn gemm_panels_raw(
+    backend: GemmBackend,
+    a: &[f32],
+    b: &PackedB,
+    m: usize,
+    c: *mut f32,
+    p_lo: usize,
+    p_hi: usize,
+) {
+    debug_assert_eq!(a.len(), m * b.k);
+    debug_assert!(p_hi <= b.panels());
+    for p in p_lo..p_hi {
+        let col0 = p * NR;
+        let ncols = NR.min(b.n - col0);
+        match backend {
+            GemmBackend::Scalar => panel_scalar(a, b.k, m, b.panel(p), c, b.n, col0, ncols),
+            GemmBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                panel_avx2(a, b.k, m, b.panel(p), c, b.n, col0, ncols);
+                #[cfg(not(target_arch = "x86_64"))]
+                panel_scalar(a, b.k, m, b.panel(p), c, b.n, col0, ncols);
+            }
+        }
+    }
+}
+
+/// Portable panel kernel: [`MR_SCALAR`] rows at a time, per-element
+/// ascending-k `acc + a*b` (two roundings per step) — the operation
+/// sequence of `conv2d_naive`, hence bit-exact with it.
+///
+/// # Safety
+///
+/// `c` must be valid for writes of `m * n` elements (row-major).
+unsafe fn panel_scalar(
+    a: &[f32],
+    k: usize,
+    m: usize,
+    panel: &[f32],
+    c: *mut f32,
+    n: usize,
+    col0: usize,
+    ncols: usize,
+) {
+    let mut row = 0;
+    while row < m {
+        let rows = (m - row).min(MR_SCALAR);
+        let mut acc = [[0.0f32; NR]; MR_SCALAR];
+        for kk in 0..k {
+            let bvals = &panel[kk * NR..kk * NR + NR];
+            for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+                let av = a[(row + r) * k + kk];
+                for (dst, &bv) in accr.iter_mut().zip(bvals) {
+                    *dst += av * bv;
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate().take(rows) {
+            let dst = c.add((row + r) * n + col0);
+            std::ptr::copy_nonoverlapping(accr.as_ptr(), dst, ncols);
+        }
+        row += rows;
+    }
+}
+
+/// AVX2+FMA panel kernel: [`MR`] x [`NR`] register block, per-element
+/// ascending-k `fma(a, b, acc)` (one rounding per step). Remainder rows run
+/// one at a time through the same per-element operation sequence, so an
+/// element's bits never depend on which block shape computed it.
+///
+/// # Safety
+///
+/// Caller must ensure AVX2+FMA are available (dispatch does) and that `c`
+/// is valid for writes of `m * n` elements.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn panel_avx2(
+    a: &[f32],
+    k: usize,
+    m: usize,
+    panel: &[f32],
+    c: *mut f32,
+    n: usize,
+    col0: usize,
+    ncols: usize,
+) {
+    use std::arch::x86_64::*;
+
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+
+    let mut row = 0;
+    while row + MR <= m {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for kk in 0..k {
+            let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+            let b1 = _mm256_loadu_ps(pp.add(kk * NR + 8));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*ap.add((row + r) * k + kk));
+                accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            store_row(c, (row + r) * n + col0, ncols, accr[0], accr[1]);
+        }
+        row += MR;
+    }
+    while row < m {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for kk in 0..k {
+            let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+            let b1 = _mm256_loadu_ps(pp.add(kk * NR + 8));
+            let av = _mm256_set1_ps(*ap.add(row * k + kk));
+            acc0 = _mm256_fmadd_ps(av, b0, acc0);
+            acc1 = _mm256_fmadd_ps(av, b1, acc1);
+        }
+        store_row(c, row * n + col0, ncols, acc0, acc1);
+        row += 1;
+    }
+}
+
+/// Store one row's two accumulator vectors at `c[off..off+ncols]`
+/// (full-width fast path, buffered tail for the last partial panel).
+///
+/// # Safety
+///
+/// Caller must ensure AVX is available and `c[off..off+ncols]` is valid
+/// for writes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn store_row(
+    c: *mut f32,
+    off: usize,
+    ncols: usize,
+    acc0: std::arch::x86_64::__m256,
+    acc1: std::arch::x86_64::__m256,
+) {
+    use std::arch::x86_64::*;
+    if ncols == NR {
+        _mm256_storeu_ps(c.add(off), acc0);
+        _mm256_storeu_ps(c.add(off + 8), acc1);
+    } else {
+        let mut buf = [0.0f32; NR];
+        _mm256_storeu_ps(buf.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(buf.as_mut_ptr().add(8), acc1);
+        std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(off), ncols);
+    }
+}
+
+/// ULP budget of the SIMD kernel vs the f64-referenced result for a
+/// k-long contraction, on well-conditioned elements (see the module docs'
+/// numerics policy): `8 + 4·⌈√k⌉`, the random-walk rounding envelope with
+/// 4x headroom.
+pub fn ulp_bound(k: usize) -> u64 {
+    8 + 4 * (k as f64).sqrt().ceil() as u64
+}
+
+/// Distance between two finite f32 values in units in the last place —
+/// the number of representable floats between them (0 for identical
+/// values; +0 and -0 are 0 apart).
+pub fn ulp_distance(a: f32, b: f32) -> u64 {
+    fn ord(x: f32) -> i64 {
+        let bits = x.to_bits();
+        if bits & 0x8000_0000 == 0 {
+            bits as i64
+        } else {
+            -((bits & 0x7fff_ffff) as i64)
+        }
+    }
+    (ord(a) - ord(b)).unsigned_abs()
+}
+
+/// A raw mutable pointer that asserts cross-thread shareability: the
+/// parallel tile/panel drivers hand each worker a disjoint region of one
+/// output buffer through this.
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+// SAFETY: shareability is asserted by the drivers, which guarantee
+// disjoint writes (each tile / panel range claimed by exactly one
+// `fetch_add` winner) and joined lifetimes (the pool barrier).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Run `worker` on the caller plus `workers - 1` threads of the persistent
+/// pool ([`crate::runtime::pool`]). Every invocation receives the shared
+/// tile cursor and drains it: `cursor.fetch_add(1)` until the caller's tile
+/// count is exhausted — the lock-free replacement for the old
+/// `Mutex<Vec<Tile>>` pop queue, and the reason results cannot depend on
+/// `workers` (each tile index is claimed by exactly one winner and computed
+/// by the same code whichever thread claims it).
+pub(crate) fn parallel_drain(workers: usize, worker: &(dyn Fn(&AtomicUsize) + Sync)) {
+    let cursor = AtomicUsize::new(0);
+    if workers <= 1 {
+        worker(&cursor);
+        return;
+    }
+    crate::runtime::pool::global().run(workers - 1, &|| worker(&cursor));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[r * k + kk] * b[kk * n + j];
+                }
+                c[r * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips() {
+        let mut rng = Rng::new(2);
+        for (k, n) in [(1, 1), (3, 16), (5, 17), (7, 40), (2, 15)] {
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let packed = PackedB::pack(&b, k, n);
+            assert_eq!(packed.panels(), n.div_ceil(NR));
+            assert_eq!(packed.unpack(), b, "k{k} n{n}");
+        }
+    }
+
+    #[test]
+    fn scalar_backend_matches_naive_bitwise() {
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [(1, 1, 1), (4, 9, 16), (6, 30, 17), (13, 25, 33), (3, 8, 5)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let packed = PackedB::pack(&b, k, n);
+            let mut c = vec![f32::NAN; m * n];
+            // SAFETY: c is exclusively owned, sized m x n
+            unsafe {
+                gemm_panels_raw(
+                    GemmBackend::Scalar,
+                    &a,
+                    &packed,
+                    m,
+                    c.as_mut_ptr(),
+                    0,
+                    packed.panels(),
+                )
+            };
+            let want = naive(&a, &b, m, k, n);
+            assert_eq!(c, want, "m{m} k{k} n{n}");
+        }
+    }
+
+    #[test]
+    fn active_backend_obeys_f64_forward_bound() {
+        // the documented policy, per element: |c - ref64| <= k*eps*sum|ab|
+        // (holds for both the mul+add scalar kernel and the FMA kernel;
+        // the tighter conditioned-ULP sweep lives in
+        // rust/tests/gemm_numerics.rs)
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (23, 64, 37);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let packed = PackedB::pack(&b, k, n);
+        let mut c = vec![f32::NAN; m * n];
+        gemm_packed(&a, &packed, m, &mut c);
+        let eps = f32::EPSILON as f64;
+        for r in 0..m {
+            for j in 0..n {
+                let mut refv = 0.0f64;
+                let mut sa = 0.0f64;
+                for kk in 0..k {
+                    let term = a[r * k + kk] as f64 * b[kk * n + j] as f64;
+                    refv += term;
+                    sa += term.abs();
+                }
+                let got = c[r * n + j] as f64;
+                let err = (got - refv).abs();
+                let bound = k as f64 * eps * sa + f64::from(f32::MIN_POSITIVE);
+                assert!(err <= bound, "({r},{j}): |{got} - {refv}| = {err} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_panel_ranges_compose() {
+        // computing panels in two disjoint calls equals one full call —
+        // the property the parallel dense driver relies on
+        let mut rng = Rng::new(23);
+        let (m, k, n) = (5, 12, 50);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let packed = PackedB::pack(&b, k, n);
+        let mut whole = vec![0.0f32; m * n];
+        gemm_packed(&a, &packed, m, &mut whole);
+        let mut split = vec![0.0f32; m * n];
+        let mid = packed.panels() / 2;
+        // read the backend once: bit-compare below requires one kernel
+        let be = active_backend();
+        // SAFETY: exclusive buffer; the two ranges write disjoint columns
+        unsafe {
+            gemm_panels_raw(be, &a, &packed, m, split.as_mut_ptr(), 0, mid);
+            gemm_panels_raw(be, &a, &packed, m, split.as_mut_ptr(), mid, packed.panels());
+        }
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert!(ulp_distance(-1e-3, 1e-3) > 1_000_000);
+        assert!(ulp_bound(2304) > ulp_bound(9));
+    }
+}

@@ -1,9 +1,13 @@
 //! NHWC f32 tensor substrate + the convolution/deconvolution ops every other
 //! module builds on. Layout matches the python side (ref.py): activations
-//! NHWC, filters HWIO, deconvolution uses scatter semantics.
+//! NHWC, filters HWIO, deconvolution uses scatter semantics. The GEMM
+//! compute core under the ops (packed-B panels, runtime AVX2/FMA
+//! microkernel dispatch, numerics policy) lives in [`gemm`].
 
+pub mod gemm;
 pub(crate) mod ops;
 
+pub use gemm::{active_backend, force_backend, GemmBackend, PackedB};
 pub use ops::*;
 
 /// Dense 4-D tensor, NHWC layout, f32.

@@ -1,20 +1,80 @@
-//! Property tests for the im2col + GEMM convolution hot path: bit-exact
-//! agreement with the retained scalar oracle (`conv2d_naive`) across random
-//! geometries — stride > 1, non-square inputs, rectangular filters,
-//! multi-channel, multi-batch — in both the single-thread and worker-pool
-//! regimes, plus the SD pipeline running end to end through the new kernel.
+//! Property tests for the im2col + GEMM convolution hot path against the
+//! retained scalar oracle (`conv2d_naive`) across random geometries —
+//! stride > 1, non-square inputs, rectangular filters, multi-channel,
+//! multi-batch — in both the single-thread and worker-pool regimes, plus
+//! the SD pipeline running end to end through the kernel.
 //!
-//! Bit-exactness (not just allclose) holds because the GEMM micro-kernel
-//! accumulates every output element in ascending-k order with a single f32
-//! accumulator — the same operation sequence as the oracle's
-//! (dy, dx, ic) loops.
+//! Numerics policy (see `tensor::gemm` and DESIGN.md §10): on the scalar
+//! backend the GEMM is **bit-exact** with the oracle (identical
+//! per-element operation sequence); on the AVX2+FMA backend it matches the
+//! oracle to the documented ULP bound (FMA re-rounds each step, never
+//! reorders k). Thread count never changes a bit on either backend — the
+//! f64-referenced sweeps live in rust/tests/gemm_numerics.rs.
 
 use split_deconv::sd::sd_deconv2d;
-use split_deconv::tensor::{conv2d_gemm, conv2d_naive, conv2d_valid, deconv2d, Filter, Tensor};
+use split_deconv::tensor::{
+    active_backend, conv2d_gemm, conv2d_naive, conv2d_valid, deconv2d, gemm, Filter, GemmBackend,
+    Tensor,
+};
 use split_deconv::util::rng::Rng;
 
+/// Policy assertion (DESIGN.md §10): bit-exact vs the f32 oracle on the
+/// scalar backend; on SIMD, every element within the rigorous forward
+/// bound `k·ε·Σ|aᵢbᵢ|` of an f64 reference, and well-conditioned elements
+/// (Σ|aᵢbᵢ| ≤ 8·|ref|) additionally ULP-close. The conditioning filter
+/// matters: near-cancelling sums legitimately amplify the FMA-vs-mul+add
+/// rounding difference without bounding it in ULPs of the tiny result.
+fn assert_matches_oracle(got: &Tensor, x: &Tensor, f: &Filter, stride: usize, ctx: &str) {
+    let want = conv2d_naive(x, f, stride);
+    assert_eq!(got.shape(), want.shape(), "{ctx}");
+    if active_backend() == GemmBackend::Scalar {
+        assert_eq!(got.max_abs_diff(&want), 0.0, "{ctx}: scalar backend not bit-exact");
+        return;
+    }
+    let kdim = f.kh * f.kw * f.ic;
+    let eps = f32::EPSILON as f64;
+    let ulp_budget = 8 * gemm::ulp_bound(kdim);
+    let (oh, ow) = (want.h, want.w);
+    let mut i = 0;
+    for n in 0..want.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for o in 0..f.oc {
+                    let mut refv = 0.0f64;
+                    let mut sa = 0.0f64;
+                    for dy in 0..f.kh {
+                        for dx in 0..f.kw {
+                            for ic in 0..f.ic {
+                                let term = x.at(n, oy * stride + dy, ox * stride + dx, ic) as f64
+                                    * f.at(dy, dx, ic, o) as f64;
+                                refv += term;
+                                sa += term.abs();
+                            }
+                        }
+                    }
+                    let g = got.data[i];
+                    let err = (g as f64 - refv).abs();
+                    let bound = kdim as f64 * eps * sa + f64::from(f32::MIN_POSITIVE);
+                    assert!(
+                        err <= bound,
+                        "{ctx}: elem {i}: |{g} - {refv}| = {err} > forward bound {bound}"
+                    );
+                    if sa <= 8.0 * refv.abs() {
+                        let d = gemm::ulp_distance(g, refv as f32);
+                        assert!(
+                            d <= ulp_budget,
+                            "{ctx}: elem {i}: {g} vs f64-ref {refv}: {d} ulps > {ulp_budget}"
+                        );
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+}
+
 #[test]
-fn gemm_bit_exact_200_random_geometries() {
+fn gemm_matches_oracle_200_random_geometries() {
     let mut rng = Rng::new(0x6E44);
     for case in 0..200 {
         let s = 1 + rng.below(3); // stride 1..=3
@@ -28,42 +88,41 @@ fn gemm_bit_exact_200_random_geometries() {
         let x = Tensor::randn(n, h, w, ic, &mut rng);
         let f = Filter::randn(kh, kw, ic, oc, &mut rng);
         let got = conv2d_valid(&x, &f, s);
-        let want = conv2d_naive(&x, &f, s);
-        assert_eq!(
-            got.shape(),
-            want.shape(),
-            "case {case}: n{n} {h}x{w}x{ic} k{kh}x{kw} s{s} oc{oc}"
-        );
-        assert_eq!(
-            got.max_abs_diff(&want),
-            0.0,
-            "case {case}: n{n} {h}x{w}x{ic} k{kh}x{kw} s{s} oc{oc} not bit-exact"
+        assert_matches_oracle(
+            &got,
+            &x,
+            &f,
+            s,
+            &format!("case {case}: n{n} {h}x{w}x{ic} k{kh}x{kw} s{s} oc{oc}"),
         );
     }
 }
 
 #[test]
-fn gemm_bit_exact_in_worker_pool_regime() {
-    // Large enough to cross the parallel threshold: the scoped worker pool
-    // must produce the same bits as the single-thread path and the oracle
-    // (each output element is owned by exactly one tile).
+fn gemm_worker_pool_regime_is_thread_invariant_and_tracks_oracle() {
+    // Large enough to cross the parallel threshold: the persistent worker
+    // pool must produce the same bits as the single-thread path (each
+    // output element is owned by exactly one tile, and per-element
+    // accumulation order is tile-independent), and both must track the
+    // scalar oracle per the policy.
     let mut rng = Rng::new(0x9A11);
     let x = Tensor::randn(2, 40, 40, 32, &mut rng);
     let f = Filter::randn(3, 3, 32, 64, &mut rng);
     let got = conv2d_gemm(&x, &f, 1);
-    let want = conv2d_naive(&x, &f, 1);
-    assert_eq!(got.max_abs_diff(&want), 0.0, "worker pool not bit-exact");
+    assert_matches_oracle(&got, &x, &f, 1, "worker pool regime");
+    // and across runs: the pool must be deterministic, not just close
+    let again = conv2d_gemm(&x, &f, 1);
+    assert_eq!(got.max_abs_diff(&again), 0.0, "two runs disagree bitwise");
 }
 
 #[test]
-fn gemm_bit_exact_strided_on_large_input() {
+fn gemm_strided_on_large_input_tracks_oracle() {
     let mut rng = Rng::new(0x51DE);
     let x = Tensor::randn(1, 37, 53, 24, &mut rng);
     let f = Filter::randn(4, 3, 24, 48, &mut rng);
     for s in [2, 3] {
         let got = conv2d_gemm(&x, &f, s);
-        let want = conv2d_naive(&x, &f, s);
-        assert_eq!(got.max_abs_diff(&want), 0.0, "stride {s} not bit-exact");
+        assert_matches_oracle(&got, &x, &f, s, &format!("stride {s}"));
     }
 }
 
@@ -81,12 +140,7 @@ fn gemm_edge_geometries() {
         let x = Tensor::randn(1, h, w, ic, &mut rng);
         let f = Filter::randn(kh, kw, ic, oc, &mut rng);
         let got = conv2d_valid(&x, &f, s);
-        let want = conv2d_naive(&x, &f, s);
-        assert_eq!(
-            got.max_abs_diff(&want),
-            0.0,
-            "{h}x{w}x{ic} k{kh}x{kw} s{s} oc{oc}"
-        );
+        assert_matches_oracle(&got, &x, &f, s, &format!("{h}x{w}x{ic} k{kh}x{kw} s{s} oc{oc}"));
     }
 }
 
