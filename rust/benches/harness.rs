@@ -98,6 +98,20 @@ impl JsonSink {
         self.push_entry(optimized, if s.is_finite() { Some(s) } else { None }, None);
     }
 
+    /// Record an entry with arbitrary numeric fields — for rows whose
+    /// tracked quantities are not a single time (e.g. the open-loop
+    /// serving bench's offered/achieved rps + latency percentiles).
+    pub fn record_fields(&mut self, name: &str, fields: &[(&str, f64)]) {
+        let mut e = format!("{{\"name\":\"{}\"", json_escape(name));
+        for (k, v) in fields {
+            if v.is_finite() {
+                e.push_str(&format!(",\"{}\":{v:.4}", json_escape(k)));
+            }
+        }
+        e.push('}');
+        self.entries.push(e);
+    }
+
     /// Record a result with its achieved GFLOP/s (from min-over-iters).
     pub fn record_gflops(&mut self, r: &BenchResult, gflops: f64) {
         self.push_entry(r, None, if gflops.is_finite() { Some(gflops) } else { None });

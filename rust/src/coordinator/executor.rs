@@ -50,6 +50,14 @@ pub fn plan_batch(supported: &[usize], n: usize) -> usize {
 /// partition `0..n` in order with no overlap or gap, so no request ever
 /// crosses a chunk boundary and none is executed twice (property-tested in
 /// rust/tests/batch_packing.rs).
+///
+/// This is PJRT *executable granularity*, not serve-path batching policy:
+/// the dispatcher forms batches with the continuous batcher
+/// ([`crate::coordinator::LaneQueue::fill`] — up to `max_batch` or a fill
+/// budget, whichever first) and hands the whole batch to the executor;
+/// only [`PjrtExecutor`] then chunks internally because its AOT
+/// executables come in fixed batch sizes. The native path runs any batch
+/// length directly.
 pub fn chunk_batches(supported: &[usize], n: usize) -> Vec<(usize, usize)> {
     let mut chunks = Vec::new();
     let mut cursor = 0;

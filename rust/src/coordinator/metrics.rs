@@ -1,7 +1,8 @@
 //! Serving metrics: throughput, latency distribution (p50/p95/p99),
-//! batch-size histogram, per-worker batch/request counters, and the queue
-//! depth high-water mark. One `Metrics` is shared by every dispatcher
-//! worker (and the submitting side) behind an `Arc`.
+//! batch-size histogram, per-worker and per-model-lane batch/request
+//! counters, admission-control counters (sheds, expired-deadline drops),
+//! and the queue depth high-water mark. One `Metrics` is shared by every
+//! dispatcher worker (and the submitting side) behind an `Arc`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -18,6 +19,7 @@ struct Inner {
     compute_us_total: u64,
     worker_batches: Vec<u64>,
     worker_served: Vec<u64>,
+    lane_served: Vec<u64>,
 }
 
 impl Default for Inner {
@@ -32,6 +34,7 @@ impl Default for Inner {
             compute_us_total: 0,
             worker_batches: Vec::new(),
             worker_served: Vec::new(),
+            lane_served: Vec::new(),
         }
     }
 }
@@ -44,6 +47,14 @@ pub struct Metrics {
     /// on every submit, and the scaled submit hot path must not serialize
     /// on the same lock the N workers take per batch
     max_queue_depth: AtomicU64,
+    /// requests refused at admission because the lane queue was full —
+    /// every one of these was ANSWERED with an explicit shed response
+    /// (never silently dropped). Lock-free: sheds happen on the submit
+    /// hot path.
+    shed: AtomicU64,
+    /// requests dropped by a dispatcher because their deadline expired
+    /// BEFORE compute (the request never reached the executor)
+    expired: AtomicU64,
 }
 
 impl Metrics {
@@ -60,7 +71,9 @@ impl Metrics {
         m
     }
 
-    pub fn record_batch(&self, worker: usize, size: usize, compute_us: u64) {
+    /// Record one executed batch of `size` requests from model lane
+    /// `lane`, dispatched by `worker`.
+    pub fn record_batch(&self, worker: usize, lane: usize, size: usize, compute_us: u64) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.served += size as u64;
@@ -72,12 +85,26 @@ impl Metrics {
         }
         m.worker_batches[worker] += 1;
         m.worker_served[worker] += size as u64;
+        if m.lane_served.len() <= lane {
+            m.lane_served.resize(lane + 1, 0);
+        }
+        m.lane_served[lane] += size as u64;
     }
 
     /// Record an observed queue depth (called by the submit path with the
     /// post-push depth); the snapshot keeps the high-water mark. Lock-free.
     pub fn note_queue_depth(&self, depth: usize) {
         self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Count one admission-control shed (queue full at submit). Lock-free.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one expired-deadline drop (request dropped before compute).
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, us: u64) {
@@ -125,7 +152,10 @@ impl Metrics {
             },
             worker_batches: m.worker_batches.clone(),
             worker_served: m.worker_served.clone(),
+            lane_served: m.lane_served.clone(),
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
         }
     }
 }
@@ -147,16 +177,23 @@ pub struct MetricsSnapshot {
     pub worker_batches: Vec<u64>,
     /// requests served per dispatcher worker (index = worker id)
     pub worker_served: Vec<u64>,
+    /// requests served per model lane (index = lane id; empty until the
+    /// first batch of that lane completes)
+    pub lane_served: Vec<u64>,
     /// highest queue depth observed at submit time (<= `queue_cap` always)
     pub max_queue_depth: u64,
+    /// admission-control sheds (queue full at submit; each one answered)
+    pub shed: u64,
+    /// expired-deadline drops (removed before compute)
+    pub expired: u64,
 }
 
 impl MetricsSnapshot {
     pub fn summary(&self) -> String {
         let workers: Vec<String> = self.worker_batches.iter().map(|b| b.to_string()).collect();
         format!(
-            "served={} batches={} errors={} mean_batch={:.2} p50={:.0}us p95={:.0}us p99={:.0}us mean_compute={:.0}us worker_batches=[{}] max_queue_depth={}",
-            self.served, self.batches, self.errors, self.mean_batch,
+            "served={} batches={} errors={} shed={} expired={} mean_batch={:.2} p50={:.0}us p95={:.0}us p99={:.0}us mean_compute={:.0}us worker_batches=[{}] max_queue_depth={}",
+            self.served, self.batches, self.errors, self.shed, self.expired, self.mean_batch,
             self.p50_us, self.p95_us, self.p99_us, self.mean_compute_us,
             workers.join(","), self.max_queue_depth
         )
@@ -170,8 +207,8 @@ mod tests {
     #[test]
     fn batch_accounting() {
         let m = Metrics::new(2);
-        m.record_batch(0, 4, 100);
-        m.record_batch(1, 2, 50);
+        m.record_batch(0, 0, 4, 100);
+        m.record_batch(1, 1, 2, 50);
         m.record_latency(10);
         m.record_latency(20);
         m.record_latency(30);
@@ -187,15 +224,32 @@ mod tests {
         assert_eq!(s.p99_us, 30.0);
         assert_eq!(s.worker_batches, vec![1, 1]);
         assert_eq!(s.worker_served, vec![4, 2]);
+        assert_eq!(s.lane_served, vec![4, 2]);
         assert_eq!(s.max_queue_depth, 3);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.expired, 0);
     }
 
     #[test]
     fn worker_counters_grow_on_demand() {
         let m = Metrics::default();
-        m.record_batch(3, 5, 10);
+        m.record_batch(3, 2, 5, 10);
         let s = m.snapshot();
         assert_eq!(s.worker_batches, vec![0, 0, 0, 1]);
         assert_eq!(s.worker_served, vec![0, 0, 0, 5]);
+        assert_eq!(s.lane_served, vec![0, 0, 5]);
+    }
+
+    #[test]
+    fn shed_and_expired_counters() {
+        let m = Metrics::new(1);
+        m.record_shed();
+        m.record_shed();
+        m.record_expired();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.expired, 1);
+        assert!(s.summary().contains("shed=2"));
+        assert!(s.summary().contains("expired=1"));
     }
 }

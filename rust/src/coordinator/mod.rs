@@ -1,24 +1,33 @@
 //! L3 coordinator: the serving stack around the compiled generator.
 //!
-//! A shared bounded request queue ([`queue::BoundedQueue`]) feeds a pool of
+//! A shared bounded request queue ([`queue::LaneQueue`] — one
+//! admission-controlled FIFO lane per model) feeds a pool of
 //! `ServerConfig.workers` dispatcher threads. Each worker owns its own
-//! compute backend — executors are constructed *inside* the worker thread
-//! from a `Send + Sync` factory called once per worker (PJRT handles are
-//! not `Send`; the native path shares ONE immutable
-//! [`crate::engine::Program`] behind an `Arc` and gives every worker its
-//! own `Scratch`). Each worker independently implements *dynamic
-//! batching*: block for the first request, drain the queue up to
-//! `max_batch` or until `batch_timeout` elapses, pack the latents, run one
+//! compute backends — one executor per model lane, constructed *inside*
+//! the worker thread from `Send + Sync` factories called once per worker
+//! (PJRT handles are not `Send`; the native path shares ONE immutable
+//! [`crate::engine::Program`] per model behind an `Arc` and gives every
+//! worker its own `Scratch`). Each worker independently implements
+//! *continuous batching*: block for the first request of any lane
+//! (round-robin fair), fill a single-lane batch up to `max_batch` or
+//! until the `batch_timeout` fill budget elapses — whichever fires first
+//! ([`queue::LaneQueue::fill`]) — drop requests whose deadline already
+//! expired BEFORE compute, pack the survivors' latents, run one
 //! executable call, fan responses back out. Backpressure is the bounded
-//! queue: [`Server::submit`] fails fast when full.
+//! lane: [`Server::submit`] fails fast when full, and every such shed is
+//! counted in [`Metrics`] so the network front door ([`crate::server`])
+//! can answer it explicitly.
 //!
-//! Invariants (tested in rust/tests/coordinator.rs and
-//! rust/tests/coordinator_stress.rs, at any worker count):
-//! * every submitted request gets exactly one response (no drop/dup) —
-//!   including requests already accepted when [`Server::shutdown`] is
-//!   called (close-then-drain);
+//! Invariants (tested in rust/tests/coordinator.rs,
+//! rust/tests/coordinator_stress.rs and rust/tests/front_door.rs, at any
+//! worker count):
+//! * every submitted request gets exactly one resolution (response,
+//!   disconnect on batch failure, or expired-deadline disconnect counted
+//!   in `Metrics.expired`) — no drop/dup, including requests already
+//!   accepted when [`Server::shutdown`] is called (close-then-drain);
 //! * responses carry the request's own image (order-independent identity);
-//! * queue depth never exceeds `queue_cap`;
+//! * a batch only ever contains requests for ONE model lane;
+//! * per-lane queue depth never exceeds `queue_cap`;
 //! * batch sizes never exceed `max_batch`;
 //! * a failed batch disconnects exactly its own requests' responders and
 //!   the pool keeps serving subsequent batches.
@@ -39,28 +48,35 @@ use crate::engine::{DeconvImpl, Precision, Program};
 
 pub use executor::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use queue::{BoundedQueue, PopDeadline, PushError};
+pub use queue::{BoundedQueue, LaneQueue, PopDeadline, PushError};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// maximum requests packed into one executable call
     pub max_batch: usize,
-    /// how long a worker waits to fill a batch after the first arrival
+    /// the continuous batcher's fill budget: how long a worker waits to
+    /// fill a batch after the first arrival (microsecond granularity —
+    /// `Duration::from_micros`). The batch executes at `max_batch` OR
+    /// when this budget elapses, whichever fires first.
     pub batch_timeout: Duration,
-    /// bounded queue depth (backpressure limit), shared by all workers
+    /// bounded PER-LANE queue depth (admission-control limit): each
+    /// model's lane holds at most this many queued requests, and a full
+    /// lane sheds new submits without touching other models' lanes
     pub queue_cap: usize,
     /// which benchmark model the *native* backend serves (any spelling
     /// [`crate::networks::by_name`] accepts: dcgan, artgan, sngan, gpgan,
     /// mde, fst) — [`Server::start_native`] compiles it ONCE into an
-    /// `engine::Program` shared by every worker. The PJRT backend takes an
-    /// explicit artifact prefix instead (artifact families can outnumber
-    /// models, e.g. `dcgan_sd` vs `dcgan_nzp`); callers should derive it
-    /// from [`crate::networks::slug`], as the CLI does.
+    /// `engine::Program` shared by every worker. Multi-model servers
+    /// ([`Server::start_native_multi`]) ignore this field and take the
+    /// model list explicitly. The PJRT backend takes an explicit artifact
+    /// prefix instead (artifact families can outnumber models, e.g.
+    /// `dcgan_sd` vs `dcgan_nzp`); callers should derive it from
+    /// [`crate::networks::slug`], as the CLI does.
     pub model: String,
     /// dispatcher threads draining the shared queue (clamped to >= 1).
-    /// Each owns its own executor: its own `Scratch` on the native path,
-    /// its own PJRT client on the artifact path.
+    /// Each owns its own executor per model lane: its own `Scratch` on
+    /// the native path, its own PJRT client on the artifact path.
     pub workers: usize,
     /// numeric precision of the *native* backend's compiled program
     /// ([`Precision::Int8`] = the quantized serving mode: int8 weights and
@@ -86,8 +102,15 @@ impl Default for ServerConfig {
 /// A generation request: latent vector in, image out.
 struct Request {
     id: u64,
+    /// model lane index (0 on single-model servers)
+    lane: usize,
     z: Vec<f32>,
     submitted: Instant,
+    /// absolute completion deadline: a dispatcher drops the request
+    /// WITHOUT computing it if this instant has passed when the batch
+    /// forms (counted in `Metrics.expired`; the responder is disconnected
+    /// so the submitter observes the drop immediately)
+    deadline: Option<Instant>,
     resp: mpsc::Sender<Response>,
 }
 
@@ -105,28 +128,99 @@ pub struct Response {
     pub batch_size: usize,
 }
 
+/// Why a submit was refused. `Full` is the admission-control shed signal
+/// (already counted in [`Metrics`] when this is returned); the caller owes
+/// the client an explicit answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// the model's lane is at `queue_cap` (backpressure shed)
+    Full,
+    /// the server is shutting down (or already stopped)
+    Closed,
+    /// no such model lane
+    UnknownModel,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "server stopped"),
+            SubmitError::UnknownModel => write!(f, "unknown model lane"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One model lane of a multi-tenant server: a display name plus the
+/// per-worker executor factory (the factory runs once inside EACH
+/// dispatcher thread, receiving the worker index).
+pub struct ModelLane {
+    pub name: String,
+    pub factory: Box<dyn Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync>,
+}
+
+impl ModelLane {
+    /// A lane over an already-compiled shared program: every worker gets
+    /// its own [`NativeExecutor`] (private `Scratch`) over the ONE
+    /// `Arc<Program>`.
+    pub fn native(name: impl Into<String>, program: Arc<Program>) -> ModelLane {
+        ModelLane {
+            name: name.into(),
+            factory: Box::new(move |_worker| {
+                let exec = NativeExecutor::from_program(program.clone());
+                Ok(Box::new(exec) as Box<dyn BatchExecutor>)
+            }),
+        }
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Server {
-    queue: Arc<BoundedQueue<Request>>,
+    queue: Arc<LaneQueue<Request>>,
+    models: Vec<String>,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Server {
-    /// Start a worker pool with a backend factory. The factory runs once
-    /// *inside each* dispatcher thread (`cfg.workers` times, receiving the
-    /// worker index); startup fails if any worker's backend fails to
-    /// construct.
+    /// Start a single-model worker pool with a backend factory. The
+    /// factory runs once *inside each* dispatcher thread (`cfg.workers`
+    /// times, receiving the worker index); startup fails if any worker's
+    /// backend fails to construct.
     pub fn start_with<F, E>(cfg: ServerConfig, factory: F) -> Result<Server>
     where
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
-        E: BatchExecutor,
+        E: BatchExecutor + 'static,
     {
+        let name = cfg.model.clone();
+        Self::start_multi_with(
+            cfg,
+            vec![ModelLane {
+                name,
+                factory: Box::new(move |worker| {
+                    factory(worker).map(|e| Box::new(e) as Box<dyn BatchExecutor>)
+                }),
+            }],
+        )
+    }
+
+    /// Start a multi-tenant worker pool: ONE shared queue with one
+    /// admission-controlled lane per model, `cfg.workers` dispatcher
+    /// threads each holding one executor per lane. Every batch contains
+    /// requests of exactly one lane; workers take work from any lane
+    /// (round-robin fair).
+    pub fn start_multi_with(cfg: ServerConfig, lanes: Vec<ModelLane>) -> Result<Server> {
+        if lanes.is_empty() {
+            return Err(anyhow!("a server needs at least one model lane"));
+        }
         let workers = cfg.workers.max(1);
-        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let queue = Arc::new(LaneQueue::new(lanes.len(), cfg.queue_cap));
         let metrics = Arc::new(Metrics::new(workers));
-        let factory = Arc::new(factory);
+        let models: Vec<String> = lanes.iter().map(|l| l.name.clone()).collect();
+        let lanes = Arc::new(lanes);
         let cfg = Arc::new(cfg);
         // report backend construction success/failure synchronously
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -134,23 +228,24 @@ impl Server {
         for w in 0..workers {
             let queue2 = queue.clone();
             let metrics2 = metrics.clone();
-            let factory2 = factory.clone();
+            let lanes2 = lanes.clone();
             let cfg2 = cfg.clone();
             let ready = ready_tx.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("sd-dispatcher-{w}"))
                 .spawn(move || {
-                    let exec = match (*factory2)(w) {
-                        Ok(e) => {
-                            let _ = ready.send(Ok(()));
-                            e
+                    let mut execs: Vec<Box<dyn BatchExecutor>> = Vec::new();
+                    for lane in lanes2.iter() {
+                        match (lane.factory)(w) {
+                            Ok(e) => execs.push(e),
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
                         }
-                        Err(e) => {
-                            let _ = ready.send(Err(e));
-                            return;
-                        }
-                    };
-                    dispatch_loop(w, &queue2, exec, &cfg2, &metrics2);
+                    }
+                    let _ = ready.send(Ok(()));
+                    dispatch_loop(w, &queue2, execs, &cfg2, &metrics2);
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -180,6 +275,7 @@ impl Server {
         }
         Ok(Server {
             queue,
+            models,
             next_id: AtomicU64::new(0),
             metrics,
             handles: Mutex::new(handles),
@@ -220,41 +316,92 @@ impl Server {
     /// [`Server::start_native`] over an already-compiled (possibly shared,
     /// possibly custom) program — one compile, N workers.
     pub fn start_native_program(cfg: ServerConfig, program: Arc<Program>) -> Result<Server> {
-        Self::start_with(cfg, move |_worker| {
-            Ok(NativeExecutor::from_program(program.clone()))
-        })
+        let name = cfg.model.clone();
+        Self::start_multi_with(cfg, vec![ModelLane::native(name, program)])
     }
 
-    /// Submit a latent vector. Returns a receiver for the response, or an
-    /// error immediately if the queue is full (backpressure) or closed.
-    pub fn submit(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Start a multi-tenant native server: one `Arc<Program>` per model,
+    /// ONE worker pool serving every lane — the all-six-models-from-one-
+    /// process shape the network front door ([`crate::server`]) exposes.
+    pub fn start_native_multi(
+        cfg: ServerConfig,
+        programs: Vec<(String, Arc<Program>)>,
+    ) -> Result<Server> {
+        let lanes = programs
+            .into_iter()
+            .map(|(name, p)| ModelLane::native(name, p))
+            .collect();
+        Self::start_multi_with(cfg, lanes)
+    }
+
+    /// The model lane names, in lane order.
+    pub fn models(&self) -> &[String] {
+        &self.models
+    }
+
+    /// Resolve a model name to its lane index (case-insensitive).
+    pub fn model_index(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.eq_ignore_ascii_case(name))
+    }
+
+    /// Submit a latent vector to model lane `lane` with an optional
+    /// completion deadline. Returns a receiver for the response, or a
+    /// typed error immediately: [`SubmitError::Full`] is the
+    /// admission-control shed (counted in [`Metrics`] before returning —
+    /// the caller owes the client an explicit shed answer, never a silent
+    /// drop). A request whose deadline passes before its batch forms is
+    /// dropped WITHOUT compute: its responder disconnects and
+    /// `Metrics.expired` counts it.
+    pub fn submit_to(
+        &self,
+        lane: usize,
+        z: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        if lane >= self.models.len() {
+            return Err(SubmitError::UnknownModel);
+        }
         let (resp_tx, resp_rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            lane,
             z,
             submitted: Instant::now(),
+            deadline,
             resp: resp_tx,
         };
-        match self.queue.try_push(req) {
+        match self.queue.try_push(lane, req) {
             Ok(depth) => {
                 self.metrics.note_queue_depth(depth);
                 Ok(resp_rx)
             }
-            Err(PushError::Full(_)) => Err(anyhow!("queue full (backpressure)")),
-            Err(PushError::Closed(_)) => Err(anyhow!("server stopped")),
+            Err(PushError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(SubmitError::Full)
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::Closed),
         }
     }
 
-    /// Submit, blocking while the queue is full.
+    /// Submit a latent vector to lane 0. Returns a receiver for the
+    /// response, or an error immediately if the queue is full
+    /// (backpressure, counted as a shed) or closed.
+    pub fn submit(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
+        self.submit_to(0, z, None).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Submit to lane 0, blocking while the queue is full.
     pub fn submit_blocking(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
         let (resp_tx, resp_rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            lane: 0,
             z,
             submitted: Instant::now(),
+            deadline: None,
             resp: resp_tx,
         };
-        match self.queue.push(req) {
+        match self.queue.push(0, req) {
             Ok(depth) => {
                 self.metrics.note_queue_depth(depth);
                 Ok(resp_rx)
@@ -271,7 +418,8 @@ impl Server {
     /// queue: every already-accepted request still gets its response
     /// (close-then-drain). Idempotent, and callable from any thread while
     /// others still hold `&Server` (mid-flight shutdown is exercised in
-    /// rust/tests/coordinator_stress.rs).
+    /// rust/tests/coordinator_stress.rs and, over TCP, in
+    /// rust/tests/front_door.rs).
     pub fn shutdown(&self) {
         self.queue.close();
         let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
@@ -292,38 +440,53 @@ impl Drop for Server {
     }
 }
 
-/// One worker's dispatch loop: pop the first request (blocking), fill the
-/// batch until `max_batch` or the deadline, execute, fan out. Exits only
+/// One worker's dispatch loop: pop the first request of any lane
+/// (blocking, round-robin fair), continuously fill a single-lane batch
+/// until `max_batch` or the fill budget (whichever first), drop
+/// expired-deadline requests BEFORE compute, execute, fan out. Exits only
 /// when the queue is closed *and* drained, so accepted requests are never
 /// dropped by shutdown.
-fn dispatch_loop<E: BatchExecutor>(
+fn dispatch_loop(
     worker: usize,
-    queue: &BoundedQueue<Request>,
-    mut exec: E,
+    queue: &LaneQueue<Request>,
+    mut execs: Vec<Box<dyn BatchExecutor>>,
     cfg: &ServerConfig,
     metrics: &Metrics,
 ) {
     loop {
-        let first = match queue.pop() {
-            Some(r) => r,
+        let (lane, first) = match queue.pop_any() {
+            Some(x) => x,
             None => return, // closed and fully drained
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.batch_timeout;
-        while batch.len() < cfg.max_batch {
-            match queue.pop_deadline(deadline) {
-                PopDeadline::Item(r) => batch.push(r),
-                PopDeadline::Timeout | PopDeadline::Closed => break,
-            }
+        queue.fill(lane, &mut batch, cfg.max_batch, deadline);
+
+        // admission control half 2: drop requests whose own deadline has
+        // already passed — BEFORE spending compute on them. Dropping the
+        // responder disconnects the submitter immediately (the front door
+        // answers 504); the count is visible in Metrics.expired.
+        let now = Instant::now();
+        let (live, expired): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| match r.deadline {
+                Some(d) => d > now,
+                None => true,
+            });
+        for _ in &expired {
+            metrics.record_expired();
+        }
+        drop(expired);
+        if live.is_empty() {
+            continue;
         }
 
-        let zs: Vec<Vec<f32>> = batch.iter().map(|r| r.z.clone()).collect();
+        let zs: Vec<Vec<f32>> = live.iter().map(|r| r.z.clone()).collect();
         let t0 = Instant::now();
-        match exec.execute(&zs) {
+        match execs[lane].execute(&zs) {
             Ok(images) => {
                 let compute_us = t0.elapsed().as_micros() as u64;
-                metrics.record_batch(worker, batch.len(), compute_us);
-                for (req, image) in batch.into_iter().zip(images) {
+                metrics.record_batch(worker, lane, live.len(), compute_us);
+                for (req, image) in live.into_iter().zip(images) {
                     // sample elapsed() exactly once per request and derive
                     // queue time from it — re-sampling could attribute the
                     // batcher wait to neither bucket (regression-tested by

@@ -1,22 +1,39 @@
-//! A bounded multi-producer / multi-consumer queue (Mutex + Condvar — the
+//! Bounded multi-producer / multi-consumer queues (Mutex + Condvar — the
 //! offline registry has no crossbeam), the spine of the worker pool.
 //!
 //! `std::sync::mpsc` would force one consumer (its `Receiver` is neither
-//! `Sync` nor cloneable); this queue lets N dispatcher workers drain one
-//! shared request stream. Semantics the coordinator builds its invariants
-//! on:
+//! `Sync` nor cloneable); these queues let N dispatcher workers drain one
+//! shared request stream. Two shapes:
 //!
-//! * **bounded**: at most `cap` items are ever queued; [`try_push`] fails
-//!   fast when full (backpressure), [`push`] blocks until space frees;
+//! * [`BoundedQueue`] — one FIFO lane, the original single-model spine
+//!   (kept as a standalone utility with its own tests);
+//! * [`LaneQueue`] — N independent FIFO lanes behind ONE lock, the
+//!   multi-tenant spine: each lane is one model's admission-controlled
+//!   queue (per-lane `cap`), consumers take work from *any* lane with a
+//!   fair round-robin scan ([`pop_any`]) and then fill a single-lane batch
+//!   with the *continuous batcher* ([`fill`]): keep popping that lane
+//!   until the batch reaches `max_batch` OR an absolute deadline passes —
+//!   whichever fires first. The deadline is absolute, so a trickle of
+//!   stragglers can never extend the wait (property-tested in
+//!   rust/tests/batch_packing.rs).
+//!
+//! Shared semantics both queues build the coordinator's invariants on:
+//!
+//! * **bounded**: at most `cap` items per lane are ever queued;
+//!   [`try_push`] fails fast when full (backpressure — the front door
+//!   answers this with an explicit shed response), [`push`] blocks until
+//!   space frees;
 //! * **close-then-drain**: [`close`] stops all pushes immediately, but
-//!   consumers keep popping until the queue is empty — an item accepted
+//!   consumers keep popping until every lane is empty — an item accepted
 //!   before close is never dropped by the queue;
-//! * **deadline pops**: [`pop_deadline`] is the dynamic batcher's fill
-//!   primitive — wait for the next item only until the batch deadline.
+//! * **deadline pops**: [`pop_deadline`] waits for the next item only
+//!   until the batch deadline.
 //!
-//! [`try_push`]: BoundedQueue::try_push
-//! [`push`]: BoundedQueue::push
-//! [`close`]: BoundedQueue::close
+//! [`try_push`]: LaneQueue::try_push
+//! [`push`]: LaneQueue::push
+//! [`close`]: LaneQueue::close
+//! [`pop_any`]: LaneQueue::pop_any
+//! [`fill`]: LaneQueue::fill
 //! [`pop_deadline`]: BoundedQueue::pop_deadline
 
 use std::collections::VecDeque;
@@ -162,6 +179,287 @@ impl<T> BoundedQueue<T> {
         self.inner.lock().unwrap().closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
+    }
+}
+
+struct LanesInner<T> {
+    lanes: Vec<VecDeque<T>>,
+    cap: usize, // per lane
+    closed: bool,
+    rr: usize, // round-robin scan start for pop_any fairness
+}
+
+/// N independent bounded FIFO lanes behind one lock — the multi-tenant
+/// request spine (lane = model). See the module docs for semantics.
+pub struct LaneQueue<T> {
+    inner: Mutex<LanesInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    lane_count: usize,
+}
+
+impl<T> LaneQueue<T> {
+    /// `lanes` FIFO lanes (clamped to >= 1) of at most `cap` items each
+    /// (clamped to >= 1).
+    pub fn new(lanes: usize, cap: usize) -> LaneQueue<T> {
+        let lanes = lanes.max(1);
+        LaneQueue {
+            inner: Mutex::new(LanesInner {
+                lanes: (0..lanes).map(|_| VecDeque::new()).collect(),
+                cap: cap.max(1),
+                closed: false,
+                rr: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            lane_count: lanes,
+        }
+    }
+
+    /// Number of lanes (fixed at construction).
+    pub fn lane_count(&self) -> usize {
+        self.lane_count
+    }
+
+    /// Current depth of one lane (racy by nature — for metrics/tests).
+    pub fn len(&self, lane: usize) -> usize {
+        self.inner.lock().unwrap().lanes[lane].len()
+    }
+
+    /// Total queued items across all lanes.
+    pub fn total_len(&self) -> usize {
+        self.inner.lock().unwrap().lanes.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Non-blocking push into `lane`. On success returns the LANE depth
+    /// *including* the new item (the per-model backpressure high-water
+    /// metric). `Full` is the admission-control signal: the caller owes
+    /// the client an explicit shed answer, never a silent drop.
+    pub fn try_push(&self, lane: usize, item: T) -> Result<usize, PushError<T>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(PushError::Closed(item));
+        }
+        if q.lanes[lane].len() >= q.cap {
+            return Err(PushError::Full(item));
+        }
+        q.lanes[lane].push_back(item);
+        let depth = q.lanes[lane].len();
+        drop(q);
+        // notify_all: waiters are heterogeneous (pop_any vs single-lane
+        // fill), so a single notify could wake a consumer that cannot use
+        // this item while the one that could keeps sleeping
+        self.not_empty.notify_all();
+        Ok(depth)
+    }
+
+    /// Blocking push into `lane`: waits while that lane is full. Returns
+    /// the post-push lane depth, or hands the item back if the queue is
+    /// (or gets) closed.
+    pub fn push(&self, lane: usize, item: T) -> Result<usize, T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(item);
+            }
+            if q.lanes[lane].len() < q.cap {
+                break;
+            }
+            q = self.not_full.wait(q).unwrap();
+        }
+        q.lanes[lane].push_back(item);
+        let depth = q.lanes[lane].len();
+        drop(q);
+        self.not_empty.notify_all();
+        Ok(depth)
+    }
+
+    /// Blocking pop from ANY lane, round-robin fair: the scan starts one
+    /// past the last lane served, so a busy lane cannot starve the others.
+    /// `None` only once the queue is closed **and** every lane is drained.
+    pub fn pop_any(&self) -> Option<(usize, T)> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            let n = q.lanes.len();
+            let start = q.rr;
+            for k in 0..n {
+                let lane = (start + k) % n;
+                if let Some(item) = q.lanes[lane].pop_front() {
+                    q.rr = (lane + 1) % n;
+                    drop(q);
+                    self.not_full.notify_all();
+                    return Some((lane, item));
+                }
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Pop from one lane, waiting at most until `deadline`.
+    fn pop_lane_deadline(&self, lane: usize, deadline: Instant) -> PopDeadline<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.lanes[lane].pop_front() {
+                drop(q);
+                self.not_full.notify_all();
+                return PopDeadline::Item(item);
+            }
+            if q.closed {
+                return PopDeadline::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopDeadline::Timeout;
+            }
+            q = self.not_empty.wait_timeout(q, deadline - now).unwrap().0;
+        }
+    }
+
+    /// The continuous batcher: starting from whatever `batch` already
+    /// holds, keep popping `lane` until the batch reaches `max_batch`
+    /// items OR the absolute `deadline` passes — whichever fires first.
+    /// Items already queued are taken without waiting; the deadline only
+    /// bounds the wait for items that have not arrived yet, and because it
+    /// is absolute a straggler trickle cannot extend it. Returns the
+    /// number of items appended. Properties (never exceeds `max_batch`,
+    /// budget honored within tolerance, per-producer FIFO preserved,
+    /// straggler non-starvation) are locked down in
+    /// rust/tests/batch_packing.rs.
+    pub fn fill(
+        &self,
+        lane: usize,
+        batch: &mut Vec<T>,
+        max_batch: usize,
+        deadline: Instant,
+    ) -> usize {
+        let mut appended = 0;
+        while batch.len() < max_batch {
+            match self.pop_lane_deadline(lane, deadline) {
+                PopDeadline::Item(item) => {
+                    batch.push(item);
+                    appended += 1;
+                }
+                PopDeadline::Timeout | PopDeadline::Closed => break,
+            }
+        }
+        appended
+    }
+
+    /// Close the queue: every pending and future push fails, every blocked
+    /// producer/consumer wakes. Items already queued stay poppable
+    /// (close-then-drain).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod lane_tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn lanes_are_independent_fifos() {
+        let q: LaneQueue<u32> = LaneQueue::new(2, 4);
+        assert_eq!(q.lane_count(), 2);
+        q.try_push(0, 10).ok().unwrap();
+        q.try_push(1, 20).ok().unwrap();
+        q.try_push(0, 11).ok().unwrap();
+        assert_eq!(q.len(0), 2);
+        assert_eq!(q.len(1), 1);
+        assert_eq!(q.total_len(), 3);
+        // round-robin: lane 0 first, then lane 1, then back to lane 0
+        assert_eq!(q.pop_any(), Some((0, 10)));
+        assert_eq!(q.pop_any(), Some((1, 20)));
+        assert_eq!(q.pop_any(), Some((0, 11)));
+    }
+
+    #[test]
+    fn per_lane_cap_is_independent() {
+        let q: LaneQueue<u32> = LaneQueue::new(2, 1);
+        q.try_push(0, 1).ok().unwrap();
+        match q.try_push(0, 2) {
+            Err(PushError::Full(v)) => assert_eq!(v, 2),
+            _ => panic!("lane 0 must be full"),
+        }
+        // lane 1 still has room: admission control is per model
+        assert_eq!(q.try_push(1, 3).ok(), Some(1));
+    }
+
+    #[test]
+    fn close_then_drain_across_lanes() {
+        let q: LaneQueue<u32> = LaneQueue::new(2, 4);
+        q.try_push(0, 1).ok().unwrap();
+        q.try_push(1, 2).ok().unwrap();
+        q.close();
+        match q.try_push(0, 3) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Closed"),
+        }
+        assert_eq!(q.pop_any(), Some((0, 1)));
+        assert_eq!(q.pop_any(), Some((1, 2)));
+        assert_eq!(q.pop_any(), None);
+    }
+
+    #[test]
+    fn fill_takes_queued_items_without_waiting() {
+        let q: LaneQueue<u32> = LaneQueue::new(1, 16);
+        for i in 0..6 {
+            q.try_push(0, i).ok().unwrap();
+        }
+        let (_, first) = q.pop_any().unwrap();
+        let mut batch = vec![first];
+        // items are already queued: a deadline in the past must not stop
+        // the batcher from taking them
+        let appended = q.fill(0, &mut batch, 4, Instant::now());
+        assert_eq!(appended, 3);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(q.total_len(), 2);
+    }
+
+    #[test]
+    fn fill_respects_deadline_on_empty_lane() {
+        let q: LaneQueue<u32> = LaneQueue::new(1, 4);
+        q.try_push(0, 7).ok().unwrap();
+        let (_, first) = q.pop_any().unwrap();
+        let mut batch = vec![first];
+        let t0 = Instant::now();
+        let appended = q.fill(0, &mut batch, 8, t0 + Duration::from_millis(30));
+        assert_eq!(appended, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "returned before the deadline");
+        assert_eq!(batch, vec![7]);
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_pop_any() {
+        let q = Arc::new(LaneQueue::new(1, 1));
+        q.try_push(0, 1).ok().unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(0, 2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_any(), Some((0, 1)));
+        assert!(h.join().unwrap().is_ok());
+        assert_eq!(q.pop_any(), Some((0, 2)));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: Arc<LaneQueue<u32>> = Arc::new(LaneQueue::new(3, 2));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop_any());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
     }
 }
 

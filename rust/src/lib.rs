@@ -30,6 +30,7 @@ pub mod nn;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod sd;
 pub mod sim;
 pub mod tensor;

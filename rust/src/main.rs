@@ -14,6 +14,16 @@
 //!           dispatcher threads, each with its own Scratch; --precision
 //!           int8 compiles the quantized program — int8 weights +
 //!           activations, i32 accumulate, calibrated at compile time)
+//!   serve --listen <addr> [--models all|csv] [--serve-secs N]
+//!           [--deadline-ms D] [--workers W] [--batch B] [--queue-cap Q]
+//!           [--precision f32|int8]
+//!           network front door: serve every requested model (default: all
+//!           six) from ONE process over HTTP/1.1 — one compiled program
+//!           per model, one shared worker pool, per-model routing by
+//!           request path (POST /v1/generate/<model>), explicit 503 sheds
+//!           when a lane is full, 504 for requests whose --deadline-ms
+//!           (or X-Deadline-Ms header) expires before compute. --serve-secs
+//!           bounds the run (CI smoke); omit it to serve until killed.
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
@@ -25,6 +35,7 @@ use split_deconv::coordinator::{Server, ServerConfig};
 use split_deconv::engine::Precision;
 use split_deconv::report;
 use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
+use split_deconv::server::{FrontDoor, FrontDoorConfig};
 use split_deconv::sim::workload::{lower_network_deconvs, Lowering};
 use split_deconv::sim::{dot_array, pe2d, ProcessorConfig, SkipPolicy};
 use split_deconv::util::rng::Rng;
@@ -169,6 +180,9 @@ fn verify_cmd(args: &[String]) -> Result<()> {
 }
 
 fn serve_cmd(args: &[String]) -> Result<()> {
+    if let Some(listen) = flag_value(args, "--listen") {
+        return serve_listen_cmd(args, listen);
+    }
     let n: usize = flag_value(args, "--requests")
         .and_then(|s| s.parse().ok())
         .unwrap_or(32);
@@ -236,6 +250,83 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     }
     println!("{}", server.metrics().summary());
     server.shutdown();
+    Ok(())
+}
+
+/// `serve --listen <addr>`: the network front door — every requested
+/// model served from this one process over HTTP/1.1 (CPU-native backend;
+/// one compiled program per model, one shared worker pool).
+fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
+    let max_batch: usize = flag_value(args, "--batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let workers: usize = flag_value(args, "--workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let queue_cap: usize = flag_value(args, "--queue-cap")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+    let precision = match flag_value(args, "--precision") {
+        None => Precision::F32,
+        Some(p) => Precision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {p}; expected f32 or int8"))?,
+    };
+    let models_arg = flag_value(args, "--models").unwrap_or("all");
+    let models: Vec<String> = if models_arg == "all" {
+        networks::names().iter().map(|s| s.to_string()).collect()
+    } else {
+        models_arg
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    if models.is_empty() {
+        bail!("--models needs at least one model (or 'all')");
+    }
+    let default_deadline = flag_value(args, "--deadline-ms")
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis);
+    let serve_secs: Option<u64> = flag_value(args, "--serve-secs").and_then(|s| s.parse().ok());
+
+    let scfg = ServerConfig {
+        max_batch,
+        batch_timeout: Duration::from_millis(2),
+        queue_cap,
+        model: models[0].clone(),
+        workers,
+        precision,
+    };
+    let fcfg = FrontDoorConfig {
+        listen: listen.to_string(),
+        default_deadline,
+        ..FrontDoorConfig::default()
+    };
+    println!(
+        "compiling {} model(s) at {} (SD filters pre-split, shared across {workers} worker(s))...",
+        models.len(),
+        precision.label()
+    );
+    let door = FrontDoor::start_native(fcfg, scfg, &models, 7)?;
+    println!("listening on http://{}", door.addr());
+    for r in door.routes() {
+        println!(
+            "  POST /v1/generate/{}  (latent {} f32s -> image {} f32s; try ?seed=7)",
+            r.name, r.z_len, r.image_len
+        );
+    }
+    println!("  GET  /v1/models | /metrics | /healthz");
+    match serve_secs {
+        Some(secs) => {
+            println!("serving for {secs}s (--serve-secs), then draining...");
+            std::thread::sleep(Duration::from_secs(secs));
+        }
+        None => loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        },
+    }
+    door.shutdown();
+    println!("{}", door.metrics().summary());
     Ok(())
 }
 

@@ -1,0 +1,175 @@
+//! A small blocking HTTP/1.1 client over `std::net::TcpStream` — enough
+//! for the socket-level test suite (rust/tests/front_door.rs), the CLI
+//! and the open-loop serving bench to talk to the front door without any
+//! external HTTP dependency. Supports keep-alive request/response cycles
+//! and `Content-Length`-framed bodies (exactly what
+//! [`super::http::write_response`] emits).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// A parsed response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// (lowercased name, trimmed value), in order
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (lossy) — for JSON/error bodies in assertions.
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// A keep-alive connection to the front door.
+pub struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    /// Connect with `timeout` applied to connect, reads and writes.
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> io::Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            stream,
+            buf: Vec::new(),
+        })
+    }
+
+    /// The raw stream — for fault-injection tests that write malformed
+    /// bytes or hang up mid-request.
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// One request/response cycle on the kept-alive connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, String)],
+        body: &[u8],
+    ) -> io::Result<HttpResponse> {
+        let mut out = Vec::with_capacity(256 + body.len());
+        out.extend_from_slice(format!("{method} {path} HTTP/1.1\r\n").as_bytes());
+        out.extend_from_slice(b"Host: sd\r\n");
+        out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+        for (name, value) in headers {
+            out.extend_from_slice(format!("{name}: {value}\r\n").as_bytes());
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(body);
+        self.stream.write_all(&out)?;
+        self.stream.flush()?;
+        self.read_response()
+    }
+
+    /// GET with no body.
+    pub fn get(&mut self, path: &str) -> io::Result<HttpResponse> {
+        self.request("GET", path, &[], &[])
+    }
+
+    fn read_response(&mut self) -> io::Result<HttpResponse> {
+        // 1. header block
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp)? {
+                0 => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed before a full response header",
+                    ));
+                }
+                n => self.buf.extend_from_slice(&tmp[..n]),
+            }
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("bad status line {status_line:?}"),
+                )
+            })?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+            }
+        }
+        let content_length = headers
+            .iter()
+            .find(|(n, _)| n == "content-length")
+            .and_then(|(_, v)| v.parse::<usize>().ok())
+            .unwrap_or(0);
+
+        // 2. body
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp)? {
+                0 => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed mid response body",
+                    ));
+                }
+                n => self.buf.extend_from_slice(&tmp[..n]),
+            }
+        }
+        let body = self.buf[head_end + 4..total].to_vec();
+        self.buf.drain(..total);
+        Ok(HttpResponse {
+            status,
+            headers,
+            body,
+        })
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// One-shot convenience: connect, send a `Connection: close` request,
+/// return the response.
+pub fn request_once(
+    addr: SocketAddr,
+    timeout: Duration,
+    method: &str,
+    path: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> io::Result<HttpResponse> {
+    let mut client = Client::connect(addr, timeout)?;
+    let mut all: Vec<(&str, String)> = vec![("Connection", "close".to_string())];
+    all.extend(headers.iter().map(|(n, v)| (*n, v.clone())));
+    client.request(method, path, &all, body)
+}

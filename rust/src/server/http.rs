@@ -1,0 +1,504 @@
+//! Minimal HTTP/1.1 framing for the front door (the offline registry has
+//! no hyper/tokio): a buffering request reader generic over any
+//! `Read + Write` stream, and a one-write response serializer.
+//!
+//! Scope is deliberately small — exactly what the serving protocol needs:
+//! request line + headers + `Content-Length` bodies, keep-alive, and a
+//! clean three-way read outcome so the connection loop can distinguish
+//! "a request arrived" from "the client went away" from "nothing yet —
+//! check the shutdown flag and keep waiting" (the front door runs its
+//! sockets with a short read timeout for exactly that reason). Chunked
+//! transfer encoding, pipelining and HTTP/2 are out of scope.
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on request-line + headers (a malformed or hostile client must
+/// not grow the connection buffer unboundedly).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// A parsed request. Header names are lowercased at parse time; values
+/// keep their spelling (trimmed).
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    /// uppercased method, e.g. "POST"
+    pub method: String,
+    /// target path without the query string, e.g. "/v1/generate/dcgan"
+    pub path: String,
+    /// decoded `k=v` query pairs, in order
+    pub query: Vec<(String, String)>,
+    /// (lowercased name, trimmed value), in order
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// HTTP/1.1 defaults to keep-alive; `Connection: close` (or HTTP/1.0
+    /// without `Connection: keep-alive`) turns it off
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// First query parameter with this name.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Outcome of one `read_request` attempt.
+pub enum ReadOutcome {
+    /// a complete request was framed
+    Request(HttpRequest),
+    /// the peer closed (or the connection errored) with no request bytes
+    /// pending — the connection loop should end quietly
+    Eof,
+    /// the stream's read timeout fired; any partial bytes stay buffered
+    /// and the next call resumes exactly where this one stopped
+    IdleTimeout,
+}
+
+/// A protocol violation by the client — answer 400 and close.
+#[derive(Debug)]
+pub struct BadRequest(pub String);
+
+/// A buffering connection: owns the stream plus the carry-over buffer
+/// that lets `read_request` survive read timeouts mid-request.
+pub struct Conn<S> {
+    stream: S,
+    buf: Vec<u8>,
+}
+
+impl<S: Read + Write> Conn<S> {
+    pub fn new(stream: S) -> Conn<S> {
+        Conn {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    /// The underlying stream, for writing responses.
+    pub fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Read one request off the connection. Returns
+    /// [`ReadOutcome::IdleTimeout`] whenever the stream's read timeout
+    /// fires (partial bytes are kept for the next call), `Eof` on a clean
+    /// disconnect, and `Err(BadRequest)` on a protocol violation.
+    pub fn read_request(&mut self, max_body: usize) -> Result<ReadOutcome, BadRequest> {
+        // 1. accumulate until the full header block is buffered
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEADER_BYTES {
+                return Err(BadRequest("request header too large".into()));
+            }
+            match self.read_some() {
+                ReadStep::Data => {}
+                ReadStep::Timeout => return Ok(ReadOutcome::IdleTimeout),
+                ReadStep::Closed => {
+                    return if self.buf.is_empty() {
+                        Ok(ReadOutcome::Eof)
+                    } else {
+                        Err(BadRequest("connection closed mid-header".into()))
+                    };
+                }
+            }
+        };
+
+        // 2. parse request line + headers (bytes stay buffered until the
+        //    body is complete too, so a timeout here loses nothing)
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| BadRequest("non-UTF8 request header".into()))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| BadRequest("empty request line".into()))?
+            .to_ascii_uppercase();
+        let target = parts
+            .next()
+            .ok_or_else(|| BadRequest("request line missing target".into()))?
+            .to_string();
+        let version = parts
+            .next()
+            .ok_or_else(|| BadRequest("request line missing HTTP version".into()))?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(BadRequest(format!("unsupported version {version}")));
+        }
+        let mut headers: Vec<(String, String)> = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| BadRequest(format!("malformed header line {line:?}")))?;
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
+            None => 0,
+            Some((_, v)) => v
+                .parse::<usize>()
+                .map_err(|_| BadRequest(format!("bad content-length {v:?}")))?,
+        };
+        if content_length > max_body {
+            return Err(BadRequest(format!(
+                "body of {content_length} bytes exceeds the {max_body}-byte limit"
+            )));
+        }
+        let connection = headers
+            .iter()
+            .find(|(n, _)| n == "connection")
+            .map(|(_, v)| v.to_ascii_lowercase());
+        let keep_alive = if version == "HTTP/1.0" {
+            connection.as_deref() == Some("keep-alive")
+        } else {
+            connection.as_deref() != Some("close")
+        };
+
+        // 3. accumulate the body
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            match self.read_some() {
+                ReadStep::Data => {}
+                ReadStep::Timeout => return Ok(ReadOutcome::IdleTimeout),
+                ReadStep::Closed => {
+                    return Err(BadRequest("connection closed mid-body".into()));
+                }
+            }
+        }
+        let body = self.buf[head_end + 4..total].to_vec();
+        self.buf.drain(..total);
+
+        let (path, query) = split_target(&target);
+        Ok(ReadOutcome::Request(HttpRequest {
+            method,
+            path,
+            query,
+            headers,
+            body,
+            keep_alive,
+        }))
+    }
+
+    fn read_some(&mut self) -> ReadStep {
+        let mut tmp = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return ReadStep::Closed,
+                Ok(n) => {
+                    self.buf.extend_from_slice(&tmp[..n]);
+                    return ReadStep::Data;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return ReadStep::Timeout;
+                }
+                // a hard connection error mid-read: treat like a close
+                Err(_) => return ReadStep::Closed,
+            }
+        }
+    }
+}
+
+enum ReadStep {
+    Data,
+    Timeout,
+    Closed,
+}
+
+/// Split a request target into (path, query pairs).
+fn split_target(target: &str) -> (String, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target.to_string(), Vec::new()),
+        Some((path, qs)) => {
+            let query = qs
+                .split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), String::new()),
+                })
+                .collect();
+            (path.to_string(), query)
+        }
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Serialize and send one response in a single `write_all` (status line,
+/// `Content-Type`/`Content-Length`/`Connection`, extra headers, body).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let mut out = Vec::with_capacity(256 + body.len());
+    out.extend_from_slice(format!("HTTP/1.1 {status} {}\r\n", reason(status)).as_bytes());
+    out.extend_from_slice(format!("Content-Type: {content_type}\r\n").as_bytes());
+    out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+    out.extend_from_slice(if keep_alive {
+        b"Connection: keep-alive\r\n".as_slice()
+    } else {
+        b"Connection: close\r\n".as_slice()
+    });
+    for (name, value) in extra_headers {
+        out.extend_from_slice(format!("{name}: {value}\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    w.write_all(&out)?;
+    w.flush()
+}
+
+/// Reason phrase for the status codes the front door emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// `{"error": kind, "detail": detail}` — the uniform error body shape.
+pub fn error_body(kind: &str, detail: &str) -> Vec<u8> {
+    format!(
+        "{{\"error\":\"{}\",\"detail\":\"{}\"}}",
+        json_escape(kind),
+        json_escape(detail)
+    )
+    .into_bytes()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Little-endian f32 wire encoding of a latent/image vector.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_bytes`]; `None` when the byte count is not a
+/// multiple of 4.
+pub fn bytes_to_f32s(b: &[u8]) -> Option<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse_one(raw: &[u8]) -> Result<ReadOutcome, BadRequest> {
+        Conn::new(Cursor::new(raw.to_vec())).read_request(1 << 20)
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let raw = b"POST /v1/generate/dcgan?seed=7&x=1 HTTP/1.1\r\n\
+                    Host: sd\r\nX-Deadline-Ms: 250\r\nContent-Length: 8\r\n\r\n\
+                    ABCDEFGH";
+        match parse_one(raw).unwrap() {
+            ReadOutcome::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/generate/dcgan");
+                assert_eq!(r.query_param("seed"), Some("7"));
+                assert_eq!(r.query_param("x"), Some("1"));
+                assert_eq!(r.header("x-deadline-ms"), Some("250"));
+                assert_eq!(r.header("X-DEADLINE-MS"), Some("250"));
+                assert_eq!(r.body, b"ABCDEFGH");
+                assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+            }
+            _ => panic!("expected a parsed request"),
+        }
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let raw = b"GET /healthz HTTP/1.1\r\nConnection: Close\r\n\r\n";
+        match parse_one(raw).unwrap() {
+            ReadOutcome::Request(r) => assert!(!r.keep_alive),
+            _ => panic!("expected a parsed request"),
+        }
+    }
+
+    #[test]
+    fn two_pipelined_requests_frame_separately() {
+        let raw = b"GET /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                    GET /b HTTP/1.1\r\n\r\n";
+        let mut conn = Conn::new(Cursor::new(raw.to_vec()));
+        match conn.read_request(1 << 20).unwrap() {
+            ReadOutcome::Request(r) => {
+                assert_eq!(r.path, "/a");
+                assert_eq!(r.body, b"hi");
+            }
+            _ => panic!("first request"),
+        }
+        match conn.read_request(1 << 20).unwrap() {
+            ReadOutcome::Request(r) => {
+                assert_eq!(r.path, "/b");
+                assert!(r.body.is_empty());
+            }
+            _ => panic!("second request"),
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_are_bad_requests_not_panics() {
+        assert!(parse_one(b"squeamish ossifrage\r\n\r\n").is_err());
+        assert!(parse_one(b"GET /x HTTP/2.0\r\n\r\n").is_err());
+        assert!(parse_one(b"GET /x HTTP/1.1\r\nbroken header line\r\n\r\n").is_err());
+        assert!(parse_one(b"GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n").is_err());
+        // truncated: header never completes and the stream ends
+        assert!(parse_one(b"GET /x HT").is_err());
+        // body larger than the cap is refused before buffering it
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
+        assert!(Conn::new(Cursor::new(raw.to_vec())).read_request(10).is_err());
+    }
+
+    #[test]
+    fn clean_eof_before_any_byte_is_eof() {
+        match parse_one(b"").unwrap() {
+            ReadOutcome::Eof => {}
+            _ => panic!("expected Eof"),
+        }
+    }
+
+    #[test]
+    fn oversized_header_is_rejected() {
+        let mut raw = Vec::from(&b"GET /x HTTP/1.1\r\nX-Pad: "[..]);
+        raw.resize(raw.len() + MAX_HEADER_BYTES + 10, b'a');
+        assert!(parse_one(&raw).is_err());
+    }
+
+    /// Read side that times out once, then yields data: the partial bytes
+    /// must survive the timeout and the request must complete on resume.
+    struct TimeoutOnce {
+        chunks: Vec<Vec<u8>>,
+        step: usize,
+    }
+
+    impl Read for TimeoutOnce {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            let step = self.step;
+            self.step += 1;
+            match self.chunks.get(step) {
+                None => Ok(0),
+                Some(c) if c.is_empty() => {
+                    Err(io::Error::new(io::ErrorKind::WouldBlock, "timeout"))
+                }
+                Some(c) => {
+                    out[..c.len()].copy_from_slice(c);
+                    Ok(c.len())
+                }
+            }
+        }
+    }
+
+    impl Write for TimeoutOnce {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn partial_request_survives_a_read_timeout() {
+        let stream = TimeoutOnce {
+            chunks: vec![
+                b"POST /x HTTP/1.1\r\nContent-".to_vec(),
+                Vec::new(), // timeout fires here
+                b"Length: 3\r\n\r\nabc".to_vec(),
+            ],
+            step: 0,
+        };
+        let mut conn = Conn::new(stream);
+        match conn.read_request(1 << 20).unwrap() {
+            ReadOutcome::IdleTimeout => {}
+            _ => panic!("first attempt must surface the timeout"),
+        }
+        match conn.read_request(1 << 20).unwrap() {
+            ReadOutcome::Request(r) => {
+                assert_eq!(r.path, "/x");
+                assert_eq!(r.body, b"abc");
+            }
+            _ => panic!("request must complete after the timeout"),
+        }
+    }
+
+    #[test]
+    fn f32_wire_roundtrip() {
+        let v = vec![0.0f32, -1.5, 3.25e-3, f32::MAX];
+        let b = f32s_to_bytes(&v);
+        assert_eq!(b.len(), 16);
+        assert_eq!(bytes_to_f32s(&b).unwrap(), v);
+        assert!(bytes_to_f32s(&b[..7]).is_none(), "ragged byte count");
+    }
+
+    #[test]
+    fn response_serialization_shape() {
+        let mut out = Vec::new();
+        write_response(
+            &mut out,
+            503,
+            "application/json",
+            &[("Retry-After", "0".to_string())],
+            b"{\"error\":\"shed\"}",
+            true,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Content-Length: 16\r\n"));
+        assert!(text.contains("Retry-After: 0\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"error\":\"shed\"}"));
+    }
+}

@@ -1,0 +1,527 @@
+//! Network front door: a real TCP/HTTP server over the [`crate::coordinator`]
+//! worker pool — the process boundary of the serving stack.
+//!
+//! One process serves EVERY configured model (all six benchmark networks by
+//! default): one compiled `Arc<Program>` per model, one shared dispatcher
+//! pool, per-model routing by request path. The protocol is deliberately
+//! tiny (std-only HTTP/1.1, see [`http`]):
+//!
+//! * `POST /v1/generate/<model>` — body = little-endian f32 latent vector
+//!   (`z_len * 4` bytes), or empty body with `?seed=N` to have the server
+//!   draw the latent itself (curl-friendly). Response 200 is the raw
+//!   little-endian f32 image; `X-Request-Id`/`X-Batch-Size`/`X-Queue-Us`/
+//!   `X-Compute-Us`/`X-Model` carry the serving metadata. An
+//!   `X-Deadline-Ms` header sets the request's completion deadline.
+//! * `GET /v1/models` — the route table as JSON.
+//! * `GET /metrics` — coordinator metrics snapshot as JSON.
+//! * `GET /healthz` — liveness.
+//!
+//! Admission control is EXPLICIT at this boundary: a full lane answers
+//! 503 `{"error":"shed"}` immediately (counted in `Metrics.shed` — never a
+//! silent drop, never a hang), and a request whose deadline expires before
+//! compute answers 504 (dropped by the dispatcher pre-compute, counted in
+//! `Metrics.expired`). Graceful shutdown is close-then-drain end to end:
+//! [`FrontDoor::shutdown`] stops the acceptor, lets the coordinator drain
+//! every accepted request, and every connection handler flushes its
+//! pending response before its socket closes (proved over real sockets in
+//! rust/tests/front_door.rs).
+
+pub mod client;
+pub mod http;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{MetricsSnapshot, Server, ServerConfig, SubmitError};
+use crate::engine::{DeconvImpl, Program};
+use crate::util::rng::Rng;
+
+use http::{
+    bytes_to_f32s, error_body, f32s_to_bytes, write_response, Conn, HttpRequest, ReadOutcome,
+};
+
+/// How often a blocked connection read wakes up to check the shutdown
+/// flag. Bounds how long shutdown waits on idle keep-alive connections.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// One routable model: lane order matches the coordinator's lanes.
+#[derive(Clone, Debug)]
+pub struct Route {
+    /// canonical route key (a [`crate::networks::slug`] for native lanes)
+    pub name: String,
+    /// latent length — request bodies must be exactly `z_len * 4` bytes
+    pub z_len: usize,
+    /// flattened image length (response body is `image_len * 4` bytes)
+    pub image_len: usize,
+}
+
+/// Front-door configuration (the coordinator has its own
+/// [`ServerConfig`]).
+#[derive(Clone, Debug)]
+pub struct FrontDoorConfig {
+    /// bind address; port 0 picks an ephemeral port (tests)
+    pub listen: String,
+    /// deadline applied to requests that carry no `X-Deadline-Ms` header
+    pub default_deadline: Option<Duration>,
+    /// largest accepted request body (latents are small; this is a
+    /// hostile-client guard, not a tuning knob)
+    pub max_body_bytes: usize,
+    /// how long a connection handler waits for the coordinator's response
+    /// before answering 500 (a liveness backstop — orders of magnitude
+    /// above any real compute time)
+    pub response_timeout: Duration,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        FrontDoorConfig {
+            listen: "127.0.0.1:0".to_string(),
+            default_deadline: None,
+            max_body_bytes: 4 << 20,
+            response_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// A running front door: TCP acceptor + per-connection handler threads
+/// over an owned coordinator [`Server`].
+pub struct FrontDoor {
+    addr: SocketAddr,
+    server: Arc<Server>,
+    routes: Arc<Vec<Route>>,
+    cfg: Arc<FrontDoorConfig>,
+    closing: Arc<AtomicBool>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl FrontDoor {
+    /// Bind `cfg.listen` and start accepting. `routes` must match the
+    /// coordinator's model lanes one-to-one, in lane order.
+    pub fn start(cfg: FrontDoorConfig, server: Server, routes: Vec<Route>) -> Result<FrontDoor> {
+        if routes.len() != server.models().len() {
+            anyhow::bail!(
+                "route table has {} entries for {} model lanes",
+                routes.len(),
+                server.models().len()
+            );
+        }
+        let listener =
+            TcpListener::bind(&cfg.listen).with_context(|| format!("bind {}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        let server = Arc::new(server);
+        let routes = Arc::new(routes);
+        let cfg = Arc::new(cfg);
+        let closing = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let acceptor = {
+            let server = server.clone();
+            let routes = routes.clone();
+            let cfg = cfg.clone();
+            let closing = closing.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("sd-acceptor".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if closing.load(Ordering::SeqCst) {
+                            // the wake-up connection from shutdown() (or a
+                            // late client) — drop it and stop accepting
+                            break;
+                        }
+                        let stream = match stream {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        let server = server.clone();
+                        let routes = routes.clone();
+                        let cfg = cfg.clone();
+                        let closing = closing.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("sd-conn".to_string())
+                            .spawn(move || {
+                                handle_conn(stream, &server, &routes, &cfg, &closing);
+                            });
+                        let mut conns = conns.lock().unwrap();
+                        // reap finished handlers so the vec stays bounded
+                        // by the number of LIVE connections
+                        conns.retain(|h| !h.is_finished());
+                        if let Ok(h) = spawned {
+                            conns.push(h);
+                        }
+                    }
+                })?
+        };
+
+        Ok(FrontDoor {
+            addr,
+            server,
+            routes,
+            cfg,
+            closing,
+            acceptor: Mutex::new(Some(acceptor)),
+            conns,
+        })
+    }
+
+    /// Start the all-native multi-tenant front door: compile ONE
+    /// `Program` per requested model (at `scfg.precision`), stand up one
+    /// shared worker pool over all of them, and listen. `models` accepts
+    /// any spelling [`crate::networks::by_name`] does; routes are keyed by
+    /// canonical slug.
+    pub fn start_native(
+        cfg: FrontDoorConfig,
+        scfg: ServerConfig,
+        models: &[String],
+        weight_seed: u64,
+    ) -> Result<FrontDoor> {
+        let mut programs: Vec<(String, Arc<Program>)> = Vec::with_capacity(models.len());
+        let mut routes = Vec::with_capacity(models.len());
+        for model in models {
+            let net = crate::networks::by_name_or_err(model)?;
+            let slug = crate::networks::slug(net.name);
+            let program = Arc::new(Program::from_seed_prec(
+                &net,
+                DeconvImpl::Sd,
+                weight_seed,
+                scfg.precision,
+            )?);
+            routes.push(Route {
+                name: slug.clone(),
+                z_len: program.input_len(),
+                image_len: program.output_len(),
+            });
+            programs.push((slug, program));
+        }
+        let server = Server::start_native_multi(scfg, programs)?;
+        FrontDoor::start(cfg, server, routes)
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The route table, in lane order.
+    pub fn routes(&self) -> &[Route] {
+        &self.routes
+    }
+
+    /// The coordinator behind the door (for direct submits in tests and
+    /// for metrics).
+    pub fn coordinator(&self) -> &Server {
+        &self.server
+    }
+
+    /// Coordinator metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.server.metrics()
+    }
+
+    /// Graceful close-then-drain shutdown: stop accepting, drain the
+    /// coordinator queue (every accepted request computes), and wait for
+    /// every connection handler to flush its final response and exit.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        if self.closing.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // the acceptor is blocked in accept(); a self-connection wakes it
+        // so it can observe `closing` and exit
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // drain: workers finish every queued request, so handlers blocked
+        // on recv get their responses before we wait on them
+        self.server.shutdown();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-connection loop: frame requests, serve them in arrival order
+/// (keep-alive), exit on disconnect, protocol violation, or shutdown.
+/// Sequential handling per connection + FIFO lanes + single-consumer
+/// batches gives per-client FIFO response order end to end.
+fn handle_conn(
+    stream: TcpStream,
+    server: &Server,
+    routes: &[Route],
+    cfg: &FrontDoorConfig,
+    closing: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout: a blocked read wakes up every IDLE_POLL to
+    // check the shutdown flag, so idle keep-alive connections cannot
+    // stall shutdown
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    let mut conn = Conn::new(stream);
+    loop {
+        match conn.read_request(cfg.max_body_bytes) {
+            Err(bad) => {
+                // fault-injection contract: malformed bytes get an
+                // explicit 400, then the connection closes
+                let body = error_body("bad_request", &bad.0);
+                let _ = write_response(
+                    conn.stream_mut(),
+                    400,
+                    "application/json",
+                    &[],
+                    &body,
+                    false,
+                );
+                return;
+            }
+            Ok(ReadOutcome::Eof) => return,
+            Ok(ReadOutcome::IdleTimeout) => {
+                if closing.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                let keep = req.keep_alive && !closing.load(Ordering::SeqCst);
+                let reply = handle_request(&req, server, routes, cfg, closing);
+                if write_response(
+                    conn.stream_mut(),
+                    reply.status,
+                    reply.content_type,
+                    &reply.headers,
+                    &reply.body,
+                    keep,
+                )
+                .is_err()
+                {
+                    // client went away mid-response (fault injection);
+                    // nothing to salvage on this connection
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+struct Reply {
+    status: u16,
+    content_type: &'static str,
+    headers: Vec<(&'static str, String)>,
+    body: Vec<u8>,
+}
+
+impl Reply {
+    fn json(status: u16, body: Vec<u8>) -> Reply {
+        Reply {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body,
+        }
+    }
+}
+
+/// Route and serve one request.
+fn handle_request(
+    req: &HttpRequest,
+    server: &Server,
+    routes: &[Route],
+    cfg: &FrontDoorConfig,
+    closing: &AtomicBool,
+) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Reply::json(200, b"{\"status\":\"ok\"}".to_vec()),
+        ("GET", "/v1/models") => Reply::json(200, models_json(routes)),
+        ("GET", "/metrics") => Reply::json(200, metrics_json(&server.metrics(), routes)),
+        (_, path) if path.starts_with("/v1/generate/") => {
+            let model = &path["/v1/generate/".len()..];
+            if req.method != "POST" {
+                let body = error_body("method_not_allowed", "generate requires POST");
+                return Reply {
+                    status: 405,
+                    content_type: "application/json",
+                    headers: vec![("Allow", "POST".to_string())],
+                    body,
+                };
+            }
+            generate(req, model, server, routes, cfg, closing)
+        }
+        _ => Reply::json(
+            404,
+            error_body("not_found", &format!("{} {}", req.method, req.path)),
+        ),
+    }
+}
+
+/// The serving path: resolve the lane, build the latent, submit with the
+/// request's deadline, wait for the coordinator's answer.
+fn generate(
+    req: &HttpRequest,
+    model: &str,
+    server: &Server,
+    routes: &[Route],
+    cfg: &FrontDoorConfig,
+    closing: &AtomicBool,
+) -> Reply {
+    let want = crate::networks::slug(model);
+    let lane = match routes.iter().position(|r| r.name == want) {
+        Some(i) => i,
+        None => {
+            let known: Vec<&str> = routes.iter().map(|r| r.name.as_str()).collect();
+            let detail = format!("unknown model {model}; this server has {}", known.join("/"));
+            return Reply::json(404, error_body("unknown_model", &detail));
+        }
+    };
+    let route = &routes[lane];
+
+    // latent: raw f32 LE body, or server-drawn from ?seed=N
+    let z: Vec<f32> = if !req.body.is_empty() {
+        match bytes_to_f32s(&req.body) {
+            Some(z) if z.len() == route.z_len => z,
+            _ => {
+                let detail = format!(
+                    "latent for {} must be exactly {} little-endian f32s ({} bytes), got {} bytes",
+                    route.name,
+                    route.z_len,
+                    route.z_len * 4,
+                    req.body.len()
+                );
+                return Reply::json(400, error_body("bad_latent", &detail));
+            }
+        }
+    } else if let Some(seed) = req.query_param("seed") {
+        match seed.parse::<u64>() {
+            Ok(s) => Rng::new(s).normal_vec(route.z_len),
+            Err(_) => {
+                return Reply::json(400, error_body("bad_seed", "seed must be a u64"));
+            }
+        }
+    } else {
+        let detail = "request needs a latent body or a ?seed=N query parameter";
+        return Reply::json(400, error_body("missing_latent", detail));
+    };
+
+    // deadline: per-request header wins, else the configured default
+    let deadline_ms = match req.header("x-deadline-ms") {
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => Some(Duration::from_millis(ms)),
+            Err(_) => {
+                return Reply::json(400, error_body("bad_deadline", "x-deadline-ms must be a u64"));
+            }
+        },
+        None => cfg.default_deadline,
+    };
+    let deadline = deadline_ms.map(|d| Instant::now() + d);
+
+    if closing.load(Ordering::SeqCst) {
+        return shutting_down();
+    }
+    let rx = match server.submit_to(lane, z, deadline) {
+        Ok(rx) => rx,
+        Err(SubmitError::Full) => {
+            // admission-control shed: already counted in Metrics.shed by
+            // submit_to; the client gets an explicit, immediate answer
+            let body = error_body("shed", "queue_full");
+            return Reply {
+                status: 503,
+                content_type: "application/json",
+                headers: vec![("Retry-After", "0".to_string())],
+                body,
+            };
+        }
+        Err(SubmitError::Closed) => return shutting_down(),
+        Err(SubmitError::UnknownModel) => {
+            return Reply::json(404, error_body("unknown_model", model));
+        }
+    };
+
+    match rx.recv_timeout(cfg.response_timeout) {
+        Ok(resp) => Reply {
+            status: 200,
+            content_type: "application/octet-stream",
+            headers: vec![
+                ("X-Request-Id", resp.id.to_string()),
+                ("X-Model", route.name.clone()),
+                ("X-Batch-Size", resp.batch_size.to_string()),
+                ("X-Queue-Us", resp.queue_us.to_string()),
+                ("X-Compute-Us", resp.compute_us.to_string()),
+            ],
+            body: f32s_to_bytes(&resp.image),
+        },
+        Err(_) => {
+            // the responder disconnected (or the backstop timeout fired).
+            // If this request's deadline has passed, the dispatcher
+            // dropped it pre-compute: that is the 504 contract. Anything
+            // else is a batch failure.
+            let expired = match deadline {
+                Some(d) => d <= Instant::now(),
+                None => false,
+            };
+            if expired {
+                Reply::json(504, error_body("deadline_expired", "dropped before compute"))
+            } else {
+                Reply::json(500, error_body("batch_failed", "execution failed; see server log"))
+            }
+        }
+    }
+}
+
+fn shutting_down() -> Reply {
+    Reply::json(503, error_body("shutting_down", "server is draining"))
+}
+
+fn models_json(routes: &[Route]) -> Vec<u8> {
+    let mut out = String::from("{\"models\":[");
+    for (i, r) in routes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"z_len\":{},\"image_len\":{}}}",
+            r.name, r.z_len, r.image_len
+        ));
+    }
+    out.push_str("]}");
+    out.into_bytes()
+}
+
+fn metrics_json(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
+    let mut out = String::from("{");
+    out.push_str(&format!("\"served\":{},", s.served));
+    out.push_str(&format!("\"batches\":{},", s.batches));
+    out.push_str(&format!("\"errors\":{},", s.errors));
+    out.push_str(&format!("\"shed\":{},", s.shed));
+    out.push_str(&format!("\"expired\":{},", s.expired));
+    out.push_str(&format!("\"throughput_rps\":{:.3},", s.throughput_rps));
+    out.push_str(&format!("\"mean_batch\":{:.3},", s.mean_batch));
+    out.push_str(&format!("\"p50_us\":{:.1},", s.p50_us));
+    out.push_str(&format!("\"p95_us\":{:.1},", s.p95_us));
+    out.push_str(&format!("\"p99_us\":{:.1},", s.p99_us));
+    out.push_str(&format!("\"max_queue_depth\":{},", s.max_queue_depth));
+    out.push_str("\"lane_served\":{");
+    for (i, r) in routes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let served = s.lane_served.get(i).copied().unwrap_or(0);
+        out.push_str(&format!("\"{}\":{}", r.name, served));
+    }
+    out.push_str("}}");
+    out.into_bytes()
+}

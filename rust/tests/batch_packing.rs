@@ -1,6 +1,8 @@
 //! Property tests for dynamic-batch packing: `plan_batch` +
 //! `chunk_batches` (the PJRT-style chunk / zero-pad logic) over arbitrary
-//! (supported, n) pairs, and the native path over every odd batch length.
+//! (supported, n) pairs, the native path over every odd batch length, and
+//! the CONTINUOUS batcher (`LaneQueue::fill`) that forms serve-path
+//! batches.
 //!
 //! Properties locked down:
 //! * chunks partition `0..n` exactly — no request crosses a chunk
@@ -9,11 +11,20 @@
 //!   smallest covering size (`plan_batch` agreement);
 //! * zero-padding lanes never leak into returned images — neither in a
 //!   faithful mock of the PJRT pack/run/unpack path nor through the
-//!   `NativeExecutor` at odd batch lengths 1..17.
+//!   `NativeExecutor` at odd batch lengths 1..17;
+//! * continuous batch formation: batches never exceed `max_batch`, queued
+//!   items are taken greedily (no idle wait when work is ready), the fill
+//!   budget is honored within tolerance even under a straggler trickle
+//!   (the deadline is absolute), per-producer FIFO order survives
+//!   batching, and a straggler arriving inside the window joins the batch
+//!   instead of starving.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use split_deconv::coordinator::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor};
+use split_deconv::coordinator::{
+    chunk_batches, plan_batch, BatchExecutor, LaneQueue, NativeExecutor,
+};
 use split_deconv::engine::{DeconvImpl, Program};
 use split_deconv::util::rng::Rng;
 
@@ -78,6 +89,148 @@ fn padding_lanes_never_leak_into_returned_images() {
         assert_eq!(out.len(), n, "one image per request, no padding lane returned");
         for (i, (got, want)) in out.iter().zip(&reqs).enumerate() {
             assert_eq!(got, want, "request {i} image corrupted by packing");
+        }
+    }
+}
+
+/// Drain a pre-loaded lane the way a dispatcher does (pop_any + fill) and
+/// return the batches in formation order.
+fn drain_in_batches(q: &LaneQueue<u32>, max_batch: usize, budget: Duration) -> Vec<Vec<u32>> {
+    let mut batches = Vec::new();
+    // only take more work while some is queued — pop_any blocks otherwise
+    while !q.is_empty() {
+        let Some((lane, first)) = q.pop_any() else { break };
+        let mut batch = vec![first];
+        q.fill(lane, &mut batch, max_batch, Instant::now() + budget);
+        batches.push(batch);
+    }
+    batches
+}
+
+#[test]
+fn continuous_fill_never_exceeds_max_batch_and_preserves_fifo() {
+    let mut rng = Rng::new(21);
+    for _ in 0..100 {
+        let n = rng.below(48);
+        let max_batch = 1 + rng.below(9);
+        let q: LaneQueue<u32> = LaneQueue::new(1, 64);
+        for i in 0..n {
+            q.try_push(0, i as u32).ok().unwrap();
+        }
+        let batches = drain_in_batches(&q, max_batch, Duration::ZERO);
+        let flat: Vec<u32> = batches.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..n as u32).collect::<Vec<_>>(), "drain must be lossless FIFO");
+        for (bi, b) in batches.iter().enumerate() {
+            assert!(b.len() <= max_batch, "batch {bi} has {} > max_batch {max_batch}", b.len());
+            // greedy: a batch below max_batch is only allowed when it
+            // drained the queue (it was the last one)
+            if b.len() < max_batch {
+                assert_eq!(bi, batches.len() - 1, "short batch {bi} while work was queued");
+            }
+        }
+    }
+}
+
+#[test]
+fn continuous_fill_budget_is_absolute_even_under_straggler_trickle() {
+    let q: Arc<LaneQueue<u32>> = Arc::new(LaneQueue::new(1, 1024));
+    q.try_push(0, 0).ok().unwrap();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let (q2, stop2) = (q.clone(), stop.clone());
+    // a trickle of stragglers, each arriving well inside the budget: a
+    // RELATIVE timeout would be re-armed by every arrival and never fire
+    let trickler = std::thread::spawn(move || {
+        let mut i = 1u32;
+        while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+            let _ = q2.try_push(0, i);
+            i += 1;
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+
+    let (_, first) = q.pop_any().unwrap();
+    let mut batch = vec![first];
+    let budget = Duration::from_millis(60);
+    let t0 = Instant::now();
+    q.fill(0, &mut batch, usize::MAX, t0 + budget);
+    let elapsed = t0.elapsed();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    trickler.join().unwrap();
+
+    assert!(
+        elapsed >= Duration::from_millis(55),
+        "fill returned at {elapsed:?}, before its {budget:?} budget"
+    );
+    assert!(
+        elapsed < Duration::from_millis(300),
+        "fill ran {elapsed:?}: the trickle extended the absolute {budget:?} budget"
+    );
+    assert!(batch.len() >= 2, "stragglers inside the window must join the batch");
+    // FIFO within the batch
+    for w in batch.windows(2) {
+        assert!(w[0] < w[1], "batch out of arrival order: {batch:?}");
+    }
+}
+
+#[test]
+fn continuous_fill_includes_stragglers_instead_of_starving_them() {
+    let q: Arc<LaneQueue<u32>> = Arc::new(LaneQueue::new(1, 8));
+    q.try_push(0, 1).ok().unwrap();
+    let q2 = q.clone();
+    let straggler = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(40));
+        q2.try_push(0, 2).ok().unwrap();
+    });
+    let (_, first) = q.pop_any().unwrap();
+    let mut batch = vec![first];
+    let t0 = Instant::now();
+    // budget far beyond the straggler's arrival; max_batch 2 means the
+    // straggler's arrival completes the batch EARLY (no waiting out the
+    // full budget once the batch is full)
+    q.fill(0, &mut batch, 2, t0 + Duration::from_secs(5));
+    let elapsed = t0.elapsed();
+    straggler.join().unwrap();
+    assert_eq!(batch, vec![1, 2], "the straggler must join the in-formation batch");
+    assert!(elapsed < Duration::from_secs(2), "a full batch must dispatch immediately");
+}
+
+#[test]
+fn concurrent_producers_keep_per_producer_fifo_through_batching() {
+    const PRODUCERS: u32 = 4;
+    const PER_PRODUCER: u32 = 64;
+    let q: Arc<LaneQueue<u32>> = Arc::new(LaneQueue::new(1, 16));
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for seq in 0..PER_PRODUCER {
+                    // tag = producer in the high bits, sequence in the low
+                    q.push(0, (p << 16) | seq).ok().unwrap();
+                }
+            })
+        })
+        .collect();
+
+    // single consumer forming continuous batches while producers run
+    let mut flat: Vec<u32> = Vec::new();
+    while flat.len() < (PRODUCERS * PER_PRODUCER) as usize {
+        let (lane, first) = q.pop_any().expect("queue never closes during the test");
+        let mut batch = vec![first];
+        q.fill(lane, &mut batch, 7, Instant::now() + Duration::from_millis(1));
+        assert!(batch.len() <= 7);
+        flat.extend(batch);
+    }
+    for p in producers {
+        p.join().unwrap();
+    }
+
+    // per-producer order must survive: each producer's sequence numbers
+    // appear strictly increasing in the drained stream
+    for p in 0..PRODUCERS {
+        let seqs: Vec<u32> = flat.iter().filter(|v| *v >> 16 == p).map(|v| v & 0xffff).collect();
+        assert_eq!(seqs.len(), PER_PRODUCER as usize, "producer {p} lost items");
+        for (i, w) in seqs.windows(2).enumerate() {
+            assert!(w[0] < w[1], "producer {p} reordered at {i}: {w:?}");
         }
     }
 }

@@ -1,0 +1,424 @@
+//! Socket-level tests for the network front door
+//! (`split_deconv::server::FrontDoor`): every test talks to a REAL TCP
+//! listener on an ephemeral port — nothing is mocked below the HTTP
+//! client.
+//!
+//! Contracts proved here:
+//! * responses over the socket are bit-exact with direct `engine::Plan`
+//!   execution, and multi-tenant routing sends each request to its own
+//!   model's program;
+//! * fault injection at the socket boundary: malformed bytes get an
+//!   explicit 400, a client hanging up mid-request (or mid-response)
+//!   leaves the server healthy for the next connection;
+//! * admission control: a full lane answers an explicit 503 shed —
+//!   counted in `Metrics.shed`, never a hang or a silent drop — and an
+//!   expired deadline answers 504 WITHOUT the request ever reaching the
+//!   executor (`Metrics.expired`);
+//! * graceful shutdown over the socket: a mid-flight request accepted
+//!   before `shutdown()` still gets its full 200 response before the
+//!   listener goes away (close-then-drain end to end).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use split_deconv::coordinator::{BatchExecutor, ModelLane, Server, ServerConfig};
+use split_deconv::engine::{DeconvImpl, Plan, Program};
+use split_deconv::server::client::{request_once, Client};
+use split_deconv::server::http::{bytes_to_f32s, f32s_to_bytes};
+use split_deconv::server::{FrontDoor, FrontDoorConfig, Route};
+use split_deconv::util::rng::Rng;
+
+mod common;
+use common::tiny_net;
+
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+fn scfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        queue_cap: 64,
+        model: "tiny".to_string(),
+        workers: 2,
+        precision: split_deconv::engine::Precision::F32,
+    }
+}
+
+fn fcfg() -> FrontDoorConfig {
+    FrontDoorConfig::default()
+}
+
+/// Two-lane multi-tenant door over the shared tiny net at two different
+/// weight seeds: same shapes, different programs — so routing mistakes
+/// change the bits of the response.
+fn tiny_door(
+    scfg: ServerConfig,
+    fcfg: FrontDoorConfig,
+) -> (FrontDoor, Arc<Program>, Arc<Program>) {
+    let net = tiny_net();
+    let p1 = Arc::new(Program::from_seed(&net, DeconvImpl::Sd, 4).unwrap());
+    let p2 = Arc::new(Program::from_seed(&net, DeconvImpl::Sd, 9).unwrap());
+    let routes = vec![
+        Route {
+            name: "tiny".to_string(),
+            z_len: p1.input_len(),
+            image_len: p1.output_len(),
+        },
+        Route {
+            name: "tiny2".to_string(),
+            z_len: p2.input_len(),
+            image_len: p2.output_len(),
+        },
+    ];
+    let server = Server::start_multi_with(
+        scfg,
+        vec![
+            ModelLane::native("tiny", p1.clone()),
+            ModelLane::native("tiny2", p2.clone()),
+        ],
+    )
+    .unwrap();
+    let door = FrontDoor::start(fcfg, server, routes).unwrap();
+    (door, p1, p2)
+}
+
+#[test]
+fn socket_responses_are_bit_exact_with_direct_plan_execution() {
+    let (door, p1, p2) = tiny_door(scfg(), fcfg());
+    let mut rng = Rng::new(3);
+    let mut client = Client::connect(door.addr(), TIMEOUT).unwrap();
+    for i in 0..4 {
+        let z = rng.normal_vec(16);
+        let body = f32s_to_bytes(&z);
+        let r1 = client.request("POST", "/v1/generate/tiny", &[], &body).unwrap();
+        assert_eq!(r1.status, 200, "tiny request {i}: {}", r1.text());
+        assert_eq!(r1.header("x-model"), Some("tiny"));
+        assert!(r1.header("x-request-id").is_some());
+        let got1 = bytes_to_f32s(&r1.body).unwrap();
+        let want1 = Plan::from_program(p1.clone()).execute_batch(&[z.clone()]).unwrap();
+        assert_eq!(got1, want1[0], "request {i}: socket response != direct Plan execution");
+
+        // same latent through the OTHER lane: different program, so a
+        // routing mistake would be caught bit-for-bit
+        let r2 = client.request("POST", "/v1/generate/tiny2", &[], &body).unwrap();
+        assert_eq!(r2.status, 200, "tiny2 request {i}: {}", r2.text());
+        assert_eq!(r2.header("x-model"), Some("tiny2"));
+        let got2 = bytes_to_f32s(&r2.body).unwrap();
+        let want2 = Plan::from_program(p2.clone()).execute_batch(&[z.clone()]).unwrap();
+        assert_eq!(got2, want2[0], "request {i}: tiny2 response != its own Plan");
+        assert_ne!(got1, got2, "the two lanes must serve different programs");
+    }
+    door.shutdown();
+}
+
+#[test]
+fn seed_query_draws_the_documented_latent_server_side() {
+    let (door, p1, _p2) = tiny_door(scfg(), fcfg());
+    let r = request_once(door.addr(), TIMEOUT, "POST", "/v1/generate/tiny?seed=7", &[], &[])
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.text());
+    let got = bytes_to_f32s(&r.body).unwrap();
+    let z = Rng::new(7).normal_vec(16);
+    let want = Plan::from_program(p1).execute_batch(&[z]).unwrap();
+    assert_eq!(got, want[0], "?seed=N must draw Rng::new(N).normal_vec(z_len)");
+    door.shutdown();
+}
+
+#[test]
+fn discovery_endpoints_answer() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+    let mut client = Client::connect(door.addr(), TIMEOUT).unwrap();
+    let health = client.get("/healthz").unwrap();
+    assert_eq!(health.status, 200);
+    assert!(health.text().contains("ok"));
+    let models = client.get("/v1/models").unwrap();
+    assert_eq!(models.status, 200);
+    let text = models.text();
+    assert!(text.contains("\"tiny\"") && text.contains("\"tiny2\""), "{text}");
+    assert!(text.contains("\"z_len\":16"), "{text}");
+    let metrics = client.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    let text = metrics.text();
+    assert!(text.contains("\"shed\":") && text.contains("\"expired\":"), "{text}");
+    door.shutdown();
+}
+
+#[test]
+fn malformed_bytes_get_400_and_the_server_keeps_serving() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+
+    // raw garbage: explicit 400, then the connection closes
+    let mut raw = TcpStream::connect(door.addr()).unwrap();
+    raw.set_read_timeout(Some(TIMEOUT)).unwrap();
+    raw.write_all(b"squeamish ossifrage\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    raw.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 400"), "garbage bytes must answer 400, got {text:?}");
+
+    // protocol-level mistakes: each gets its own explicit status
+    let addr = door.addr();
+    let wrong_len = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny", &[], &[1, 2, 3])
+        .unwrap();
+    assert_eq!(wrong_len.status, 400, "ragged latent: {}", wrong_len.text());
+    assert!(wrong_len.text().contains("bad_latent"));
+
+    let no_latent = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny", &[], &[]).unwrap();
+    assert_eq!(no_latent.status, 400);
+    assert!(no_latent.text().contains("missing_latent"));
+
+    let wrong_method = request_once(addr, TIMEOUT, "GET", "/v1/generate/tiny", &[], &[]).unwrap();
+    assert_eq!(wrong_method.status, 405);
+
+    let unknown = request_once(addr, TIMEOUT, "POST", "/v1/generate/nope?seed=1", &[], &[])
+        .unwrap();
+    assert_eq!(unknown.status, 404);
+    assert!(unknown.text().contains("unknown_model"));
+
+    let lost = request_once(addr, TIMEOUT, "GET", "/lost", &[], &[]).unwrap();
+    assert_eq!(lost.status, 404);
+
+    // ...and after all that abuse, real work still succeeds
+    let ok = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny?seed=1", &[], &[]).unwrap();
+    assert_eq!(ok.status, 200);
+    door.shutdown();
+}
+
+#[test]
+fn client_disconnect_mid_request_leaves_the_server_healthy() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+
+    // promise a 64-byte body, send 10, hang up
+    {
+        let mut raw = TcpStream::connect(door.addr()).unwrap();
+        raw.write_all(b"POST /v1/generate/tiny HTTP/1.1\r\nContent-Length: 64\r\n\r\n")
+            .unwrap();
+        raw.write_all(&[0u8; 10]).unwrap();
+    } // dropped: TCP FIN mid-body
+
+    // hang up while a response may be in flight
+    {
+        let mut raw = TcpStream::connect(door.addr()).unwrap();
+        raw.write_all(b"POST /v1/generate/tiny?seed=2 HTTP/1.1\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+    } // dropped without reading the response
+
+    // the pool and the acceptor must both still be fine
+    for _ in 0..3 {
+        let ok = request_once(door.addr(), TIMEOUT, "POST", "/v1/generate/tiny?seed=3", &[], &[])
+            .unwrap();
+        assert_eq!(ok.status, 200, "{}", ok.text());
+    }
+    assert_eq!(door.metrics().errors, 0, "disconnects must not count as batch errors");
+    door.shutdown();
+}
+
+/// A deliberately slow executor so tests can hold the worker busy and
+/// control queue occupancy; counts executed requests so deadline tests
+/// can prove a dropped request NEVER reached compute.
+struct SlowExec {
+    delay: Duration,
+    batches: Vec<usize>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl BatchExecutor for SlowExec {
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn z_len(&self) -> usize {
+        4
+    }
+    fn image_len(&self) -> usize {
+        4
+    }
+    fn execute(&mut self, batch: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.executed.fetch_add(batch.len(), Ordering::SeqCst);
+        Ok(batch.iter().map(|z| z.iter().map(|v| v + 1.0).collect()).collect())
+    }
+}
+
+/// One-lane door over [`SlowExec`]; returns the shared executed-request
+/// counter alongside the door.
+fn slow_door(scfg: ServerConfig, delay: Duration) -> (FrontDoor, Arc<AtomicUsize>) {
+    let executed = Arc::new(AtomicUsize::new(0));
+    let executed2 = executed.clone();
+    let lane = ModelLane {
+        name: "slow".to_string(),
+        factory: Box::new(move |_worker| {
+            Ok(Box::new(SlowExec {
+                delay,
+                batches: vec![1, 2, 4, 8],
+                executed: executed2.clone(),
+            }) as Box<dyn BatchExecutor>)
+        }),
+    };
+    let routes = vec![Route {
+        name: "slow".to_string(),
+        z_len: 4,
+        image_len: 4,
+    }];
+    let server = Server::start_multi_with(scfg, vec![lane]).unwrap();
+    let door = FrontDoor::start(fcfg(), server, routes).unwrap();
+    (door, executed)
+}
+
+#[test]
+fn queue_full_sheds_explicitly_and_every_request_is_answered() {
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 1,
+        model: "slow".to_string(),
+        workers: 1,
+        precision: split_deconv::engine::Precision::F32,
+    };
+    let (door, _executed) = slow_door(cfg, Duration::from_millis(100));
+    let addr = door.addr();
+
+    // 12 concurrent one-shot clients against capacity ~1 in flight + 1
+    // queued: most must shed, ALL must be answered
+    let clients: Vec<_> = (0..12)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let z = vec![i as f32; 4];
+                request_once(addr, TIMEOUT, "POST", "/v1/generate/slow", &[], &f32s_to_bytes(&z))
+                    .expect("every request gets an answer — shed is a response, not a hang")
+            })
+        })
+        .collect();
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    for c in clients {
+        let resp = c.join().unwrap();
+        match resp.status {
+            200 => ok += 1,
+            503 => {
+                assert!(resp.text().contains("shed"), "{}", resp.text());
+                assert_eq!(resp.header("retry-after"), Some("0"));
+                shed += 1;
+            }
+            other => panic!("unexpected status {other}: {}", resp.text()),
+        }
+    }
+    assert_eq!(ok + shed, 12, "no request may vanish");
+    assert!(ok >= 1, "at least the first request must be served");
+    assert!(shed >= 1, "overload must shed");
+    let m = door.metrics();
+    assert_eq!(m.shed, shed, "every 503 shed must be counted exactly once");
+    assert_eq!(m.served, ok, "every 200 is a served request");
+    door.shutdown();
+}
+
+#[test]
+fn expired_deadline_answers_504_without_reaching_compute() {
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 8,
+        model: "slow".to_string(),
+        workers: 1,
+        precision: split_deconv::engine::Precision::F32,
+    };
+    let (door, executed) = slow_door(cfg, Duration::from_millis(120));
+    let addr = door.addr();
+
+    // request A occupies the single worker for ~120ms
+    let a = std::thread::spawn(move || {
+        request_once(addr, TIMEOUT, "POST", "/v1/generate/slow?seed=1", &[], &[]).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(30));
+
+    // request B queues behind A with a 1ms deadline: by the time the
+    // worker reaches it the deadline has long passed — it must be
+    // dropped BEFORE compute and answered 504
+    let hdr = [("X-Deadline-Ms", "1".to_string())];
+    let b = request_once(addr, TIMEOUT, "POST", "/v1/generate/slow?seed=2", &hdr, &[]).unwrap();
+    assert_eq!(b.status, 504, "{}", b.text());
+    assert!(b.text().contains("deadline_expired"), "{}", b.text());
+
+    let a = a.join().unwrap();
+    assert_eq!(a.status, 200, "the occupying request still completes: {}", a.text());
+
+    let m = door.metrics();
+    assert_eq!(m.expired, 1, "the dropped deadline must be counted");
+    assert_eq!(
+        executed.load(Ordering::SeqCst),
+        1,
+        "only request A may reach the executor — B was dropped pre-compute"
+    );
+    door.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_flushes_inflight_responses_before_the_listener_dies() {
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 8,
+        model: "slow".to_string(),
+        workers: 1,
+        precision: split_deconv::engine::Precision::F32,
+    };
+    let (door, _executed) = slow_door(cfg, Duration::from_millis(150));
+    let addr = door.addr();
+
+    // a request that will still be computing when shutdown starts
+    let inflight = std::thread::spawn(move || {
+        let z = vec![2.5f32; 4];
+        request_once(addr, TIMEOUT, "POST", "/v1/generate/slow", &[], &f32s_to_bytes(&z)).unwrap()
+    });
+    // give the front door time to ACCEPT the request (it is then either
+    // queued or mid-compute — both must survive shutdown)
+    std::thread::sleep(Duration::from_millis(60));
+
+    let t0 = Instant::now();
+    door.shutdown();
+    let drained_in = t0.elapsed();
+
+    // close-then-drain over the socket: the accepted request got its full
+    // response even though shutdown was called mid-flight
+    let resp = inflight.join().unwrap();
+    assert_eq!(resp.status, 200, "mid-flight request must be flushed: {}", resp.text());
+    assert_eq!(
+        bytes_to_f32s(&resp.body).unwrap(),
+        vec![3.5f32; 4],
+        "flushed response must be the request's own image"
+    );
+    assert_eq!(door.metrics().served, 1);
+    assert!(drained_in < TIMEOUT, "shutdown must not hang");
+
+    // ...and the listener is really gone afterwards
+    let gone = match Client::connect(addr, Duration::from_millis(500)) {
+        Err(_) => true, // refused: the usual outcome
+        Ok(mut c) => c.get("/healthz").is_err(),
+    };
+    assert!(gone, "the listener must be closed after shutdown");
+    // idempotent
+    door.shutdown();
+}
+
+#[test]
+fn keep_alive_connection_serves_many_requests_in_fifo_order() {
+    let (door, p1, _p2) = tiny_door(scfg(), fcfg());
+    let mut client = Client::connect(door.addr(), TIMEOUT).unwrap();
+    let mut rng = Rng::new(11);
+    let mut plan = Plan::from_program(p1);
+    for i in 0..10 {
+        let z = rng.normal_vec(16);
+        let r = client
+            .request("POST", "/v1/generate/tiny", &[], &f32s_to_bytes(&z))
+            .unwrap();
+        assert_eq!(r.status, 200, "request {i}");
+        // per-client FIFO: response i on this connection answers request i
+        // (bit-exactness against request i's own latent proves no
+        // reordering or cross-wiring)
+        let want = plan.execute_batch(&[z]).unwrap();
+        assert_eq!(bytes_to_f32s(&r.body).unwrap(), want[0], "request {i} got another's image");
+    }
+    door.shutdown();
+}
