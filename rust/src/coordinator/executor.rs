@@ -18,6 +18,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::engine::{Plan, Program};
+use crate::obs::StageSink;
 use crate::runtime::Engine;
 
 /// Runs batches of latent vectors into batches of images.
@@ -30,6 +31,18 @@ pub trait BatchExecutor {
     fn image_len(&self) -> usize;
     /// Execute a batch; returns one image per request, in order.
     fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// [`BatchExecutor::execute`] with an optional per-layer stage sink
+    /// (DESIGN.md §12). Backends that can attribute time to engine stages
+    /// override this (the native engine does); the default ignores the
+    /// sink and must stay **bit-identical** to `execute` — tracing is an
+    /// observation channel, never a different compute path.
+    fn execute_traced(
+        &mut self,
+        batch: &[Vec<f32>],
+        _sink: Option<&mut StageSink>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.execute(batch)
+    }
 }
 
 /// Pick the execution batch size for `n` queued requests: the smallest
@@ -226,6 +239,16 @@ impl BatchExecutor for NativeExecutor {
 
     fn execute(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.plan.execute_batch(batch)
+    }
+
+    /// The native engine attributes per-layer im2col/GEMM/epilogue/
+    /// interleave time directly from the compiled program's steps.
+    fn execute_traced(
+        &mut self,
+        batch: &[Vec<f32>],
+        sink: Option<&mut StageSink>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.plan.execute_batch_traced(batch, sink)
     }
 }
 

@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::engine::{DeconvImpl, Precision, Program};
+use crate::obs::{self, LayerStages, Span, StageSink};
 
 pub use executor::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
@@ -84,6 +85,14 @@ pub struct ServerConfig {
     /// shared across workers like any other program). The PJRT backend
     /// ignores this — its precision is baked into the artifacts.
     pub precision: Precision,
+    /// record per-request trace spans (`{queue, batch_form, compute,
+    /// respond}` — [`Response::span`]) and honor per-request stage-trace
+    /// opt-ins ([`SubmitOpts::trace_stages`]). On by default: the span
+    /// costs two extra `Instant::now()` samples per *batch* plus one per
+    /// request. `false` turns every span field into 0 and suppresses
+    /// engine stage sinks entirely — the knob the serving bench's
+    /// tracing-overhead gate compares against (DESIGN.md §12).
+    pub record_spans: bool,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +104,7 @@ impl Default for ServerConfig {
             model: "dcgan".to_string(),
             workers: 1,
             precision: Precision::F32,
+            record_spans: true,
         }
     }
 }
@@ -111,7 +121,26 @@ struct Request {
     /// forms (counted in `Metrics.expired`; the responder is disconnected
     /// so the submitter observes the drop immediately)
     deadline: Option<Instant>,
+    /// trace id minted at admission (or caller-supplied, e.g. the front
+    /// door's `X-Request-Id`); rides end to end into [`Response::span`]
+    trace_id: u64,
+    /// caller opted into the per-layer engine stage breakdown
+    /// (`X-Trace: 1` at the front door) — the dispatcher attaches a
+    /// [`StageSink`] to this request's batch
+    traced: bool,
     resp: mpsc::Sender<Response>,
+}
+
+/// Per-request submit options beyond the latent itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// absolute completion deadline (see [`Server::submit_to`])
+    pub deadline: Option<Instant>,
+    /// caller-supplied trace id; a fresh one is minted when `None`
+    pub trace_id: Option<u64>,
+    /// request the per-layer engine stage breakdown for this request's
+    /// batch ([`Response::stages`]); requires `ServerConfig.record_spans`
+    pub trace_stages: bool,
 }
 
 /// A completed generation.
@@ -126,6 +155,19 @@ pub struct Response {
     pub compute_us: u64,
     /// how many requests shared the executable call
     pub batch_size: usize,
+    /// where this request's wall time went (all-zero when
+    /// `ServerConfig.record_spans` is off). Unlike the coarse
+    /// [`Response::queue_us`] (total minus compute, kept for
+    /// compatibility), the span separates pure lane-queue wait from the
+    /// continuous batcher's fill window and the response fan-out.
+    pub span: Span,
+    /// per-layer engine stage breakdown — only `Some` when this request
+    /// asked for it ([`SubmitOpts::trace_stages`]) and the backend
+    /// supports stage attribution (the native engine does). Timings cover
+    /// the whole batch the request rode in (one engine pass serves the
+    /// batch), shared behind an `Arc` by every traced request of that
+    /// batch.
+    pub stages: Option<Arc<Vec<LayerStages>>>,
 }
 
 /// Why a submit was refused. `Full` is the admission-control shed signal
@@ -358,6 +400,17 @@ impl Server {
         z: Vec<f32>,
         deadline: Option<Instant>,
     ) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_opts(lane, z, SubmitOpts { deadline, ..SubmitOpts::default() })
+    }
+
+    /// [`Server::submit_to`] with the full per-request options: deadline,
+    /// caller-supplied trace id, and the per-layer stage-trace opt-in.
+    pub fn submit_opts(
+        &self,
+        lane: usize,
+        z: Vec<f32>,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Response>, SubmitError> {
         if lane >= self.models.len() {
             return Err(SubmitError::UnknownModel);
         }
@@ -367,7 +420,9 @@ impl Server {
             lane,
             z,
             submitted: Instant::now(),
-            deadline,
+            deadline: opts.deadline,
+            trace_id: opts.trace_id.unwrap_or_else(obs::trace::mint_trace_id),
+            traced: opts.trace_stages,
             resp: resp_tx,
         };
         match self.queue.try_push(lane, req) {
@@ -399,6 +454,8 @@ impl Server {
             z,
             submitted: Instant::now(),
             deadline: None,
+            trace_id: obs::trace::mint_trace_id(),
+            traced: false,
             resp: resp_tx,
         };
         match self.queue.push(0, req) {
@@ -458,6 +515,7 @@ fn dispatch_loop(
             Some(x) => x,
             None => return, // closed and fully drained
         };
+        let t_form = if cfg.record_spans { Some(Instant::now()) } else { None };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.batch_timeout;
         queue.fill(lane, &mut batch, cfg.max_batch, deadline);
@@ -480,12 +538,29 @@ fn dispatch_loop(
             continue;
         }
 
+        // batch_form covers the continuous-batcher fill + expiry triage;
+        // zero (and unsampled) when record_spans is off
+        let batch_form_us = match t_form {
+            Some(t) => t.elapsed().as_micros() as u64,
+            None => 0,
+        };
         let zs: Vec<Vec<f32>> = live.iter().map(|r| r.z.clone()).collect();
+        // stage tracing is strictly opt-in per request AND gated on the
+        // server-wide record_spans knob: a batch with no traced request
+        // runs the exact untraced compute path (DESIGN.md §12)
+        let want_stages = cfg.record_spans && live.iter().any(|r| r.traced);
+        let mut sink = if want_stages { Some(StageSink::new()) } else { None };
         let t0 = Instant::now();
-        match execs[lane].execute(&zs) {
+        let result = match sink.as_mut() {
+            Some(s) => execs[lane].execute_traced(&zs, Some(s)),
+            None => execs[lane].execute(&zs),
+        };
+        match result {
             Ok(images) => {
-                let compute_us = t0.elapsed().as_micros() as u64;
+                let t_done = Instant::now();
+                let compute_us = (t_done - t0).as_micros() as u64;
                 metrics.record_batch(worker, lane, live.len(), compute_us);
+                let stages: Option<Arc<Vec<LayerStages>>> = sink.map(|s| Arc::new(s.layers));
                 for (req, image) in live.into_iter().zip(images) {
                     // sample elapsed() exactly once per request and derive
                     // queue time from it — re-sampling could attribute the
@@ -493,13 +568,34 @@ fn dispatch_loop(
                     // coordinator::queue_time_accounts_for_batch_wait)
                     let total_us = req.submitted.elapsed().as_micros() as u64;
                     let queue_us = total_us.saturating_sub(compute_us);
-                    metrics.record_latency(total_us);
+                    let span = if cfg.record_spans {
+                        // respond_us: fan-out time for requests served
+                        // before this one in the same batch (grows down
+                        // the loop); span.queue_us is the residual so the
+                        // four stages sum to total_us exactly
+                        let respond_us = t_done.elapsed().as_micros() as u64;
+                        Span {
+                            trace_id: req.trace_id,
+                            queue_us: total_us
+                                .saturating_sub(batch_form_us)
+                                .saturating_sub(compute_us)
+                                .saturating_sub(respond_us),
+                            batch_form_us,
+                            compute_us,
+                            respond_us,
+                        }
+                    } else {
+                        Span::default()
+                    };
+                    metrics.record_request_latency(total_us, queue_us, compute_us);
                     let _ = req.resp.send(Response {
                         id: req.id,
                         image,
                         queue_us,
                         compute_us,
                         batch_size: zs.len(),
+                        span,
+                        stages: if req.traced { stages.clone() } else { None },
                     });
                 }
             }
@@ -508,7 +604,11 @@ fn dispatch_loop(
                 // drop the responders: receivers observe disconnection,
                 // and only THIS batch's requests are affected — the loop
                 // (and the rest of the pool) keeps serving
-                eprintln!("worker {worker}: batch execution failed: {e:#}");
+                obs::log::error(
+                    "coordinator",
+                    &format!("batch execution failed: {e:#}"),
+                    &[("worker", worker.to_string()), ("lane", lane.to_string())],
+                );
             }
         }
     }

@@ -68,10 +68,12 @@ pub use weights::{
 pub use crate::quant::Precision;
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::nn::{LayerKind, NetworkSpec};
+use crate::obs::{LayerStages, StageSink};
 use crate::quant::{
     conv2d_i8_prepacked_into, quantize_dense, quantize_filter, quantize_into, scale_for_absmax,
     Epilogue, QFilter, QPackedB, QTensor,
@@ -385,7 +387,7 @@ impl Program {
         let mut absmaxes = Vec::with_capacity(self.steps.len());
         for step in &self.steps {
             absmaxes.push(crate::quant::absmax(&h.data));
-            h = run_step(step, h, &mut scratch)?;
+            h = run_step(step, h, &mut scratch, None)?;
         }
         let steps = std::mem::take(&mut self.steps);
         self.steps = steps
@@ -467,6 +469,22 @@ impl Program {
     /// serving path's entry point, where the packed batch has no other
     /// owner.
     pub fn forward_owned(&self, input: Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        self.forward_owned_traced(input, scratch, None)
+    }
+
+    /// [`Program::forward_owned`] with an optional per-layer stage sink
+    /// (DESIGN.md §12). With `Some(sink)`, every step accumulates its
+    /// im2col/GEMM/epilogue/interleave wall time into the sink's row for
+    /// that layer; with `None` this is exactly `forward_owned` — every
+    /// timing site checks the `Option` **before** touching the clock, so
+    /// the untraced path takes zero extra `Instant::now()` calls. Tracing
+    /// never changes the computed bits (regression-tested below).
+    pub fn forward_owned_traced(
+        &self,
+        input: Tensor,
+        scratch: &mut Scratch,
+        mut sink: Option<&mut StageSink>,
+    ) -> Result<Tensor> {
         let per = input.h * input.w * input.c;
         if per != self.input_len() {
             bail!(
@@ -478,7 +496,8 @@ impl Program {
         }
         let mut h = input;
         for step in &self.steps {
-            h = run_step(step, h, scratch)?;
+            let stages = sink.as_deref_mut().map(|s| s.layer_mut(step.name));
+            h = run_step(step, h, scratch, stages)?;
         }
         Ok(h)
     }
@@ -489,6 +508,17 @@ impl Program {
         &self,
         batch: &[Vec<f32>],
         scratch: &mut Scratch,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.execute_batch_traced(batch, scratch, None)
+    }
+
+    /// [`Program::execute_batch`] with an optional per-layer stage sink —
+    /// see [`Program::forward_owned_traced`] for the contract.
+    pub fn execute_batch_traced(
+        &self,
+        batch: &[Vec<f32>],
+        scratch: &mut Scratch,
+        sink: Option<&mut StageSink>,
     ) -> Result<Vec<Vec<f32>>> {
         if batch.is_empty() {
             return Ok(Vec::new());
@@ -502,7 +532,7 @@ impl Program {
             data.extend_from_slice(z);
         }
         let input = Tensor::from_vec(batch.len(), self.in_h, self.in_w, self.in_c, data);
-        let img = self.forward_owned(input, scratch)?;
+        let img = self.forward_owned_traced(input, scratch, sink)?;
         debug_assert_eq!(img.len() / img.n, self.out_len);
         let per = self.out_len;
         Ok((0..batch.len())
@@ -615,6 +645,15 @@ impl Plan {
     pub fn execute_batch(&mut self, batch: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.program.execute_batch(batch, &mut self.scratch)
     }
+
+    /// [`Program::execute_batch_traced`] against this plan's own scratch.
+    pub fn execute_batch_traced(
+        &mut self,
+        batch: &[Vec<f32>],
+        sink: Option<&mut StageSink>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.program.execute_batch_traced(batch, &mut self.scratch, sink)
+    }
 }
 
 fn check_filter(net: &str, layer: &str, f: &Filter, k: usize, ic: usize, oc: usize) -> Result<()> {
@@ -701,54 +740,89 @@ fn run_ref_deconv(
 /// scratch buffers, apply the fused activation, recycle the input buffer.
 /// Quantized ops fuse their mid-layer ReLU into the kernel's requantize
 /// epilogue (`act_done`); every other op gets the activation applied here.
-fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
+///
+/// `stages` is the optional per-layer trace row (DESIGN.md §12): when
+/// `Some`, the op's phases accumulate wall time into it under the
+/// taxonomy documented on [`LayerStages`] (explicit input prep —
+/// padding/quantization — under `im2col_us`, kernel calls under
+/// `gemm_us`, the activation pass under `epilogue_us`, SD scatter under
+/// `interleave_us`). When `None`, no `Instant::now()` is taken anywhere
+/// in this function: tracing is strictly zero-cost when disabled, and it
+/// never changes the computed bits either way.
+fn run_step(
+    step: &Step,
+    h: Tensor,
+    a: &mut Scratch,
+    mut stages: Option<&mut LayerStages>,
+) -> Result<Tensor> {
+    // Time `$work` into the `$slot` field of the trace row, iff tracing
+    // is on. The clock is only consulted when `stages` is `Some`.
+    macro_rules! stage {
+        ($slot:ident, $work:expr) => {{
+            let t0 = if stages.is_some() { Some(Instant::now()) } else { None };
+            let r = $work;
+            if let Some(t0) = t0 {
+                if let Some(s) = stages.as_deref_mut() {
+                    s.$slot += t0.elapsed().as_micros() as u64;
+                }
+            }
+            r
+        }};
+    }
     let n = h.n;
     let h = bridge_reshape(h, step.in_h, step.in_w, step.in_c);
     let (mut out, act_done) = match &step.op {
         Op::Dense { packed } => {
             let mut out = take_tensor(&mut a.spare);
-            dense_packed_into(&h, packed, &mut out)?;
+            stage!(gemm_us, dense_packed_into(&h, packed, &mut out))?;
             (out, false)
         }
         Op::Conv { kh, kw, packed, s, p } => {
             let mut out = take_tensor(&mut a.spare);
             if *p > 0 {
-                h.pad_into(*p, *p, *p, *p, &mut a.pad);
-                conv2d_packed_valid_into(&a.pad, *kh, *kw, *s, packed, &mut out);
+                stage!(im2col_us, h.pad_into(*p, *p, *p, *p, &mut a.pad));
+                stage!(gemm_us, conv2d_packed_valid_into(&a.pad, *kh, *kw, *s, packed, &mut out));
             } else {
-                conv2d_packed_valid_into(&h, *kh, *kw, *s, packed, &mut out);
+                stage!(gemm_us, conv2d_packed_valid_into(&h, *kh, *kw, *s, packed, &mut out));
             }
             (out, false)
         }
         Op::SdDeconv { packed, g } => {
-            h.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.pad);
+            stage!(im2col_us, h.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.pad));
             if a.splits.len() < packed.len() {
                 a.splits.resize_with(packed.len(), || Tensor::zeros(0, 0, 0, 0));
             }
-            for (pb, slot) in packed.iter().zip(a.splits.iter_mut()) {
-                // every SD split filter is g.k_t square (Eq. 1)
-                conv2d_packed_valid_into(&a.pad, g.k_t, g.k_t, 1, pb, slot);
-            }
+            stage!(
+                gemm_us,
+                for (pb, slot) in packed.iter().zip(a.splits.iter_mut()) {
+                    // every SD split filter is g.k_t square (Eq. 1)
+                    conv2d_packed_valid_into(&a.pad, g.k_t, g.k_t, 1, pb, slot);
+                }
+            );
             let mut out = take_tensor(&mut a.spare);
-            interleave_crop_into(
-                &a.splits[..packed.len()],
-                g.s,
-                g.crop(),
-                step.out_h,
-                step.out_w,
-                &mut out,
+            stage!(
+                interleave_us,
+                interleave_crop_into(
+                    &a.splits[..packed.len()],
+                    g.s,
+                    g.crop(),
+                    step.out_h,
+                    step.out_w,
+                    &mut out,
+                )
             );
             (out, false)
         }
         Op::RefDeconv { f, imp, s, p, out_pad } => {
-            (run_ref_deconv(&h, f, *imp, *s, *p, *out_pad), false)
+            let out = stage!(gemm_us, run_ref_deconv(&h, f, *imp, *s, *p, *out_pad));
+            (out, false)
         }
         Op::QConv { qf, packed, in_scale, s, p } => {
             // quantize at the calibrated per-tensor scale, convolve on the
             // int8 kernel with the mid-layer ReLU fused into the
             // requantize epilogue; the per-column scales go into a reused
             // scratch buffer (compile-time constants, no per-layer alloc)
-            quantize_into(&h, *in_scale, &mut a.qin);
+            stage!(im2col_us, quantize_into(&h, *in_scale, &mut a.qin));
             a.colscale.clear();
             a.colscale.extend(qf.scales.iter().map(|&sc| *in_scale * sc));
             let epi = match step.act {
@@ -757,10 +831,16 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
             };
             let mut out = take_tensor(&mut a.spare);
             if *p > 0 {
-                a.qin.pad_into(*p, *p, *p, *p, &mut a.qpad);
-                conv2d_i8_prepacked_into(&a.qpad, qf, packed, *s, &a.colscale, epi, &mut out);
+                stage!(im2col_us, a.qin.pad_into(*p, *p, *p, *p, &mut a.qpad));
+                stage!(
+                    gemm_us,
+                    conv2d_i8_prepacked_into(&a.qpad, qf, packed, *s, &a.colscale, epi, &mut out)
+                );
             } else {
-                conv2d_i8_prepacked_into(&a.qin, qf, packed, *s, &a.colscale, epi, &mut out);
+                stage!(
+                    gemm_us,
+                    conv2d_i8_prepacked_into(&a.qin, qf, packed, *s, &a.colscale, epi, &mut out)
+                );
             }
             (out, matches!(step.act, Act::Relu))
         }
@@ -768,24 +848,38 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
             // one quantize + pad of the input, then every packed int8
             // sub-filter runs a stride-1 int8 convolution; the splits
             // requantize to f32 and interleave exactly like the f32 path
-            quantize_into(&h, *in_scale, &mut a.qin);
-            a.qin.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.qpad);
+            stage!(im2col_us, quantize_into(&h, *in_scale, &mut a.qin));
+            stage!(im2col_us, a.qin.pad_into(g.p_i, g.p_i, g.p_i, g.p_i, &mut a.qpad));
             if a.splits.len() < splits.len() {
                 a.splits.resize_with(splits.len(), || Tensor::zeros(0, 0, 0, 0));
             }
-            for ((w, pb), slot) in splits.iter().zip(packed).zip(a.splits.iter_mut()) {
-                a.colscale.clear();
-                a.colscale.extend(w.scales.iter().map(|&sc| *in_scale * sc));
-                conv2d_i8_prepacked_into(&a.qpad, w, pb, 1, &a.colscale, Epilogue::none(), slot);
-            }
+            stage!(
+                gemm_us,
+                for ((w, pb), slot) in splits.iter().zip(packed).zip(a.splits.iter_mut()) {
+                    a.colscale.clear();
+                    a.colscale.extend(w.scales.iter().map(|&sc| *in_scale * sc));
+                    conv2d_i8_prepacked_into(
+                        &a.qpad,
+                        w,
+                        pb,
+                        1,
+                        &a.colscale,
+                        Epilogue::none(),
+                        slot,
+                    );
+                }
+            );
             let mut out = take_tensor(&mut a.spare);
-            interleave_crop_into(
-                &a.splits[..splits.len()],
-                g.s,
-                g.crop(),
-                step.out_h,
-                step.out_w,
-                &mut out,
+            stage!(
+                interleave_us,
+                interleave_crop_into(
+                    &a.splits[..splits.len()],
+                    g.s,
+                    g.crop(),
+                    step.out_h,
+                    step.out_w,
+                    &mut out,
+                )
             );
             (out, false)
         }
@@ -801,9 +895,9 @@ fn run_step(step: &Step, h: Tensor, a: &mut Scratch) -> Result<Tensor> {
         );
     }
     match step.act {
-        Act::Relu if !act_done => relu(&mut out),
+        Act::Relu if !act_done => stage!(epilogue_us, relu(&mut out)),
         Act::Relu => {}
-        Act::Tanh => tanh(&mut out),
+        Act::Tanh => stage!(epilogue_us, tanh(&mut out)),
     }
     a.spare = h.data; // recycle the input buffer for the step after next
     Ok(out)
@@ -912,6 +1006,46 @@ mod tests {
         for (i, z) in zs.iter().enumerate() {
             let single = plan.execute_batch(std::slice::from_ref(z)).unwrap();
             assert_eq!(batched[i], single[0], "int8 request {i} differs");
+        }
+    }
+
+    #[test]
+    fn traced_execution_is_bit_identical_and_fills_the_sink() {
+        // The StageSink only *observes*: turning it on must not change a
+        // single output bit, on the f32 path or the int8 path.
+        for precision in [Precision::F32, Precision::Int8] {
+            let net = networks::scaled(&networks::dcgan(), 2);
+            let mut plan = Plan::from_seed_prec(&net, DeconvImpl::Sd, 3, precision).unwrap();
+            let mut rng = Rng::new(21);
+            let zs: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(100)).collect();
+            let untraced = plan.execute_batch(&zs).unwrap();
+            let mut sink = StageSink::new();
+            let traced = plan.execute_batch_traced(&zs, Some(&mut sink)).unwrap();
+            assert_eq!(untraced, traced, "{precision:?}: tracing changed output bits");
+            // one row per layer, in execution order, with the kernel
+            // stage populated everywhere and the SD stages populated on
+            // deconv layers
+            assert_eq!(sink.layers.len(), net.layers.len());
+            for (row, l) in sink.layers.iter().zip(&net.layers) {
+                assert_eq!(row.layer, l.name);
+            }
+            let deconv_rows: Vec<_> = sink
+                .layers
+                .iter()
+                .zip(&net.layers)
+                .filter(|(_, l)| matches!(l.kind, LayerKind::Deconv))
+                .map(|(row, _)| row)
+                .collect();
+            assert!(!deconv_rows.is_empty());
+            // wall-clock micros can legitimately be 0 on a fast machine,
+            // so assert structure (totals add up) rather than positivity
+            for row in &sink.layers {
+                assert_eq!(
+                    row.total_us(),
+                    row.im2col_us + row.gemm_us + row.epilogue_us + row.interleave_us
+                );
+            }
+            assert!(sink.to_json().contains("\"layer\""));
         }
     }
 

@@ -27,6 +27,7 @@ pub mod engine;
 pub mod metrics;
 pub mod networks;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -24,15 +24,28 @@
 //!           when a lane is full, 504 for requests whose --deadline-ms
 //!           (or X-Deadline-Ms header) expires before compute. --serve-secs
 //!           bounds the run (CI smoke); omit it to serve until killed.
+//!   profile [--model dcgan|artgan|sngan|gpgan|mde|fst] [--precision f32|int8]
+//!           [--requests N] [--seed S] [--json path]
+//!           run N seeded inferences through the native engine with the
+//!           per-layer stage tracer attached and print where the time goes:
+//!           one row per layer, im2col/GEMM/epilogue/interleave columns
+//!           (mean us over N). --json writes BENCH_profile.json-style
+//!           machine-readable rows via the shared bench harness sink.
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
+
+// The bench targets' shared JSON sink, reused so `repro profile --json`
+// emits the same file shape the perf-tracking scripts already parse.
+#[path = "../benches/harness.rs"]
+mod harness;
 
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 use split_deconv::coordinator::{Server, ServerConfig};
-use split_deconv::engine::Precision;
+use split_deconv::engine::{DeconvImpl, Plan, Precision};
+use split_deconv::obs::StageSink;
 use split_deconv::report;
 use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
 use split_deconv::server::{FrontDoor, FrontDoorConfig};
@@ -61,11 +74,12 @@ fn run(args: &[String]) -> Result<()> {
         Some("report") => report_cmd(args.get(1).map(String::as_str).unwrap_or("all"), args),
         Some("verify") => verify_cmd(args),
         Some("serve") => serve_cmd(args),
+        Some("profile") => profile_cmd(args),
         Some("simulate") => simulate_cmd(args),
-        Some(other) => bail!("unknown command {other}; try report/verify/serve/simulate"),
+        Some(other) => bail!("unknown command {other}; try report/verify/serve/profile/simulate"),
         None => {
             println!("repro — split deconvolution reproduction");
-            println!("usage: repro <report|verify|serve|simulate> ...");
+            println!("usage: repro <report|verify|serve|profile|simulate> ...");
             Ok(())
         }
     }
@@ -206,6 +220,7 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         model,
         workers,
         precision,
+        record_spans: true,
     };
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
     if precision == Precision::Int8 && !native {
@@ -296,6 +311,7 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
         model: models[0].clone(),
         workers,
         precision,
+        record_spans: true,
     };
     let fcfg = FrontDoorConfig {
         listen: listen.to_string(),
@@ -315,7 +331,7 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
             r.name, r.z_len, r.image_len
         );
     }
-    println!("  GET  /v1/models | /metrics | /healthz");
+    println!("  GET  /v1/models | /metrics (JSON; ?format=prom for Prometheus) | /healthz");
     match serve_secs {
         Some(secs) => {
             println!("serving for {secs}s (--serve-secs), then draining...");
@@ -327,6 +343,84 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
     }
     door.shutdown();
     println!("{}", door.metrics().summary());
+    Ok(())
+}
+
+/// `repro profile`: the paper's latency-decomposition table measured
+/// live — N seeded inferences through the native engine with a
+/// [`StageSink`] attached, then one row per layer with mean per-stage
+/// microseconds (im2col prep / GEMM kernels / activation epilogue /
+/// SD interleave+crop).
+fn profile_cmd(args: &[String]) -> Result<()> {
+    let model = flag_value(args, "--model").unwrap_or("dcgan").to_string();
+    let requests: usize = flag_value(args, "--requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16)
+        .max(1);
+    let seed: u64 = flag_value(args, "--seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    let precision = match flag_value(args, "--precision") {
+        None => Precision::F32,
+        Some(p) => Precision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {p}; expected f32 or int8"))?,
+    };
+    let net = networks::by_name_or_err(&model)?;
+    let mut plan = Plan::from_seed_prec(&net, DeconvImpl::Sd, 7, precision)?;
+    let z_len = plan.input_len();
+    println!(
+        "profiling {} ({}, SD path): {requests} seeded inference(s), latent {z_len} floats",
+        net.name,
+        precision.label()
+    );
+
+    let mut rng = Rng::new(seed);
+    // warm-up untraced: page in the packed weights and size the scratch
+    let warm = rng.normal_vec(z_len);
+    plan.execute_batch_traced(std::slice::from_ref(&warm), None)?;
+    // one sink across all runs: rows accumulate by layer name, so each
+    // row ends up holding per-stage TOTALS over the N runs
+    let mut sink = StageSink::new();
+    for _ in 0..requests {
+        let z = rng.normal_vec(z_len);
+        plan.execute_batch_traced(std::slice::from_ref(&z), Some(&mut sink))?;
+    }
+
+    let n = requests as f64;
+    let grand_total = sink.total_us() as f64;
+    println!(
+        "\n{:<12} {:>11} {:>11} {:>12} {:>14} {:>10} {:>7}",
+        "layer", "im2col_us", "gemm_us", "epilogue_us", "interleave_us", "total_us", "share"
+    );
+    let mut json = harness::JsonSink::from_args();
+    for l in &sink.layers {
+        let total = l.total_us() as f64;
+        println!(
+            "{:<12} {:>11.1} {:>11.1} {:>12.1} {:>14.1} {:>10.1} {:>6.1}%",
+            l.layer,
+            l.im2col_us as f64 / n,
+            l.gemm_us as f64 / n,
+            l.epilogue_us as f64 / n,
+            l.interleave_us as f64 / n,
+            total / n,
+            if grand_total > 0.0 { 100.0 * total / grand_total } else { 0.0 },
+        );
+        json.record_fields(
+            &format!("profile_{}_{}_{}", networks::slug(net.name), precision.label(), l.layer),
+            &[
+                ("im2col_us", l.im2col_us as f64 / n),
+                ("gemm_us", l.gemm_us as f64 / n),
+                ("epilogue_us", l.epilogue_us as f64 / n),
+                ("interleave_us", l.interleave_us as f64 / n),
+                ("total_us", total / n),
+            ],
+        );
+    }
+    println!(
+        "{:<12} {:>11} {:>11} {:>12} {:>14} {:>10.1} {:>6.1}%",
+        "TOTAL", "", "", "", "", grand_total / n, 100.0
+    );
+    json.write("profile");
     Ok(())
 }
 

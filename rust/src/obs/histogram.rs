@@ -1,0 +1,306 @@
+//! Lock-free, fixed-footprint, log-scaled latency histograms.
+//!
+//! [`Histogram`] replaces the coordinator's old `latencies_us: Vec<u64>`
+//! (unbounded growth + O(n log n) sort under the metrics mutex) with a
+//! fixed array of atomic counters over geometrically spaced buckets:
+//!
+//! * bucket upper bounds grow by a factor of ~[`GROWTH`] (1.25) starting
+//!   at 1us, covering at least 1us..=60s ([`MAX_TRACKED_US`]) before a
+//!   final `+Inf` overflow bucket;
+//! * [`Histogram::record`] is wait-free: one binary search over the
+//!   static bound table plus three `Relaxed` `fetch_add`s — no lock, no
+//!   allocation, O(1) memory forever;
+//! * [`HistogramSnapshot`]s are plain bucket-count vectors: they merge
+//!   exactly (bucket-wise addition over the shared bound table), and
+//!   quantile queries return **exact bounds**, not estimates — see
+//!   [`HistogramSnapshot::quantile_bounds`].
+//!
+//! # Quantile error bound
+//!
+//! For any quantile `q`, the true order statistic `t` lies in
+//! `(lo, hi]` where `(lo, hi)` are the adjacent bucket bounds returned
+//! by [`HistogramSnapshot::quantile_bounds`]. Reporting `hi` therefore
+//! overestimates by at most one bucket width: since `hi <= ceil(lo *
+//! 1.25) + 1`, the relative error is bounded by the bucket growth
+//! factor, i.e. `hi <= t * 1.25 + 1us`. That is the documented contract
+//! for the `p50_us`/`p95_us`/`p99_us` fields in the coordinator's
+//! metrics snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Geometric growth factor between consecutive bucket upper bounds.
+pub const GROWTH: f64 = 1.25;
+
+/// Smallest bucket upper bound, in microseconds.
+pub const MIN_TRACKED_US: u64 = 1;
+
+/// The bound table is guaranteed to reach at least this far (60s).
+pub const MAX_TRACKED_US: u64 = 60_000_000;
+
+/// Number of finite buckets. 96 geometric steps of 1.25 from 1us reach
+/// ~2.1e9us (~35min), comfortably past [`MAX_TRACKED_US`]; the table
+/// generator asserts this at first use.
+pub const NUM_BUCKETS: usize = 96;
+
+/// Finite bucket upper bounds in microseconds, strictly increasing.
+/// `bounds()[i]` is the inclusive upper bound of bucket `i`; bucket
+/// `NUM_BUCKETS` (the last counter slot) is the `+Inf` overflow bucket.
+pub fn bounds() -> &'static [u64; NUM_BUCKETS] {
+    static BOUNDS: OnceLock<[u64; NUM_BUCKETS]> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut b = [0u64; NUM_BUCKETS];
+        let mut prev = 0u64;
+        for (i, slot) in b.iter_mut().enumerate() {
+            let geometric = if i == 0 {
+                MIN_TRACKED_US
+            } else {
+                (prev as f64 * GROWTH).ceil() as u64
+            };
+            // Strictly increasing even in the integer-rounded low range
+            // (1, 2, 3, 4, 5, 7, ...).
+            prev = geometric.max(prev + 1);
+            *slot = prev;
+        }
+        assert!(
+            b[NUM_BUCKETS - 1] >= MAX_TRACKED_US,
+            "bucket table must cover {MAX_TRACKED_US}us, reached only {}us",
+            b[NUM_BUCKETS - 1]
+        );
+        b
+    })
+}
+
+/// Index of the bucket a `us` observation falls in: the first bucket
+/// whose upper bound is `>= us`, or the overflow slot `NUM_BUCKETS`.
+pub fn bucket_index(us: u64) -> usize {
+    bounds().partition_point(|&bound| bound < us)
+}
+
+/// A lock-free histogram of microsecond durations.
+///
+/// `record` never blocks and never allocates; `snapshot` reads the
+/// counters with `Relaxed` loads (monotone per-bucket, so a concurrent
+/// snapshot is a valid histogram of *some* prefix-interleaving of the
+/// recorded events).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Wait-free, O(1) memory.
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the counters out. O(NUM_BUCKETS), no lock.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The fixed in-memory footprint of one histogram, independent of
+    /// how many observations have been recorded. Used by the O(1)-memory
+    /// regression test.
+    pub const fn footprint_bytes() -> usize {
+        std::mem::size_of::<Histogram>()
+    }
+}
+
+/// An owned, mergeable copy of a [`Histogram`]'s counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// `NUM_BUCKETS + 1` counts; the last entry is the `+Inf` overflow
+    /// bucket. Empty for a default-constructed snapshot.
+    pub buckets: Vec<u64>,
+    /// Exact sum of all recorded observations, in microseconds.
+    pub sum_us: u64,
+    /// Exact number of observations.
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise merge. Exact: both snapshots index the same static
+    /// bound table, so merged quantile bounds are as tight as if every
+    /// observation had been recorded into one histogram.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if other.buckets.is_empty() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; other.buckets.len()];
+        }
+        assert_eq!(self.buckets.len(), other.buckets.len(), "bucket layout mismatch");
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+    }
+
+    /// Exact bounds on the `q`-quantile (0.0..=1.0): the true order
+    /// statistic `t` of rank `ceil(q * count)` satisfies `lo < t <= hi`.
+    /// `lo` is the previous bucket's upper bound (0 for the first
+    /// bucket); `hi` is the containing bucket's upper bound
+    /// ([`MAX_TRACKED_US`]-capped `u64::MAX` semantics for the overflow
+    /// bucket: `hi` is reported as the last finite bound). Returns
+    /// `None` for an empty histogram.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
+        if self.count == 0 || self.buckets.is_empty() {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let table = bounds();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let lo = if i == 0 { 0 } else { table[(i - 1).min(NUM_BUCKETS - 1)] };
+                let hi = if i < NUM_BUCKETS { table[i] } else { table[NUM_BUCKETS - 1] };
+                return Some((lo, hi));
+            }
+        }
+        // Unreachable when counts are consistent; fall back to the top.
+        Some((table[NUM_BUCKETS - 2], table[NUM_BUCKETS - 1]))
+    }
+
+    /// Upper quantile bound as f64 microseconds (0.0 when empty) — the
+    /// value exported as `p50_us`/`p95_us`/`p99_us`. Overestimates the
+    /// true quantile by at most one bucket width (<= 25% + 1us).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        self.quantile_bounds(q).map(|(_, hi)| hi as f64).unwrap_or(0.0)
+    }
+
+    /// Mean in microseconds (exact: `sum_us` is exact).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Cumulative `(upper_bound_us, cumulative_count)` pairs over the
+    /// finite buckets, in increasing bound order — the shape Prometheus
+    /// `_bucket{le=...}` series want. The `+Inf` cumulative count equals
+    /// [`HistogramSnapshot::count`].
+    pub fn cumulative(&self) -> Vec<(u64, u64)> {
+        let table = bounds();
+        let mut out = Vec::with_capacity(NUM_BUCKETS);
+        let mut cum = 0u64;
+        for i in 0..NUM_BUCKETS {
+            cum += self.buckets.get(i).copied().unwrap_or(0);
+            out.push((table[i], cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_strictly_increasing_and_cover_range() {
+        let b = bounds();
+        assert_eq!(b[0], 1);
+        for w in b.windows(2) {
+            assert!(w[1] > w[0], "bounds must be strictly increasing: {w:?}");
+            // Growth factor never exceeds ceil(x * 1.25), i.e. the
+            // documented <= 25% + 1us relative bucket width.
+            assert!(w[1] <= (w[0] as f64 * GROWTH).ceil() as u64 + 1);
+        }
+        assert!(b[NUM_BUCKETS - 1] >= MAX_TRACKED_US);
+    }
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        let b = bounds();
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        for (i, &bound) in b.iter().enumerate() {
+            assert_eq!(bucket_index(bound), i, "upper bound is inclusive");
+            assert_eq!(bucket_index(bound + 1), i + 1);
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS);
+    }
+
+    #[test]
+    fn quantiles_are_exact_bounds() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum_us, 60);
+        let (lo, hi) = s.quantile_bounds(0.5).unwrap();
+        assert!(lo < 20 && 20 <= hi, "p50 bounds {lo}..{hi} must bracket 20");
+        assert!(hi as f64 <= 20.0 * GROWTH + 1.0);
+        let (lo, hi) = s.quantile_bounds(0.99).unwrap();
+        assert!(lo < 30 && 30 <= hi, "p99 bounds {lo}..{hi} must bracket 30");
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in [5u64, 50, 500, 5_000] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [7u64, 70, 700_000, 70_000_000_000] {
+            b.record(v);
+            all.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot());
+    }
+
+    #[test]
+    fn overflow_bucket_catches_out_of_range() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.buckets[NUM_BUCKETS], 1);
+        assert_eq!(s.cumulative().last().unwrap().1, 0, "finite cum excludes overflow");
+        assert_eq!(s.count, 1);
+    }
+
+    #[test]
+    fn footprint_is_constant() {
+        // ~(96 + 1 + 2) * 8 bytes. The point is that it is a compile-time
+        // constant, not proportional to observation count.
+        assert!(Histogram::footprint_bytes() < 1024);
+    }
+}

@@ -1,0 +1,173 @@
+//! Minimal leveled, structured, std-only logger.
+//!
+//! Replaces the coordinator's bare `eprintln!` diagnostics with
+//! `level=… target=… msg=… key=value…` lines on stderr, filtered by the
+//! `REPRO_LOG` environment variable (`error|warn|info|debug`, default
+//! `warn`; `off` silences everything). The level is read once per
+//! process and cached, so the per-call cost of a suppressed log line is
+//! one relaxed atomic-free comparison against a `OnceLock`ed enum.
+//!
+//! ```text
+//! level=error target=coordinator msg="batch execution failed: …" worker=1 lane=dcgan
+//! ```
+
+use std::io::Write;
+use std::sync::OnceLock;
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `REPRO_LOG` value. `None` for unrecognized strings.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// The active max level: `REPRO_LOG` env var, default `warn`.
+/// `REPRO_LOG=off|none|0` disables all output ([`max_level`] returns
+/// `None`); any other unrecognized value falls back to the default.
+pub fn max_level() -> Option<Level> {
+    static MAX: OnceLock<Option<Level>> = OnceLock::new();
+    *MAX.get_or_init(|| match std::env::var("REPRO_LOG") {
+        Ok(v) if matches!(v.trim().to_ascii_lowercase().as_str(), "off" | "none" | "0") => None,
+        Ok(v) => Some(Level::parse(&v).unwrap_or(Level::Warn)),
+        Err(_) => Some(Level::Warn),
+    })
+}
+
+/// Would a record at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    matches!(max_level(), Some(max) if level <= max)
+}
+
+/// Render one record as a `key=value` line (no trailing newline).
+/// `msg` and any field value containing spaces, quotes or `=` is quoted
+/// with `"` and backslash-escaped, so lines stay machine-splittable.
+pub fn format_line(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) -> String {
+    let mut out = String::with_capacity(64 + msg.len());
+    out.push_str("level=");
+    out.push_str(level.label());
+    out.push_str(" target=");
+    push_value(&mut out, target);
+    out.push_str(" msg=");
+    push_value(&mut out, msg);
+    for (k, v) in fields {
+        out.push(' ');
+        out.push_str(k);
+        out.push('=');
+        push_value(&mut out, v);
+    }
+    out
+}
+
+fn push_value(out: &mut String, v: &str) {
+    let needs_quotes =
+        v.is_empty() || v.chars().any(|c| c.is_whitespace() || c == '"' || c == '=' || c == '\\');
+    if !needs_quotes {
+        out.push_str(v);
+        return;
+    }
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Emit one record to stderr if `level` passes the filter.
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let line = format_line(level, target, msg, fields);
+    // One write_all per record keeps concurrent workers' lines whole.
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse(" WARN "), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug, "more severe orders first");
+    }
+
+    #[test]
+    fn format_line_quotes_only_when_needed() {
+        let line = format_line(
+            Level::Error,
+            "coordinator",
+            "batch execution failed: boom",
+            &[("worker", "1".to_string()), ("lane", "dcgan".to_string())],
+        );
+        assert_eq!(
+            line,
+            "level=error target=coordinator msg=\"batch execution failed: boom\" worker=1 lane=dcgan"
+        );
+    }
+
+    #[test]
+    fn format_line_escapes_quotes_and_newlines() {
+        let line = format_line(
+            Level::Warn,
+            "server",
+            "bad \"header\"\nline",
+            &[("peer", "127.0.0.1:80".to_string())],
+        );
+        assert!(line.contains("msg=\"bad \\\"header\\\"\\nline\""));
+        assert!(line.ends_with("peer=127.0.0.1:80"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Observability: lock-free histograms, per-request trace spans with
+//! per-layer engine stage breakdowns, and a leveled structured logger.
+//!
+//! This is the cross-cutting layer the serving stack reports through
+//! (DESIGN.md §12):
+//!
+//! * [`histogram`] — fixed-footprint log-scaled latency histograms that
+//!   back the coordinator's `Metrics` (O(1) memory per observation,
+//!   wait-free `record`, mergeable snapshots with exact quantile
+//!   bounds) and the Prometheus `_bucket/_sum/_count` exposition.
+//! * [`trace`] — `TraceId` minting, the per-request
+//!   `{queue, batch_form, compute, respond}` [`trace::Span`], and the
+//!   optional per-layer [`trace::StageSink`] the engine fills with
+//!   im2col/GEMM/epilogue/interleave timings when a caller sets
+//!   `X-Trace: 1` (zero-cost when disabled: every site checks the
+//!   `Option` before touching the clock).
+//! * [`log`] — `REPRO_LOG`-leveled `key=value` records on stderr.
+
+pub mod histogram;
+pub mod log;
+pub mod trace;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use trace::{LayerStages, Span, StageSink};

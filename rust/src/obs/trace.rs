@@ -1,0 +1,231 @@
+//! Per-request trace spans and per-layer engine stage breakdowns.
+//!
+//! A trace id is minted at admission (or taken from the caller's
+//! `X-Request-Id` header) and rides `coordinator::Request` end to end.
+//! Each dispatcher records a [`Span`] — where the request's wall time
+//! went between the socket and the response channel — and, when the
+//! caller opted in with `X-Trace: 1`, the engine fills a [`StageSink`]
+//! with one [`LayerStages`] row per op: the paper's latency-decomposition
+//! table (im2col / GEMM / epilogue / interleave+crop) measured live.
+//!
+//! The zero-overhead contract: every timing site checks an
+//! `Option`/`bool` *before* calling `Instant::now()`, so an untraced
+//! request takes no timestamps beyond the four per-batch/per-request
+//! samples the coordinator has always taken for metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Mint a fresh process-unique trace id (nonzero).
+pub fn mint_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Derive a trace id from a caller-supplied `X-Request-Id` header:
+/// decimal u64s pass through verbatim, anything else is FNV-1a hashed
+/// (stable across runs, so a retried request keeps its id).
+pub fn trace_id_from_header(value: &str) -> u64 {
+    let v = value.trim();
+    if let Ok(n) = v.parse::<u64>() {
+        return n;
+    }
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for b in v.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Where one request's wall time went, socket to response channel.
+///
+/// `queue_us + batch_form_us + compute_us + respond_us` accounts for the
+/// request's total in-coordinator time (up to saturating rounding).
+/// `queue_us` here is pure lane-queue wait; the coordinator's public
+/// `Response::queue_us` keeps its historical meaning (total minus
+/// compute, i.e. queue wait *plus* batch formation) for compatibility.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    /// Trace id (minted or caller-supplied); 0 when spans are disabled.
+    pub trace_id: u64,
+    /// Time spent waiting in the lane queue before a dispatcher popped it.
+    pub queue_us: u64,
+    /// Time the continuous batcher spent filling the batch after pop.
+    pub batch_form_us: u64,
+    /// Executor time for the batch this request rode in.
+    pub compute_us: u64,
+    /// Time from batch completion to this request's response send.
+    pub respond_us: u64,
+}
+
+impl Span {
+    /// Compact JSON object (no trailing newline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"trace_id\":{},\"queue_us\":{},\"batch_form_us\":{},\"compute_us\":{},\"respond_us\":{}}}",
+            self.trace_id, self.queue_us, self.batch_form_us, self.compute_us, self.respond_us
+        )
+    }
+}
+
+/// Stage timings for one engine op (one network layer), in microseconds.
+///
+/// Stage taxonomy, mapped onto the kernels of DESIGN.md §8–§10:
+/// * `im2col_us` — explicit input preparation: zero-padding into the
+///   scratch arena and (int8) activation quantization. The im2col
+///   *gather* itself is fused into the GEMM microkernel loop and is
+///   accounted under `gemm_us`.
+/// * `gemm_us` — the packed GEMM kernel calls: dense, direct conv, or
+///   every stride-1 SD sub-convolution of a split deconv.
+/// * `epilogue_us` — the activation pass (ReLU/tanh) applied after the
+///   kernel. The int8 path's fused requantize+bias+ReLU epilogue runs
+///   inside the kernel and lands in `gemm_us`.
+/// * `interleave_us` — `sd::interleave_crop_into`: scattering the s²
+///   sub-convolution outputs back into the deconv output and cropping.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerStages {
+    /// Step name from the compiled program (e.g. `"deconv1"`).
+    pub layer: &'static str,
+    pub im2col_us: u64,
+    pub gemm_us: u64,
+    pub epilogue_us: u64,
+    pub interleave_us: u64,
+}
+
+impl LayerStages {
+    pub fn total_us(&self) -> u64 {
+        self.im2col_us + self.gemm_us + self.epilogue_us + self.interleave_us
+    }
+
+    /// Accumulate another measurement of the same layer.
+    pub fn accumulate(&mut self, other: &LayerStages) {
+        self.im2col_us += other.im2col_us;
+        self.gemm_us += other.gemm_us;
+        self.epilogue_us += other.epilogue_us;
+        self.interleave_us += other.interleave_us;
+    }
+
+    /// Compact JSON object.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"layer\":{},\"im2col_us\":{},\"gemm_us\":{},\"epilogue_us\":{},\"interleave_us\":{},\"total_us\":{}}}",
+            json_string(self.layer),
+            self.im2col_us,
+            self.gemm_us,
+            self.epilogue_us,
+            self.interleave_us,
+            self.total_us()
+        )
+    }
+}
+
+/// Collector for per-layer stage timings across one (or many) forward
+/// passes. Passing `None` instead of a sink skips every timing site.
+#[derive(Clone, Debug, Default)]
+pub struct StageSink {
+    pub layers: Vec<LayerStages>,
+}
+
+impl StageSink {
+    pub fn new() -> StageSink {
+        StageSink::default()
+    }
+
+    /// Start (or continue) a row for `layer` and return it for the
+    /// engine's timing macro to add into. Rows accumulate by name, so a
+    /// sink reused across N runs holds per-layer totals over N runs.
+    pub fn layer_mut(&mut self, layer: &'static str) -> &mut LayerStages {
+        if let Some(i) = self.layers.iter().position(|l| l.layer == layer) {
+            return &mut self.layers[i];
+        }
+        self.layers.push(LayerStages {
+            layer,
+            ..LayerStages::default()
+        });
+        self.layers.last_mut().unwrap()
+    }
+
+    /// Sum of all per-layer totals.
+    pub fn total_us(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_us()).sum()
+    }
+
+    /// JSON array of per-layer rows, in execution order.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self.layers.iter().map(|l| l.to_json()).collect();
+        format!("[{}]", rows.join(","))
+    }
+}
+
+/// Quote + escape a string as a JSON string literal.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_id_header_parses_decimal_and_hashes_strings() {
+        assert_eq!(trace_id_from_header("42"), 42);
+        assert_eq!(trace_id_from_header(" 42 "), 42);
+        let h1 = trace_id_from_header("req-abc");
+        let h2 = trace_id_from_header("req-abc");
+        assert_eq!(h1, h2, "hash must be stable");
+        assert_ne!(h1, trace_id_from_header("req-abd"));
+    }
+
+    #[test]
+    fn minted_ids_are_unique() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_ne!(a, b);
+        assert_ne!(a, 0);
+    }
+
+    #[test]
+    fn sink_accumulates_by_layer_name() {
+        let mut sink = StageSink::new();
+        sink.layer_mut("conv1").gemm_us += 10;
+        sink.layer_mut("conv2").gemm_us += 5;
+        sink.layer_mut("conv1").im2col_us += 3;
+        assert_eq!(sink.layers.len(), 2);
+        assert_eq!(sink.layers[0].layer, "conv1");
+        assert_eq!(sink.layers[0].gemm_us, 10);
+        assert_eq!(sink.layers[0].im2col_us, 3);
+        assert_eq!(sink.total_us(), 18);
+    }
+
+    #[test]
+    fn json_shapes() {
+        let span = Span {
+            trace_id: 7,
+            queue_us: 1,
+            batch_form_us: 2,
+            compute_us: 3,
+            respond_us: 4,
+        };
+        assert_eq!(
+            span.to_json(),
+            "{\"trace_id\":7,\"queue_us\":1,\"batch_form_us\":2,\"compute_us\":3,\"respond_us\":4}"
+        );
+        let mut sink = StageSink::new();
+        sink.layer_mut("d1").gemm_us = 9;
+        assert!(sink.to_json().starts_with("[{\"layer\":\"d1\""));
+        assert!(sink.to_json().contains("\"total_us\":9"));
+    }
+}

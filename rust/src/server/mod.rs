@@ -13,8 +13,18 @@
 //!   `X-Compute-Us`/`X-Model` carry the serving metadata. An
 //!   `X-Deadline-Ms` header sets the request's completion deadline.
 //! * `GET /v1/models` — the route table as JSON.
-//! * `GET /metrics` — coordinator metrics snapshot as JSON.
+//! * `GET /metrics` — coordinator metrics snapshot as JSON, or Prometheus
+//!   text format (`?format=prom` or `Accept: text/plain`) with counters,
+//!   gauges, and the latency/queue-wait/compute histograms as cumulative
+//!   `_bucket`/`_sum`/`_count` series (DESIGN.md §12).
 //! * `GET /healthz` — liveness.
+//!
+//! Tracing: an `X-Request-Id` request header becomes the request's trace
+//! id (decimal u64s pass through, other values are hashed); `X-Trace: 1`
+//! opts into the per-layer engine stage breakdown. Traced 200 responses
+//! keep the image bytes **bit-identical** and append a JSON trailer
+//! (`{"trace_id":..,"span":..,"stages":..}`) after them; the
+//! `X-Trace-Result` response header is the trailer's byte offset.
 //!
 //! Admission control is EXPLICIT at this boundary: a full lane answers
 //! 503 `{"error":"shed"}` immediately (counted in `Metrics.shed` — never a
@@ -37,8 +47,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{MetricsSnapshot, Server, ServerConfig, SubmitError};
+use crate::coordinator::{MetricsSnapshot, Server, ServerConfig, SubmitError, SubmitOpts};
 use crate::engine::{DeconvImpl, Program};
+use crate::obs::{self, HistogramSnapshot, LayerStages};
 use crate::util::rng::Rng;
 
 use http::{
@@ -276,6 +287,7 @@ fn handle_conn(
             Err(bad) => {
                 // fault-injection contract: malformed bytes get an
                 // explicit 400, then the connection closes
+                obs::log::warn("front_door", &format!("bad request: {}", bad.0), &[]);
                 let body = error_body("bad_request", &bad.0);
                 let _ = write_response(
                     conn.stream_mut(),
@@ -309,6 +321,11 @@ fn handle_conn(
                 {
                     // client went away mid-response (fault injection);
                     // nothing to salvage on this connection
+                    obs::log::debug(
+                        "front_door",
+                        "client disconnected mid-response",
+                        &[("path", req.path.clone())],
+                    );
                     return;
                 }
                 if !keep {
@@ -348,7 +365,20 @@ fn handle_request(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Reply::json(200, b"{\"status\":\"ok\"}".to_vec()),
         ("GET", "/v1/models") => Reply::json(200, models_json(routes)),
-        ("GET", "/metrics") => Reply::json(200, metrics_json(&server.metrics(), routes)),
+        ("GET", "/metrics") => {
+            let prom = req.query_param("format") == Some("prom")
+                || matches!(req.header("accept"), Some(a) if a.contains("text/plain"));
+            if prom {
+                Reply {
+                    status: 200,
+                    content_type: "text/plain; version=0.0.4",
+                    headers: Vec::new(),
+                    body: metrics_prom(&server.metrics(), routes),
+                }
+            } else {
+                Reply::json(200, metrics_json(&server.metrics(), routes))
+            }
+        }
         (_, path) if path.starts_with("/v1/generate/") => {
             let model = &path["/v1/generate/".len()..];
             if req.method != "POST" {
@@ -429,10 +459,20 @@ fn generate(
     };
     let deadline = deadline_ms.map(|d| Instant::now() + d);
 
+    // tracing opt-ins: a caller-supplied X-Request-Id becomes the trace
+    // id; X-Trace: 1 asks for the per-layer engine stage breakdown
+    let trace_id = req.header("x-request-id").map(obs::trace::trace_id_from_header);
+    let traced = matches!(req.header("x-trace"), Some(v) if v.trim() == "1");
+
     if closing.load(Ordering::SeqCst) {
         return shutting_down();
     }
-    let rx = match server.submit_to(lane, z, deadline) {
+    let opts = SubmitOpts {
+        deadline,
+        trace_id,
+        trace_stages: traced,
+    };
+    let rx = match server.submit_opts(lane, z, opts) {
         Ok(rx) => rx,
         Err(SubmitError::Full) => {
             // admission-control shed: already counted in Metrics.shed by
@@ -452,18 +492,43 @@ fn generate(
     };
 
     match rx.recv_timeout(cfg.response_timeout) {
-        Ok(resp) => Reply {
-            status: 200,
-            content_type: "application/octet-stream",
-            headers: vec![
+        Ok(resp) => {
+            let mut headers = vec![
                 ("X-Request-Id", resp.id.to_string()),
                 ("X-Model", route.name.clone()),
                 ("X-Batch-Size", resp.batch_size.to_string()),
                 ("X-Queue-Us", resp.queue_us.to_string()),
                 ("X-Compute-Us", resp.compute_us.to_string()),
-            ],
-            body: f32s_to_bytes(&resp.image),
-        },
+            ];
+            if resp.span.trace_id != 0 {
+                headers.push(("X-Trace-Id", resp.span.trace_id.to_string()));
+            }
+            let mut body = f32s_to_bytes(&resp.image);
+            if traced {
+                // the image bytes stay bit-identical to an untraced
+                // response; the trace rides as a JSON trailer AFTER them,
+                // located by the X-Trace-Result byte offset
+                let offset = body.len();
+                let mut trailer = format!(
+                    "{{\"trace_id\":{},\"span\":{}",
+                    resp.span.trace_id,
+                    resp.span.to_json()
+                );
+                if let Some(stages) = &resp.stages {
+                    trailer.push_str(",\"stages\":");
+                    trailer.push_str(&stages_json(stages));
+                }
+                trailer.push('}');
+                body.extend_from_slice(trailer.as_bytes());
+                headers.push(("X-Trace-Result", offset.to_string()));
+            }
+            Reply {
+                status: 200,
+                content_type: "application/octet-stream",
+                headers,
+                body,
+            }
+        }
         Err(_) => {
             // the responder disconnected (or the backstop timeout fired).
             // If this request's deadline has passed, the dispatcher
@@ -523,5 +588,123 @@ fn metrics_json(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
         out.push_str(&format!("\"{}\":{}", r.name, served));
     }
     out.push_str("}}");
+    out.into_bytes()
+}
+
+/// JSON array of per-layer stage rows (the traced-response trailer).
+fn stages_json(layers: &[LayerStages]) -> String {
+    let rows: Vec<String> = layers.iter().map(|l| l.to_json()).collect();
+    format!("[{}]", rows.join(","))
+}
+
+fn prom_metric(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn prom_value(out: &mut String, name: &str, labels: &str, v: u64) {
+    if labels.is_empty() {
+        out.push_str(&format!("{name} {v}\n"));
+    } else {
+        out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+    }
+}
+
+/// One histogram as a Prometheus cumulative series. Bucket bounds are the
+/// shared microsecond table ([`crate::obs::histogram::bounds`]) converted
+/// to seconds, as the `_seconds` unit convention wants.
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &HistogramSnapshot) {
+    prom_metric(out, name, "histogram", help);
+    for (bound_us, cum) in h.cumulative() {
+        let le = bound_us as f64 / 1e6;
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!("{name}_sum {}\n", h.sum_us as f64 / 1e6));
+    out.push_str(&format!("{name}_count {}\n", h.count));
+}
+
+/// The Prometheus text-format (`version=0.0.4`) metrics exposition:
+/// everything in [`metrics_json`] plus the full latency/queue-wait/compute
+/// histograms and the per-worker counters.
+fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
+    let mut out = String::with_capacity(8192);
+    prom_metric(&mut out, "repro_served_total", "counter", "Requests served.");
+    prom_value(&mut out, "repro_served_total", "", s.served);
+    prom_metric(&mut out, "repro_batches_total", "counter", "Executable batches run.");
+    prom_value(&mut out, "repro_batches_total", "", s.batches);
+    prom_metric(&mut out, "repro_errors_total", "counter", "Failed batches.");
+    prom_value(&mut out, "repro_errors_total", "", s.errors);
+    prom_metric(
+        &mut out,
+        "repro_shed_total",
+        "counter",
+        "Requests shed by admission control (queue full).",
+    );
+    prom_value(&mut out, "repro_shed_total", "", s.shed);
+    prom_metric(
+        &mut out,
+        "repro_expired_total",
+        "counter",
+        "Requests dropped pre-compute on an expired deadline.",
+    );
+    prom_value(&mut out, "repro_expired_total", "", s.expired);
+    prom_metric(
+        &mut out,
+        "repro_lane_served_total",
+        "counter",
+        "Requests served per model lane.",
+    );
+    for (i, r) in routes.iter().enumerate() {
+        let served = s.lane_served.get(i).copied().unwrap_or(0);
+        prom_value(
+            &mut out,
+            "repro_lane_served_total",
+            &format!("model=\"{}\"", r.name),
+            served,
+        );
+    }
+    prom_metric(
+        &mut out,
+        "repro_worker_batches_total",
+        "counter",
+        "Batches executed per dispatcher worker.",
+    );
+    for (w, &n) in s.worker_batches.iter().enumerate() {
+        prom_value(&mut out, "repro_worker_batches_total", &format!("worker=\"{w}\""), n);
+    }
+    prom_metric(
+        &mut out,
+        "repro_worker_served_total",
+        "counter",
+        "Requests served per dispatcher worker.",
+    );
+    for (w, &n) in s.worker_served.iter().enumerate() {
+        prom_value(&mut out, "repro_worker_served_total", &format!("worker=\"{w}\""), n);
+    }
+    prom_metric(
+        &mut out,
+        "repro_max_queue_depth",
+        "gauge",
+        "High-water mark of any lane's queue depth.",
+    );
+    prom_value(&mut out, "repro_max_queue_depth", "", s.max_queue_depth);
+    prom_histogram(
+        &mut out,
+        "repro_request_latency_seconds",
+        "End-to-end request latency (submit to response send).",
+        &s.latency_hist,
+    );
+    prom_histogram(
+        &mut out,
+        "repro_queue_wait_seconds",
+        "Queue + batch-formation wait (total latency minus compute).",
+        &s.queue_hist,
+    );
+    prom_histogram(
+        &mut out,
+        "repro_compute_seconds",
+        "Executable wall time of the batch each request rode in.",
+        &s.compute_hist,
+    );
     out.into_bytes()
 }

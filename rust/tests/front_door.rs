@@ -44,6 +44,7 @@ fn scfg() -> ServerConfig {
         model: "tiny".to_string(),
         workers: 2,
         precision: split_deconv::engine::Precision::F32,
+        record_spans: true,
     }
 }
 
@@ -276,6 +277,7 @@ fn queue_full_sheds_explicitly_and_every_request_is_answered() {
         model: "slow".to_string(),
         workers: 1,
         precision: split_deconv::engine::Precision::F32,
+        record_spans: true,
     };
     let (door, _executed) = slow_door(cfg, Duration::from_millis(100));
     let addr = door.addr();
@@ -323,6 +325,7 @@ fn expired_deadline_answers_504_without_reaching_compute() {
         model: "slow".to_string(),
         workers: 1,
         precision: split_deconv::engine::Precision::F32,
+        record_spans: true,
     };
     let (door, executed) = slow_door(cfg, Duration::from_millis(120));
     let addr = door.addr();
@@ -363,6 +366,7 @@ fn graceful_shutdown_flushes_inflight_responses_before_the_listener_dies() {
         model: "slow".to_string(),
         workers: 1,
         precision: split_deconv::engine::Precision::F32,
+        record_spans: true,
     };
     let (door, _executed) = slow_door(cfg, Duration::from_millis(150));
     let addr = door.addr();
@@ -399,6 +403,145 @@ fn graceful_shutdown_flushes_inflight_responses_before_the_listener_dies() {
     };
     assert!(gone, "the listener must be closed after shutdown");
     // idempotent
+    door.shutdown();
+}
+
+/// First sample value for an exactly-named Prometheus series (no labels).
+fn prom_sample(text: &str, name: &str) -> Option<f64> {
+    for l in text.lines() {
+        if let Some(rest) = l.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse().ok();
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn prometheus_exposition_parses_and_matches_the_json_snapshot() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+    let addr = door.addr();
+    for seed in 1..=3 {
+        let path = format!("/v1/generate/tiny?seed={seed}");
+        let r = request_once(addr, TIMEOUT, "POST", &path, &[], &[]).unwrap();
+        assert_eq!(r.status, 200);
+    }
+
+    let mut client = Client::connect(addr, TIMEOUT).unwrap();
+    let prom = client.request("GET", "/metrics?format=prom", &[], &[]).unwrap();
+    assert_eq!(prom.status, 200);
+    let ct = prom.header("content-type").unwrap_or("");
+    assert!(ct.starts_with("text/plain"), "prom exposition content type: {ct}");
+    let text = prom.text();
+
+    // every counter/gauge family must be present
+    for name in [
+        "repro_served_total",
+        "repro_batches_total",
+        "repro_errors_total",
+        "repro_shed_total",
+        "repro_expired_total",
+        "repro_max_queue_depth",
+    ] {
+        assert!(
+            text.contains(&format!("# TYPE {name} ")),
+            "missing TYPE line for {name}:\n{text}"
+        );
+        assert!(prom_sample(&text, name).is_some(), "missing sample for {name}");
+    }
+    assert!(text.contains("repro_lane_served_total{model=\"tiny\"}"), "{text}");
+    assert!(text.contains("repro_lane_served_total{model=\"tiny2\"}"), "{text}");
+    assert!(text.contains("repro_worker_batches_total{worker=\"0\"}"), "{text}");
+    assert!(text.contains("repro_worker_served_total{worker=\"0\"}"), "{text}");
+    assert_eq!(prom_sample(&text, "repro_served_total"), Some(3.0));
+
+    // the latency histogram: cumulative buckets must be monotone
+    // nondecreasing and end at the +Inf count == _count == served
+    let mut buckets: Vec<(String, f64)> = Vec::new();
+    for l in text.lines() {
+        if let Some(rest) = l.strip_prefix("repro_request_latency_seconds_bucket{le=\"") {
+            let le = rest.split('"').next().unwrap().to_string();
+            let v: f64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+            buckets.push((le, v));
+        }
+    }
+    assert!(buckets.len() > 10, "expected the full bucket table, got {}", buckets.len());
+    for w in buckets.windows(2) {
+        assert!(w[1].1 >= w[0].1, "cumulative buckets must be nondecreasing: {w:?}");
+    }
+    assert_eq!(buckets.last().unwrap().0, "+Inf");
+    let count = prom_sample(&text, "repro_request_latency_seconds_count").unwrap();
+    assert_eq!(buckets.last().unwrap().1, count, "+Inf bucket must equal _count");
+    assert_eq!(count, 3.0, "three served requests -> three latency observations");
+    let sum = prom_sample(&text, "repro_request_latency_seconds_sum").unwrap();
+    assert!(sum > 0.0, "latency sum must be positive");
+    // the other two decomposition histograms ride along
+    assert!(prom_sample(&text, "repro_queue_wait_seconds_count").is_some());
+    assert!(prom_sample(&text, "repro_compute_seconds_count").is_some());
+
+    // consistency with the JSON snapshot of the SAME metrics
+    let json = client.get("/metrics").unwrap();
+    assert_eq!(json.status, 200);
+    let parsed = split_deconv::util::json::parse(&json.text()).unwrap();
+    assert_eq!(parsed.get("served").and_then(|v| v.as_f64()), Some(count));
+
+    // content negotiation: Accept: text/plain also selects the prom form
+    let via_accept = client
+        .request("GET", "/metrics", &[("Accept", "text/plain".to_string())], &[])
+        .unwrap();
+    assert!(via_accept.text().contains("# TYPE repro_served_total counter"));
+    door.shutdown();
+}
+
+#[test]
+fn traced_response_is_bit_identical_and_carries_the_trailer() {
+    let (door, p1, _p2) = tiny_door(scfg(), fcfg());
+    let addr = door.addr();
+    let z = Rng::new(5).normal_vec(16);
+    let body = f32s_to_bytes(&z);
+
+    let plain = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny", &[], &body).unwrap();
+    assert_eq!(plain.status, 200);
+    let image_bytes = plain.body.clone();
+    assert_eq!(image_bytes.len(), p1.output_len() * 4);
+    assert!(plain.header("x-trace-result").is_none(), "untraced responses carry no trailer");
+
+    let hdr = [
+        ("X-Trace", "1".to_string()),
+        ("X-Request-Id", "424242".to_string()),
+    ];
+    let traced = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny", &hdr, &body).unwrap();
+    assert_eq!(traced.status, 200, "{}", traced.text());
+    assert_eq!(traced.header("x-trace-id"), Some("424242"), "X-Request-Id becomes the trace id");
+
+    // X-Trace-Result points at the trailer; everything before it must be
+    // BIT-IDENTICAL to the untraced response (tracing never changes the
+    // output bytes)
+    let offset: usize = traced
+        .header("x-trace-result")
+        .expect("traced response must carry X-Trace-Result")
+        .parse()
+        .unwrap();
+    assert_eq!(offset, image_bytes.len());
+    assert_eq!(&traced.body[..offset], &image_bytes[..], "traced image bytes must be identical");
+
+    let trailer = std::str::from_utf8(&traced.body[offset..]).unwrap();
+    let t = split_deconv::util::json::parse(trailer).unwrap();
+    assert_eq!(t.get("trace_id").and_then(|v| v.as_f64()), Some(424242.0));
+    let span = t.get("span").expect("trailer carries the span");
+    assert_eq!(span.get("trace_id").and_then(|v| v.as_f64()), Some(424242.0));
+    for k in ["queue_us", "batch_form_us", "compute_us", "respond_us"] {
+        assert!(span.get(k).and_then(|v| v.as_f64()).is_some(), "span field {k} missing");
+    }
+    let stages = t.get("stages").and_then(|v| v.as_arr()).expect("native backend fills stages");
+    assert!(!stages.is_empty(), "per-layer stage rows must be present");
+    for row in stages {
+        assert!(row.get("layer").and_then(|v| v.as_str()).is_some());
+        for k in ["im2col_us", "gemm_us", "epilogue_us", "interleave_us", "total_us"] {
+            assert!(row.get(k).and_then(|v| v.as_f64()).is_some(), "stage field {k} missing");
+        }
+    }
     door.shutdown();
 }
 

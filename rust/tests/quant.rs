@@ -269,6 +269,7 @@ fn serve_native_int8_smoke_on_full_scale_models() {
             model: model.to_string(),
             workers: 1,
             precision: Precision::Int8,
+            record_spans: true,
         };
         let net = networks::by_name(model).unwrap();
         let server = Server::start_native(cfg, 3).unwrap();
