@@ -24,13 +24,22 @@
 //! code path identical) to keep the bench minutes-scale; the other four
 //! are full scale.
 //!
+//! A second section times the `.sdprog` cold-start path on all six
+//! FULL-SCALE networks at both precisions: compile-from-seed vs loading
+//! the serialized artifact back (both [`LoadMode`]s), asserting the
+//! reload is bit-identical and gating (nonzero exit) on zero-copy load
+//! time < 10% of compile time — the artifact's reason to exist.
+//!
 //! `cargo bench --bench engine -- --json BENCH_engine.json` writes the
-//! per-network times/speedups for cross-PR tracking.
+//! per-network times/speedups plus the compile-vs-load rows for cross-PR
+//! tracking.
 
 #[path = "harness.rs"]
 mod harness;
 
-use split_deconv::engine::{build_weights, DeconvImpl, Plan, Precision};
+use std::time::Instant;
+
+use split_deconv::engine::{build_weights, DeconvImpl, LoadMode, Plan, Precision, Program};
 use split_deconv::networks;
 use split_deconv::nn::NetworkSpec;
 use split_deconv::report::quality::{run_network, run_network_with};
@@ -46,6 +55,20 @@ fn bench_nets() -> Vec<(NetworkSpec, &'static str)> {
         (networks::scaled(&networks::mde(), 2), "MDE 64x128 (1/2 res)"),
         (networks::scaled(&networks::fst(), 2), "FST 128x128 (1/2 res)"),
     ]
+}
+
+/// Min-of-3 `from_artifact_bytes` wall time for one load mode, returning
+/// the last loaded program for the bit-identity check.
+fn timed_load(bytes: &[u8], mode: LoadMode) -> (Program, f64) {
+    let mut min = f64::INFINITY;
+    let mut loaded = None;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let p = Program::from_artifact_bytes(bytes, mode).expect("artifact loads");
+        min = min.min(t0.elapsed().as_secs_f64());
+        loaded = Some(p);
+    }
+    (loaded.unwrap(), min)
 }
 
 fn main() {
@@ -97,6 +120,57 @@ fn main() {
         sink.record_speedup(&cached, &int8);
     }
 
+    harness::section("artifact compile vs load (.sdprog, full-scale nets)");
+    let mut worst_load_ratio: f64 = 0.0;
+    for name in networks::names() {
+        let net = networks::by_name(name).expect("registry network");
+        for precision in [Precision::F32, Precision::Int8] {
+            let label = format!("{name}_{}", precision.label());
+            let t0 = Instant::now();
+            let program = Program::from_seed_prec(&net, DeconvImpl::Sd, seed, precision)
+                .expect("program compiles");
+            let compile_s = t0.elapsed().as_secs_f64();
+            let bytes = program.to_artifact_bytes().expect("program serializes");
+
+            let (copy, load_copy_s) = timed_load(&bytes, LoadMode::Copy);
+            let (zc, load_zerocopy_s) = timed_load(&bytes, LoadMode::ZeroCopy);
+            // bit-identity gate: a loaded program must re-serialize to the
+            // exact artifact it came from, in both modes
+            assert_eq!(
+                copy.to_artifact_bytes().expect("reload serializes"),
+                bytes,
+                "{label}: copy-mode reload is not bit-identical"
+            );
+            assert_eq!(
+                zc.to_artifact_bytes().expect("reload serializes"),
+                bytes,
+                "{label}: zero-copy reload is not bit-identical"
+            );
+
+            let ratio = load_zerocopy_s / compile_s;
+            worst_load_ratio = worst_load_ratio.max(ratio);
+            println!(
+                "artifact {label:<12} {:>7.1} MB  compile {:>8.1}ms  load(copy) {:>7.2}ms  \
+                 load(0copy) {:>7.2}ms  ratio {:.3}",
+                bytes.len() as f64 / 1e6,
+                compile_s * 1e3,
+                load_copy_s * 1e3,
+                load_zerocopy_s * 1e3,
+                ratio
+            );
+            sink.record_fields(
+                &format!("artifact {label}"),
+                &[
+                    ("compile_s", compile_s),
+                    ("load_copy_s", load_copy_s),
+                    ("load_zerocopy_s", load_zerocopy_s),
+                    ("artifact_mb", bytes.len() as f64 / 1e6),
+                    ("load_ratio", ratio),
+                ],
+            );
+        }
+    }
+
     harness::section("summary");
     let pass = worst_per_call > 1.0;
     println!(
@@ -112,8 +186,14 @@ fn main() {
         "worst int8-vs-f32 plan ratio: {worst_int8:.2}x {}",
         if worst_int8 > 1.0 { "PASS" } else { "(informational; gated at GEMM level in hotpath)" }
     );
+    let load_pass = worst_load_ratio < 0.10;
+    println!(
+        "worst artifact load/compile ratio: {worst_load_ratio:.3} \
+         (acceptance: zero-copy load < 10% of compile on every net/precision) {}",
+        if load_pass { "PASS" } else { "FAIL" }
+    );
     sink.write("engine");
-    if !pass {
+    if !pass || !load_pass {
         // real gate: a FAIL is a nonzero exit, visible to CI and scripts
         std::process::exit(1);
     }

@@ -1,0 +1,910 @@
+//! `.sdprog` — the serialized compiled-[`Program`] artifact (DESIGN.md §13).
+//!
+//! Compiling a program re-splits the deconv filters, re-quantizes, and
+//! re-packs every weight panel; an artifact makes that work a build step
+//! instead of a cold-start cost. The format is a JSON manifest plus aligned
+//! binary blobs:
+//!
+//! ```text
+//! offset 0   magic            8 bytes  ("\x89SDPROG\n")
+//! offset 8   manifest_len     u64 LE
+//! offset 16  manifest         manifest_len bytes of JSON (UTF-8)
+//!            zero padding     to the next 64-byte boundary
+//!            blob region      every blob at a 64-byte-aligned offset
+//! ```
+//!
+//! * Blob `offset` fields in the manifest are **relative to the blob-region
+//!   start** (`align64(16 + manifest_len)`), so the manifest never encodes
+//!   its own length.
+//! * Every multi-byte value is **little-endian**; blob payloads reuse the
+//!   packed in-memory layouts verbatim ([`PackedB`] panels, [`QPackedB`]
+//!   pair-interleave, [`QFilter`] HWIO bytes).
+//! * Every blob carries its byte length and sha256 in the manifest; a load
+//!   verifies the format version, then every bound, checksum, and
+//!   geometry-derived length **before** constructing any op, and fails with
+//!   a typed [`ArtifactError`] — never a partially-initialized program.
+//! * [`LoadMode::ZeroCopy`] borrows the panel payloads in place from one
+//!   shared buffer of the whole file (little-endian targets; on big-endian
+//!   it silently degrades to a copying load, whose explicit `from_le`
+//!   decoding is correct everywhere).
+//!
+//! Version-bump rules: any change to blob layouts, the checksum scheme, or
+//! manifest field meanings increments [`FORMAT_VERSION`]; readers reject
+//! other versions outright (no silent best-effort parse). Adding a new
+//! *optional* manifest field is the only compatible change.
+//!
+//! The round-trip contract (asserted by `rust/tests/artifact.rs` and the CI
+//! bit-identity gate): `Program::load` of a saved artifact re-serializes to
+//! the identical bytes — [`Program::to_artifact_bytes`] is deterministic
+//! (sorted-key JSON via [`crate::util::json::Json::encode`], traversal-order
+//! blob placement), so byte equality is program equality.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{Act, Op, Program, Step};
+use crate::networks;
+use crate::nn::LayerKind;
+use crate::quant::{Precision, QFilter, QPackedB};
+use crate::sd::SdGeometry;
+use crate::tensor::gemm::PackedB;
+use crate::util::blob::AlignedBytes;
+use crate::util::json::{self, Json};
+use crate::util::sha256;
+
+/// Artifact format version (see the module docs for bump rules).
+pub const FORMAT_VERSION: u64 = 1;
+
+/// File alignment of every blob (and of the blob-region start) — wide
+/// enough for any SIMD load the kernels issue, and cache-line tidy.
+pub const BLOB_ALIGN: usize = 64;
+
+/// File magic: high-bit byte first (catches ASCII-mode mangling, as PNG
+/// does), then the format name, then a newline (catches CRLF translation).
+const MAGIC: [u8; 8] = *b"\x89SDPROG\n";
+
+/// Bytes before the manifest: magic + `u64` manifest length.
+const HEADER_LEN: usize = 16;
+
+/// How [`Program::load_with`] materializes blob payloads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoadMode {
+    /// decode every blob into owned buffers (works on any target)
+    #[default]
+    Copy,
+    /// borrow the packed panel payloads in place from one shared buffer of
+    /// the whole file — no per-blob copy; little-endian targets only (on
+    /// big-endian this degrades to [`LoadMode::Copy`])
+    ZeroCopy,
+}
+
+/// Typed failure of artifact encoding/decoding — surfaced through
+/// `anyhow::Error` (use `err.downcast_ref::<ArtifactError>()`).
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// the file does not start with the `.sdprog` magic
+    BadMagic,
+    /// the file ends before a region the header/manifest promises
+    Truncated { need: usize, have: usize },
+    /// the manifest is not UTF-8 / not JSON / missing a required field
+    BadManifest(String),
+    /// `format_version` is not [`FORMAT_VERSION`] (checked before any
+    /// other manifest field)
+    UnsupportedVersion { found: u64 },
+    /// the manifest names a network not in the registry
+    UnknownNetwork(String),
+    /// manifest geometry disagrees with the named network's spec (or a
+    /// blob length disagrees with the geometry it must satisfy)
+    SpecMismatch(String),
+    /// a blob's `offset`/`len` reaches outside the file
+    BlobOutOfBounds { kind: String, offset: usize, len: usize },
+    /// a blob's bytes do not hash to the manifest's sha256
+    ChecksumMismatch { kind: String, offset: usize },
+    /// the program holds an op the format cannot carry (reference deconv
+    /// lowerings exist as quality baselines, not serving artifacts)
+    UnsupportedOp(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::BadMagic => write!(f, "not an .sdprog artifact (bad magic)"),
+            ArtifactError::Truncated { need, have } => {
+                write!(f, "artifact truncated: need {need} bytes, have {have}")
+            }
+            ArtifactError::BadManifest(msg) => write!(f, "bad artifact manifest: {msg}"),
+            ArtifactError::UnsupportedVersion { found } => write!(
+                f,
+                "unsupported artifact format version {found} (reader supports {FORMAT_VERSION})"
+            ),
+            ArtifactError::UnknownNetwork(name) => {
+                write!(f, "artifact names unknown network {name:?}")
+            }
+            ArtifactError::SpecMismatch(msg) => {
+                write!(f, "artifact disagrees with network spec: {msg}")
+            }
+            ArtifactError::BlobOutOfBounds { kind, offset, len } => write!(
+                f,
+                "blob {kind} (offset {offset}, len {len}) reaches outside the file"
+            ),
+            ArtifactError::ChecksumMismatch { kind, offset } => {
+                write!(f, "blob {kind} at offset {offset} fails its sha256 check")
+            }
+            ArtifactError::UnsupportedOp(msg) => {
+                write!(f, "program op not serializable: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// Next multiple of [`BLOB_ALIGN`] at or above `n`.
+fn align_up(n: usize) -> usize {
+    n.div_ceil(BLOB_ALIGN) * BLOB_ALIGN
+}
+
+// ---------------------------------------------------------------------------
+// payload byte codecs (explicit little-endian; memcpy fast path on LE hosts)
+// ---------------------------------------------------------------------------
+
+fn f32_to_le(v: &[f32]) -> Vec<u8> {
+    if cfg!(target_endian = "little") {
+        let mut out = vec![0u8; std::mem::size_of_val(v)];
+        // SAFETY: plain byte copy of POD data into an equal-sized buffer.
+        unsafe {
+            std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len())
+        };
+        out
+    } else {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+}
+
+fn u32_to_le(v: &[u32]) -> Vec<u8> {
+    if cfg!(target_endian = "little") {
+        let mut out = vec![0u8; std::mem::size_of_val(v)];
+        // SAFETY: as in `f32_to_le`.
+        unsafe {
+            std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len())
+        };
+        out
+    } else {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+}
+
+fn i8_to_bytes(v: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; v.len()];
+    // SAFETY: i8 -> u8 is a bit-identical byte copy.
+    unsafe { std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), v.len()) };
+    out
+}
+
+fn f32_from_le(b: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(b.len() % 4, 0);
+    if cfg!(target_endian = "little") {
+        let mut v = vec![0f32; b.len() / 4];
+        // SAFETY: byte copy into a zero-initialized Vec<f32> of exactly
+        // b.len() bytes; any bit pattern is a valid f32.
+        unsafe { std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, b.len()) };
+        v
+    } else {
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+fn u32_from_le(b: &[u8]) -> Vec<u32> {
+    debug_assert_eq!(b.len() % 4, 0);
+    if cfg!(target_endian = "little") {
+        let mut v = vec![0u32; b.len() / 4];
+        // SAFETY: as in `f32_from_le`.
+        unsafe { std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, b.len()) };
+        v
+    } else {
+        b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+fn i8_from_bytes(b: &[u8]) -> Vec<i8> {
+    let mut v = vec![0i8; b.len()];
+    // SAFETY: u8 -> i8 is a bit-identical byte copy.
+    unsafe { std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, b.len()) };
+    v
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+/// Accumulates the blob region; every `push` places the payload at the next
+/// 64-byte-aligned region-relative offset and returns the manifest
+/// descriptor fields (`kind`/`offset`/`len`/`sha256`).
+#[derive(Default)]
+struct BlobWriter {
+    region: Vec<u8>,
+}
+
+impl BlobWriter {
+    fn push(&mut self, kind: &str, payload: &[u8]) -> BTreeMap<String, Json> {
+        let padded = align_up(self.region.len());
+        self.region.resize(padded, 0);
+        let offset = self.region.len();
+        self.region.extend_from_slice(payload);
+        let mut d = BTreeMap::new();
+        d.insert("kind".to_string(), Json::Str(kind.to_string()));
+        d.insert("offset".to_string(), Json::Num(offset as f64));
+        d.insert("len".to_string(), Json::Num(payload.len() as f64));
+        d.insert("sha256".to_string(), Json::Str(sha256::hex_digest(payload)));
+        d
+    }
+}
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn shape_arr(h: usize, w: usize, c: usize) -> Json {
+    Json::Arr(vec![num(h), num(w), num(c)])
+}
+
+fn packed_b_desc(bw: &mut BlobWriter, pb: &PackedB) -> Json {
+    let mut d = bw.push("packed_b_f32", &f32_to_le(pb.raw()));
+    d.insert("k".to_string(), num(pb.k));
+    d.insert("n".to_string(), num(pb.n));
+    Json::Obj(d)
+}
+
+fn qfilter_desc(bw: &mut BlobWriter, qf: &QFilter) -> Json {
+    let mut d = BTreeMap::new();
+    d.insert(
+        "scales".to_string(),
+        Json::Obj(bw.push("scales_f32", &f32_to_le(&qf.scales))),
+    );
+    d.insert(
+        "data".to_string(),
+        Json::Obj(bw.push("qfilter_i8", &i8_to_bytes(&qf.data))),
+    );
+    d.insert(
+        "nz_rows".to_string(),
+        Json::Obj(bw.push("nz_rows_u32", &u32_to_le(&qf.nz_rows))),
+    );
+    Json::Obj(d)
+}
+
+fn qpacked_desc(bw: &mut BlobWriter, qp: &QPackedB) -> Json {
+    let mut d = BTreeMap::new();
+    d.insert(
+        "kidx".to_string(),
+        Json::Obj(bw.push("q_kidx_u32", &u32_to_le(qp.raw_kidx()))),
+    );
+    d.insert(
+        "data".to_string(),
+        Json::Obj(bw.push("q_data_i8", &i8_to_bytes(qp.raw_data()))),
+    );
+    Json::Obj(d)
+}
+
+fn build_manifest(program: &Program, bw: &mut BlobWriter) -> Result<Json, ArtifactError> {
+    let mut steps = Vec::with_capacity(program.steps.len());
+    for step in &program.steps {
+        let mut so = BTreeMap::new();
+        so.insert("name".to_string(), Json::Str(step.name.to_string()));
+        so.insert("in".to_string(), shape_arr(step.in_h, step.in_w, step.in_c));
+        so.insert("out".to_string(), shape_arr(step.out_h, step.out_w, step.out_c));
+        match &step.op {
+            Op::Dense { packed } => {
+                so.insert("op".to_string(), Json::Str("dense".to_string()));
+                so.insert("packed".to_string(), Json::Arr(vec![packed_b_desc(bw, packed)]));
+            }
+            Op::Conv { packed, .. } => {
+                so.insert("op".to_string(), Json::Str("conv".to_string()));
+                so.insert("packed".to_string(), Json::Arr(vec![packed_b_desc(bw, packed)]));
+            }
+            Op::SdDeconv { packed, .. } => {
+                so.insert("op".to_string(), Json::Str("sd_deconv".to_string()));
+                so.insert(
+                    "packed".to_string(),
+                    Json::Arr(packed.iter().map(|pb| packed_b_desc(bw, pb)).collect()),
+                );
+            }
+            Op::RefDeconv { imp, .. } => {
+                return Err(ArtifactError::UnsupportedOp(format!(
+                    "{}.{}: reference deconv lowering {imp:?} (compile with the Sd impl)",
+                    program.name, step.name
+                )));
+            }
+            Op::QConv { qf, packed, in_scale, .. } => {
+                so.insert("op".to_string(), Json::Str("q_conv".to_string()));
+                so.insert("in_scale".to_string(), Json::Num(*in_scale as f64));
+                so.insert("qfilter".to_string(), qfilter_desc(bw, qf));
+                so.insert("packed".to_string(), qpacked_desc(bw, packed));
+            }
+            Op::QSdDeconv { splits, packed, in_scale, .. } => {
+                so.insert("op".to_string(), Json::Str("q_sd_deconv".to_string()));
+                so.insert("in_scale".to_string(), Json::Num(*in_scale as f64));
+                let entries = splits
+                    .iter()
+                    .zip(packed)
+                    .map(|(qf, qp)| {
+                        let mut e = BTreeMap::new();
+                        e.insert("qfilter".to_string(), qfilter_desc(bw, qf));
+                        e.insert("packed".to_string(), qpacked_desc(bw, qp));
+                        Json::Obj(e)
+                    })
+                    .collect();
+                so.insert("splits".to_string(), Json::Arr(entries));
+            }
+        }
+        steps.push(Json::Obj(so));
+    }
+    let mut m = BTreeMap::new();
+    m.insert("blob_align".to_string(), num(BLOB_ALIGN));
+    m.insert("format".to_string(), Json::Str("sdprog".to_string()));
+    m.insert("format_version".to_string(), Json::Num(FORMAT_VERSION as f64));
+    m.insert("network".to_string(), Json::Str(program.name.to_string()));
+    m.insert(
+        "precision".to_string(),
+        Json::Str(program.precision.label().to_string()),
+    );
+    m.insert(
+        "input".to_string(),
+        shape_arr(program.in_h, program.in_w, program.in_c),
+    );
+    m.insert("output_len".to_string(), num(program.out_len));
+    m.insert("steps".to_string(), Json::Arr(steps));
+    Ok(Json::Obj(m))
+}
+
+// ---------------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------------
+
+/// Resolve + checksum one blob descriptor: bounds-check the window against
+/// the file, verify the sha256, return (bytes, absolute offset, kind).
+fn blob_slice<'a>(
+    buf: &'a AlignedBytes,
+    region_start: usize,
+    desc: &Json,
+) -> Result<(&'a [u8], usize, String), ArtifactError> {
+    let kind = desc.str_or("kind", "?").to_string();
+    let offset = desc
+        .get("offset")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ArtifactError::BadManifest(format!("blob {kind} missing offset")))?;
+    let len = desc
+        .get("len")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ArtifactError::BadManifest(format!("blob {kind} missing len")))?;
+    let oob = ArtifactError::BlobOutOfBounds { kind: kind.clone(), offset, len };
+    let abs = match region_start.checked_add(offset) {
+        Some(a) => a,
+        None => return Err(oob),
+    };
+    let end = match abs.checked_add(len) {
+        Some(e) => e,
+        None => return Err(oob),
+    };
+    if end > buf.len() {
+        return Err(oob);
+    }
+    let bytes = &buf.as_bytes()[abs..end];
+    let want = desc
+        .get("sha256")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ArtifactError::BadManifest(format!("blob {kind} missing sha256")))?;
+    if sha256::hex_digest(bytes) != want {
+        return Err(ArtifactError::ChecksumMismatch { kind, offset });
+    }
+    Ok((bytes, abs, kind))
+}
+
+/// The mode actually used: zero-copy views read native-endian, so the
+/// little-endian file format only supports them on little-endian hosts.
+fn effective_mode(mode: LoadMode) -> LoadMode {
+    if cfg!(target_endian = "little") {
+        mode
+    } else {
+        LoadMode::Copy
+    }
+}
+
+fn load_packed_b(
+    buf: &Arc<AlignedBytes>,
+    region_start: usize,
+    desc: &Json,
+    k: usize,
+    n: usize,
+    mode: LoadMode,
+) -> Result<PackedB, ArtifactError> {
+    let (bytes, abs, kind) = blob_slice(buf, region_start, desc)?;
+    if desc.usize_or("k", k) != k || desc.usize_or("n", n) != n {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{kind}: manifest operand shape {}x{} but the spec requires {k}x{n}",
+            desc.usize_or("k", 0),
+            desc.usize_or("n", 0),
+        )));
+    }
+    let want_bytes = PackedB::packed_len(k, n) * 4;
+    if bytes.len() != want_bytes {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{kind}: blob length {} disagrees with the {} bytes a {k}x{n} panel operand requires",
+            bytes.len(),
+            want_bytes,
+        )));
+    }
+    let made = match effective_mode(mode) {
+        LoadMode::Copy => PackedB::from_parts(k, n, f32_from_le(bytes)),
+        LoadMode::ZeroCopy => PackedB::from_shared(k, n, buf.clone(), abs),
+    };
+    made.ok_or_else(|| {
+        ArtifactError::SpecMismatch(format!("{kind}: packed operand construction refused"))
+    })
+}
+
+fn load_qfilter(
+    buf: &Arc<AlignedBytes>,
+    region_start: usize,
+    desc: Option<&Json>,
+    kh: usize,
+    kw: usize,
+    ic: usize,
+    oc: usize,
+) -> Result<QFilter, ArtifactError> {
+    let d = desc.ok_or_else(|| ArtifactError::BadManifest("step missing qfilter".to_string()))?;
+    let k = kh * kw * ic;
+    let (sb, _, skind) = blob_slice(
+        buf,
+        region_start,
+        d.get("scales")
+            .ok_or_else(|| ArtifactError::BadManifest("qfilter missing scales".to_string()))?,
+    )?;
+    if sb.len() != oc * 4 {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{skind}: {} bytes of scales for {oc} output channels",
+            sb.len()
+        )));
+    }
+    let (db, _, dkind) = blob_slice(
+        buf,
+        region_start,
+        d.get("data")
+            .ok_or_else(|| ArtifactError::BadManifest("qfilter missing data".to_string()))?,
+    )?;
+    if db.len() != k * oc {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{dkind}: blob length {} disagrees with the {k}x{oc} filter payload",
+            db.len()
+        )));
+    }
+    let (nb, _, nkind) = blob_slice(
+        buf,
+        region_start,
+        d.get("nz_rows")
+            .ok_or_else(|| ArtifactError::BadManifest("qfilter missing nz_rows".to_string()))?,
+    )?;
+    if nb.len() % 4 != 0 || nb.len() / 4 > k {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{nkind}: {} bytes of non-zero-row indices for contraction length {k}",
+            nb.len()
+        )));
+    }
+    let nz_rows = u32_from_le(nb);
+    if nz_rows.iter().any(|&r| r as usize >= k) {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{nkind}: row index out of range for contraction length {k}"
+        )));
+    }
+    Ok(QFilter {
+        kh,
+        kw,
+        ic,
+        oc,
+        scales: f32_from_le(sb),
+        data: i8_from_bytes(db),
+        nz_rows,
+    })
+}
+
+fn load_qpacked(
+    buf: &Arc<AlignedBytes>,
+    region_start: usize,
+    desc: Option<&Json>,
+    k: usize,
+    n: usize,
+    mode: LoadMode,
+) -> Result<QPackedB, ArtifactError> {
+    let d = desc.ok_or_else(|| ArtifactError::BadManifest("step missing packed".to_string()))?;
+    let (kb, kabs, kkind) = blob_slice(
+        buf,
+        region_start,
+        d.get("kidx")
+            .ok_or_else(|| ArtifactError::BadManifest("packed missing kidx".to_string()))?,
+    )?;
+    if kb.len() % 8 != 0 {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{kkind}: {} bytes is not a whole number of u32 index pairs",
+            kb.len()
+        )));
+    }
+    let elems = kb.len() / 4;
+    let (db, dabs, dkind) = blob_slice(
+        buf,
+        region_start,
+        d.get("data")
+            .ok_or_else(|| ArtifactError::BadManifest("packed missing data".to_string()))?,
+    )?;
+    let want = QPackedB::packed_data_len(n, elems / 2);
+    if db.len() != want {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{dkind}: blob length {} disagrees with the {want} bytes {} index pairs require",
+            db.len(),
+            elems / 2,
+        )));
+    }
+    let made = match effective_mode(mode) {
+        LoadMode::Copy => QPackedB::from_parts(k, n, u32_from_le(kb), i8_from_bytes(db)),
+        LoadMode::ZeroCopy => QPackedB::from_shared(k, n, buf.clone(), kabs, elems, dabs),
+    };
+    made.ok_or_else(|| {
+        ArtifactError::SpecMismatch(format!(
+            "{kkind}: row index out of range for contraction length {k}"
+        ))
+    })
+}
+
+fn packed_list(sj: &Json, want: usize) -> Result<&[Json], String> {
+    let arr = sj
+        .get("packed")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing packed operand list".to_string())?;
+    if arr.len() != want {
+        return Err(format!("{} packed operands, expected {want}", arr.len()));
+    }
+    Ok(arr)
+}
+
+fn shape_of(j: Option<&Json>) -> Option<[usize; 3]> {
+    let arr = j?.as_arr()?;
+    if arr.len() != 3 {
+        return None;
+    }
+    Some([
+        arr[0].as_usize()?,
+        arr[1].as_usize()?,
+        arr[2].as_usize()?,
+    ])
+}
+
+fn from_shared(buf: Arc<AlignedBytes>, mode: LoadMode) -> Result<Program> {
+    let b = buf.as_bytes();
+    if b.len() < HEADER_LEN {
+        return Err(ArtifactError::Truncated { need: HEADER_LEN, have: b.len() }.into());
+    }
+    if b[..8] != MAGIC {
+        return Err(ArtifactError::BadMagic.into());
+    }
+    let mlen = u64::from_le_bytes(b[8..16].try_into().expect("8-byte slice")) as usize;
+    let mend = HEADER_LEN
+        .checked_add(mlen)
+        .ok_or(ArtifactError::Truncated { need: usize::MAX, have: b.len() })?;
+    if mend > b.len() {
+        return Err(ArtifactError::Truncated { need: mend, have: b.len() }.into());
+    }
+    let mstr = std::str::from_utf8(&b[HEADER_LEN..mend])
+        .map_err(|_| ArtifactError::BadManifest("manifest is not UTF-8".to_string()))?;
+    let manifest =
+        json::parse(mstr).map_err(|e| ArtifactError::BadManifest(e.to_string()))?;
+    // the version gates every other field's meaning: check it first
+    let version = manifest
+        .get("format_version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ArtifactError::BadManifest("missing format_version".to_string()))?
+        as u64;
+    if version != FORMAT_VERSION {
+        return Err(ArtifactError::UnsupportedVersion { found: version }.into());
+    }
+    if manifest.str_or("format", "") != "sdprog" {
+        return Err(ArtifactError::BadManifest("format is not \"sdprog\"".to_string()).into());
+    }
+    if manifest.usize_or("blob_align", 0) != BLOB_ALIGN {
+        return Err(ArtifactError::BadManifest(format!(
+            "blob_align {} (version {FORMAT_VERSION} requires {BLOB_ALIGN})",
+            manifest.usize_or("blob_align", 0)
+        ))
+        .into());
+    }
+    let net_name = manifest
+        .get("network")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ArtifactError::BadManifest("missing network".to_string()))?;
+    let spec = networks::by_name(net_name)
+        .ok_or_else(|| ArtifactError::UnknownNetwork(net_name.to_string()))?;
+    let precision = Precision::parse(manifest.str_or("precision", ""))
+        .ok_or_else(|| ArtifactError::BadManifest("missing/unknown precision".to_string()))?;
+    let steps_json = manifest
+        .get("steps")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ArtifactError::BadManifest("missing steps".to_string()))?;
+    if steps_json.len() != spec.layers.len() || spec.layers.is_empty() {
+        return Err(ArtifactError::SpecMismatch(format!(
+            "{} steps for {} spec layers",
+            steps_json.len(),
+            spec.layers.len()
+        ))
+        .into());
+    }
+    let region_start = align_up(mend);
+    let last = spec.layers.len() - 1;
+    let mut steps = Vec::with_capacity(spec.layers.len());
+    for (i, (l, sj)) in spec.layers.iter().zip(steps_json).enumerate() {
+        let fail =
+            |msg: String| ArtifactError::SpecMismatch(format!("{}.{}: {msg}", spec.name, l.name));
+        if sj.str_or("name", "") != l.name {
+            return Err(fail(format!("step named {:?}", sj.str_or("name", ""))).into());
+        }
+        let want_in = [l.in_h, l.in_w, l.in_c];
+        let want_out = [l.out_h(), l.out_w(), l.out_c];
+        if shape_of(sj.get("in")) != Some(want_in) || shape_of(sj.get("out")) != Some(want_out) {
+            return Err(fail("step shapes disagree with the spec".to_string()).into());
+        }
+        let want_op = match (l.kind, precision) {
+            (LayerKind::Dense, Precision::F32) => "dense",
+            (LayerKind::Conv, Precision::F32) => "conv",
+            (LayerKind::Deconv, Precision::F32) => "sd_deconv",
+            (LayerKind::Dense | LayerKind::Conv, Precision::Int8) => "q_conv",
+            (LayerKind::Deconv, Precision::Int8) => "q_sd_deconv",
+        };
+        let got_op = sj.str_or("op", "");
+        if got_op != want_op {
+            return Err(fail(format!("op {got_op:?}, expected {want_op:?}")).into());
+        }
+        let in_scale = || -> Result<f32, ArtifactError> {
+            Ok(sj
+                .get("in_scale")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| fail("missing in_scale".to_string()))? as f32)
+        };
+        let op = match got_op {
+            "dense" => {
+                let n_in = l.in_h * l.in_w * l.in_c;
+                let descs = packed_list(sj, 1).map_err(&fail)?;
+                Op::Dense {
+                    packed: load_packed_b(&buf, region_start, &descs[0], n_in, l.out_c, mode)?,
+                }
+            }
+            "conv" => {
+                let descs = packed_list(sj, 1).map_err(&fail)?;
+                let k = l.k * l.k * l.in_c;
+                Op::Conv {
+                    kh: l.k,
+                    kw: l.k,
+                    packed: load_packed_b(&buf, region_start, &descs[0], k, l.out_c, mode)?,
+                    s: l.s,
+                    p: l.p,
+                }
+            }
+            "sd_deconv" => {
+                let g = SdGeometry::new(l.k, l.s, l.p);
+                let descs = packed_list(sj, g.n_splits()).map_err(&fail)?;
+                let k = g.k_t * g.k_t * l.in_c;
+                let packed = descs
+                    .iter()
+                    .map(|d| load_packed_b(&buf, region_start, d, k, l.out_c, mode))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Op::SdDeconv { packed, g }
+            }
+            "q_conv" => {
+                // a dense layer lowers to a 1x1 conv over its 1x1xn_in view
+                let (kh, kw, ic, s, p) = if l.kind == LayerKind::Dense {
+                    (1, 1, l.in_h * l.in_w * l.in_c, 1, 0)
+                } else {
+                    (l.k, l.k, l.in_c, l.s, l.p)
+                };
+                let qf = load_qfilter(&buf, region_start, sj.get("qfilter"), kh, kw, ic, l.out_c)?;
+                let packed = load_qpacked(
+                    &buf,
+                    region_start,
+                    sj.get("packed"),
+                    kh * kw * ic,
+                    l.out_c,
+                    mode,
+                )?;
+                Op::QConv { qf, packed, in_scale: in_scale()?, s, p }
+            }
+            "q_sd_deconv" => {
+                let g = SdGeometry::new(l.k, l.s, l.p);
+                let entries = sj
+                    .get("splits")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| fail("missing splits".to_string()))?;
+                if entries.len() != g.n_splits() {
+                    return Err(fail(format!(
+                        "{} splits, expected {}",
+                        entries.len(),
+                        g.n_splits()
+                    ))
+                    .into());
+                }
+                let k = g.k_t * g.k_t * l.in_c;
+                let mut splits = Vec::with_capacity(entries.len());
+                let mut packed = Vec::with_capacity(entries.len());
+                for e in entries {
+                    splits.push(load_qfilter(
+                        &buf,
+                        region_start,
+                        e.get("qfilter"),
+                        g.k_t,
+                        g.k_t,
+                        l.in_c,
+                        l.out_c,
+                    )?);
+                    packed.push(load_qpacked(
+                        &buf,
+                        region_start,
+                        e.get("packed"),
+                        k,
+                        l.out_c,
+                        mode,
+                    )?);
+                }
+                Op::QSdDeconv { splits, packed, g, in_scale: in_scale()? }
+            }
+            _ => return Err(fail(format!("unknown op {got_op:?}")).into()),
+        };
+        steps.push(Step {
+            name: l.name,
+            in_h: l.in_h,
+            in_w: l.in_w,
+            in_c: l.in_c,
+            out_h: l.out_h(),
+            out_w: l.out_w(),
+            out_c: l.out_c,
+            op,
+            act: if i == last { Act::Tanh } else { Act::Relu },
+        });
+    }
+    let first = &spec.layers[0];
+    let last_l = &spec.layers[last];
+    let program = Program {
+        name: spec.name,
+        steps,
+        precision,
+        in_h: first.in_h,
+        in_w: first.in_w,
+        in_c: first.in_c,
+        out_len: last_l.out_h() * last_l.out_w() * last_l.out_c,
+    };
+    // top-level redundancy: the manifest's own input/output records
+    if shape_of(manifest.get("input")) != Some([program.in_h, program.in_w, program.in_c])
+        || manifest.usize_or("output_len", usize::MAX) != program.out_len
+    {
+        return Err(ArtifactError::SpecMismatch(
+            "manifest input/output records disagree with the spec".to_string(),
+        )
+        .into());
+    }
+    Ok(program)
+}
+
+impl Program {
+    /// Serialize to the `.sdprog` byte format (deterministic: equal
+    /// programs produce equal bytes — the bit-identity gate's definition
+    /// of program equality).
+    pub fn to_artifact_bytes(&self) -> Result<Vec<u8>> {
+        let mut bw = BlobWriter::default();
+        let manifest = build_manifest(self, &mut bw)?;
+        let mjson = manifest.encode();
+        let region_start = align_up(HEADER_LEN + mjson.len());
+        let mut out = Vec::with_capacity(region_start + bw.region.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&(mjson.len() as u64).to_le_bytes());
+        out.extend_from_slice(mjson.as_bytes());
+        out.resize(region_start, 0);
+        out.extend_from_slice(&bw.region);
+        Ok(out)
+    }
+
+    /// Write the `.sdprog` artifact to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let bytes = self
+            .to_artifact_bytes()
+            .with_context(|| format!("serializing {} for {}", self.name, path.display()))?;
+        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a `.sdprog` artifact, validating the format version and every
+    /// blob checksum before constructing the program (copying mode).
+    pub fn load(path: impl AsRef<Path>) -> Result<Program> {
+        Program::load_with(path, LoadMode::Copy)
+    }
+
+    /// [`Program::load`] with an explicit [`LoadMode`].
+    pub fn load_with(path: impl AsRef<Path>, mode: LoadMode) -> Result<Program> {
+        let path = path.as_ref();
+        let bytes = (|| -> std::io::Result<AlignedBytes> {
+            let mut f = std::fs::File::open(path)?;
+            let len = f.metadata()?.len();
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "file too large")
+            })?;
+            AlignedBytes::read_exact_from(&mut f, len)
+        })()
+        .with_context(|| format!("reading {}", path.display()))?;
+        from_shared(Arc::new(bytes), mode)
+            .with_context(|| format!("loading artifact {}", path.display()))
+    }
+
+    /// Deserialize from in-memory artifact bytes (tests and corruption
+    /// suites; file loads go through [`Program::load_with`]).
+    pub fn from_artifact_bytes(bytes: &[u8], mode: LoadMode) -> Result<Program> {
+        from_shared(Arc::new(AlignedBytes::from_bytes(bytes)), mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DeconvImpl;
+
+    #[test]
+    fn align_up_is_64_multiples() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 64);
+        assert_eq!(align_up(64), 64);
+        assert_eq!(align_up(65), 128);
+    }
+
+    #[test]
+    fn codecs_round_trip() {
+        let f = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e8];
+        assert_eq!(f32_from_le(&f32_to_le(&f)), f);
+        let u = [0u32, 7, u32::MAX];
+        assert_eq!(u32_from_le(&u32_to_le(&u)), u);
+        let i = [0i8, -128, 127, -1];
+        assert_eq!(i8_from_bytes(&i8_to_bytes(&i)), i);
+    }
+
+    #[test]
+    fn ref_deconv_programs_are_not_serializable() {
+        let net = crate::networks::dcgan();
+        let p = Program::from_seed(&net, DeconvImpl::Native, 7).unwrap();
+        let err = p.to_artifact_bytes().unwrap_err();
+        assert!(
+            err.downcast_ref::<ArtifactError>()
+                .is_some_and(|e| matches!(e, ArtifactError::UnsupportedOp(_))),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn header_too_short_and_bad_magic_are_typed() {
+        let err = Program::from_artifact_bytes(&[0u8; 4], LoadMode::Copy).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ArtifactError>(),
+            Some(ArtifactError::Truncated { .. })
+        ));
+        let err = Program::from_artifact_bytes(&[0u8; 64], LoadMode::Copy).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ArtifactError>(),
+            Some(ArtifactError::BadMagic)
+        ));
+    }
+}

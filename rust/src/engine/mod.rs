@@ -59,8 +59,10 @@
 //! MAC/parameter counts intact while making every benchmark runnable end to
 //! end; see DESIGN.md section 6.
 
+pub mod artifact;
 pub mod weights;
 
+pub use artifact::{ArtifactError, LoadMode};
 pub use weights::{
     build_weights, pack_filter, pack_filters, smooth_filter, DeconvImpl, LayerWeights,
 };

@@ -4,9 +4,18 @@
 //!   report <table1|table2|table3|table4|quant|fig8|fig9|fig10|fig11|
 //!           table5|table6|table7|table8|fig15|fig16|fig17|all>
 //!   verify  [--limit N]        golden-check AOT artifacts via PJRT
+//!   compile [--model name|all] [--precision f32|int8|both] [--seed S]
+//!           [-o path.sdprog | --out-dir DIR] [--verify]
+//!           compile model(s) ONCE into serializable `.sdprog` program
+//!           artifacts (packed weight panels + checksummed manifest;
+//!           DESIGN.md section 13) that `serve --artifact-dir` loads for
+//!           instant cold start. --verify reloads every written artifact
+//!           in both load modes and gates on byte-for-byte re-encoding
+//!           (the bit-identity check CI runs). Default output names are
+//!           `<slug>_<precision>.sdprog` under --out-dir (default `.`).
 //!   serve   [--requests N] [--batch B] [--native] [--workers W]
 //!           [--model dcgan|artgan|sngan|gpgan|mde|fst]
-//!           [--precision f32|int8]
+//!           [--precision f32|int8] [--artifact-dir DIR]
 //!           run the serving demo for any benchmark network (--native, or a
 //!           missing artifacts/, compiles the model ONCE into an immutable
 //!           engine::Program on the CPU-native GEMM backend instead of
@@ -16,7 +25,7 @@
 //!           activations, i32 accumulate, calibrated at compile time)
 //!   serve --listen <addr> [--models all|csv] [--serve-secs N]
 //!           [--deadline-ms D] [--workers W] [--batch B] [--queue-cap Q]
-//!           [--precision f32|int8]
+//!           [--precision f32|int8] [--artifact-dir DIR]
 //!           network front door: serve every requested model (default: all
 //!           six) from ONE process over HTTP/1.1 — one compiled program
 //!           per model, one shared worker pool, per-model routing by
@@ -40,11 +49,13 @@
 #[path = "../benches/harness.rs"]
 mod harness;
 
-use std::time::Duration;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 use split_deconv::coordinator::{Server, ServerConfig};
-use split_deconv::engine::{DeconvImpl, Plan, Precision};
+use split_deconv::engine::{DeconvImpl, LoadMode, Plan, Precision, Program};
 use split_deconv::obs::StageSink;
 use split_deconv::report;
 use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
@@ -73,13 +84,16 @@ fn run(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("report") => report_cmd(args.get(1).map(String::as_str).unwrap_or("all"), args),
         Some("verify") => verify_cmd(args),
+        Some("compile") => compile_cmd(args),
         Some("serve") => serve_cmd(args),
         Some("profile") => profile_cmd(args),
         Some("simulate") => simulate_cmd(args),
-        Some(other) => bail!("unknown command {other}; try report/verify/serve/profile/simulate"),
+        Some(other) => {
+            bail!("unknown command {other}; try report/verify/compile/serve/profile/simulate")
+        }
         None => {
             println!("repro — split deconvolution reproduction");
-            println!("usage: repro <report|verify|serve|profile|simulate> ...");
+            println!("usage: repro <report|verify|compile|serve|profile|simulate> ...");
             Ok(())
         }
     }
@@ -193,6 +207,76 @@ fn verify_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `repro compile`: compile model(s) into `.sdprog` program artifacts —
+/// the build-time half of the instant-cold-start path (`serve
+/// --artifact-dir` is the load-time half). With `--verify`, every written
+/// artifact is reloaded in BOTH load modes and must re-encode to the
+/// identical bytes: the bit-identity gate CI runs over all six networks.
+fn compile_cmd(args: &[String]) -> Result<()> {
+    let model = flag_value(args, "--model").unwrap_or("all");
+    let seed: u64 = flag_value(args, "--seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    let precisions: Vec<Precision> = match flag_value(args, "--precision") {
+        None => vec![Precision::F32],
+        Some("both") => vec![Precision::F32, Precision::Int8],
+        Some(p) => vec![Precision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {p}; expected f32/int8/both"))?],
+    };
+    let out_file = flag_value(args, "-o").or_else(|| flag_value(args, "--out"));
+    let out_dir = PathBuf::from(flag_value(args, "--out-dir").unwrap_or("."));
+    let verify = args.iter().any(|a| a == "--verify");
+    let models: Vec<String> = if model == "all" {
+        networks::names().iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![model.to_string()]
+    };
+    if out_file.is_some() && models.len() * precisions.len() != 1 {
+        bail!("-o names ONE output file; use --out-dir when compiling several artifacts");
+    }
+    if out_file.is_none() {
+        std::fs::create_dir_all(&out_dir)?;
+    }
+    for model in &models {
+        let net = networks::by_name_or_err(model)?;
+        let slug = networks::slug(net.name);
+        for &precision in &precisions {
+            let t0 = Instant::now();
+            let program = Program::from_seed_prec(&net, DeconvImpl::Sd, seed, precision)?;
+            let compile_s = t0.elapsed().as_secs_f64();
+            let bytes = program.to_artifact_bytes()?;
+            let path = match out_file {
+                Some(o) => PathBuf::from(o),
+                None => out_dir.join(format!("{slug}_{}.sdprog", precision.label())),
+            };
+            std::fs::write(&path, &bytes)?;
+            let mut line = format!(
+                "{:<22} {:>5} {:>10} bytes  compile {:.3}s",
+                path.display(),
+                precision.label(),
+                bytes.len(),
+                compile_s
+            );
+            if verify {
+                for mode in [LoadMode::Copy, LoadMode::ZeroCopy] {
+                    let t1 = Instant::now();
+                    let loaded = Program::load_with(&path, mode)?;
+                    let load_s = t1.elapsed().as_secs_f64();
+                    if loaded.to_artifact_bytes()? != bytes {
+                        bail!(
+                            "{}: {mode:?} load is not bit-identical to the fresh compile",
+                            path.display()
+                        );
+                    }
+                    line.push_str(&format!("  load[{mode:?}] {load_s:.3}s ok"));
+                }
+            }
+            println!("{line}");
+        }
+    }
+    Ok(())
+}
+
 fn serve_cmd(args: &[String]) -> Result<()> {
     if let Some(listen) = flag_value(args, "--listen") {
         return serve_listen_cmd(args, listen);
@@ -222,12 +306,26 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         precision,
         record_spans: true,
     };
+    let artifact_dir = flag_value(args, "--artifact-dir");
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
-    if precision == Precision::Int8 && !native {
+    if precision == Precision::Int8 && !native && artifact_dir.is_none() {
         bail!("--precision int8 is a native-backend mode; add --native");
     }
     let z_len = net.input_elems();
-    let server = if native {
+    let server = if let Some(dir) = artifact_dir {
+        // instant cold start: load the precompiled .sdprog program
+        // (checksummed manifest + packed panels) instead of compiling
+        let file = format!("{}_{}.sdprog", networks::slug(net.name), precision.label());
+        let path = Path::new(dir).join(file);
+        println!(
+            "(CPU-native engine backend: {} {} Program loaded from {}, shared by \
+             {workers} worker(s) with private Scratch)",
+            net.name,
+            precision.label(),
+            path.display()
+        );
+        Server::start_native_program(cfg, Arc::new(Program::load(&path)?))?
+    } else if native {
         println!(
             "(CPU-native engine backend: {} compiled once into a shared {} Program, \
              SD filters pre-split, {workers} worker(s) with private Scratch)",
@@ -318,12 +416,26 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
         default_deadline,
         ..FrontDoorConfig::default()
     };
-    println!(
-        "compiling {} model(s) at {} (SD filters pre-split, shared across {workers} worker(s))...",
-        models.len(),
-        precision.label()
-    );
-    let door = FrontDoor::start_native(fcfg, scfg, &models, 7)?;
+    let door = match flag_value(args, "--artifact-dir") {
+        Some(dir) => {
+            println!(
+                "loading {} precompiled {} program(s) from {dir} (.sdprog artifacts, shared \
+                 across {workers} worker(s))...",
+                models.len(),
+                precision.label()
+            );
+            FrontDoor::start_artifacts(fcfg, scfg, &models, Path::new(dir))?
+        }
+        None => {
+            println!(
+                "compiling {} model(s) at {} (SD filters pre-split, shared across {workers} \
+                 worker(s))...",
+                models.len(),
+                precision.label()
+            );
+            FrontDoor::start_native(fcfg, scfg, &models, 7)?
+        }
+    };
     println!("listening on http://{}", door.addr());
     for r in door.routes() {
         println!(

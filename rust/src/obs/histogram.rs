@@ -165,18 +165,33 @@ impl HistogramSnapshot {
         self.count += other.count;
     }
 
+    /// Total observations visible in the bucket counters themselves,
+    /// including the overflow slot. On a quiescent histogram this equals
+    /// [`HistogramSnapshot::count`]; a snapshot torn by a concurrent
+    /// `record` can briefly see the two disagree, and the bucket total is
+    /// the one consistent with `buckets` — quantiles and the Prometheus
+    /// cumulative series derive from it so they never exceed what the
+    /// buckets can account for.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
     /// Exact bounds on the `q`-quantile (0.0..=1.0): the true order
-    /// statistic `t` of rank `ceil(q * count)` satisfies `lo < t <= hi`.
-    /// `lo` is the previous bucket's upper bound (0 for the first
-    /// bucket); `hi` is the containing bucket's upper bound
-    /// ([`MAX_TRACKED_US`]-capped `u64::MAX` semantics for the overflow
-    /// bucket: `hi` is reported as the last finite bound). Returns
-    /// `None` for an empty histogram.
+    /// statistic `t` of rank `ceil(q * total)` satisfies `lo < t <= hi`,
+    /// where `total` is the bucket-counter total ([`Self::total`] — not
+    /// the separately-updated `count`, which a torn snapshot can tear
+    /// ahead of the buckets). `lo` is the previous bucket's upper bound
+    /// (0 for the first bucket); `hi` is the containing bucket's upper
+    /// bound. When the quantile lands in the `+Inf` overflow slot both
+    /// bounds are reported as the last finite table bound (the overflow
+    /// bucket's lower bound) — a defined value, never a fabricated one.
+    /// Returns `None` when no bucket holds any observation.
     pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
-        if self.count == 0 || self.buckets.is_empty() {
+        let total = self.total();
+        if total == 0 {
             return None;
         }
-        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
         let table = bounds();
         let mut cum = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
@@ -187,8 +202,8 @@ impl HistogramSnapshot {
                 return Some((lo, hi));
             }
         }
-        // Unreachable when counts are consistent; fall back to the top.
-        Some((table[NUM_BUCKETS - 2], table[NUM_BUCKETS - 1]))
+        // Unreachable: `rank <= total` and the loop accumulates `total`.
+        None
     }
 
     /// Upper quantile bound as f64 microseconds (0.0 when empty) — the
@@ -209,8 +224,10 @@ impl HistogramSnapshot {
 
     /// Cumulative `(upper_bound_us, cumulative_count)` pairs over the
     /// finite buckets, in increasing bound order — the shape Prometheus
-    /// `_bucket{le=...}` series want. The `+Inf` cumulative count equals
-    /// [`HistogramSnapshot::count`].
+    /// `_bucket{le=...}` series want. The `+Inf` cumulative count is
+    /// [`HistogramSnapshot::total`] (the finite cumulative plus the
+    /// overflow slot), which keeps the emitted series monotone even for
+    /// a torn snapshot.
     pub fn cumulative(&self) -> Vec<(u64, u64)> {
         let table = bounds();
         let mut out = Vec::with_capacity(NUM_BUCKETS);
@@ -295,6 +312,46 @@ mod tests {
         assert_eq!(s.buckets[NUM_BUCKETS], 1);
         assert_eq!(s.cumulative().last().unwrap().1, 0, "finite cum excludes overflow");
         assert_eq!(s.count, 1);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_defined() {
+        let s = HistogramSnapshot::default();
+        assert_eq!(s.quantile_bounds(0.5), None);
+        assert_eq!(s.quantile_us(0.5), 0.0);
+        // Same for a fresh histogram whose bucket vector exists but is
+        // all zeros.
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.quantile_bounds(0.99), None);
+        assert_eq!(s.quantile_us(0.99), 0.0);
+        assert_eq!(s.total(), 0);
+    }
+
+    #[test]
+    fn overflow_only_quantile_is_overflow_lower_bound() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        let s = h.snapshot();
+        let last = bounds()[NUM_BUCKETS - 1];
+        assert_eq!(s.quantile_bounds(0.5), Some((last, last)));
+        assert_eq!(s.quantile_us(0.99), last as f64);
+        assert_eq!(s.total(), 2);
+    }
+
+    #[test]
+    fn torn_snapshot_quantile_uses_bucket_totals() {
+        // A snapshot torn by a concurrent record() can see `count` ahead
+        // of the bucket counters. Quantiles must come from the buckets
+        // actually seen — never a fabricated top-of-table bound.
+        let mut s = Histogram::new().snapshot();
+        s.count = 5;
+        assert_eq!(s.quantile_bounds(0.5), None, "no bucket data yet");
+        assert_eq!(s.quantile_us(0.5), 0.0);
+        s.buckets[bucket_index(10)] = 1;
+        assert_eq!(s.total(), 1);
+        let (lo, hi) = s.quantile_bounds(0.99).unwrap();
+        assert!(lo < 10 && 10 <= hi, "bounds {lo}..{hi} must bracket the one sample");
     }
 
     #[test]

@@ -54,6 +54,7 @@ use std::sync::atomic::Ordering;
 use crate::tensor::gemm::{parallel_drain, SendPtr};
 use crate::tensor::ops::{worker_count, TileMap};
 use crate::tensor::Tensor;
+use crate::util::blob::BlobVec;
 
 use super::scheme::{QFilter, QTensor};
 
@@ -114,10 +115,10 @@ pub struct QPackedB {
     pub n: usize,
     /// paired non-zero row indices, length `2 * pairs()`; an odd tail is
     /// padded with a repeat of the last index whose packed bytes are zero
-    kidx: Vec<u32>,
+    kidx: BlobVec<u32>,
     /// `panels() * pairs() * 32` bytes: panel `p`, pair `q`, column `j`,
     /// row-of-pair `w` at `(p*pairs + q)*32 + j*2 + w`
-    data: Vec<i8>,
+    data: BlobVec<i8>,
 }
 
 impl QPackedB {
@@ -142,16 +143,18 @@ impl QPackedB {
         self.n = n;
         let nz = &qf.nz_rows;
         let pairs = nz.len().div_ceil(2);
-        self.kidx.clear();
+        let kidx = self.kidx.owned_mut();
+        kidx.clear();
         for q in 0..pairs {
-            self.kidx.push(nz[2 * q]);
+            kidx.push(nz[2 * q]);
             // odd tail: partner index repeats, partner bytes stay zero —
             // a zero i32 contribution, so the pad is exact
-            self.kidx.push(*nz.get(2 * q + 1).unwrap_or(&nz[2 * q]));
+            kidx.push(*nz.get(2 * q + 1).unwrap_or(&nz[2 * q]));
         }
         let panels = n.div_ceil(NR8);
-        self.data.clear();
-        self.data.resize(panels * pairs * 32, 0);
+        let data = self.data.owned_mut();
+        data.clear();
+        data.resize(panels * pairs * 32, 0);
         for p in 0..panels {
             let col0 = p * NR8;
             let cols = NR8.min(n - col0);
@@ -160,13 +163,74 @@ impl QPackedB {
                 let k0 = nz[2 * q] as usize;
                 let k1 = nz.get(2 * q + 1).map(|&v| v as usize);
                 for j in 0..cols {
-                    self.data[base + 2 * j] = qf.data[k0 * n + col0 + j];
+                    data[base + 2 * j] = qf.data[k0 * n + col0 + j];
                     if let Some(k1) = k1 {
-                        self.data[base + 2 * j + 1] = qf.data[k1 * n + col0 + j];
+                        data[base + 2 * j + 1] = qf.data[k1 * n + col0 + j];
                     }
                 }
             }
         }
+    }
+
+    /// Adopt already-packed payloads (the artifact loader's copy path).
+    /// `None` when the lengths are inconsistent (`kidx` must be even and
+    /// `data` exactly `panels * pairs * 32`) or a row index reaches `k` —
+    /// the accumulation kernel indexes the im2col panel by `kidx` values
+    /// without bounds checks, so the bound is enforced here, once, at
+    /// construction.
+    pub fn from_parts(k: usize, n: usize, kidx: Vec<u32>, data: Vec<i8>) -> Option<QPackedB> {
+        if kidx.len() % 2 != 0 || kidx.iter().any(|&i| i as usize >= k) {
+            return None;
+        }
+        if data.len() != QPackedB::packed_data_len(n, kidx.len() / 2) {
+            return None;
+        }
+        Some(QPackedB {
+            k,
+            n,
+            kidx: BlobVec::Owned(kidx),
+            data: BlobVec::Owned(data),
+        })
+    }
+
+    /// Borrow already-packed payloads in place from a shared artifact
+    /// buffer (the zero-copy load path). Same validation as
+    /// [`QPackedB::from_parts`]; `kidx_len` is in elements.
+    pub fn from_shared(
+        k: usize,
+        n: usize,
+        buf: std::sync::Arc<crate::util::blob::AlignedBytes>,
+        kidx_off: usize,
+        kidx_len: usize,
+        data_off: usize,
+    ) -> Option<QPackedB> {
+        if kidx_len % 2 != 0 {
+            return None;
+        }
+        let kidx: BlobVec<u32> = BlobVec::shared(buf.clone(), kidx_off, kidx_len)?;
+        if kidx.as_slice().iter().any(|&i| i as usize >= k) {
+            return None;
+        }
+        let data_len = QPackedB::packed_data_len(n, kidx_len / 2);
+        let data: BlobVec<i8> = BlobVec::shared(buf, data_off, data_len)?;
+        Some(QPackedB { k, n, kidx, data })
+    }
+
+    /// The paired row indices in their on-disk element order.
+    pub fn raw_kidx(&self) -> &[u32] {
+        self.kidx.as_slice()
+    }
+
+    /// The packed pair-interleaved payload in its on-disk byte order.
+    pub fn raw_data(&self) -> &[i8] {
+        self.data.as_slice()
+    }
+
+    /// Packed payload byte count the pair-interleaved layout requires for
+    /// `n` columns and `pairs` row pairs — the artifact loader's length
+    /// cross-check.
+    pub fn packed_data_len(n: usize, pairs: usize) -> usize {
+        n.div_ceil(NR8) * pairs * 32
     }
 
     /// Number of packed row pairs (non-zero rows, halved and rounded up).
@@ -490,14 +554,15 @@ unsafe fn acc_block_avx2(
     debug_assert_eq!(qp.n, n);
     let pairs = qp.pairs();
     let ap = a.as_ptr();
-    let dp = qp.data.as_ptr();
+    let kidx = qp.raw_kidx();
+    let dp = qp.raw_data().as_ptr();
     for p in 0..qp.panels() {
         let col0 = p * NR8;
         let cols = NR8.min(n - col0);
         let mut accv = [[_mm256_setzero_si256(); 2]; MR];
         for q in 0..pairs {
-            let k0 = *qp.kidx.get_unchecked(2 * q) as usize;
-            let k1 = *qp.kidx.get_unchecked(2 * q + 1) as usize;
+            let k0 = *kidx.get_unchecked(2 * q) as usize;
+            let k1 = *kidx.get_unchecked(2 * q + 1) as usize;
             // a-side pair per row, packed as [lo=a(k0), hi=a(k1)] i16s
             let mut avals = [0i32; MR];
             let mut any = 0i32;

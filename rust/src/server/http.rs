@@ -64,9 +64,20 @@ pub enum ReadOutcome {
     IdleTimeout,
 }
 
-/// A protocol violation by the client — answer 400 and close.
+/// A protocol violation by the client — answer `status` and close.
 #[derive(Debug)]
-pub struct BadRequest(pub String);
+pub struct BadRequest {
+    /// response status: 400, except 411 (Length Required) for a bodied
+    /// request that declares no `Content-Length`
+    pub status: u16,
+    pub msg: String,
+}
+
+impl BadRequest {
+    fn new(msg: impl Into<String>) -> BadRequest {
+        BadRequest { status: 400, msg: msg.into() }
+    }
+}
 
 /// A buffering connection: owns the stream plus the carry-over buffer
 /// that lets `read_request` survive read timeouts mid-request.
@@ -99,7 +110,7 @@ impl<S: Read + Write> Conn<S> {
                 break pos;
             }
             if self.buf.len() > MAX_HEADER_BYTES {
-                return Err(BadRequest("request header too large".into()));
+                return Err(BadRequest::new("request header too large"));
             }
             match self.read_some() {
                 ReadStep::Data => {}
@@ -108,7 +119,7 @@ impl<S: Read + Write> Conn<S> {
                     return if self.buf.is_empty() {
                         Ok(ReadOutcome::Eof)
                     } else {
-                        Err(BadRequest("connection closed mid-header".into()))
+                        Err(BadRequest::new("connection closed mid-header"))
                     };
                 }
             }
@@ -117,23 +128,23 @@ impl<S: Read + Write> Conn<S> {
         // 2. parse request line + headers (bytes stay buffered until the
         //    body is complete too, so a timeout here loses nothing)
         let head = std::str::from_utf8(&self.buf[..head_end])
-            .map_err(|_| BadRequest("non-UTF8 request header".into()))?;
+            .map_err(|_| BadRequest::new("non-UTF8 request header"))?;
         let mut lines = head.split("\r\n");
         let request_line = lines.next().unwrap_or("");
         let mut parts = request_line.split_whitespace();
         let method = parts
             .next()
-            .ok_or_else(|| BadRequest("empty request line".into()))?
+            .ok_or_else(|| BadRequest::new("empty request line"))?
             .to_ascii_uppercase();
         let target = parts
             .next()
-            .ok_or_else(|| BadRequest("request line missing target".into()))?
+            .ok_or_else(|| BadRequest::new("request line missing target"))?
             .to_string();
         let version = parts
             .next()
-            .ok_or_else(|| BadRequest("request line missing HTTP version".into()))?;
+            .ok_or_else(|| BadRequest::new("request line missing HTTP version"))?;
         if !version.starts_with("HTTP/1.") {
-            return Err(BadRequest(format!("unsupported version {version}")));
+            return Err(BadRequest::new(format!("unsupported version {version}")));
         }
         let mut headers: Vec<(String, String)> = Vec::new();
         for line in lines {
@@ -142,17 +153,45 @@ impl<S: Read + Write> Conn<S> {
             }
             let (name, value) = line
                 .split_once(':')
-                .ok_or_else(|| BadRequest(format!("malformed header line {line:?}")))?;
+                .ok_or_else(|| BadRequest::new(format!("malformed header line {line:?}")))?;
             headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
         }
-        let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
-            None => 0,
-            Some((_, v)) => v
+        // Content-Length: digits only (`parse` alone would admit a "+"
+        // sign), overflow is a plain 400 (never a panic or a stalled
+        // read), and every copy of the header must agree — a disagreeing
+        // duplicate is the classic request-smuggling shape.
+        let mut declared_length: Option<usize> = None;
+        for (_, v) in headers.iter().filter(|(n, _)| n == "content-length") {
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(BadRequest::new(format!("bad content-length {v:?}")));
+            }
+            let parsed = v
                 .parse::<usize>()
-                .map_err(|_| BadRequest(format!("bad content-length {v:?}")))?,
+                .map_err(|_| BadRequest::new(format!("content-length {v:?} overflows")))?;
+            match declared_length {
+                Some(prev) if prev != parsed => {
+                    return Err(BadRequest::new(format!(
+                        "conflicting content-length headers ({prev} vs {parsed})"
+                    )));
+                }
+                _ => declared_length = Some(parsed),
+            }
+        }
+        let content_length = match declared_length {
+            Some(len) => len,
+            // a bodied request must declare its length (chunked encoding
+            // is out of scope here): 411 Length Required, not a stalled
+            // read waiting for bytes the client never frames
+            None if matches!(method.as_str(), "POST" | "PUT" | "PATCH") => {
+                return Err(BadRequest {
+                    status: 411,
+                    msg: format!("{method} request without content-length"),
+                });
+            }
+            None => 0,
         };
         if content_length > max_body {
-            return Err(BadRequest(format!(
+            return Err(BadRequest::new(format!(
                 "body of {content_length} bytes exceeds the {max_body}-byte limit"
             )));
         }
@@ -173,7 +212,7 @@ impl<S: Read + Write> Conn<S> {
                 ReadStep::Data => {}
                 ReadStep::Timeout => return Ok(ReadOutcome::IdleTimeout),
                 ReadStep::Closed => {
-                    return Err(BadRequest("connection closed mid-body".into()));
+                    return Err(BadRequest::new("connection closed mid-body"));
                 }
             }
         }
@@ -277,6 +316,7 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        411 => "Length Required",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
@@ -399,6 +439,47 @@ mod tests {
         // body larger than the cap is refused before buffering it
         let raw = b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
         assert!(Conn::new(Cursor::new(raw.to_vec())).read_request(10).is_err());
+    }
+
+    #[test]
+    fn content_length_must_be_digits_only() {
+        // usize::parse would admit these; the wire grammar must not
+        assert!(parse_one(b"POST /x HTTP/1.1\r\nContent-Length: +3\r\n\r\nabc").is_err());
+        assert!(parse_one(b"POST /x HTTP/1.1\r\nContent-Length: \r\n\r\n").is_err());
+        // overflow of usize is a 400, not a panic or a stalled read
+        let huge = b"POST /x HTTP/1.1\r\nContent-Length: 99999999999999999999999999\r\n\r\n";
+        let err = match parse_one(huge) {
+            Err(e) => e,
+            Ok(_) => panic!("overflowing length must be rejected"),
+        };
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn duplicate_content_length_must_agree() {
+        // agreeing copies coalesce
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 3\r\n\r\nabc";
+        match parse_one(raw).unwrap() {
+            ReadOutcome::Request(r) => assert_eq!(r.body, b"abc"),
+            _ => panic!("agreeing duplicates are fine"),
+        }
+        // disagreeing copies are the request-smuggling shape: reject
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 5\r\n\r\nabcde";
+        let err = parse_one(raw).err().expect("disagreeing lengths rejected");
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn bodied_method_without_length_is_411() {
+        let err = parse_one(b"POST /x HTTP/1.1\r\nHost: sd\r\n\r\n")
+            .err()
+            .expect("POST without content-length rejected");
+        assert_eq!(err.status, 411);
+        // GET without a length is a normal zero-body request
+        match parse_one(b"GET /x HTTP/1.1\r\n\r\n").unwrap() {
+            ReadOutcome::Request(r) => assert!(r.body.is_empty()),
+            _ => panic!("GET without length is fine"),
+        }
     }
 
     #[test]

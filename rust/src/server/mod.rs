@@ -214,6 +214,36 @@ impl FrontDoor {
         FrontDoor::start(cfg, server, routes)
     }
 
+    /// [`FrontDoor::start_native`] with each program **loaded** from a
+    /// pre-compiled `.sdprog` artifact instead of compiled in-process —
+    /// the instant-cold-start path. Artifacts are looked up as
+    /// `<slug>_<precision>.sdprog` under `artifact_dir` (the names
+    /// `repro compile --out-dir` writes); every load validates the format
+    /// version and every blob checksum before serving.
+    pub fn start_artifacts(
+        cfg: FrontDoorConfig,
+        scfg: ServerConfig,
+        models: &[String],
+        artifact_dir: &std::path::Path,
+    ) -> Result<FrontDoor> {
+        let mut programs: Vec<(String, Arc<Program>)> = Vec::with_capacity(models.len());
+        let mut routes = Vec::with_capacity(models.len());
+        for model in models {
+            let net = crate::networks::by_name_or_err(model)?;
+            let slug = crate::networks::slug(net.name);
+            let path = artifact_dir.join(format!("{slug}_{}.sdprog", scfg.precision.label()));
+            let program = Arc::new(Program::load(&path)?);
+            routes.push(Route {
+                name: slug.clone(),
+                z_len: program.input_len(),
+                image_len: program.output_len(),
+            });
+            programs.push((slug, program));
+        }
+        let server = Server::start_native_multi(scfg, programs)?;
+        FrontDoor::start(cfg, server, routes)
+    }
+
     /// The bound address (resolves port 0 binds).
     pub fn addr(&self) -> SocketAddr {
         self.addr
@@ -286,12 +316,14 @@ fn handle_conn(
         match conn.read_request(cfg.max_body_bytes) {
             Err(bad) => {
                 // fault-injection contract: malformed bytes get an
-                // explicit 400, then the connection closes
-                obs::log::warn("front_door", &format!("bad request: {}", bad.0), &[]);
-                let body = error_body("bad_request", &bad.0);
+                // explicit 4xx (400, or 411 for a bodied request with no
+                // declared length), then the connection closes
+                obs::log::warn("front_door", &format!("bad request: {}", bad.msg), &[]);
+                let kind = if bad.status == 411 { "length_required" } else { "bad_request" };
+                let body = error_body(kind, &bad.msg);
                 let _ = write_response(
                     conn.stream_mut(),
-                    400,
+                    bad.status,
                     "application/json",
                     &[],
                     &body,
@@ -618,9 +650,14 @@ fn prom_histogram(out: &mut String, name: &str, help: &str, h: &HistogramSnapsho
         let le = bound_us as f64 / 1e6;
         out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
     }
-    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    // `+Inf` and `_count` both derive from the bucket totals — not the
+    // separately-updated `count` atomic — so the cumulative series stays
+    // monotone and `+Inf == _count` holds even for a torn snapshot or
+    // one where every observation landed in the overflow slot.
+    let total = h.total();
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
     out.push_str(&format!("{name}_sum {}\n", h.sum_us as f64 / 1e6));
-    out.push_str(&format!("{name}_count {}\n", h.count));
+    out.push_str(&format!("{name}_count {total}\n"));
 }
 
 /// The Prometheus text-format (`version=0.0.4`) metrics exposition:
@@ -707,4 +744,61 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
         &s.compute_hist,
     );
     out.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prom_histogram;
+    use crate::obs::histogram::Histogram;
+
+    /// Parse every `name_bucket{le=...} v` / `name_count v` line and
+    /// assert the series is monotone with `+Inf == _count`.
+    fn check_prom(text: &str) -> (u64, u64) {
+        let mut prev = 0u64;
+        let mut inf = None;
+        let mut count = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("h_bucket{le=") {
+                let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= prev, "non-monotone bucket series: {line}");
+                prev = v;
+                if rest.starts_with("\"+Inf\"") {
+                    inf = Some(v);
+                }
+            } else if let Some(v) = line.strip_prefix("h_count ") {
+                count = Some(v.parse().unwrap());
+            }
+        }
+        (inf.expect("+Inf bucket emitted"), count.expect("_count emitted"))
+    }
+
+    #[test]
+    fn prom_histogram_inf_equals_count_when_empty() {
+        let mut out = String::new();
+        prom_histogram(&mut out, "h", "help", &Histogram::new().snapshot());
+        assert_eq!(check_prom(&out), (0, 0));
+    }
+
+    #[test]
+    fn prom_histogram_inf_equals_count_with_overflow_only() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        let mut out = String::new();
+        prom_histogram(&mut out, "h", "help", &h.snapshot());
+        assert_eq!(check_prom(&out), (2, 2));
+    }
+
+    #[test]
+    fn prom_histogram_stays_monotone_on_torn_snapshot() {
+        // `count` torn ahead of the bucket counters must not make +Inf
+        // disagree with the finite cumulative series.
+        let h = Histogram::new();
+        h.record(5);
+        let mut snap = h.snapshot();
+        snap.count += 3;
+        let mut out = String::new();
+        prom_histogram(&mut out, "h", "help", &snap);
+        assert_eq!(check_prom(&out), (1, 1));
+    }
 }

@@ -47,6 +47,7 @@
 //! See DESIGN.md §10 for the full layout / dispatch / policy writeup and
 //! `cargo bench --bench hotpath` for achieved GFLOP/s vs the scalar kernel.
 
+use crate::util::blob::BlobVec;
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
@@ -127,6 +128,15 @@ pub fn force_backend(backend: Option<GemmBackend>) {
 /// A `K x N` GEMM right-hand operand packed into [`NR`]-wide column panels
 /// (see the module docs). Packed once per weight at engine compile time, or
 /// per call (into a reused thread-local) on the non-engine paths.
+///
+/// # On-disk layout (`.sdprog` `packed_b` blobs)
+///
+/// The payload's in-memory order **is** the artifact order: `panels() * k *
+/// NR` little-endian `f32` values at `(p * k + kk) * NR + j`, zero past
+/// column `n` — no header, `k`/`n` live in the artifact manifest. Blobs are
+/// placed at 64-byte-aligned file offsets so a loaded buffer can be viewed
+/// in place; storage is a [`BlobVec`] to permit exactly that borrow in the
+/// zero-copy load mode.
 #[derive(Clone, Debug, Default)]
 pub struct PackedB {
     /// contraction length (rows of the unpacked operand)
@@ -135,7 +145,7 @@ pub struct PackedB {
     pub n: usize,
     /// `panels() * k * NR` values: panel `p`, row `kk`, lane `j` at
     /// `(p * k + kk) * NR + j`, zero past column `n`
-    data: Vec<f32>,
+    data: BlobVec<f32>,
 }
 
 impl PackedB {
@@ -157,19 +167,63 @@ impl PackedB {
         self.k = k;
         self.n = n;
         let panels = n.div_ceil(NR);
-        self.data.clear();
-        self.data.resize(panels * k * NR, 0.0);
+        let data = self.data.owned_mut();
+        data.clear();
+        data.resize(panels * k * NR, 0.0);
         for p in 0..panels {
             let col0 = p * NR;
             let cols = NR.min(n - col0);
             for kk in 0..k {
                 let src = kk * n + col0;
                 let dst = (p * k + kk) * NR;
-                self.data[dst..dst + cols].copy_from_slice(&b[src..src + cols]);
+                data[dst..dst + cols].copy_from_slice(&b[src..src + cols]);
                 // lanes past `cols` stay zero: the kernel computes them and
                 // the store step drops them
             }
         }
+    }
+
+    /// Adopt an already-packed payload (the artifact loader's copy path).
+    /// `None` when `data.len()` is not the `panels * k * NR` the shape
+    /// requires.
+    pub fn from_parts(k: usize, n: usize, data: Vec<f32>) -> Option<PackedB> {
+        if data.len() != PackedB::packed_len(k, n) {
+            return None;
+        }
+        Some(PackedB {
+            k,
+            n,
+            data: BlobVec::Owned(data),
+        })
+    }
+
+    /// Borrow an already-packed payload in place from a shared artifact
+    /// buffer (the zero-copy load path; caller has verified the checksum
+    /// and that the bytes are native-endian `f32`s). `None` on a bounds,
+    /// alignment, or length mismatch.
+    pub fn from_shared(
+        k: usize,
+        n: usize,
+        buf: std::sync::Arc<crate::util::blob::AlignedBytes>,
+        off_bytes: usize,
+    ) -> Option<PackedB> {
+        let len = PackedB::packed_len(k, n);
+        Some(PackedB {
+            k,
+            n,
+            data: BlobVec::shared(buf, off_bytes, len)?,
+        })
+    }
+
+    /// The packed payload in its on-disk element order (see the type docs).
+    pub fn raw(&self) -> &[f32] {
+        self.data.as_slice()
+    }
+
+    /// Packed element count the panel layout requires for a `k x n`
+    /// operand — the artifact loader's length cross-check.
+    pub fn packed_len(k: usize, n: usize) -> usize {
+        n.div_ceil(NR) * k * NR
     }
 
     /// Number of [`NR`]-wide panels.
@@ -187,13 +241,14 @@ impl PackedB {
     /// packed form instead of carrying a second f32 copy of the weights.
     pub fn unpack(&self) -> Vec<f32> {
         let mut b = vec![0.0f32; self.k * self.n];
+        let data = self.data.as_slice();
         for p in 0..self.panels() {
             let col0 = p * NR;
             let cols = NR.min(self.n - col0);
             for kk in 0..self.k {
                 let src = (p * self.k + kk) * NR;
                 b[kk * self.n + col0..kk * self.n + col0 + cols]
-                    .copy_from_slice(&self.data[src..src + cols]);
+                    .copy_from_slice(&data[src..src + cols]);
             }
         }
         b
@@ -202,7 +257,7 @@ impl PackedB {
     /// One panel's `k * NR` slice.
     #[inline]
     fn panel(&self, p: usize) -> &[f32] {
-        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+        &self.data.as_slice()[p * self.k * NR..(p + 1) * self.k * NR]
     }
 }
 

@@ -1,0 +1,211 @@
+//! Aligned shared byte buffers and typed views — the substrate of the
+//! `.sdprog` artifact loader's zero-copy mode.
+//!
+//! [`AlignedBytes`] owns a byte buffer whose base address is at least
+//! 8-byte aligned (it is backed by a `Vec<u64>`), so any blob placed at a
+//! 64-byte-aligned *file* offset can be reinterpreted in place as `f32` /
+//! `u32` / `i8` elements without copying. [`BlobVec<T>`] is the
+//! owned-or-borrowed payload storage the packed GEMM operands
+//! ([`crate::tensor::gemm::PackedB`], [`crate::quant::QPackedB`]) use: an
+//! ordinary `Vec<T>` when packed in process, or an `Arc`-shared slice of a
+//! loaded artifact's blob region when `Program::load` runs in zero-copy
+//! mode.
+//!
+//! The in-place views read the bytes at **native** endianness; the
+//! `.sdprog` format is little-endian, so the artifact loader only takes
+//! the shared path on little-endian targets (the copy path decodes with
+//! explicit `from_le_bytes` and works everywhere).
+
+use std::io::Read;
+use std::sync::Arc;
+
+/// An immutable byte buffer with at least 8-byte base alignment.
+pub struct AlignedBytes {
+    /// backing storage; `u64` gives the 8-byte base alignment
+    words: Vec<u64>,
+    /// logical byte length (the tail of the last word is padding)
+    len: usize,
+}
+
+impl AlignedBytes {
+    /// Copy `bytes` into a fresh aligned buffer.
+    pub fn from_bytes(bytes: &[u8]) -> AlignedBytes {
+        let mut a = AlignedBytes::zeroed(bytes.len());
+        a.bytes_mut().copy_from_slice(bytes);
+        a
+    }
+
+    /// Read exactly `len` bytes from `r` into a fresh aligned buffer.
+    pub fn read_exact_from(r: &mut impl Read, len: usize) -> std::io::Result<AlignedBytes> {
+        let mut a = AlignedBytes::zeroed(len);
+        r.read_exact(a.bytes_mut())?;
+        Ok(a)
+    }
+
+    fn zeroed(len: usize) -> AlignedBytes {
+        AlignedBytes {
+            words: vec![0u64; len.div_ceil(std::mem::size_of::<u64>())],
+            len,
+        }
+    }
+
+    fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: the Vec<u64> owns at least `len` initialized bytes and
+        // u8 has no alignment requirement.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut u8, self.len) }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: as above, shared borrow.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBytes({} bytes)", self.len)
+    }
+}
+
+/// Element types that may be viewed in place inside an [`AlignedBytes`].
+///
+/// # Safety
+///
+/// Implementors must be plain-old-data: any byte pattern is a valid value
+/// and the type has no padding or drop glue.
+pub unsafe trait BlobElem: Copy + 'static {}
+unsafe impl BlobElem for f32 {}
+unsafe impl BlobElem for i8 {}
+unsafe impl BlobElem for u32 {}
+
+/// Owned-or-shared element storage for packed operand payloads.
+#[derive(Clone, Debug)]
+pub enum BlobVec<T: BlobElem> {
+    /// an ordinary in-process buffer (the pack-time form)
+    Owned(Vec<T>),
+    /// a borrowed window of a shared aligned buffer (the zero-copy
+    /// artifact-load form); `off`/`len` are in elements of `T` over a
+    /// construction-time-validated range
+    Shared {
+        buf: Arc<AlignedBytes>,
+        off_bytes: usize,
+        len: usize,
+    },
+}
+
+impl<T: BlobElem> Default for BlobVec<T> {
+    fn default() -> Self {
+        BlobVec::Owned(Vec::new())
+    }
+}
+
+impl<T: BlobElem> BlobVec<T> {
+    /// Borrow `len` elements starting `off_bytes` into `buf`, without
+    /// copying. `None` when the window is out of bounds or the element
+    /// alignment does not hold at that address.
+    pub fn shared(buf: Arc<AlignedBytes>, off_bytes: usize, len: usize) -> Option<BlobVec<T>> {
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off_bytes.checked_add(bytes)?;
+        if end > buf.len() {
+            return None;
+        }
+        let addr = buf.as_bytes().as_ptr() as usize + off_bytes;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(BlobVec::Shared { buf, off_bytes, len })
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            BlobVec::Owned(v) => v,
+            BlobVec::Shared { buf, off_bytes, len } => {
+                // SAFETY: bounds and alignment were validated in
+                // `shared`; the Arc keeps the buffer alive for &self's
+                // lifetime; T is plain-old-data (BlobElem contract).
+                unsafe {
+                    std::slice::from_raw_parts(
+                        buf.as_bytes().as_ptr().add(*off_bytes) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            BlobVec::Owned(v) => v.len(),
+            BlobVec::Shared { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The owned vector, converting a shared view into an owned copy
+    /// first — the mutation entry point for the `pack_into` buffer-reuse
+    /// paths (which only ever run on owned storage in practice).
+    pub fn owned_mut(&mut self) -> &mut Vec<T> {
+        if let BlobVec::Shared { .. } = self {
+            *self = BlobVec::Owned(self.as_slice().to_vec());
+        }
+        match self {
+            BlobVec::Owned(v) => v,
+            BlobVec::Shared { .. } => unreachable!("converted to Owned above"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_bytes_roundtrip_and_alignment() {
+        let src: Vec<u8> = (0..100u8).collect();
+        let a = AlignedBytes::from_bytes(&src);
+        assert_eq!(a.as_bytes(), &src[..]);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.as_bytes().as_ptr() as usize % 8, 0, "8-byte base alignment");
+    }
+
+    #[test]
+    fn shared_view_reads_in_place() {
+        let floats = [1.0f32, -2.5, 3.25];
+        let mut bytes = vec![0u8; 4]; // 4-byte offset keeps f32 alignment
+        for f in floats {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        let buf = Arc::new(AlignedBytes::from_bytes(&bytes));
+        let v: BlobVec<f32> = BlobVec::shared(buf.clone(), 4, 3).unwrap();
+        if cfg!(target_endian = "little") {
+            assert_eq!(v.as_slice(), &floats);
+        }
+        assert_eq!(v.len(), 3);
+        // out of bounds and misaligned windows are refused
+        assert!(BlobVec::<f32>::shared(buf.clone(), 4, 4).is_none());
+        assert!(BlobVec::<f32>::shared(buf.clone(), 5, 1).is_none());
+        // i8 has no alignment requirement
+        assert!(BlobVec::<i8>::shared(buf, 5, 3).is_some());
+    }
+
+    #[test]
+    fn owned_mut_detaches_shared_views() {
+        let buf = Arc::new(AlignedBytes::from_bytes(&[1, 2, 3, 4]));
+        let mut v: BlobVec<i8> = BlobVec::shared(buf, 0, 4).unwrap();
+        let before: Vec<i8> = v.as_slice().to_vec();
+        v.owned_mut().push(5);
+        assert_eq!(&v.as_slice()[..4], &before[..]);
+        assert_eq!(v.len(), 5);
+    }
+}

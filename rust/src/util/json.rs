@@ -1,9 +1,12 @@
-//! Minimal JSON parser — substrate for reading `artifacts/manifest.json`.
+//! Minimal JSON parser and encoder — substrate for reading
+//! `artifacts/manifest.json` and for the `.sdprog` artifact manifest.
 //!
 //! The offline registry carries no serde/serde_json, so this implements the
 //! small subset of JSON the AOT manifest uses (objects, arrays, strings,
 //! numbers, bools, null) with proper string escapes. Parse errors carry the
-//! byte offset for debugging.
+//! byte offset for debugging. The encoder is deterministic: object keys are
+//! emitted in `BTreeMap` order, so the same `Json` value always serializes
+//! to the same bytes — the property the artifact bit-identity gate rests on.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -59,6 +62,74 @@ impl Json {
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(Json::as_usize).unwrap_or(default)
     }
+
+    /// Deterministic compact serialization: object keys emit in `BTreeMap`
+    /// order, numbers via `f64`'s shortest-round-trip `Display` (integers
+    /// print without a fractional part), strings with the escapes [`parse`]
+    /// understands. `parse(v.encode())` reconstructs `v` exactly for every
+    /// finite value.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    fn encode_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                // JSON has no Infinity/NaN; the manifest never produces
+                // them, so map to null rather than emit invalid bytes.
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => encode_str(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.encode_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    encode_str(k, out);
+                    out.push(':');
+                    x.encode_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn encode_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -313,5 +384,38 @@ mod tests {
     fn nested_empty() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn encode_round_trips_and_is_deterministic() {
+        let src = r#"{"blobs":[{"len":1024,"sha256":"ab\"c","kind":"packed_b"}],"scale":0.0078125,"neg":-3.5e-9,"version":1,"nul":null,"ok":true,"esc":"a\n\tb"}"#;
+        let v = parse(src).unwrap();
+        let enc = v.encode();
+        assert_eq!(parse(&enc).unwrap(), v, "parse(encode(v)) == v");
+        assert_eq!(parse(&enc).unwrap().encode(), enc, "encode is a fixpoint");
+        // integers print without a fractional part; keys are sorted
+        assert_eq!(Json::Num(1.0).encode(), "1");
+        let mut m = BTreeMap::new();
+        m.insert("b".to_string(), Json::Num(2.0));
+        m.insert("a".to_string(), Json::Num(1.0));
+        assert_eq!(Json::Obj(m).encode(), r#"{"a":1,"b":2}"#);
+    }
+
+    #[test]
+    fn encode_f32_scales_exactly() {
+        // in_scale values are f32; f32 -> f64 -> Display -> parse -> f32
+        // must be lossless for the bit-identity gate.
+        for s in [0.003921569f32, 1.0 / 3.0, f32::MIN_POSITIVE, 127.0] {
+            let enc = Json::Num(s as f64).encode();
+            let back = parse(&enc).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back.to_bits(), s.to_bits(), "{s} via {enc}");
+        }
+    }
+
+    #[test]
+    fn encode_control_chars() {
+        let v = Json::Str("\u{1}x".to_string());
+        assert_eq!(v.encode(), r#""\u0001x""#);
+        assert_eq!(parse(&v.encode()).unwrap(), v);
     }
 }

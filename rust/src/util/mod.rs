@@ -1,8 +1,11 @@
 //! Small substrates the offline environment lacks crates for:
-//! deterministic RNG, a minimal JSON parser, timing helpers.
+//! deterministic RNG, a minimal JSON parser/encoder, SHA-256,
+//! aligned blob storage, timing helpers.
 
+pub mod blob;
 pub mod json;
 pub mod rng;
+pub mod sha256;
 
 use std::time::Instant;
 

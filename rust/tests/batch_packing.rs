@@ -132,6 +132,51 @@ fn continuous_fill_never_exceeds_max_batch_and_preserves_fifo() {
 }
 
 #[test]
+fn elapsed_budget_still_dispatches_queued_items_without_blocking() {
+    // Property: a zero or already-elapsed fill budget bounds only the
+    // wait for NOT-YET-ARRIVED items — everything already queued is
+    // dispatched immediately, and an empty lane returns at once rather
+    // than parking on the condvar.
+    let mut rng = Rng::new(33);
+    for round in 0..100 {
+        let n = 1 + rng.below(32);
+        let max_batch = 1 + rng.below(12);
+        let q: LaneQueue<u32> = LaneQueue::new(1, 64);
+        for i in 0..n {
+            q.try_push(0, i as u32).ok().unwrap();
+        }
+        // a deadline firmly in the past: the budget is spent before fill
+        // is even called
+        let now = Instant::now();
+        let stale = now.checked_sub(Duration::from_secs(5)).unwrap_or(now);
+        let (lane, first) = q.pop_any().unwrap();
+        let mut batch = vec![first];
+        let t0 = Instant::now();
+        let appended = q.fill(lane, &mut batch, max_batch, stale);
+        let elapsed = t0.elapsed();
+        let want = max_batch.min(n) - 1; // first already popped
+        assert_eq!(
+            appended, want,
+            "round {round} (n={n}, max_batch={max_batch}): stale budget must take ready work"
+        );
+        assert_eq!(batch.len(), 1 + want, "never an empty/short batch while work sits queued");
+        assert_eq!(batch, (0..batch.len() as u32).collect::<Vec<_>>(), "drain stays FIFO");
+        assert!(elapsed < Duration::from_millis(250), "elapsed budget must not block: {elapsed:?}");
+    }
+
+    // empty lane + elapsed budget: return 0 immediately, no condvar park
+    let q: LaneQueue<u32> = LaneQueue::new(1, 8);
+    let mut batch: Vec<u32> = Vec::new();
+    let now = Instant::now();
+    let stale = now.checked_sub(Duration::from_millis(1)).unwrap_or(now);
+    let t0 = Instant::now();
+    let appended = q.fill(0, &mut batch, 4, stale);
+    assert_eq!(appended, 0);
+    assert!(batch.is_empty());
+    assert!(t0.elapsed() < Duration::from_millis(250), "empty lane must not block on stale budget");
+}
+
+#[test]
 fn continuous_fill_budget_is_absolute_even_under_straggler_trickle() {
     let q: Arc<LaneQueue<u32>> = Arc::new(LaneQueue::new(1, 1024));
     q.try_push(0, 0).ok().unwrap();

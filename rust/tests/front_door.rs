@@ -189,6 +189,52 @@ fn malformed_bytes_get_400_and_the_server_keeps_serving() {
 }
 
 #[test]
+fn content_length_abuse_is_rejected_without_hanging_the_server() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+    let addr = door.addr();
+
+    // one raw request -> the status line of the response
+    let raw_status = |req: &[u8]| -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(TIMEOUT)).unwrap();
+        s.write_all(req).unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf).into_owned();
+        text.lines().next().unwrap_or_default().to_string()
+    };
+
+    // a Content-Length that overflows usize must be a clean 400 — not a
+    // panic in parse, not an attempted allocation
+    let overflow = raw_status(
+        b"POST /v1/generate/tiny HTTP/1.1\r\nContent-Length: 99999999999999999999999999\r\n\r\n",
+    );
+    assert!(overflow.starts_with("HTTP/1.1 400"), "overflowing length: {overflow:?}");
+
+    // duplicate Content-Length headers that disagree are a request
+    // smuggling vector: reject, never silently pick one
+    let dup = raw_status(
+        b"POST /v1/generate/tiny HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 5\r\n\r\nabcde",
+    );
+    assert!(dup.starts_with("HTTP/1.1 400"), "conflicting lengths: {dup:?}");
+
+    // signed/garnished numbers are rejected (a bare parse::<usize> would
+    // admit "+3")
+    let signed = raw_status(b"POST /v1/generate/tiny HTTP/1.1\r\nContent-Length: +3\r\n\r\nabc");
+    assert!(signed.starts_with("HTTP/1.1 400"), "signed length: {signed:?}");
+
+    // a bodied method with no Content-Length at all answers 411 — not a
+    // hang waiting for bytes that never come
+    let none = raw_status(b"POST /v1/generate/tiny HTTP/1.1\r\n\r\n");
+    assert!(none.starts_with("HTTP/1.1 411"), "missing length: {none:?}");
+
+    // ...and none of that abuse took the listener down
+    let ok = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny?seed=4", &[], &[]).unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.text());
+    door.shutdown();
+}
+
+#[test]
 fn client_disconnect_mid_request_leaves_the_server_healthy() {
     let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
 

@@ -42,6 +42,17 @@ impl Error {
         let head: &(dyn StdError + 'static) = self.inner.as_ref();
         Chain { next: Some(head) }
     }
+
+    /// Downcast to a concrete error type anywhere in the cause chain
+    /// (context wrappers are transparent, as with real `anyhow`).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.chain().find_map(|e| e.downcast_ref::<E>())
+    }
+
+    /// Whether the cause chain contains an `E` (see [`Error::downcast_ref`]).
+    pub fn is<E: StdError + 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
+    }
 }
 
 impl fmt::Display for Error {
@@ -206,6 +217,14 @@ mod tests {
         assert_eq!(format!("{e}"), "reading manifest");
         assert_eq!(format!("{e:#}"), "reading manifest: missing");
         assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn downcast_sees_through_context() {
+        let e: Error = Err::<(), _>(io_err()).context("loading artifact").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("chain downcast");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
     }
 
     #[test]
