@@ -26,6 +26,9 @@ struct Inner {
     compute_us_total: u64,
     worker_batches: Vec<u64>,
     worker_served: Vec<u64>,
+    /// per-worker time spent forming + computing batches (µs) — the
+    /// cumulative numerator of the busy-fraction gauges
+    worker_busy_us: Vec<u64>,
     lane_served: Vec<u64>,
 }
 
@@ -40,10 +43,17 @@ impl Default for Inner {
             compute_us_total: 0,
             worker_batches: Vec::new(),
             worker_served: Vec::new(),
+            worker_busy_us: Vec::new(),
             lane_served: Vec::new(),
         }
     }
 }
+
+/// How many per-lane shed/expired slots `Metrics::new` pre-sizes when the
+/// lane count is not given explicitly — enough for the six benchmark
+/// models with headroom. Lanes beyond the pre-sized slots still count in
+/// the global totals.
+const DEFAULT_LANE_SLOTS: usize = 8;
 
 /// Shared, thread-safe metrics sink.
 #[derive(Debug, Default)]
@@ -61,6 +71,19 @@ pub struct Metrics {
     /// requests dropped by a dispatcher because their deadline expired
     /// BEFORE compute (the request never reached the executor)
     expired: AtomicU64,
+    /// per-lane shed counters (index = lane id; fixed at construction so
+    /// the shed path stays lock-free — lanes beyond the pre-sized slots
+    /// fall back to the global counter only)
+    lane_shed: Vec<AtomicU64>,
+    /// per-lane expired-deadline counters (same layout as `lane_shed`)
+    lane_expired: Vec<AtomicU64>,
+    /// requests currently inside the coordinator: incremented on accepted
+    /// submit, decremented at each resolution (response, expiry,
+    /// batch-failure disconnect). Lock-free: both ends are hot paths.
+    in_flight: AtomicU64,
+    /// stall observations by the serving watchdog (one per stalled worker
+    /// per scan — keeps counting while the stall persists)
+    watchdog_stalls: AtomicU64,
     /// end-to-end latency per request (submit → response send), the
     /// distribution behind p50/p95/p99. Lock-free, fixed footprint.
     latency: Histogram,
@@ -75,20 +98,40 @@ pub struct Metrics {
 impl Metrics {
     /// A sink with the per-worker counters pre-sized to `workers` (they
     /// also grow on demand, so `Metrics::default()` still works for one-off
-    /// use).
+    /// use) and [`DEFAULT_LANE_SLOTS`] per-lane shed/expired slots.
     pub fn new(workers: usize) -> Metrics {
-        let m = Metrics::default();
+        Metrics::with_lanes(workers, DEFAULT_LANE_SLOTS)
+    }
+
+    /// [`Metrics::new`] with an explicit per-lane counter count — the
+    /// multi-tenant server passes its real lane count.
+    pub fn with_lanes(workers: usize, lanes: usize) -> Metrics {
+        let m = Metrics {
+            lane_shed: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            lane_expired: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            ..Metrics::default()
+        };
         {
             let mut i = m.inner.lock().unwrap();
             i.worker_batches = vec![0; workers];
             i.worker_served = vec![0; workers];
+            i.worker_busy_us = vec![0; workers];
         }
         m
     }
 
     /// Record one executed batch of `size` requests from model lane
-    /// `lane`, dispatched by `worker`.
-    pub fn record_batch(&self, worker: usize, lane: usize, size: usize, compute_us: u64) {
+    /// `lane`, dispatched by `worker`. `busy_us` is the worker's wall
+    /// time on this batch (form + compute) for the busy-fraction gauges;
+    /// callers without a form sample pass `compute_us` again.
+    pub fn record_batch(
+        &self,
+        worker: usize,
+        lane: usize,
+        size: usize,
+        compute_us: u64,
+        busy_us: u64,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.served += size as u64;
@@ -97,9 +140,11 @@ impl Metrics {
         if m.worker_batches.len() <= worker {
             m.worker_batches.resize(worker + 1, 0);
             m.worker_served.resize(worker + 1, 0);
+            m.worker_busy_us.resize(worker + 1, 0);
         }
         m.worker_batches[worker] += 1;
         m.worker_served[worker] += size as u64;
+        m.worker_busy_us[worker] += busy_us;
         if m.lane_served.len() <= lane {
             m.lane_served.resize(lane + 1, 0);
         }
@@ -112,14 +157,41 @@ impl Metrics {
         self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
-    /// Count one admission-control shed (queue full at submit). Lock-free.
-    pub fn record_shed(&self) {
+    /// Count one admission-control shed (queue full at submit) against
+    /// `lane`. Lock-free.
+    pub fn record_shed(&self, lane: usize) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.lane_shed.get(lane) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
-    /// Count one expired-deadline drop (request dropped before compute).
-    pub fn record_expired(&self) {
+    /// Count one expired-deadline drop (request dropped before compute)
+    /// against `lane`. Lock-free.
+    pub fn record_expired(&self, lane: usize) {
         self.expired.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.lane_expired.get(lane) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One request entered the coordinator (accepted submit). Lock-free.
+    pub fn inc_in_flight(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request left the coordinator (response sent, deadline expiry,
+    /// or batch-failure disconnect). Lock-free; saturates at zero so a
+    /// stray double-decrement can never wrap the gauge.
+    pub fn dec_in_flight(&self) {
+        let _ = self
+            .in_flight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    /// Count one watchdog stall observation. Lock-free.
+    pub fn record_watchdog_stall(&self) {
+        self.watchdog_stalls.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one request's end-to-end latency. Lock-free, O(1) memory:
@@ -171,10 +243,25 @@ impl Metrics {
             },
             worker_batches: m.worker_batches.clone(),
             worker_served: m.worker_served.clone(),
+            worker_busy_us: m.worker_busy_us.clone(),
+            uptime_s: elapsed,
             lane_served: m.lane_served.clone(),
+            lane_shed: self
+                .lane_shed
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            lane_expired: self
+                .lane_expired
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            lane_depth: Vec::new(),
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            watchdog_stalls: self.watchdog_stalls.load(Ordering::Relaxed),
             latency_hist,
             queue_hist,
             compute_hist,
@@ -201,15 +288,36 @@ pub struct MetricsSnapshot {
     pub worker_batches: Vec<u64>,
     /// requests served per dispatcher worker (index = worker id)
     pub worker_served: Vec<u64>,
+    /// cumulative µs each worker spent forming + computing batches —
+    /// divided by `uptime_s` this is the lifetime busy fraction (the
+    /// journal-backed rolling-window variant lives on `/metrics` when a
+    /// flight recorder is attached)
+    pub worker_busy_us: Vec<u64>,
+    /// seconds since the metrics sink was created
+    pub uptime_s: f64,
     /// requests served per model lane (index = lane id; empty until the
     /// first batch of that lane completes)
     pub lane_served: Vec<u64>,
+    /// admission-control sheds per lane (index = lane id)
+    pub lane_shed: Vec<u64>,
+    /// expired-deadline drops per lane (index = lane id)
+    pub lane_expired: Vec<u64>,
+    /// CURRENT queued requests per lane — a live gauge, not a watermark.
+    /// Filled by [`crate::coordinator::Server::metrics`] from the lane
+    /// queue (empty when the snapshot came straight from `Metrics`).
+    pub lane_depth: Vec<u64>,
     /// highest queue depth observed at submit time (<= `queue_cap` always)
     pub max_queue_depth: u64,
     /// admission-control sheds (queue full at submit; each one answered)
     pub shed: u64,
     /// expired-deadline drops (removed before compute)
     pub expired: u64,
+    /// requests currently inside the coordinator (accepted, not yet
+    /// resolved) — a live gauge
+    pub in_flight: u64,
+    /// stall observations by the serving watchdog (0 when no watchdog
+    /// is attached)
+    pub watchdog_stalls: u64,
     /// end-to-end latency distribution (bucket counts; Prometheus
     /// exposition renders these as cumulative `_bucket` series)
     pub latency_hist: HistogramSnapshot,
@@ -239,8 +347,8 @@ mod tests {
     #[test]
     fn batch_accounting() {
         let m = Metrics::new(2);
-        m.record_batch(0, 0, 4, 100);
-        m.record_batch(1, 1, 2, 50);
+        m.record_batch(0, 0, 4, 100, 120);
+        m.record_batch(1, 1, 2, 50, 50);
         m.record_latency(10);
         m.record_latency(20);
         m.record_latency(30);
@@ -260,33 +368,63 @@ mod tests {
         assert_eq!(s.latency_hist.sum_us, 60);
         assert_eq!(s.worker_batches, vec![1, 1]);
         assert_eq!(s.worker_served, vec![4, 2]);
+        assert_eq!(s.worker_busy_us, vec![120, 50]);
         assert_eq!(s.lane_served, vec![4, 2]);
         assert_eq!(s.max_queue_depth, 3);
         assert_eq!(s.shed, 0);
         assert_eq!(s.expired, 0);
+        assert_eq!(s.in_flight, 0);
+        assert_eq!(s.watchdog_stalls, 0);
+        assert!(s.uptime_s >= 0.0);
     }
 
     #[test]
     fn worker_counters_grow_on_demand() {
         let m = Metrics::default();
-        m.record_batch(3, 2, 5, 10);
+        m.record_batch(3, 2, 5, 10, 12);
         let s = m.snapshot();
         assert_eq!(s.worker_batches, vec![0, 0, 0, 1]);
         assert_eq!(s.worker_served, vec![0, 0, 0, 5]);
+        assert_eq!(s.worker_busy_us, vec![0, 0, 0, 12]);
         assert_eq!(s.lane_served, vec![0, 0, 5]);
     }
 
     #[test]
     fn shed_and_expired_counters() {
         let m = Metrics::new(1);
-        m.record_shed();
-        m.record_shed();
-        m.record_expired();
+        m.record_shed(0);
+        m.record_shed(1);
+        m.record_expired(1);
         let s = m.snapshot();
         assert_eq!(s.shed, 2);
         assert_eq!(s.expired, 1);
+        assert_eq!(&s.lane_shed[..2], &[1, 1]);
+        assert_eq!(&s.lane_expired[..2], &[0, 1]);
         assert!(s.summary().contains("shed=2"));
         assert!(s.summary().contains("expired=1"));
+    }
+
+    #[test]
+    fn lane_counters_out_of_range_fall_back_to_global() {
+        let m = Metrics::with_lanes(1, 2);
+        m.record_shed(99);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 1, "global total always counts");
+        assert_eq!(s.lane_shed, vec![0, 0]);
+    }
+
+    #[test]
+    fn in_flight_gauge_never_wraps() {
+        let m = Metrics::new(1);
+        m.inc_in_flight();
+        m.inc_in_flight();
+        m.dec_in_flight();
+        assert_eq!(m.snapshot().in_flight, 1);
+        m.dec_in_flight();
+        m.dec_in_flight(); // extra decrement saturates at zero
+        assert_eq!(m.snapshot().in_flight, 0);
+        m.record_watchdog_stall();
+        assert_eq!(m.snapshot().watchdog_stalls, 1);
     }
 
     #[test]

@@ -35,8 +35,9 @@
 pub mod executor;
 pub mod metrics;
 pub mod queue;
+pub mod watchdog;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -45,11 +46,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::engine::{DeconvImpl, Precision, Program};
+use crate::obs::journal::{EventKind, Journal};
 use crate::obs::{self, LayerStages, Span, StageSink};
 
 pub use executor::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor, PjrtExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{BoundedQueue, LaneQueue, PopDeadline, PushError};
+pub use watchdog::WatchdogConfig;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -93,6 +96,17 @@ pub struct ServerConfig {
     /// engine stage sinks entirely — the knob the serving bench's
     /// tracing-overhead gate compares against (DESIGN.md §12).
     pub record_spans: bool,
+    /// the flight recorder (DESIGN.md §14): when set, the submit path
+    /// and every dispatcher emit compact journal events (enqueue,
+    /// batch-form, dispatch, compute, respond, shed, expire) that
+    /// `/debug/trace` and `repro trace` export as a Perfetto timeline.
+    /// `None` (the default) follows the zero-overhead contract: no
+    /// journal ⇒ no event timestamps taken anywhere on the hot path.
+    pub journal: Option<Arc<Journal>>,
+    /// spawn the serving watchdog ([`watchdog::WatchdogConfig`]) —
+    /// requires `journal` (the watchdog scans it); ignored with a
+    /// logged warning otherwise.
+    pub watchdog: Option<WatchdogConfig>,
 }
 
 impl Default for ServerConfig {
@@ -105,6 +119,8 @@ impl Default for ServerConfig {
             workers: 1,
             precision: Precision::F32,
             record_spans: true,
+            journal: None,
+            watchdog: None,
         }
     }
 }
@@ -224,6 +240,10 @@ pub struct Server {
     models: Vec<String>,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
+    cfg: Arc<ServerConfig>,
+    /// raised before joining so the watchdog thread (in `handles` like
+    /// the dispatchers) exits promptly
+    watchdog_stop: Arc<AtomicBool>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -260,7 +280,7 @@ impl Server {
         }
         let workers = cfg.workers.max(1);
         let queue = Arc::new(LaneQueue::new(lanes.len(), cfg.queue_cap));
-        let metrics = Arc::new(Metrics::new(workers));
+        let metrics = Arc::new(Metrics::with_lanes(workers, lanes.len()));
         let models: Vec<String> = lanes.iter().map(|l| l.name.clone()).collect();
         let lanes = Arc::new(lanes);
         let cfg = Arc::new(cfg);
@@ -315,11 +335,44 @@ impl Server {
                 return Err(e);
             }
         }
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        match (&cfg.watchdog, &cfg.journal) {
+            (Some(wcfg), Some(journal)) => {
+                let wcfg = *wcfg;
+                let journal = journal.clone();
+                let queue2 = queue.clone();
+                let metrics2 = metrics.clone();
+                let stop = watchdog_stop.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("sd-watchdog".to_string())
+                    .spawn(move || watchdog::run(&queue2, &metrics2, &journal, wcfg, &stop));
+                match spawned {
+                    Ok(h) => handles.push(h),
+                    Err(e) => {
+                        queue.close();
+                        for h in handles {
+                            let _ = h.join();
+                        }
+                        return Err(e.into());
+                    }
+                }
+            }
+            (Some(_), None) => {
+                obs::log::warn(
+                    "coordinator",
+                    "watchdog configured without a journal — not started",
+                    &[],
+                );
+            }
+            _ => {}
+        }
         Ok(Server {
             queue,
             models,
             next_id: AtomicU64::new(0),
             metrics,
+            cfg,
+            watchdog_stop,
             handles: Mutex::new(handles),
         })
     }
@@ -415,23 +468,31 @@ impl Server {
             return Err(SubmitError::UnknownModel);
         }
         let (resp_tx, resp_rx) = mpsc::channel();
+        let trace_id = opts.trace_id.unwrap_or_else(obs::trace::mint_trace_id);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             lane,
             z,
             submitted: Instant::now(),
             deadline: opts.deadline,
-            trace_id: opts.trace_id.unwrap_or_else(obs::trace::mint_trace_id),
+            trace_id,
             traced: opts.trace_stages,
             resp: resp_tx,
         };
         match self.queue.try_push(lane, req) {
             Ok(depth) => {
                 self.metrics.note_queue_depth(depth);
+                self.metrics.inc_in_flight();
+                if let Some(j) = &self.cfg.journal {
+                    j.emit(EventKind::Enqueue, lane as u16, 0, depth as u64, trace_id);
+                }
                 Ok(resp_rx)
             }
             Err(PushError::Full(_)) => {
-                self.metrics.record_shed();
+                self.metrics.record_shed(lane);
+                if let Some(j) = &self.cfg.journal {
+                    j.emit(EventKind::Shed, lane as u16, 0, 0, trace_id);
+                }
                 Err(SubmitError::Full)
             }
             Err(PushError::Closed(_)) => Err(SubmitError::Closed),
@@ -448,27 +509,48 @@ impl Server {
     /// Submit to lane 0, blocking while the queue is full.
     pub fn submit_blocking(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
         let (resp_tx, resp_rx) = mpsc::channel();
+        let trace_id = obs::trace::mint_trace_id();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             lane: 0,
             z,
             submitted: Instant::now(),
             deadline: None,
-            trace_id: obs::trace::mint_trace_id(),
+            trace_id,
             traced: false,
             resp: resp_tx,
         };
         match self.queue.push(0, req) {
             Ok(depth) => {
                 self.metrics.note_queue_depth(depth);
+                self.metrics.inc_in_flight();
+                if let Some(j) = &self.cfg.journal {
+                    j.emit(EventKind::Enqueue, 0, 0, depth as u64, trace_id);
+                }
                 Ok(resp_rx)
             }
             Err(_) => Err(anyhow!("server stopped")),
         }
     }
 
+    /// Metrics snapshot with the live per-lane queue depths filled in
+    /// (the raw `Metrics` sink cannot see the queue).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut s = self.metrics.snapshot();
+        s.lane_depth = (0..self.queue.lane_count())
+            .map(|l| self.queue.len(l) as u64)
+            .collect();
+        s
+    }
+
+    /// The flight recorder, when one was configured.
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.cfg.journal.as_ref()
+    }
+
+    /// The configuration this server was started with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
     }
 
     /// Stop accepting new requests, then wait for the workers to drain the
@@ -479,6 +561,7 @@ impl Server {
     /// rust/tests/front_door.rs).
     pub fn shutdown(&self) {
         self.queue.close();
+        self.watchdog_stop.store(true, Ordering::Relaxed);
         let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
         for h in handles {
             let _ = h.join();
@@ -489,6 +572,7 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.queue.close();
+        self.watchdog_stop.store(true, Ordering::Relaxed);
         if let Ok(handles) = self.handles.get_mut() {
             for h in handles.drain(..) {
                 let _ = h.join();
@@ -510,12 +594,22 @@ fn dispatch_loop(
     cfg: &ServerConfig,
     metrics: &Metrics,
 ) {
+    let journal = cfg.journal.as_deref();
     loop {
         let (lane, first) = match queue.pop_any() {
             Some(x) => x,
             None => return, // closed and fully drained
         };
-        let t_form = if cfg.record_spans { Some(Instant::now()) } else { None };
+        // the journal shares record_spans' zero-overhead contract: both
+        // knobs off ⇒ no Instant sample here (DESIGN.md §12/§14)
+        let t_form = if cfg.record_spans || journal.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        };
+        if let Some(j) = journal {
+            j.emit(EventKind::BatchFormBegin, lane as u16, 0, 0, first.trace_id);
+        }
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.batch_timeout;
         queue.fill(lane, &mut batch, cfg.max_batch, deadline);
@@ -530,8 +624,12 @@ fn dispatch_loop(
                 Some(d) => d > now,
                 None => true,
             });
-        for _ in &expired {
-            metrics.record_expired();
+        for r in &expired {
+            metrics.record_expired(lane);
+            metrics.dec_in_flight();
+            if let Some(j) = journal {
+                j.emit(EventKind::DeadlineExpire, lane as u16, 0, 0, r.trace_id);
+            }
         }
         drop(expired);
         if live.is_empty() {
@@ -539,17 +637,36 @@ fn dispatch_loop(
         }
 
         // batch_form covers the continuous-batcher fill + expiry triage;
-        // zero (and unsampled) when record_spans is off
+        // zero (and unsampled) when both record_spans and the journal
+        // are off
         let batch_form_us = match t_form {
             Some(t) => t.elapsed().as_micros() as u64,
             None => 0,
         };
+        if let Some(j) = journal {
+            j.emit(
+                EventKind::BatchFormEnd,
+                lane as u16,
+                live.len().min(u16::MAX as usize) as u16,
+                batch_form_us,
+                live[0].trace_id,
+            );
+        }
         let zs: Vec<Vec<f32>> = live.iter().map(|r| r.z.clone()).collect();
         // stage tracing is strictly opt-in per request AND gated on the
         // server-wide record_spans knob: a batch with no traced request
         // runs the exact untraced compute path (DESIGN.md §12)
         let want_stages = cfg.record_spans && live.iter().any(|r| r.traced);
         let mut sink = if want_stages { Some(StageSink::new()) } else { None };
+        if let Some(j) = journal {
+            j.emit(
+                EventKind::Dispatch,
+                lane as u16,
+                live.len().min(u16::MAX as usize) as u16,
+                0,
+                live[0].trace_id,
+            );
+        }
         let t0 = Instant::now();
         let result = match sink.as_mut() {
             Some(s) => execs[lane].execute_traced(&zs, Some(s)),
@@ -559,8 +676,42 @@ fn dispatch_loop(
             Ok(images) => {
                 let t_done = Instant::now();
                 let compute_us = (t_done - t0).as_micros() as u64;
-                metrics.record_batch(worker, lane, live.len(), compute_us);
+                metrics.record_batch(
+                    worker,
+                    lane,
+                    live.len(),
+                    compute_us,
+                    batch_form_us + compute_us,
+                );
                 let stages: Option<Arc<Vec<LayerStages>>> = sink.map(|s| Arc::new(s.layers));
+                if let Some(j) = journal {
+                    j.emit(
+                        EventKind::ComputeEnd,
+                        lane as u16,
+                        live.len().min(u16::MAX as usize) as u16,
+                        compute_us,
+                        0,
+                    );
+                    // one Stage event per nonzero (layer, stage) cell of
+                    // the batch's sink — the exporter re-times them
+                    // inside the compute slice
+                    if let Some(rows) = &stages {
+                        for (idx, row) in rows.iter().enumerate().take(1 << 14) {
+                            let cells = [
+                                (0u16, row.im2col_us),
+                                (1, row.gemm_us),
+                                (2, row.epilogue_us),
+                                (3, row.interleave_us),
+                            ];
+                            for (code, us) in cells {
+                                if us > 0 {
+                                    let aux = ((idx as u16) << 2) | code;
+                                    j.emit(EventKind::Stage, lane as u16, aux, us, 0);
+                                }
+                            }
+                        }
+                    }
+                }
                 for (req, image) in live.into_iter().zip(images) {
                     // sample elapsed() exactly once per request and derive
                     // queue time from it — re-sampling could attribute the
@@ -588,6 +739,10 @@ fn dispatch_loop(
                         Span::default()
                     };
                     metrics.record_request_latency(total_us, queue_us, compute_us);
+                    metrics.dec_in_flight();
+                    if let Some(j) = journal {
+                        j.emit(EventKind::Respond, lane as u16, 0, total_us, req.trace_id);
+                    }
                     let _ = req.resp.send(Response {
                         id: req.id,
                         image,
@@ -601,6 +756,12 @@ fn dispatch_loop(
             }
             Err(e) => {
                 metrics.record_error();
+                for req in &live {
+                    metrics.dec_in_flight();
+                    if let Some(j) = journal {
+                        j.emit(EventKind::Disconnect, lane as u16, 0, 0, req.trace_id);
+                    }
+                }
                 // drop the responders: receivers observe disconnection,
                 // and only THIS batch's requests are affected — the loop
                 // (and the rest of the pool) keeps serving

@@ -1,0 +1,262 @@
+//! The serving watchdog: a low-frequency scanner over the flight
+//! recorder and the live queue/metrics that turns "the server went
+//! quiet" into a structured diagnosis (DESIGN.md §14).
+//!
+//! Every `interval` it looks for two failure shapes:
+//!
+//! * **stalled worker** — a dispatcher thread that has emitted no
+//!   journal event for longer than `stall_after` while work is queued.
+//!   A healthy idle pool is silent too, so the queue-non-empty condition
+//!   is what separates "nothing to do" from "not doing it".
+//! * **over-age in-flight request** — a trace id that enqueued longer
+//!   than `max_request_age` ago with no terminal event (respond, expiry,
+//!   disconnect) in the journal: the request is stuck inside a batch,
+//!   usually behind a wedged executor.
+//!
+//! Each detection logs one `obs::log` warning per scan with the
+//! offending thread/trace id and increments
+//! `Metrics.watchdog_stalls` (exported as
+//! `repro_watchdog_stalls_total`) — the counter keeps growing while the
+//! condition persists, so its *rate* is the alarm signal.
+//!
+//! The watchdog requires a journal: it is spawned by
+//! [`super::Server::start_multi_with`] only when both
+//! `ServerConfig.journal` and `ServerConfig.watchdog` are set.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::obs::journal::{monotonic_us, EventKind, Journal};
+use crate::obs::log;
+
+use super::metrics::Metrics;
+use super::queue::LaneQueue;
+
+/// Watchdog thresholds. Defaults are deliberately conservative for
+/// production (a 5 s silent worker with queued work is wedged, not
+/// slow); tests shrink them to milliseconds to exercise detection.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// how often to scan
+    pub interval: Duration,
+    /// a dispatcher silent for longer than this, while work is queued,
+    /// is reported as stalled
+    pub stall_after: Duration,
+    /// an in-flight request older than this with no terminal journal
+    /// event is reported as stuck
+    pub max_request_age: Duration,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> WatchdogConfig {
+        WatchdogConfig {
+            interval: Duration::from_millis(500),
+            stall_after: Duration::from_secs(5),
+            max_request_age: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One scan's findings (returned for tests; the thread loop logs and
+/// counts them).
+#[derive(Clone, Debug, Default)]
+pub struct ScanReport {
+    /// (thread name, idle µs) per stalled dispatcher
+    pub stalled_workers: Vec<(String, u64)>,
+    /// (trace id, age µs) per over-age in-flight request
+    pub overage_requests: Vec<(u64, u64)>,
+}
+
+/// One watchdog scan over the journal. Pure with respect to the journal
+/// (read-only snapshot); `queued` is the live queue depth and `born_us`
+/// the watchdog's start time — a dispatcher that has never emitted is
+/// judged idle since `born_us`, not since the process epoch, so a
+/// freshly started server cannot false-positive.
+pub fn scan(journal: &Journal, cfg: &WatchdogConfig, queued: usize, born_us: u64) -> ScanReport {
+    let now = monotonic_us();
+    let events = journal.snapshot();
+    let stall_us = cfg.stall_after.as_micros() as u64;
+    let max_age_us = cfg.max_request_age.as_micros() as u64;
+
+    let mut last_by_tid: BTreeMap<u16, u64> = BTreeMap::new();
+    for e in &events {
+        let t = last_by_tid.entry(e.tid).or_insert(0);
+        *t = (*t).max(e.ts_us);
+    }
+
+    let mut report = ScanReport::default();
+    if queued > 0 {
+        for (tid, name) in journal.thread_names() {
+            if !name.starts_with("sd-dispatcher") {
+                continue;
+            }
+            let last = last_by_tid.get(&tid).copied().unwrap_or(0).max(born_us);
+            let idle = now.saturating_sub(last);
+            if idle > stall_us {
+                report.stalled_workers.push((name, idle));
+            }
+        }
+    }
+
+    // Over-age in-flight: enqueued, no terminal event. The journal is a
+    // bounded window, so a very old Enqueue can have been evicted — the
+    // watchdog then under-reports, never false-positives.
+    let mut open: BTreeMap<u64, u64> = BTreeMap::new(); // trace id -> enqueue ts
+    let mut closed: BTreeSet<u64> = BTreeSet::new();
+    for e in &events {
+        if e.trace_id == 0 {
+            continue;
+        }
+        match e.kind {
+            EventKind::Enqueue => {
+                open.entry(e.trace_id).or_insert(e.ts_us);
+            }
+            EventKind::Respond | EventKind::DeadlineExpire | EventKind::Disconnect => {
+                closed.insert(e.trace_id);
+            }
+            _ => {}
+        }
+    }
+    for (trace_id, ts) in open {
+        if closed.contains(&trace_id) {
+            continue;
+        }
+        let age = now.saturating_sub(ts);
+        if age > max_age_us {
+            report.overage_requests.push((trace_id, age));
+        }
+    }
+    report
+}
+
+/// The watchdog thread body: scan every `cfg.interval` until `stop` is
+/// set, logging and counting each finding. Sleeps in short chunks so
+/// shutdown never waits a full interval.
+pub(crate) fn run<T>(
+    queue: &LaneQueue<T>,
+    metrics: &Metrics,
+    journal: &Journal,
+    cfg: WatchdogConfig,
+    stop: &AtomicBool,
+) {
+    let born_us = monotonic_us();
+    let chunk = Duration::from_millis(25).min(cfg.interval);
+    loop {
+        let mut slept = Duration::ZERO;
+        while slept < cfg.interval {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let queued = queue.total_len();
+        let report = scan(journal, &cfg, queued, born_us);
+        for (name, idle_us) in &report.stalled_workers {
+            metrics.record_watchdog_stall();
+            log::warn(
+                "watchdog",
+                "stalled worker: no journal event while work is queued",
+                &[
+                    ("worker", name.clone()),
+                    ("idle_us", idle_us.to_string()),
+                    ("queued", queued.to_string()),
+                    ("stall_after_us", (cfg.stall_after.as_micros()).to_string()),
+                ],
+            );
+        }
+        for (trace_id, age_us) in &report.overage_requests {
+            metrics.record_watchdog_stall();
+            log::warn(
+                "watchdog",
+                "over-age in-flight request: enqueued but never resolved",
+                &[
+                    ("trace_id", trace_id.to_string()),
+                    ("age_us", age_us.to_string()),
+                    (
+                        "max_request_age_us",
+                        (cfg.max_request_age.as_micros()).to_string(),
+                    ),
+                ],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::JournalConfig;
+
+    fn tiny_cfg() -> WatchdogConfig {
+        WatchdogConfig {
+            interval: Duration::from_millis(10),
+            stall_after: Duration::from_millis(1),
+            max_request_age: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn scan_flags_silent_dispatcher_only_when_work_is_queued() {
+        let j = Journal::new(JournalConfig {
+            rings: 2,
+            ring_capacity: 64,
+        });
+        // Emit one event from a thread named like a dispatcher, then go
+        // silent past the stall threshold.
+        let j2 = j.clone();
+        std::thread::Builder::new()
+            .name("sd-dispatcher-0".to_string())
+            .spawn(move || j2.emit(EventKind::Dispatch, 0, 1, 0, 0))
+            .unwrap()
+            .join()
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let report = scan(&j, &tiny_cfg(), 3, 0);
+        assert_eq!(report.stalled_workers.len(), 1, "{report:?}");
+        assert!(report.stalled_workers[0].0.starts_with("sd-dispatcher"));
+        // Same silence with an empty queue is a healthy idle pool.
+        let report = scan(&j, &tiny_cfg(), 0, 0);
+        assert!(report.stalled_workers.is_empty(), "{report:?}");
+    }
+
+    #[test]
+    fn scan_flags_unresolved_overage_request() {
+        let j = Journal::new(JournalConfig {
+            rings: 1,
+            ring_capacity: 64,
+        });
+        j.emit(EventKind::Enqueue, 0, 0, 1, 77); // never resolves
+        j.emit(EventKind::Enqueue, 0, 0, 2, 78);
+        j.emit(EventKind::Respond, 0, 0, 500, 78); // resolves
+        std::thread::sleep(Duration::from_millis(5));
+        let report = scan(&j, &tiny_cfg(), 0, 0);
+        let ids: Vec<u64> = report.overage_requests.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![77], "{report:?}");
+    }
+
+    #[test]
+    fn fresh_watchdog_does_not_flag_a_worker_that_never_emitted() {
+        let j = Journal::new(JournalConfig {
+            rings: 1,
+            ring_capacity: 64,
+        });
+        let j2 = j.clone();
+        std::thread::Builder::new()
+            .name("sd-dispatcher-1".to_string())
+            .spawn(move || j2.emit(EventKind::Dispatch, 0, 1, 0, 0))
+            .unwrap()
+            .join()
+            .unwrap();
+        // born "now": even though the dispatcher's one event is old by
+        // the tiny threshold, a watchdog born this instant must wait a
+        // full stall_after before judging.
+        std::thread::sleep(Duration::from_millis(5));
+        let report = scan(&j, &tiny_cfg(), 1, monotonic_us());
+        assert!(report.stalled_workers.is_empty(), "{report:?}");
+    }
+}

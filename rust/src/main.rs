@@ -40,6 +40,16 @@
 //!           one row per layer, im2col/GEMM/epilogue/interleave columns
 //!           (mean us over N). --json writes BENCH_profile.json-style
 //!           machine-readable rows via the shared bench harness sink.
+//!   trace   [--model name] [--requests N] [--batch B] [--workers W]
+//!           [--precision f32|int8] [-o path.json]
+//!           run N requests through a journal-equipped native server and
+//!           export the flight recorder as Chrome trace-event JSON
+//!           (Perfetto / chrome://tracing; DESIGN.md section 14), or
+//!   trace --check FILE [--min-events N]
+//!           validate an exported trace (the CI schema gate): parses the
+//!           JSON, checks per-track timestamp monotonicity and that every
+//!           flow id resolves, and optionally enforces a minimum event
+//!           count.
 //!   simulate <network> <nzp|sd> [--policy P] [--arch dot|2d]
 //!
 //! (Arg parsing is hand-rolled: the offline registry has no clap.)
@@ -54,9 +64,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
-use split_deconv::coordinator::{Server, ServerConfig};
+use split_deconv::coordinator::{Server, ServerConfig, WatchdogConfig};
 use split_deconv::engine::{DeconvImpl, LoadMode, Plan, Precision, Program};
-use split_deconv::obs::StageSink;
+use split_deconv::obs::{Journal, StageSink};
 use split_deconv::report;
 use split_deconv::runtime::{artifacts_available, default_artifact_dir, Engine};
 use split_deconv::server::{FrontDoor, FrontDoorConfig};
@@ -66,6 +76,9 @@ use split_deconv::util::rng::Rng;
 use split_deconv::{commodity, networks};
 
 fn main() {
+    // Anchor the shared monotonic epoch (journal timestamps + obs::log
+    // ts_us) at process start, before any thread exists.
+    let _ = split_deconv::obs::monotonic_us();
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
@@ -87,13 +100,14 @@ fn run(args: &[String]) -> Result<()> {
         Some("compile") => compile_cmd(args),
         Some("serve") => serve_cmd(args),
         Some("profile") => profile_cmd(args),
+        Some("trace") => trace_cmd(args),
         Some("simulate") => simulate_cmd(args),
         Some(other) => {
-            bail!("unknown command {other}; try report/verify/compile/serve/profile/simulate")
+            bail!("unknown command {other}; try report/verify/compile/serve/profile/trace/simulate")
         }
         None => {
             println!("repro — split deconvolution reproduction");
-            println!("usage: repro <report|verify|compile|serve|profile|simulate> ...");
+            println!("usage: repro <report|verify|compile|serve|profile|trace|simulate> ...");
             Ok(())
         }
     }
@@ -305,6 +319,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         workers,
         precision,
         record_spans: true,
+        journal: None,
+        watchdog: None,
     };
     let artifact_dir = flag_value(args, "--artifact-dir");
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
@@ -402,6 +418,11 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
         .map(Duration::from_millis);
     let serve_secs: Option<u64> = flag_value(args, "--serve-secs").and_then(|s| s.parse().ok());
 
+    // The network front door always flies with the recorder on: the
+    // journal is fixed-memory and its emit path is wait-free, and it is
+    // what makes `/debug/trace` + the stall watchdog available in
+    // production (DESIGN.md §14).
+    let journal = Journal::with_defaults();
     let scfg = ServerConfig {
         max_batch,
         batch_timeout: Duration::from_millis(2),
@@ -410,6 +431,8 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
         workers,
         precision,
         record_spans: true,
+        journal: Some(journal),
+        watchdog: Some(WatchdogConfig::default()),
     };
     let fcfg = FrontDoorConfig {
         listen: listen.to_string(),
@@ -444,6 +467,7 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
         );
     }
     println!("  GET  /v1/models | /metrics (JSON; ?format=prom for Prometheus) | /healthz");
+    println!("  GET  /debug/trace?ms=N  (flight recorder as Chrome trace JSON — open in Perfetto)");
     match serve_secs {
         Some(secs) => {
             println!("serving for {secs}s (--serve-secs), then draining...");
@@ -533,6 +557,94 @@ fn profile_cmd(args: &[String]) -> Result<()> {
         "TOTAL", "", "", "", "", grand_total / n, 100.0
     );
     json.write("profile");
+    Ok(())
+}
+
+/// `repro trace`: the flight recorder end to end from the CLI. Without
+/// `--check`, runs N requests through a journal-equipped native server
+/// and writes the recorder's contents as Chrome trace-event JSON (open
+/// the file in Perfetto / `chrome://tracing`). With `--check FILE`, acts
+/// as the CI schema gate instead: validates an exported trace without
+/// running anything.
+fn trace_cmd(args: &[String]) -> Result<()> {
+    if let Some(path) = flag_value(args, "--check") {
+        let min_events: usize = flag_value(args, "--min-events")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let src = std::fs::read_to_string(path)?;
+        let stats = split_deconv::obs::validate_chrome_trace(&src)
+            .map_err(|e| anyhow::anyhow!("{path}: invalid chrome trace: {e}"))?;
+        println!(
+            "{path}: valid chrome trace — {} events, {} tracks, {} flows",
+            stats.events, stats.tracks, stats.flows
+        );
+        if stats.events < min_events {
+            bail!("{path}: only {} events (< --min-events {min_events})", stats.events);
+        }
+        return Ok(());
+    }
+
+    let model = flag_value(args, "--model").unwrap_or("dcgan").to_string();
+    let requests: usize = flag_value(args, "--requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16)
+        .max(1);
+    let max_batch: usize = flag_value(args, "--batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let workers: usize = flag_value(args, "--workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let precision = match flag_value(args, "--precision") {
+        None => Precision::F32,
+        Some(p) => Precision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {p}; expected f32 or int8"))?,
+    };
+    let net = networks::by_name_or_err(&model)?;
+    let slug = networks::slug(net.name);
+    let journal = Journal::with_defaults();
+    let cfg = ServerConfig {
+        max_batch,
+        batch_timeout: Duration::from_millis(2),
+        queue_cap: 128,
+        model,
+        workers,
+        precision,
+        record_spans: true,
+        journal: Some(journal.clone()),
+        watchdog: None,
+    };
+    let z_len = net.input_elems();
+    eprintln!(
+        "tracing {} ({}, SD path): {requests} request(s), max batch {max_batch}, \
+         {workers} worker(s)",
+        net.name,
+        precision.label()
+    );
+    let server = Server::start_native(cfg, 7)?;
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        pending.push(server.submit_blocking(rng.normal_vec(z_len))?);
+    }
+    for rx in pending {
+        rx.recv()?;
+    }
+    server.shutdown();
+
+    let events = journal.snapshot();
+    let lanes = vec![slug];
+    let json = split_deconv::obs::chrome_trace_json(&events, &journal.thread_names(), &lanes);
+    match flag_value(args, "-o").or_else(|| flag_value(args, "--out")) {
+        Some(path) => {
+            std::fs::write(path, json.as_bytes())?;
+            eprintln!(
+                "wrote {path}: {} events from the journal (open in Perfetto / chrome://tracing)",
+                events.len()
+            );
+        }
+        None => println!("{json}"),
+    }
     Ok(())
 }
 

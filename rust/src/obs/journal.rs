@@ -1,0 +1,915 @@
+//! The flight recorder: a process-wide, fixed-memory event journal.
+//!
+//! `Journal` is a pool of lock-free ring buffers. Each emitting thread is
+//! lazily assigned a ring (its own while rings are free, hash-shared once
+//! the pool is exhausted — the claim protocol stays correct under multiple
+//! writers) and appends compact binary events with a wait-free
+//! `fetch_add` + field stores + a `Release` sequence publish. Memory is
+//! bounded at construction: once a ring laps, the oldest events are
+//! overwritten in place — the recorder always holds the most recent
+//! window, which is exactly what a post-incident timeline needs.
+//!
+//! Every event carries a monotonic microsecond timestamp (shared process
+//! epoch, see [`monotonic_us`]), the emitting thread's compact id, a lane
+//! index, an event kind, and two payload words (`aux`/`arg`/`trace_id`).
+//! `snapshot()` is a reader-side scan that validates per-slot sequence
+//! numbers, so a concurrent writer can at worst cause a slot to be
+//! skipped, never a torn event to be returned. (One theoretical
+//! exception: a writer stalled mid-store for a full ring lap can leave
+//! one event attributed to the wrong sequence — acceptable for a
+//! diagnostic recorder, impossible to hit in practice at 4096-slot
+//! rings.)
+//!
+//! The zero-overhead contract (DESIGN.md §12/§14): the serving stack
+//! holds the journal as `Option<Arc<Journal>>` and checks it **before**
+//! taking any timestamp. No journal configured ⇒ no clock reads, no
+//! atomics, no allocation.
+//!
+//! On top of the raw event stream:
+//! * [`chrome_trace_json`] exports a snapshot as Chrome trace-event JSON
+//!   (loadable in Perfetto / `chrome://tracing`): one track per thread,
+//!   one per lane, duration slices for batch-form/compute/engine stages,
+//!   flow arrows admission→respond keyed by trace id, and a queue-depth
+//!   counter track.
+//! * [`validate_chrome_trace`] is the schema check CI runs on captured
+//!   traces (valid JSON, monotone `ts` per track, every flow id
+//!   resolves).
+
+use crate::util::json::{self, Json};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// The shared monotonic epoch: first call wins, everything in the
+/// process (journal timestamps, `obs::log` `ts_us` prefixes) measures
+/// from it. `main` touches it on startup so "since process start" is
+/// accurate, but any first caller anchors it correctly for tests.
+pub fn process_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`process_epoch`]. Monotonic, process-wide.
+pub fn monotonic_us() -> u64 {
+    process_epoch().elapsed().as_micros() as u64
+}
+
+/// Lane value for events that are not tied to a model lane.
+pub const NO_LANE: u16 = u16::MAX;
+
+/// What happened. Kept to one byte in the packed slot word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Front door accepted a TCP connection.
+    Accept = 1,
+    /// Front door admitted a generate request into the coordinator.
+    Admit = 2,
+    /// Request rejected at queue-full (503). `lane` is the target lane.
+    Shed = 3,
+    /// Front door returned a 4xx/5xx without reaching compute.
+    /// `aux` = HTTP status.
+    HttpError = 4,
+    /// Request enqueued on a lane. `arg` = queue depth after the push,
+    /// `trace_id` set.
+    Enqueue = 5,
+    /// Dispatcher began forming a batch on `lane`.
+    BatchFormBegin = 6,
+    /// Batch formed. `aux` = batch size, `arg` = form duration (µs).
+    BatchFormEnd = 7,
+    /// Request dropped before compute: its deadline passed in queue.
+    DeadlineExpire = 8,
+    /// Batch handed to the executor. `aux` = batch size.
+    Dispatch = 9,
+    /// Executor returned. `aux` = batch size, `arg` = compute µs.
+    ComputeEnd = 10,
+    /// Response sent back to the submitter. `arg` = total latency µs,
+    /// `trace_id` set.
+    Respond = 11,
+    /// Request terminated without a response (batch execution error).
+    Disconnect = 12,
+    /// One engine stage of one layer, from the `StageSink` rows.
+    /// `aux` = `layer_idx << 2 | stage` (stage: 0 im2col, 1 gemm,
+    /// 2 epilogue, 3 interleave), `arg` = stage µs.
+    Stage = 13,
+}
+
+impl EventKind {
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match v {
+            1 => Accept,
+            2 => Admit,
+            3 => Shed,
+            4 => HttpError,
+            5 => Enqueue,
+            6 => BatchFormBegin,
+            7 => BatchFormEnd,
+            8 => DeadlineExpire,
+            9 => Dispatch,
+            10 => ComputeEnd,
+            11 => Respond,
+            12 => Disconnect,
+            13 => Stage,
+            _ => return None,
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        use EventKind::*;
+        match self {
+            Accept => "accept",
+            Admit => "admit",
+            Shed => "shed",
+            HttpError => "http_error",
+            Enqueue => "enqueue",
+            BatchFormBegin => "batch_form_begin",
+            BatchFormEnd => "batch_form_end",
+            DeadlineExpire => "deadline_expire",
+            Dispatch => "dispatch",
+            ComputeEnd => "compute_end",
+            Respond => "respond",
+            Disconnect => "disconnect",
+            Stage => "stage",
+        }
+    }
+}
+
+/// One decoded journal event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Microseconds since [`process_epoch`].
+    pub ts_us: u64,
+    pub kind: EventKind,
+    /// Compact per-journal thread id (see [`Journal::thread_names`]).
+    pub tid: u16,
+    /// Lane index, or [`NO_LANE`].
+    pub lane: u16,
+    /// Kind-specific small payload (batch size, HTTP status, …).
+    pub aux: u16,
+    /// Kind-specific wide payload (durations in µs, queue depth, …).
+    pub arg: u64,
+    /// End-to-end request trace id, or 0.
+    pub trace_id: u64,
+}
+
+/// `kind | tid | lane | aux` packed into one atomic word so a slot is
+/// five `AtomicU64` stores and the reader can validate with one load.
+fn pack_meta(kind: EventKind, tid: u16, lane: u16, aux: u16) -> u64 {
+    (kind as u64) | ((tid as u64) << 8) | ((lane as u64) << 24) | ((aux as u64) << 40)
+}
+
+fn unpack_meta(meta: u64) -> Option<(EventKind, u16, u16, u16)> {
+    let kind = EventKind::from_u8((meta & 0xff) as u8)?;
+    Some((
+        kind,
+        ((meta >> 8) & 0xffff) as u16,
+        ((meta >> 24) & 0xffff) as u16,
+        ((meta >> 40) & 0xffff) as u16,
+    ))
+}
+
+/// One event slot. `seq` is written last with `Release`: a reader that
+/// observes `seq == pos + 1` with `Acquire` sees the other four fields
+/// of that write.
+struct Slot {
+    seq: AtomicU64,
+    ts: AtomicU64,
+    meta: AtomicU64,
+    arg: AtomicU64,
+    trace: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            ts: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            arg: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One ring. `head` counts claims forever; slot index is `pos % cap`.
+/// The head is padded to a cache line so rings assigned to different
+/// threads never false-share their hot counter.
+struct Ring {
+    head: AtomicU64,
+    _pad: [u64; 7],
+    slots: Box<[Slot]>,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring {
+            head: AtomicU64::new(0),
+            _pad: [0; 7],
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+        }
+    }
+}
+
+/// Journal sizing. Defaults hold the last ~128k events in ~5 MB.
+#[derive(Clone, Copy, Debug)]
+pub struct JournalConfig {
+    /// Number of rings in the pool (threads beyond this share).
+    pub rings: usize,
+    /// Slots per ring; the retained window per thread.
+    pub ring_capacity: usize,
+}
+
+impl Default for JournalConfig {
+    fn default() -> JournalConfig {
+        JournalConfig {
+            rings: 32,
+            ring_capacity: 4096,
+        }
+    }
+}
+
+/// The flight recorder. Construct once, share as `Arc<Journal>`; see
+/// the module docs for the writer/reader protocol.
+pub struct Journal {
+    /// Distinguishes journals so a thread's cached ring assignment from
+    /// a dropped journal is never applied to a new one.
+    id: u64,
+    rings: Vec<Ring>,
+    next_tid: AtomicU32,
+    names: Mutex<Vec<(u16, String)>>,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("rings", &self.rings.len())
+            .field("ring_capacity", &self.ring_capacity())
+            .field("emitted", &self.emitted())
+            .finish()
+    }
+}
+
+thread_local! {
+    /// Per-thread cache of (journal id → (tid, ring index)). A thread
+    /// touches at most a couple of journals (production: one), so a
+    /// linear scan beats any map.
+    static RING_OF: RefCell<Vec<(u64, u16, usize)>> = const { RefCell::new(Vec::new()) };
+}
+
+impl Journal {
+    pub fn new(cfg: JournalConfig) -> Arc<Journal> {
+        static IDS: AtomicU64 = AtomicU64::new(1);
+        let rings = cfg.rings.max(1);
+        let cap = cfg.ring_capacity.max(8);
+        Arc::new(Journal {
+            id: IDS.fetch_add(1, Ordering::Relaxed),
+            rings: (0..rings).map(|_| Ring::new(cap)).collect(),
+            next_tid: AtomicU32::new(0),
+            names: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn with_defaults() -> Arc<Journal> {
+        Journal::new(JournalConfig::default())
+    }
+
+    fn ring_capacity(&self) -> usize {
+        self.rings[0].slots.len()
+    }
+
+    /// Register the calling thread (first emit does this implicitly).
+    /// Returns (tid, ring index).
+    fn register(&self) -> (u16, usize) {
+        let tid = self.next_tid.fetch_add(1, Ordering::Relaxed).min(0xfffe) as u16;
+        let ring = (tid as usize) % self.rings.len();
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        self.names.lock().unwrap().push((tid, name));
+        (tid, ring)
+    }
+
+    /// Append one event. Wait-free on the hot path: a thread-local
+    /// lookup, one clock read, one `fetch_add`, five stores.
+    pub fn emit(&self, kind: EventKind, lane: u16, aux: u16, arg: u64, trace_id: u64) {
+        let (tid, ring_idx) = RING_OF.with(|cache| {
+            let mut cache = cache.borrow_mut();
+            if let Some(&(_, tid, ring)) = cache.iter().find(|&&(id, _, _)| id == self.id) {
+                return (tid, ring);
+            }
+            let (tid, ring) = self.register();
+            cache.push((self.id, tid, ring));
+            (tid, ring)
+        });
+        let ts = monotonic_us();
+        let ring = &self.rings[ring_idx];
+        let pos = ring.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &ring.slots[(pos % ring.slots.len() as u64) as usize];
+        slot.ts.store(ts, Ordering::Relaxed);
+        slot.meta.store(pack_meta(kind, tid, lane, aux), Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+        slot.trace.store(trace_id, Ordering::Relaxed);
+        slot.seq.store(pos + 1, Ordering::Release);
+    }
+
+    /// Decode every retained event, sorted by timestamp. Safe against
+    /// concurrent writers: slots whose sequence number does not match
+    /// the expected position (mid-write or already overwritten) are
+    /// skipped.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let cap = self.ring_capacity() as u64;
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            let head = ring.head.load(Ordering::Acquire);
+            let start = head.saturating_sub(cap);
+            for pos in start..head {
+                let slot = &ring.slots[(pos % cap) as usize];
+                if slot.seq.load(Ordering::Acquire) != pos + 1 {
+                    continue;
+                }
+                let ts = slot.ts.load(Ordering::Relaxed);
+                let meta = slot.meta.load(Ordering::Relaxed);
+                let arg = slot.arg.load(Ordering::Relaxed);
+                let trace = slot.trace.load(Ordering::Relaxed);
+                // Re-validate: if a writer lapped us mid-read the fields
+                // above may be torn — drop the slot.
+                if slot.seq.load(Ordering::Acquire) != pos + 1 {
+                    continue;
+                }
+                if let Some((kind, tid, lane, aux)) = unpack_meta(meta) {
+                    out.push(Event {
+                        ts_us: ts,
+                        kind,
+                        tid,
+                        lane,
+                        aux,
+                        arg,
+                        trace_id: trace,
+                    });
+                }
+            }
+        }
+        out.sort_by_key(|e| e.ts_us);
+        out
+    }
+
+    /// Events with `ts_us >= since_us`, sorted by timestamp.
+    pub fn snapshot_since(&self, since_us: u64) -> Vec<Event> {
+        let mut events = self.snapshot();
+        events.retain(|e| e.ts_us >= since_us);
+        events
+    }
+
+    /// (tid, thread name) for every thread that has emitted.
+    pub fn thread_names(&self) -> Vec<(u16, String)> {
+        self.names.lock().unwrap().clone()
+    }
+
+    /// Total events ever claimed across all rings (including those
+    /// already overwritten).
+    pub fn emitted(&self) -> u64 {
+        self.rings
+            .iter()
+            .map(|r| r.head.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Upper bound on retained events (rings × capacity).
+    pub fn capacity_events(&self) -> usize {
+        self.rings.len() * self.ring_capacity()
+    }
+
+    /// Fixed memory footprint of the slot arrays — the O(1)-RSS bound
+    /// the wraparound property test asserts against.
+    pub fn footprint_bytes(&self) -> usize {
+        self.capacity_events() * std::mem::size_of::<Slot>()
+            + self.rings.len() * std::mem::size_of::<Ring>()
+    }
+
+    /// Rolling busy fraction per worker thread over `[now-window, now]`:
+    /// the sum of batch-form and compute slice durations (clipped to the
+    /// window) divided by the window. Keyed by journal tid.
+    pub fn busy_fractions(&self, window_us: u64, now_us: u64) -> BTreeMap<u16, f64> {
+        let start = now_us.saturating_sub(window_us);
+        let mut busy: BTreeMap<u16, u64> = BTreeMap::new();
+        for e in self.snapshot_since(start.saturating_sub(window_us)) {
+            let dur = match e.kind {
+                EventKind::ComputeEnd | EventKind::BatchFormEnd => e.arg,
+                _ => continue,
+            };
+            let end = e.ts_us.min(now_us);
+            let begin = e.ts_us.saturating_sub(dur).max(start);
+            if end > begin {
+                *busy.entry(e.tid).or_insert(0) += end - begin;
+            }
+        }
+        busy.iter()
+            .map(|(&tid, &us)| (tid, (us as f64 / window_us.max(1) as f64).min(1.0)))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export (Perfetto / chrome://tracing)
+// ---------------------------------------------------------------------------
+
+/// Synthetic track ids for lane tracks (real thread tids are compact
+/// small integers, so this base cannot collide).
+const LANE_TID_BASE: u64 = 50_000;
+
+const STAGE_NAMES: [&str; 4] = ["im2col", "gemm", "epilogue", "interleave"];
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn meta_thread_name(tid: u64, name: &str) -> Json {
+    obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str("thread_name".into())),
+        ("pid", num(1)),
+        ("tid", num(tid)),
+        (
+            "args",
+            obj(vec![("name", Json::Str(name.to_string()))]),
+        ),
+    ])
+}
+
+fn lane_name(lanes: &[String], lane: u16) -> String {
+    lanes
+        .get(lane as usize)
+        .cloned()
+        .unwrap_or_else(|| format!("lane{lane}"))
+}
+
+/// Export a journal snapshot as Chrome trace-event JSON.
+///
+/// * one named track per emitting thread (`threads` from
+///   [`Journal::thread_names`]) and per lane (`lanes` = model names in
+///   lane order);
+/// * `X` duration slices for batch-form, compute, and per-layer engine
+///   stages (stages re-timed sequentially from the compute slice start);
+/// * `s`/`f` flow arrows from `Enqueue` to `Respond`, emitted only for
+///   trace ids with both endpoints in the snapshot so every flow id in
+///   the output resolves;
+/// * a `C` queue-depth counter per lane, instants for
+///   shed/expire/accept/admit/http-error.
+pub fn chrome_trace_json(events: &[Event], threads: &[(u16, String)], lanes: &[String]) -> String {
+    let mut out: Vec<(u64, Json)> = Vec::with_capacity(events.len() + 16);
+    let mut meta: Vec<Json> = Vec::new();
+
+    meta.push(obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str("process_name".into())),
+        ("pid", num(1)),
+        ("tid", num(0)),
+        ("args", obj(vec![("name", Json::Str("repro".into()))])),
+    ]));
+    for (tid, name) in threads {
+        meta.push(meta_thread_name(*tid as u64, name));
+    }
+    let mut lanes_seen: Vec<u16> = events
+        .iter()
+        .filter(|e| e.lane != NO_LANE)
+        .map(|e| e.lane)
+        .collect();
+    lanes_seen.sort_unstable();
+    lanes_seen.dedup();
+    for lane in &lanes_seen {
+        meta.push(meta_thread_name(
+            LANE_TID_BASE + *lane as u64,
+            &format!("lane:{}", lane_name(lanes, *lane)),
+        ));
+    }
+
+    // Flow endpoints: only ids that both enqueued and responded resolve.
+    let mut enq: BTreeMap<u64, (u64, u16)> = BTreeMap::new();
+    let mut rsp: BTreeMap<u64, (u64, u16)> = BTreeMap::new();
+    for e in events {
+        if e.trace_id == 0 {
+            continue;
+        }
+        match e.kind {
+            EventKind::Enqueue => {
+                enq.entry(e.trace_id).or_insert((e.ts_us, e.tid));
+            }
+            EventKind::Respond => {
+                rsp.entry(e.trace_id).or_insert((e.ts_us, e.tid));
+            }
+            _ => {}
+        }
+    }
+
+    // Stage slices are journaled after their ComputeEnd; re-time them
+    // sequentially from the owning compute slice's start, per thread.
+    let mut stage_cursor: BTreeMap<u16, u64> = BTreeMap::new();
+
+    for e in events {
+        let tid = e.tid as u64;
+        let lane_tid = LANE_TID_BASE + e.lane as u64;
+        let lname = lane_name(lanes, e.lane);
+        match e.kind {
+            EventKind::Accept | EventKind::Admit => {
+                out.push((
+                    e.ts_us,
+                    obj(vec![
+                        ("ph", Json::Str("i".into())),
+                        ("s", Json::Str("t".into())),
+                        ("name", Json::Str(e.kind.label().into())),
+                        ("cat", Json::Str("frontdoor".into())),
+                        ("pid", num(1)),
+                        ("tid", num(tid)),
+                        ("ts", num(e.ts_us)),
+                    ]),
+                ));
+            }
+            EventKind::HttpError => {
+                out.push((
+                    e.ts_us,
+                    obj(vec![
+                        ("ph", Json::Str("i".into())),
+                        ("s", Json::Str("t".into())),
+                        ("name", Json::Str(format!("http {}", e.aux))),
+                        ("cat", Json::Str("frontdoor".into())),
+                        ("pid", num(1)),
+                        ("tid", num(tid)),
+                        ("ts", num(e.ts_us)),
+                    ]),
+                ));
+            }
+            EventKind::Shed | EventKind::DeadlineExpire => {
+                out.push((
+                    e.ts_us,
+                    obj(vec![
+                        ("ph", Json::Str("i".into())),
+                        ("s", Json::Str("t".into())),
+                        ("name", Json::Str(e.kind.label().into())),
+                        ("cat", Json::Str("lane".into())),
+                        ("pid", num(1)),
+                        ("tid", num(lane_tid)),
+                        ("ts", num(e.ts_us)),
+                    ]),
+                ));
+            }
+            EventKind::Enqueue => {
+                out.push((
+                    e.ts_us,
+                    obj(vec![
+                        ("ph", Json::Str("C".into())),
+                        ("name", Json::Str(format!("queue_depth:{lname}"))),
+                        ("pid", num(1)),
+                        ("tid", num(0)),
+                        ("ts", num(e.ts_us)),
+                        ("args", obj(vec![("depth", num(e.arg))])),
+                    ]),
+                ));
+                if let (Some(_), Some(_)) = (enq.get(&e.trace_id), rsp.get(&e.trace_id)) {
+                    out.push((
+                        e.ts_us,
+                        obj(vec![
+                            ("ph", Json::Str("s".into())),
+                            ("name", Json::Str("request".into())),
+                            ("cat", Json::Str("flow".into())),
+                            ("id", num(e.trace_id)),
+                            ("pid", num(1)),
+                            ("tid", num(tid)),
+                            ("ts", num(e.ts_us)),
+                        ]),
+                    ));
+                }
+            }
+            EventKind::BatchFormBegin | EventKind::Dispatch => {
+                // Subsumed by the duration slices below; skip.
+            }
+            EventKind::BatchFormEnd => {
+                out.push((
+                    e.ts_us.saturating_sub(e.arg),
+                    obj(vec![
+                        ("ph", Json::Str("X".into())),
+                        ("name", Json::Str(format!("batch_form {lname}"))),
+                        ("cat", Json::Str("coordinator".into())),
+                        ("pid", num(1)),
+                        ("tid", num(tid)),
+                        ("ts", num(e.ts_us.saturating_sub(e.arg))),
+                        ("dur", num(e.arg.max(1))),
+                        ("args", obj(vec![("batch", num(e.aux as u64))])),
+                    ]),
+                ));
+            }
+            EventKind::ComputeEnd => {
+                let start = e.ts_us.saturating_sub(e.arg);
+                stage_cursor.insert(e.tid, start);
+                out.push((
+                    start,
+                    obj(vec![
+                        ("ph", Json::Str("X".into())),
+                        ("name", Json::Str(format!("compute {lname}"))),
+                        ("cat", Json::Str("coordinator".into())),
+                        ("pid", num(1)),
+                        ("tid", num(tid)),
+                        ("ts", num(start)),
+                        ("dur", num(e.arg.max(1))),
+                        ("args", obj(vec![("batch", num(e.aux as u64))])),
+                    ]),
+                ));
+                // Mirror the batch on the lane track so a lane's whole
+                // history reads top to bottom on one track.
+                out.push((
+                    start,
+                    obj(vec![
+                        ("ph", Json::Str("X".into())),
+                        ("name", Json::Str(format!("batch n={}", e.aux))),
+                        ("cat", Json::Str("lane".into())),
+                        ("pid", num(1)),
+                        ("tid", num(lane_tid)),
+                        ("ts", num(start)),
+                        ("dur", num(e.arg.max(1))),
+                    ]),
+                ));
+            }
+            EventKind::Stage => {
+                let cursor = stage_cursor.entry(e.tid).or_insert(e.ts_us);
+                let layer = e.aux >> 2;
+                let stage = STAGE_NAMES[(e.aux & 3) as usize];
+                if e.arg > 0 {
+                    out.push((
+                        *cursor,
+                        obj(vec![
+                            ("ph", Json::Str("X".into())),
+                            ("name", Json::Str(format!("L{layer} {stage}"))),
+                            ("cat", Json::Str("stage".into())),
+                            ("pid", num(1)),
+                            ("tid", num(tid)),
+                            ("ts", num(*cursor)),
+                            ("dur", num(e.arg)),
+                        ]),
+                    ));
+                    *cursor += e.arg;
+                }
+            }
+            EventKind::Respond => {
+                out.push((
+                    e.ts_us,
+                    obj(vec![
+                        ("ph", Json::Str("X".into())),
+                        ("name", Json::Str("respond".into())),
+                        ("cat", Json::Str("coordinator".into())),
+                        ("pid", num(1)),
+                        ("tid", num(tid)),
+                        ("ts", num(e.ts_us)),
+                        ("dur", num(1)),
+                        ("args", obj(vec![("total_us", num(e.arg))])),
+                    ]),
+                ));
+                if let (Some(_), Some(_)) = (enq.get(&e.trace_id), rsp.get(&e.trace_id)) {
+                    out.push((
+                        e.ts_us,
+                        obj(vec![
+                            ("ph", Json::Str("f".into())),
+                            ("bp", Json::Str("e".into())),
+                            ("name", Json::Str("request".into())),
+                            ("cat", Json::Str("flow".into())),
+                            ("id", num(e.trace_id)),
+                            ("pid", num(1)),
+                            ("tid", num(tid)),
+                            ("ts", num(e.ts_us)),
+                        ]),
+                    ));
+                }
+            }
+            EventKind::Disconnect => {
+                out.push((
+                    e.ts_us,
+                    obj(vec![
+                        ("ph", Json::Str("i".into())),
+                        ("s", Json::Str("t".into())),
+                        ("name", Json::Str("disconnect".into())),
+                        ("cat", Json::Str("coordinator".into())),
+                        ("pid", num(1)),
+                        ("tid", num(tid)),
+                        ("ts", num(e.ts_us)),
+                    ]),
+                ));
+            }
+        }
+    }
+
+    // Global ts sort ⇒ per-track monotone ts, the schema invariant.
+    out.sort_by_key(|(ts, _)| *ts);
+    let mut all = meta;
+    all.extend(out.into_iter().map(|(_, j)| j));
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(all)),
+    ])
+    .encode()
+}
+
+/// Stats returned by a successful [`validate_chrome_trace`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceStats {
+    pub events: usize,
+    pub tracks: usize,
+    pub flows: usize,
+}
+
+/// The Perfetto schema check: `json` must parse, hold a `traceEvents`
+/// array, every non-metadata event must carry numeric `ts` (and `dur`
+/// for `X`), `ts` must be monotone non-decreasing per `(pid, tid)`
+/// track in array order, and every flow start (`s`) id must have a
+/// matching finish (`f`) and vice versa.
+pub fn validate_chrome_trace(src: &str) -> Result<TraceStats, String> {
+    let root = json::parse(src).map_err(|e| format!("invalid JSON: {e:?}"))?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut starts: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut finishes: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut stats = TraceStats {
+        events: events.len(),
+        ..TraceStats::default()
+    };
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("event {i}: missing numeric ts"))?;
+        let pid = ev.get("pid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let tid = ev.get("tid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if let Some(&prev) = last_ts.get(&(pid, tid)) {
+            if ts < prev {
+                return Err(format!(
+                    "event {i}: ts {ts} < {prev} on track ({pid},{tid}) — not monotone"
+                ));
+            }
+        }
+        last_ts.insert((pid, tid), ts);
+        match ph {
+            "X" => {
+                ev.get("dur")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("event {i}: X without numeric dur"))?;
+            }
+            "s" | "f" => {
+                let id = ev
+                    .get("id")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("event {i}: flow without id"))? as u64;
+                let m = if ph == "s" { &mut starts } else { &mut finishes };
+                *m.entry(id).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+    for id in starts.keys() {
+        if !finishes.contains_key(id) {
+            return Err(format!("flow id {id} starts but never finishes"));
+        }
+    }
+    for id in finishes.keys() {
+        if !starts.contains_key(id) {
+            return Err(format!("flow id {id} finishes but never starts"));
+        }
+    }
+    stats.tracks = last_ts.len();
+    stats.flows = starts.len();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_snapshot_round_trip() {
+        let j = Journal::new(JournalConfig {
+            rings: 2,
+            ring_capacity: 64,
+        });
+        j.emit(EventKind::Enqueue, 1, 0, 3, 42);
+        j.emit(EventKind::ComputeEnd, 1, 4, 1500, 0);
+        let events = j.snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, EventKind::Enqueue);
+        assert_eq!(events[0].lane, 1);
+        assert_eq!(events[0].arg, 3);
+        assert_eq!(events[0].trace_id, 42);
+        assert_eq!(events[1].kind, EventKind::ComputeEnd);
+        assert_eq!(events[1].aux, 4);
+        assert!(events[1].ts_us >= events[0].ts_us, "sorted by ts");
+        assert_eq!(j.emitted(), 2);
+        let names = j.thread_names();
+        assert_eq!(names.len(), 1, "one emitting thread registered once");
+    }
+
+    #[test]
+    fn wraparound_keeps_only_the_latest_window() {
+        let j = Journal::new(JournalConfig {
+            rings: 1,
+            ring_capacity: 16,
+        });
+        for i in 0..100u64 {
+            j.emit(EventKind::Admit, NO_LANE, 0, i, 0);
+        }
+        let events = j.snapshot();
+        assert_eq!(events.len(), 16, "ring retains exactly its capacity");
+        let args: Vec<u64> = events.iter().map(|e| e.arg).collect();
+        assert_eq!(args, (84..100).collect::<Vec<u64>>(), "latest events win");
+        assert_eq!(j.emitted(), 100);
+    }
+
+    #[test]
+    fn meta_packing_round_trips() {
+        let m = pack_meta(EventKind::Stage, 513, 7, (12 << 2) | 1);
+        let (kind, tid, lane, aux) = unpack_meta(m).unwrap();
+        assert_eq!(kind, EventKind::Stage);
+        assert_eq!(tid, 513);
+        assert_eq!(lane, 7);
+        assert_eq!(aux >> 2, 12);
+        assert_eq!(aux & 3, 1);
+        assert!(unpack_meta(0).is_none(), "kind 0 is invalid");
+    }
+
+    #[test]
+    fn chrome_export_validates_and_flows_resolve() {
+        let j = Journal::new(JournalConfig {
+            rings: 1,
+            ring_capacity: 64,
+        });
+        // A request that completes (id 7) and one that only enqueued
+        // (id 9, still in flight at snapshot time): only id 7 may
+        // produce flow events.
+        j.emit(EventKind::Accept, NO_LANE, 0, 0, 0);
+        j.emit(EventKind::Enqueue, 0, 0, 1, 7);
+        j.emit(EventKind::Enqueue, 0, 0, 2, 9);
+        j.emit(EventKind::BatchFormEnd, 0, 1, 5, 7);
+        j.emit(EventKind::ComputeEnd, 0, 1, 900, 0);
+        j.emit(EventKind::Stage, 0, 1, 600, 0); // layer 0, stage 1 = gemm
+        j.emit(EventKind::Respond, 0, 0, 950, 7);
+        let json = chrome_trace_json(&j.snapshot(), &j.thread_names(), &["dcgan".to_string()]);
+        let stats = validate_chrome_trace(&json).expect("export passes its own schema check");
+        assert!(stats.events > 5);
+        assert_eq!(stats.flows, 1, "only the completed request flows");
+        assert!(json.contains("lane:dcgan"));
+        assert!(json.contains("L0 gemm"));
+    }
+
+    #[test]
+    fn validator_rejects_broken_traces() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        let non_monotone = r#"{"traceEvents":[
+            {"ph":"X","name":"a","pid":1,"tid":1,"ts":10,"dur":1},
+            {"ph":"X","name":"b","pid":1,"tid":1,"ts":5,"dur":1}]}"#;
+        assert!(validate_chrome_trace(non_monotone)
+            .unwrap_err()
+            .contains("not monotone"));
+        let dangling_flow = r#"{"traceEvents":[
+            {"ph":"s","name":"r","id":3,"pid":1,"tid":1,"ts":1}]}"#;
+        assert!(validate_chrome_trace(dangling_flow)
+            .unwrap_err()
+            .contains("never finishes"));
+        let no_dur = r#"{"traceEvents":[{"ph":"X","name":"a","pid":1,"tid":1,"ts":1}]}"#;
+        assert!(validate_chrome_trace(no_dur).unwrap_err().contains("dur"));
+    }
+
+    #[test]
+    fn busy_fraction_clips_to_window() {
+        let j = Journal::new(JournalConfig {
+            rings: 1,
+            ring_capacity: 16,
+        });
+        // One 1000us compute slice ending "now".
+        j.emit(EventKind::ComputeEnd, 0, 1, 1000, 0);
+        let now = j.snapshot()[0].ts_us;
+        let busy = j.busy_fractions(2000, now);
+        let f = *busy.values().next().unwrap();
+        assert!((0.45..=0.55).contains(&f), "1000us of a 2000us window: {f}");
+        // Window smaller than the slice: clipped, never > 1.
+        let busy = j.busy_fractions(500, now);
+        assert!(*busy.values().next().unwrap() <= 1.0);
+    }
+}

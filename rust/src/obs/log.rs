@@ -1,14 +1,20 @@
 //! Minimal leveled, structured, std-only logger.
 //!
 //! Replaces the coordinator's bare `eprintln!` diagnostics with
-//! `level=… target=… msg=… key=value…` lines on stderr, filtered by the
-//! `REPRO_LOG` environment variable (`error|warn|info|debug`, default
-//! `warn`; `off` silences everything). The level is read once per
-//! process and cached, so the per-call cost of a suppressed log line is
-//! one relaxed atomic-free comparison against a `OnceLock`ed enum.
+//! `ts_us=… thread=… level=… target=… msg=… key=value…` lines on
+//! stderr, filtered by the `REPRO_LOG` environment variable
+//! (`error|warn|info|debug`, default `warn`; `off` silences
+//! everything). The level is read once per process and cached, so the
+//! per-call cost of a suppressed log line is one relaxed atomic-free
+//! comparison against a `OnceLock`ed enum.
+//!
+//! `ts_us` is microseconds since process start on the same monotonic
+//! epoch as the flight recorder ([`super::journal::process_epoch`]), so
+//! log lines correlate 1:1 with journal timelines. `thread` is the OS
+//! thread name (or a compact `t<n>` for unnamed threads).
 //!
 //! ```text
-//! level=error target=coordinator msg="batch execution failed: …" worker=1 lane=dcgan
+//! ts_us=1042 thread=sd-dispatcher-0 level=error target=coordinator msg="batch execution failed: …" worker=1 lane=dcgan
 //! ```
 
 use std::io::Write;
@@ -103,12 +109,46 @@ fn push_value(out: &mut String, v: &str) {
     out.push('"');
 }
 
+/// The `thread=` value for the calling thread: its OS name, or a
+/// compact process-wide `t<n>` for unnamed threads (stable per thread).
+pub fn thread_label() -> String {
+    if let Some(name) = std::thread::current().name() {
+        return name.to_string();
+    }
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    thread_local! {
+        static ID: Cell<u32> = const { Cell::new(u32::MAX) };
+    }
+    let n = ID.with(|id| {
+        if id.get() == u32::MAX {
+            id.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        id.get()
+    });
+    format!("t{n}")
+}
+
+/// [`format_line`] with the `ts_us=… thread=…` prefix — the exact line
+/// [`log`] writes (minus the newline).
+pub fn stamped_line(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) -> String {
+    let mut out = String::with_capacity(96 + msg.len());
+    out.push_str("ts_us=");
+    out.push_str(&super::journal::monotonic_us().to_string());
+    out.push_str(" thread=");
+    push_value(&mut out, &thread_label());
+    out.push(' ');
+    out.push_str(&format_line(level, target, msg, fields));
+    out
+}
+
 /// Emit one record to stderr if `level` passes the filter.
 pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
     if !enabled(level) {
         return;
     }
-    let line = format_line(level, target, msg, fields);
+    let line = stamped_line(level, target, msg, fields);
     // One write_all per record keeps concurrent workers' lines whole.
     let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "{line}");
@@ -169,5 +209,41 @@ mod tests {
         );
         assert!(line.contains("msg=\"bad \\\"header\\\"\\nline\""));
         assert!(line.ends_with("peer=127.0.0.1:80"));
+    }
+
+    #[test]
+    fn stamped_line_prefixes_ts_and_thread() {
+        let line = stamped_line(
+            Level::Info,
+            "server",
+            "listening",
+            &[("addr", "127.0.0.1:8787".to_string())],
+        );
+        // ts_us=<digits> thread=<label> level=info target=server …
+        let mut parts = line.split(' ');
+        let ts = parts.next().unwrap();
+        assert!(ts.starts_with("ts_us="), "line starts with ts_us: {line}");
+        assert!(
+            ts["ts_us=".len()..].chars().all(|c| c.is_ascii_digit()),
+            "ts_us value is a bare integer: {line}"
+        );
+        let thread = parts.next().unwrap();
+        assert!(thread.starts_with("thread="), "thread field second: {line}");
+        assert!(
+            line.ends_with("level=info target=server msg=listening addr=127.0.0.1:8787"),
+            "suffix stays the parseable format_line record: {line}"
+        );
+        // Monotone across calls on the same epoch.
+        let t0: u64 = ts["ts_us=".len()..].parse().unwrap();
+        let second = stamped_line(Level::Info, "server", "again", &[]);
+        let t1: u64 = second.split(' ').next().unwrap()["ts_us=".len()..]
+            .parse()
+            .unwrap();
+        assert!(t1 >= t0, "ts_us monotone: {t0} then {t1}");
+    }
+
+    #[test]
+    fn thread_label_is_stable() {
+        assert_eq!(thread_label(), thread_label());
     }
 }

@@ -14,11 +14,23 @@
 //!   im2col/GEMM/epilogue/interleave timings when a caller sets
 //!   `X-Trace: 1` (zero-cost when disabled: every site checks the
 //!   `Option` before touching the clock).
-//! * [`log`] — `REPRO_LOG`-leveled `key=value` records on stderr.
+//! * [`log`] — `REPRO_LOG`-leveled `key=value` records on stderr, each
+//!   prefixed with a monotonic `ts_us` (shared process epoch) and the
+//!   emitting `thread`.
+//! * [`journal`] — the flight recorder (DESIGN.md §14): per-thread
+//!   lock-free ring buffers of compact binary events fed by the front
+//!   door, the coordinator, and the engine's stage sink; snapshots
+//!   export as Perfetto-loadable Chrome trace-event JSON, and the
+//!   serving watchdog scans them for stalled workers.
 
 pub mod histogram;
+pub mod journal;
 pub mod log;
 pub mod trace;
 
 pub use histogram::{Histogram, HistogramSnapshot};
+pub use journal::{
+    chrome_trace_json, monotonic_us, validate_chrome_trace, Event, EventKind, Journal,
+    JournalConfig, NO_LANE,
+};
 pub use trace::{LayerStages, Span, StageSink};

@@ -15,9 +15,17 @@
 //! * `GET /v1/models` — the route table as JSON.
 //! * `GET /metrics` — coordinator metrics snapshot as JSON, or Prometheus
 //!   text format (`?format=prom` or `Accept: text/plain`) with counters,
-//!   gauges, and the latency/queue-wait/compute histograms as cumulative
-//!   `_bucket`/`_sum`/`_count` series (DESIGN.md §12).
-//! * `GET /healthz` — liveness.
+//!   gauges (including the live per-lane queue depth, in-flight count and
+//!   worker busy fractions), and the latency/queue-wait/compute
+//!   histograms as cumulative `_bucket`/`_sum`/`_count` series
+//!   (DESIGN.md §12).
+//! * `GET /healthz` — readiness: per-model lane depth/capacity and
+//!   served/shed/expired counts, precision, and a `draining` flag that
+//!   flips during close-then-drain shutdown.
+//! * `GET /debug/trace?ms=N` — the last N milliseconds of the flight
+//!   recorder (when the coordinator was started with a journal,
+//!   DESIGN.md §14) as Chrome trace-event JSON loadable in Perfetto /
+//!   `chrome://tracing`; 404 without a journal.
 //!
 //! Tracing: an `X-Request-Id` request header becomes the request's trace
 //! id (decimal u64s pass through, other values are hashed); `X-Trace: 1`
@@ -49,6 +57,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{MetricsSnapshot, Server, ServerConfig, SubmitError, SubmitOpts};
 use crate::engine::{DeconvImpl, Program};
+use crate::obs::journal::{EventKind, Journal, NO_LANE};
 use crate::obs::{self, HistogramSnapshot, LayerStages};
 use crate::util::rng::Rng;
 
@@ -150,6 +159,9 @@ impl FrontDoor {
                             Ok(s) => s,
                             Err(_) => continue,
                         };
+                        if let Some(j) = server.journal() {
+                            j.emit(EventKind::Accept, NO_LANE, 0, 0, 0);
+                        }
                         let server = server.clone();
                         let routes = routes.clone();
                         let cfg = cfg.clone();
@@ -319,6 +331,9 @@ fn handle_conn(
                 // explicit 4xx (400, or 411 for a bodied request with no
                 // declared length), then the connection closes
                 obs::log::warn("front_door", &format!("bad request: {}", bad.msg), &[]);
+                if let Some(j) = server.journal() {
+                    j.emit(EventKind::HttpError, NO_LANE, bad.status, 0, 0);
+                }
                 let kind = if bad.status == 411 { "length_required" } else { "bad_request" };
                 let body = error_body(kind, &bad.msg);
                 let _ = write_response(
@@ -341,6 +356,11 @@ fn handle_conn(
             Ok(ReadOutcome::Request(req)) => {
                 let keep = req.keep_alive && !closing.load(Ordering::SeqCst);
                 let reply = handle_request(&req, server, routes, cfg, closing);
+                if (400..500).contains(&reply.status) {
+                    if let Some(j) = server.journal() {
+                        j.emit(EventKind::HttpError, NO_LANE, reply.status, 0, 0);
+                    }
+                }
                 if write_response(
                     conn.stream_mut(),
                     reply.status,
@@ -395,22 +415,44 @@ fn handle_request(
     closing: &AtomicBool,
 ) -> Reply {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Reply::json(200, b"{\"status\":\"ok\"}".to_vec()),
+        ("GET", "/healthz") => {
+            let draining = closing.load(Ordering::SeqCst);
+            Reply::json(200, healthz_json(&server.metrics(), routes, server.config(), draining))
+        }
         ("GET", "/v1/models") => Reply::json(200, models_json(routes)),
         ("GET", "/metrics") => {
             let prom = req.query_param("format") == Some("prom")
                 || matches!(req.header("accept"), Some(a) if a.contains("text/plain"));
+            let journal = server.journal().map(|j| j.as_ref());
             if prom {
                 Reply {
                     status: 200,
                     content_type: "text/plain; version=0.0.4",
                     headers: Vec::new(),
-                    body: metrics_prom(&server.metrics(), routes),
+                    body: metrics_prom(&server.metrics(), routes, journal),
                 }
             } else {
-                Reply::json(200, metrics_json(&server.metrics(), routes))
+                Reply::json(200, metrics_json(&server.metrics(), routes, journal))
             }
         }
+        ("GET", "/debug/trace") => match server.journal() {
+            None => Reply::json(
+                404,
+                error_body("no_journal", "server started without a flight recorder"),
+            ),
+            Some(j) => {
+                // ?ms=N: how far back the timeline reaches (default 1s)
+                let ms = req
+                    .query_param("ms")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(1000);
+                let now = obs::journal::monotonic_us();
+                let events = j.snapshot_since(now.saturating_sub(ms.saturating_mul(1000)));
+                let lanes: Vec<String> = routes.iter().map(|r| r.name.clone()).collect();
+                let json = obs::journal::chrome_trace_json(&events, &j.thread_names(), &lanes);
+                Reply::json(200, json.into_bytes())
+            }
+        },
         (_, path) if path.starts_with("/v1/generate/") => {
             let model = &path["/v1/generate/".len()..];
             if req.method != "POST" {
@@ -505,7 +547,12 @@ fn generate(
         trace_stages: traced,
     };
     let rx = match server.submit_opts(lane, z, opts) {
-        Ok(rx) => rx,
+        Ok(rx) => {
+            if let Some(j) = server.journal() {
+                j.emit(EventKind::Admit, lane as u16, 0, 0, trace_id.unwrap_or(0));
+            }
+            rx
+        }
         Err(SubmitError::Full) => {
             // admission-control shed: already counted in Metrics.shed by
             // submit_to; the client gets an explicit, immediate answer
@@ -598,19 +645,124 @@ fn models_json(routes: &[Route]) -> Vec<u8> {
     out.into_bytes()
 }
 
-fn metrics_json(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
+/// Enriched readiness probe: overall status + per-model lane state.
+/// `draining` flips during close-then-drain shutdown (the front door
+/// still answers health checks while the coordinator finishes accepted
+/// work, so load balancers see `"draining"` instead of a dead socket).
+fn healthz_json(
+    s: &MetricsSnapshot,
+    routes: &[Route],
+    scfg: &ServerConfig,
+    draining: bool,
+) -> Vec<u8> {
+    let mut out = String::from("{");
+    out.push_str(&format!(
+        "\"status\":\"{}\",",
+        if draining { "draining" } else { "ok" }
+    ));
+    out.push_str(&format!("\"draining\":{draining},"));
+    out.push_str(&format!("\"precision\":\"{}\",", scfg.precision.label()));
+    out.push_str(&format!("\"workers\":{},", s.worker_batches.len()));
+    out.push_str(&format!("\"served\":{},", s.served));
+    out.push_str(&format!("\"shed\":{},", s.shed));
+    out.push_str(&format!("\"expired\":{},", s.expired));
+    out.push_str(&format!("\"in_flight\":{},", s.in_flight));
+    out.push_str(&format!("\"watchdog_stalls\":{},", s.watchdog_stalls));
+    out.push_str("\"models\":[");
+    for (i, r) in routes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ready = !draining;
+        let depth = s.lane_depth.get(i).copied().unwrap_or(0);
+        let served = s.lane_served.get(i).copied().unwrap_or(0);
+        let shed = s.lane_shed.get(i).copied().unwrap_or(0);
+        let expired = s.lane_expired.get(i).copied().unwrap_or(0);
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"ready\":{ready},\"depth\":{depth},\"cap\":{},\
+             \"served\":{served},\"shed\":{shed},\"expired\":{expired}}}",
+            r.name, scfg.queue_cap
+        ));
+    }
+    out.push_str("]}");
+    out.into_bytes()
+}
+
+/// Rolling-window busy fraction per dispatcher worker, from the flight
+/// recorder's batch-duration events over the last second. Returns
+/// `(worker index, fraction)` sorted by worker.
+fn worker_busy_window(j: &Journal) -> Vec<(usize, f64)> {
+    const WINDOW_US: u64 = 1_000_000;
+    let now = obs::journal::monotonic_us();
+    let by_tid = j.busy_fractions(WINDOW_US, now);
+    let mut out: Vec<(usize, f64)> = j
+        .thread_names()
+        .into_iter()
+        .filter_map(|(tid, name)| {
+            let idx = name.strip_prefix("sd-dispatcher-")?.parse::<usize>().ok()?;
+            Some((idx, by_tid.get(&tid).copied().unwrap_or(0.0)))
+        })
+        .collect();
+    out.sort_by_key(|&(idx, _)| idx);
+    out
+}
+
+fn json_lane_map(out: &mut String, key: &str, routes: &[Route], values: &[u64]) {
+    out.push_str(&format!("\"{key}\":{{"));
+    for (i, r) in routes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let v = values.get(i).copied().unwrap_or(0);
+        out.push_str(&format!("\"{}\":{}", r.name, v));
+    }
+    out.push_str("},");
+}
+
+fn metrics_json(s: &MetricsSnapshot, routes: &[Route], journal: Option<&Journal>) -> Vec<u8> {
     let mut out = String::from("{");
     out.push_str(&format!("\"served\":{},", s.served));
     out.push_str(&format!("\"batches\":{},", s.batches));
     out.push_str(&format!("\"errors\":{},", s.errors));
     out.push_str(&format!("\"shed\":{},", s.shed));
     out.push_str(&format!("\"expired\":{},", s.expired));
+    out.push_str(&format!("\"in_flight\":{},", s.in_flight));
+    out.push_str(&format!("\"watchdog_stalls\":{},", s.watchdog_stalls));
+    out.push_str(&format!("\"uptime_s\":{:.3},", s.uptime_s));
     out.push_str(&format!("\"throughput_rps\":{:.3},", s.throughput_rps));
     out.push_str(&format!("\"mean_batch\":{:.3},", s.mean_batch));
     out.push_str(&format!("\"p50_us\":{:.1},", s.p50_us));
     out.push_str(&format!("\"p95_us\":{:.1},", s.p95_us));
     out.push_str(&format!("\"p99_us\":{:.1},", s.p99_us));
     out.push_str(&format!("\"max_queue_depth\":{},", s.max_queue_depth));
+    json_lane_map(&mut out, "lane_depth", routes, &s.lane_depth);
+    json_lane_map(&mut out, "lane_shed", routes, &s.lane_shed);
+    json_lane_map(&mut out, "lane_expired", routes, &s.lane_expired);
+    // lifetime busy fraction per worker (busy µs / uptime); the rolling
+    // 1 s window rides alongside when a flight recorder is attached
+    out.push_str("\"worker_busy\":[");
+    for (i, &busy_us) in s.worker_busy_us.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let frac = if s.uptime_s > 0.0 {
+            (busy_us as f64 / 1e6) / s.uptime_s
+        } else {
+            0.0
+        };
+        out.push_str(&format!("{frac:.4}"));
+    }
+    out.push_str("],");
+    if let Some(j) = journal {
+        out.push_str("\"worker_busy_window\":[");
+        for (i, (_, frac)) in worker_busy_window(j).iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{frac:.4}"));
+        }
+        out.push_str("],");
+    }
     out.push_str("\"lane_served\":{");
     for (i, r) in routes.iter().enumerate() {
         if i > 0 {
@@ -641,6 +793,14 @@ fn prom_value(out: &mut String, name: &str, labels: &str, v: u64) {
     }
 }
 
+fn prom_value_f(out: &mut String, name: &str, labels: &str, v: f64) {
+    if labels.is_empty() {
+        out.push_str(&format!("{name} {v}\n"));
+    } else {
+        out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+    }
+}
+
 /// One histogram as a Prometheus cumulative series. Bucket bounds are the
 /// shared microsecond table ([`crate::obs::histogram::bounds`]) converted
 /// to seconds, as the `_seconds` unit convention wants.
@@ -663,7 +823,7 @@ fn prom_histogram(out: &mut String, name: &str, help: &str, h: &HistogramSnapsho
 /// The Prometheus text-format (`version=0.0.4`) metrics exposition:
 /// everything in [`metrics_json`] plus the full latency/queue-wait/compute
 /// histograms and the per-worker counters.
-fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
+fn metrics_prom(s: &MetricsSnapshot, routes: &[Route], journal: Option<&Journal>) -> Vec<u8> {
     let mut out = String::with_capacity(8192);
     prom_metric(&mut out, "repro_served_total", "counter", "Requests served.");
     prom_value(&mut out, "repro_served_total", "", s.served);
@@ -678,6 +838,15 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
         "Requests shed by admission control (queue full).",
     );
     prom_value(&mut out, "repro_shed_total", "", s.shed);
+    for (i, r) in routes.iter().enumerate() {
+        let shed = s.lane_shed.get(i).copied().unwrap_or(0);
+        prom_value(
+            &mut out,
+            "repro_shed_total",
+            &format!("model=\"{}\"", r.name),
+            shed,
+        );
+    }
     prom_metric(
         &mut out,
         "repro_expired_total",
@@ -685,6 +854,15 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
         "Requests dropped pre-compute on an expired deadline.",
     );
     prom_value(&mut out, "repro_expired_total", "", s.expired);
+    for (i, r) in routes.iter().enumerate() {
+        let expired = s.lane_expired.get(i).copied().unwrap_or(0);
+        prom_value(
+            &mut out,
+            "repro_expired_total",
+            &format!("model=\"{}\"", r.name),
+            expired,
+        );
+    }
     prom_metric(
         &mut out,
         "repro_lane_served_total",
@@ -725,6 +903,65 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
         "High-water mark of any lane's queue depth.",
     );
     prom_value(&mut out, "repro_max_queue_depth", "", s.max_queue_depth);
+    prom_metric(
+        &mut out,
+        "repro_lane_queue_depth",
+        "gauge",
+        "Current queued requests per model lane.",
+    );
+    for (i, r) in routes.iter().enumerate() {
+        let depth = s.lane_depth.get(i).copied().unwrap_or(0);
+        prom_value(
+            &mut out,
+            "repro_lane_queue_depth",
+            &format!("model=\"{}\"", r.name),
+            depth,
+        );
+    }
+    prom_metric(
+        &mut out,
+        "repro_in_flight",
+        "gauge",
+        "Requests currently inside the coordinator (accepted, unresolved).",
+    );
+    prom_value(&mut out, "repro_in_flight", "", s.in_flight);
+    prom_metric(
+        &mut out,
+        "repro_watchdog_stalls_total",
+        "counter",
+        "Stall/over-age observations by the serving watchdog.",
+    );
+    prom_value(&mut out, "repro_watchdog_stalls_total", "", s.watchdog_stalls);
+    prom_metric(
+        &mut out,
+        "repro_worker_busy_fraction",
+        "gauge",
+        "Dispatcher busy fraction: rolling 1s window from the flight recorder when attached, lifetime busy-time/uptime otherwise.",
+    );
+    if let Some(j) = journal {
+        for (idx, frac) in worker_busy_window(j) {
+            prom_value_f(
+                &mut out,
+                "repro_worker_busy_fraction",
+                &format!("worker=\"{idx}\""),
+                frac,
+            );
+        }
+    } else {
+        for (w, &busy_us) in s.worker_busy_us.iter().enumerate() {
+            let frac = if s.uptime_s > 0.0 {
+                (busy_us as f64 / 1e6) / s.uptime_s
+            } else {
+                0.0
+            };
+            prom_value_f(
+                &mut out,
+                "repro_worker_busy_fraction",
+                &format!("worker=\"{w}\""),
+                frac,
+            );
+        }
+    }
     prom_histogram(
         &mut out,
         "repro_request_latency_seconds",
@@ -748,8 +985,80 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route]) -> Vec<u8> {
 
 #[cfg(test)]
 mod tests {
-    use super::prom_histogram;
+    use super::{healthz_json, metrics_prom, prom_histogram, Route, ServerConfig};
+    use crate::coordinator::Metrics;
     use crate::obs::histogram::Histogram;
+
+    fn two_routes() -> Vec<Route> {
+        vec![
+            Route {
+                name: "dcgan".to_string(),
+                z_len: 100,
+                image_len: 12288,
+            },
+            Route {
+                name: "sngan".to_string(),
+                z_len: 128,
+                image_len: 3072,
+            },
+        ]
+    }
+
+    #[test]
+    fn healthz_reports_per_model_state_and_draining() {
+        let m = Metrics::with_lanes(2, 2);
+        m.record_batch(0, 0, 3, 100, 120);
+        m.record_shed(1);
+        let mut snap = m.snapshot();
+        snap.lane_depth = vec![4, 0];
+        let scfg = ServerConfig::default();
+        let routes = two_routes();
+
+        let body = String::from_utf8(healthz_json(&snap, &routes, &scfg, false)).unwrap();
+        assert!(body.starts_with("{\"status\":\"ok\",\"draining\":false,"), "{body}");
+        assert!(body.contains("\"served\":3,"), "{body}");
+        assert!(body.contains("\"shed\":1,"), "{body}");
+        assert!(
+            body.contains(&format!(
+                "{{\"name\":\"dcgan\",\"ready\":true,\"depth\":4,\"cap\":{},\"served\":3,\"shed\":0,\"expired\":0}}",
+                scfg.queue_cap
+            )),
+            "{body}"
+        );
+        assert!(body.contains("\"name\":\"sngan\",\"ready\":true,\"depth\":0,"), "{body}");
+        assert!(body.contains("\"shed\":1,\"expired\":0}"), "{body}");
+
+        let draining = String::from_utf8(healthz_json(&snap, &routes, &scfg, true)).unwrap();
+        assert!(
+            draining.starts_with("{\"status\":\"draining\",\"draining\":true,"),
+            "{draining}"
+        );
+        assert!(draining.contains("\"ready\":false"), "{draining}");
+    }
+
+    #[test]
+    fn prom_exposition_has_labeled_lane_series_and_gauges() {
+        let m = Metrics::with_lanes(2, 2);
+        m.record_batch(0, 0, 2, 50, 60);
+        m.record_shed(0);
+        m.record_expired(1);
+        m.inc_in_flight();
+        m.record_watchdog_stall();
+        let mut snap = m.snapshot();
+        snap.lane_depth = vec![7, 2];
+        let text = String::from_utf8(metrics_prom(&snap, &two_routes(), None)).unwrap();
+        assert!(text.contains("repro_shed_total 1\n"), "{text}");
+        assert!(text.contains("repro_shed_total{model=\"dcgan\"} 1\n"), "{text}");
+        assert!(text.contains("repro_shed_total{model=\"sngan\"} 0\n"), "{text}");
+        assert!(text.contains("repro_expired_total{model=\"sngan\"} 1\n"), "{text}");
+        assert!(text.contains("repro_lane_queue_depth{model=\"dcgan\"} 7\n"), "{text}");
+        assert!(text.contains("repro_lane_queue_depth{model=\"sngan\"} 2\n"), "{text}");
+        assert!(text.contains("repro_in_flight 1\n"), "{text}");
+        assert!(text.contains("repro_watchdog_stalls_total 1\n"), "{text}");
+        assert!(text.contains("repro_worker_busy_fraction{worker=\"0\"}"), "{text}");
+        // one HELP/TYPE block per family even with labeled samples
+        assert_eq!(text.matches("# TYPE repro_shed_total counter").count(), 1, "{text}");
+    }
 
     /// Parse every `name_bucket{le=...} v` / `name_count v` line and
     /// assert the series is monotone with `+Inf == _count`.

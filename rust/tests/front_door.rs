@@ -45,6 +45,8 @@ fn scfg() -> ServerConfig {
         workers: 2,
         precision: split_deconv::engine::Precision::F32,
         record_spans: true,
+        journal: None,
+        watchdog: None,
     }
 }
 
@@ -134,7 +136,7 @@ fn discovery_endpoints_answer() {
     let mut client = Client::connect(door.addr(), TIMEOUT).unwrap();
     let health = client.get("/healthz").unwrap();
     assert_eq!(health.status, 200);
-    assert!(health.text().contains("ok"));
+    assert!(health.text().contains("\"status\":\"ok\""), "{}", health.text());
     let models = client.get("/v1/models").unwrap();
     assert_eq!(models.status, 200);
     let text = models.text();
@@ -324,6 +326,8 @@ fn queue_full_sheds_explicitly_and_every_request_is_answered() {
         workers: 1,
         precision: split_deconv::engine::Precision::F32,
         record_spans: true,
+        journal: None,
+        watchdog: None,
     };
     let (door, _executed) = slow_door(cfg, Duration::from_millis(100));
     let addr = door.addr();
@@ -372,6 +376,8 @@ fn expired_deadline_answers_504_without_reaching_compute() {
         workers: 1,
         precision: split_deconv::engine::Precision::F32,
         record_spans: true,
+        journal: None,
+        watchdog: None,
     };
     let (door, executed) = slow_door(cfg, Duration::from_millis(120));
     let addr = door.addr();
@@ -413,6 +419,8 @@ fn graceful_shutdown_flushes_inflight_responses_before_the_listener_dies() {
         workers: 1,
         precision: split_deconv::engine::Precision::F32,
         record_spans: true,
+        journal: None,
+        watchdog: None,
     };
     let (door, _executed) = slow_door(cfg, Duration::from_millis(150));
     let addr = door.addr();
@@ -588,6 +596,105 @@ fn traced_response_is_bit_identical_and_carries_the_trailer() {
             assert!(row.get(k).and_then(|v| v.as_f64()).is_some(), "stage field {k} missing");
         }
     }
+    door.shutdown();
+}
+
+#[test]
+fn healthz_reports_per_model_readiness_over_the_socket() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+    let addr = door.addr();
+    let r = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny?seed=9", &[], &[]).unwrap();
+    assert_eq!(r.status, 200);
+
+    let health = request_once(addr, TIMEOUT, "GET", "/healthz", &[], &[]).unwrap();
+    assert_eq!(health.status, 200);
+    let h = split_deconv::util::json::parse(&health.text()).unwrap();
+    assert_eq!(h.get("status").and_then(|v| v.as_str()), Some("ok"));
+    assert_eq!(h.get("draining").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(h.get("precision").and_then(|v| v.as_str()), Some("f32"));
+    assert_eq!(h.get("served").and_then(|v| v.as_f64()), Some(1.0));
+    assert!(h.get("in_flight").and_then(|v| v.as_f64()).is_some());
+    assert!(h.get("watchdog_stalls").and_then(|v| v.as_f64()).is_some());
+    let models = h.get("models").and_then(|v| v.as_arr()).expect("models array");
+    assert_eq!(models.len(), 2, "one entry per route");
+    for (m, name) in models.iter().zip(["tiny", "tiny2"]) {
+        assert_eq!(m.get("name").and_then(|v| v.as_str()), Some(name));
+        assert_eq!(m.get("ready").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(m.get("cap").and_then(|v| v.as_f64()), Some(64.0));
+        assert_eq!(m.get("depth").and_then(|v| v.as_f64()), Some(0.0), "idle lanes are empty");
+        for k in ["served", "shed", "expired"] {
+            assert!(m.get(k).and_then(|v| v.as_f64()).is_some(), "per-model field {k}");
+        }
+    }
+    let tiny_served = models[0].get("served").and_then(|v| v.as_f64());
+    assert_eq!(tiny_served, Some(1.0), "the served request lands on its own lane");
+    door.shutdown();
+}
+
+#[test]
+fn debug_trace_exports_a_valid_chrome_timeline_over_the_socket() {
+    let mut cfg = scfg();
+    cfg.journal = Some(split_deconv::obs::Journal::with_defaults());
+    let (door, _p1, _p2) = tiny_door(cfg, fcfg());
+    let addr = door.addr();
+    for seed in 1..=4 {
+        let path = format!("/v1/generate/tiny?seed={seed}");
+        let r = request_once(addr, TIMEOUT, "POST", &path, &[], &[]).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    let trace = request_once(addr, TIMEOUT, "GET", "/debug/trace?ms=60000", &[], &[]).unwrap();
+    assert_eq!(trace.status, 200, "{}", trace.text());
+    let stats = split_deconv::obs::validate_chrome_trace(&trace.text())
+        .expect("/debug/trace must export schema-valid Chrome trace JSON");
+    assert!(stats.events > 0, "the journal saw the serving traffic: {stats:?}");
+    assert!(stats.tracks >= 2, "dispatcher + lane tracks expected: {stats:?}");
+    // a window in the past contains nothing but still validates
+    let empty = request_once(addr, TIMEOUT, "GET", "/debug/trace?ms=0", &[], &[]).unwrap();
+    assert_eq!(empty.status, 200);
+    split_deconv::obs::validate_chrome_trace(&empty.text()).unwrap();
+    door.shutdown();
+}
+
+#[test]
+fn debug_trace_is_404_without_a_journal() {
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
+    let r = request_once(door.addr(), TIMEOUT, "GET", "/debug/trace", &[], &[]).unwrap();
+    assert_eq!(r.status, 404, "{}", r.text());
+    assert!(r.text().contains("no_journal"), "{}", r.text());
+    door.shutdown();
+}
+
+#[test]
+fn prometheus_exposition_carries_the_live_gauges_and_lane_labels() {
+    let mut cfg = scfg();
+    cfg.journal = Some(split_deconv::obs::Journal::with_defaults());
+    let (door, _p1, _p2) = tiny_door(cfg, fcfg());
+    let addr = door.addr();
+    let r = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny?seed=2", &[], &[]).unwrap();
+    assert_eq!(r.status, 200);
+
+    let mut client = Client::connect(addr, TIMEOUT).unwrap();
+    let text = client.request("GET", "/metrics?format=prom", &[], &[]).unwrap().text();
+    for needle in [
+        "repro_shed_total{model=\"tiny\"} 0",
+        "repro_shed_total{model=\"tiny2\"} 0",
+        "repro_expired_total{model=\"tiny\"} 0",
+        "repro_lane_queue_depth{model=\"tiny\"} 0",
+        "repro_lane_queue_depth{model=\"tiny2\"} 0",
+        "repro_in_flight 0",
+        "repro_watchdog_stalls_total 0",
+        // journal-backed: only dispatchers that have emitted appear, and
+        // either of the two workers may have taken the one batch
+        "repro_worker_busy_fraction{worker=\"",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    // the JSON exposition mirrors the same gauges
+    let json = client.get("/metrics").unwrap();
+    let parsed = split_deconv::util::json::parse(&json.text()).unwrap();
+    assert_eq!(parsed.get("in_flight").and_then(|v| v.as_f64()), Some(0.0));
+    assert!(parsed.get("lane_depth").and_then(|v| v.get("tiny")).is_some(), "{}", json.text());
+    assert!(parsed.get("worker_busy_window").is_some(), "journal-backed rolling window rides along");
     door.shutdown();
 }
 

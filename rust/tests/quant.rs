@@ -270,6 +270,8 @@ fn serve_native_int8_smoke_on_full_scale_models() {
             workers: 1,
             precision: Precision::Int8,
             record_spans: true,
+            journal: None,
+            watchdog: None,
         };
         let net = networks::by_name(model).unwrap();
         let server = Server::start_native(cfg, 3).unwrap();
