@@ -1,0 +1,531 @@
+//! Fault-tolerance primitives for the serving plane (DESIGN.md §15):
+//! typed request faults, per-lane circuit breakers, and the seeded
+//! deterministic chaos-injection plan the recovery tests drive.
+//!
+//! Everything here is std-only and deliberately boring: the breaker is
+//! a three-state machine behind one tiny mutex (poison-recovering — a
+//! breaker must keep working *after* a panic, that is its whole job),
+//! and the chaos plan is a pure function of `(seed, tick)` so a failing
+//! CI run replays bit-identically from its spec string.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// Recover a possibly-poisoned mutex guard: the data behind every lock
+/// in this module is valid after any panic (plain counters and enums),
+/// so a poisoned lock degrades to the inner guard instead of cascading.
+fn lock_sweep<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Why a request came back without an image. Carried on
+/// [`super::Response::fault`]; the front door maps it to a typed 500.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The batch this request rode in panicked the worker; the request
+    /// also failed its individual containment retry.
+    WorkerPanic,
+    /// The request panicked a worker on its own (twice in a row): it is
+    /// a poison pill and was quarantined so the lane keeps serving.
+    Quarantined,
+}
+
+impl FaultKind {
+    /// Stable wire label, used as the JSON `error` kind in responses.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::WorkerPanic => "worker_panic",
+            FaultKind::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// A typed failure attached to a [`super::Response`] instead of an
+/// image. The responder channel still fires — panic containment means
+/// *no stranded receivers*, not silent drops.
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub kind: FaultKind,
+    /// Human-readable detail (the panic payload, truncated).
+    pub msg: String,
+}
+
+/// Circuit-breaker tuning. `None` in `ServerConfig.breaker` disables
+/// breakers entirely (the default: unit suites keep exact legacy
+/// error semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive batch failures on a lane that open its breaker.
+    pub threshold: u32,
+    /// How long an open breaker rejects before half-opening, and how
+    /// long a half-open probe may stay unresolved before re-probing.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 5,
+            cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Observable breaker state, surfaced in `/healthz` and Prometheus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half_open",
+            BreakerState::Open => "open",
+        }
+    }
+
+    /// Gauge encoding for Prometheus: 0 closed, 1 half-open, 2 open.
+    pub fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum State {
+    Closed { failures: u32 },
+    Open { until: Instant },
+    HalfOpen { probe_deadline: Instant },
+}
+
+/// Per-lane circuit breaker: `threshold` consecutive batch failures
+/// open it (submissions bounce with [`super::SubmitError::LaneDown`]
+/// before touching the queue), after `cooldown` ONE probe request is
+/// admitted half-open, and that probe's outcome closes or re-opens the
+/// breaker. A probe whose outcome never lands (its request expired in
+/// queue, say) is replaced after another `cooldown`.
+#[derive(Debug)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    state: Mutex<State>,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Breaker {
+        Breaker {
+            cfg,
+            state: Mutex::new(State::Closed { failures: 0 }),
+        }
+    }
+
+    /// Admission check at submit time. `true` lets the request through
+    /// (and, half-open, marks it the probe); `false` means the lane is
+    /// down and the caller should return `LaneDown`.
+    pub fn admit(&self, now: Instant) -> bool {
+        let mut s = lock_sweep(&self.state);
+        match *s {
+            State::Closed { .. } => true,
+            State::Open { until } => {
+                if now >= until {
+                    *s = State::HalfOpen {
+                        probe_deadline: now + self.cfg.cooldown,
+                    };
+                    true
+                } else {
+                    false
+                }
+            }
+            State::HalfOpen { probe_deadline } => {
+                if now >= probe_deadline {
+                    // the previous probe never reported back; send another
+                    *s = State::HalfOpen {
+                        probe_deadline: now + self.cfg.cooldown,
+                    };
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A batch on this lane completed successfully.
+    pub fn record_success(&self) {
+        *lock_sweep(&self.state) = State::Closed { failures: 0 };
+    }
+
+    /// A batch on this lane failed (executor error or contained panic).
+    pub fn record_failure(&self, now: Instant) {
+        let mut s = lock_sweep(&self.state);
+        match *s {
+            State::Closed { failures } => {
+                let failures = failures + 1;
+                *s = if failures >= self.cfg.threshold {
+                    State::Open {
+                        until: now + self.cfg.cooldown,
+                    }
+                } else {
+                    State::Closed { failures }
+                };
+            }
+            State::HalfOpen { .. } => {
+                // the probe failed: back to fully open
+                *s = State::Open {
+                    until: now + self.cfg.cooldown,
+                };
+            }
+            State::Open { .. } => {}
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match *lock_sweep(&self.state) {
+            State::Closed { .. } => BreakerState::Closed,
+            State::Open { .. } => BreakerState::Open,
+            State::HalfOpen { .. } => BreakerState::HalfOpen,
+        }
+    }
+}
+
+/// What the chaos plan tells a dispatcher to do with one batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// `panic!` inside the contained execute region (exercises the real
+    /// containment path, not a simulation of it).
+    Panic,
+    /// Return an executor error (drives the plain-Err / breaker path).
+    Error,
+    /// Sleep this long before the real execute (stall injection for the
+    /// watchdog false-positive guard).
+    Slow(Duration),
+}
+
+/// A deterministic seeded fault-injection schedule, shared by every
+/// dispatcher thread. Each batch dispatch draws one *tick*; the action
+/// for tick `t` is a pure function of `(seed, t)`, so a plan replays
+/// identically from its spec string regardless of thread interleaving
+/// (ticks are claimed atomically — which worker gets which tick may
+/// vary, but the multiset of injected faults never does).
+///
+/// Spec grammar (comma-separated `key=value`, all keys optional except
+/// `seed`):
+///
+/// ```text
+/// seed=42,panic=10,error=5,slow=20:30,ticks=200
+/// ```
+///
+/// `panic`/`error` are percent probabilities; `slow` is
+/// `percent[:millis]` (default 50 ms); `ticks` caps how many dispatches
+/// draw faults at all — after `ticks` draws the plan goes quiet, which
+/// is what lets tests assert *recovery* deterministically. `ticks=0`
+/// (or absent) means unlimited.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    panic_pct: u64,
+    error_pct: u64,
+    slow_pct: u64,
+    slow: Duration,
+    ticks: u64,
+    tick: AtomicU64,
+}
+
+/// SplitMix64 finalizer: the statelessly-seedable mixer `util::rng`
+/// seeds from, reused here so one well-tested constant set serves both.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Parse a `--chaos` / `REPRO_CHAOS` spec string. Errors are typed
+    /// and name the offending key.
+    pub fn from_spec(spec: &str) -> Result<FaultPlan> {
+        let mut seed: Option<u64> = None;
+        let mut panic_pct = 0u64;
+        let mut error_pct = 0u64;
+        let mut slow_pct = 0u64;
+        let mut slow_ms = 50u64;
+        let mut ticks = 0u64;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("chaos spec: `{part}` is not key=value"))?;
+            match key {
+                "seed" => {
+                    seed = Some(value.parse().map_err(|_| {
+                        anyhow::anyhow!("chaos spec: seed `{value}` is not a u64")
+                    })?)
+                }
+                "panic" => panic_pct = parse_pct(key, value)?,
+                "error" => error_pct = parse_pct(key, value)?,
+                "slow" => {
+                    let (pct, ms) = match value.split_once(':') {
+                        Some((p, m)) => (
+                            parse_pct(key, p)?,
+                            m.parse().map_err(|_| {
+                                anyhow::anyhow!("chaos spec: slow millis `{m}` is not a u64")
+                            })?,
+                        ),
+                        None => (parse_pct(key, value)?, slow_ms),
+                    };
+                    slow_pct = pct;
+                    slow_ms = ms;
+                }
+                "ticks" => {
+                    ticks = value.parse().map_err(|_| {
+                        anyhow::anyhow!("chaos spec: ticks `{value}` is not a u64")
+                    })?
+                }
+                other => bail!("chaos spec: unknown key `{other}` (seed/panic/error/slow/ticks)"),
+            }
+        }
+        let seed = seed.ok_or_else(|| anyhow::anyhow!("chaos spec: missing seed=N"))?;
+        if panic_pct + error_pct + slow_pct > 100 {
+            bail!(
+                "chaos spec: panic+error+slow = {}% exceeds 100%",
+                panic_pct + error_pct + slow_pct
+            );
+        }
+        Ok(FaultPlan {
+            seed,
+            panic_pct,
+            error_pct,
+            slow_pct,
+            slow: Duration::from_millis(slow_ms),
+            ticks,
+            tick: AtomicU64::new(0),
+        })
+    }
+
+    /// Build a plan directly (tests); percentages must sum ≤ 100.
+    pub fn new(seed: u64, panic_pct: u64, error_pct: u64, slow_pct: u64) -> FaultPlan {
+        assert!(panic_pct + error_pct + slow_pct <= 100);
+        FaultPlan {
+            seed,
+            panic_pct,
+            error_pct,
+            slow_pct,
+            slow: Duration::from_millis(50),
+            ticks: 0,
+            tick: AtomicU64::new(0),
+        }
+    }
+
+    /// Cap the number of fault-drawing ticks (builder style).
+    pub fn with_ticks(mut self, ticks: u64) -> FaultPlan {
+        self.ticks = ticks;
+        self
+    }
+
+    /// Set the slow-injection stall duration (builder style).
+    pub fn with_slow(mut self, slow: Duration) -> FaultPlan {
+        self.slow = slow;
+        self
+    }
+
+    /// Claim the next tick and return its scheduled action, if any.
+    /// Returns `None` forever once the tick cap is exhausted.
+    pub fn next(&self) -> Option<ChaosAction> {
+        let t = self.tick.fetch_add(1, Ordering::Relaxed);
+        if self.ticks != 0 && t >= self.ticks {
+            return None;
+        }
+        let draw = mix(self.seed ^ mix(t)) % 100;
+        if draw < self.panic_pct {
+            Some(ChaosAction::Panic)
+        } else if draw < self.panic_pct + self.error_pct {
+            Some(ChaosAction::Error)
+        } else if draw < self.panic_pct + self.error_pct + self.slow_pct {
+            Some(ChaosAction::Slow(self.slow))
+        } else {
+            None
+        }
+    }
+
+    /// Ticks drawn so far (monitoring/tests).
+    pub fn ticks_drawn(&self) -> u64 {
+        self.tick.load(Ordering::Relaxed)
+    }
+
+    /// One-line description for startup logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "seed={} panic={}% error={}% slow={}%:{}ms ticks={}",
+            self.seed,
+            self.panic_pct,
+            self.error_pct,
+            self.slow_pct,
+            self.slow.as_millis(),
+            if self.ticks == 0 {
+                "unlimited".to_string()
+            } else {
+                self.ticks.to_string()
+            }
+        )
+    }
+}
+
+fn parse_pct(key: &str, value: &str) -> Result<u64> {
+    let pct: u64 = value
+        .parse()
+        .map_err(|_| anyhow::anyhow!("chaos spec: {key} `{value}` is not a percentage"))?;
+    if pct > 100 {
+        bail!("chaos spec: {key}={pct} exceeds 100%");
+    }
+    Ok(pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_every_key() {
+        let p = FaultPlan::from_spec("seed=42, panic=10,error=5,slow=20:30,ticks=200").unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.panic_pct, 10);
+        assert_eq!(p.error_pct, 5);
+        assert_eq!(p.slow_pct, 20);
+        assert_eq!(p.slow, Duration::from_millis(30));
+        assert_eq!(p.ticks, 200);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(FaultPlan::from_spec("panic=10").is_err(), "missing seed");
+        assert!(FaultPlan::from_spec("seed=1,panic=60,error=60").is_err(), "sum > 100");
+        assert!(FaultPlan::from_spec("seed=1,frob=3").is_err(), "unknown key");
+        assert!(FaultPlan::from_spec("seed=x").is_err(), "non-numeric seed");
+        assert!(FaultPlan::from_spec("seed=1,panic=200").is_err(), "pct > 100");
+        assert!(FaultPlan::from_spec("seed").is_err(), "not key=value");
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = FaultPlan::from_spec("seed=7,panic=15,error=10,slow=25:5").unwrap();
+        let b = FaultPlan::from_spec("seed=7,panic=15,error=10,slow=25:5").unwrap();
+        let sa: Vec<_> = (0..256).map(|_| a.next()).collect();
+        let sb: Vec<_> = (0..256).map(|_| b.next()).collect();
+        assert_eq!(sa, sb, "same spec => same schedule");
+        assert!(sa.iter().any(|x| *x == Some(ChaosAction::Panic)));
+        assert!(sa.iter().any(|x| *x == Some(ChaosAction::Error)));
+        assert!(sa.iter().any(|x| x.is_none()), "most ticks draw nothing");
+
+        let c = FaultPlan::from_spec("seed=8,panic=15,error=10,slow=25:5").unwrap();
+        let sc: Vec<_> = (0..256).map(|_| c.next()).collect();
+        assert_ne!(sa, sc, "different seed => different schedule");
+    }
+
+    #[test]
+    fn tick_cap_silences_the_plan() {
+        let p = FaultPlan::new(3, 100, 0, 0).with_ticks(4);
+        for _ in 0..4 {
+            assert_eq!(p.next(), Some(ChaosAction::Panic));
+        }
+        for _ in 0..32 {
+            assert_eq!(p.next(), None, "past the cap the plan is quiet forever");
+        }
+    }
+
+    #[test]
+    fn draw_rates_track_the_requested_percentages() {
+        let p = FaultPlan::new(11, 10, 10, 10);
+        let n = 20_000u64;
+        let mut counts = [0u64; 3];
+        let mut none = 0u64;
+        for _ in 0..n {
+            match p.next() {
+                Some(ChaosAction::Panic) => counts[0] += 1,
+                Some(ChaosAction::Error) => counts[1] += 1,
+                Some(ChaosAction::Slow(_)) => counts[2] += 1,
+                None => none += 1,
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let pct = 100.0 * *c as f64 / n as f64;
+            assert!((8.0..12.0).contains(&pct), "action {i}: {pct:.1}% not near 10%");
+        }
+        assert!(none > n / 2);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_recovers_via_probe() {
+        let b = Breaker::new(BreakerConfig {
+            threshold: 3,
+            cooldown: Duration::from_millis(100),
+        });
+        let t0 = Instant::now();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit(t0));
+
+        b.record_failure(t0);
+        b.record_failure(t0);
+        assert_eq!(b.state(), BreakerState::Closed, "below threshold stays closed");
+        b.record_failure(t0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(t0), "open rejects immediately");
+        assert!(!b.admit(t0 + Duration::from_millis(50)), "still cooling down");
+
+        // past the cooldown: exactly one probe is admitted half-open
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(b.admit(t1), "first post-cooldown admit is the probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.admit(t1), "second admit while the probe is in flight is rejected");
+
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed, "probe success closes");
+        assert!(b.admit(t1));
+    }
+
+    #[test]
+    fn breaker_probe_failure_reopens_and_lost_probe_is_replaced() {
+        let cooldown = Duration::from_millis(100);
+        let b = Breaker::new(BreakerConfig {
+            threshold: 1,
+            cooldown,
+        });
+        let t0 = Instant::now();
+        b.record_failure(t0);
+        assert_eq!(b.state(), BreakerState::Open);
+
+        let t1 = t0 + cooldown;
+        assert!(b.admit(t1));
+        b.record_failure(t1);
+        assert_eq!(b.state(), BreakerState::Open, "probe failure reopens");
+
+        // a probe whose outcome never lands is replaced after a cooldown
+        let t2 = t1 + cooldown;
+        assert!(b.admit(t2), "half-open probe");
+        assert!(!b.admit(t2));
+        let t3 = t2 + cooldown;
+        assert!(b.admit(t3), "expired probe slot is re-armed");
+    }
+
+    #[test]
+    fn breaker_counts_consecutive_failures_only() {
+        let b = Breaker::new(BreakerConfig {
+            threshold: 2,
+            cooldown: Duration::from_millis(10),
+        });
+        let t = Instant::now();
+        b.record_failure(t);
+        b.record_success();
+        b.record_failure(t);
+        assert_eq!(b.state(), BreakerState::Closed, "success resets the streak");
+        b.record_failure(t);
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+}

@@ -84,6 +84,20 @@ pub struct Metrics {
     /// stall observations by the serving watchdog (one per stalled worker
     /// per scan — keeps counting while the stall persists)
     watchdog_stalls: AtomicU64,
+    /// panics caught out of executing batches (contained + retry +
+    /// supervisor catches — every one was converted to typed responses,
+    /// never a dead thread). Lock-free: recorded on the recovery path,
+    /// which must not depend on the metrics lock being healthy.
+    worker_panics: AtomicU64,
+    /// poison-pill requests quarantined after repeatedly killing a
+    /// worker (each got a typed fault response)
+    quarantined: AtomicU64,
+    /// submissions refused because the lane's circuit breaker was open
+    /// (each answered with `SubmitError::LaneDown`)
+    lane_down: AtomicU64,
+    /// dispatcher workers currently alive — a live gauge proving the
+    /// pool is at configured strength (inc once ready, dec on exit)
+    live_workers: AtomicU64,
     /// end-to-end latency per request (submit → response send), the
     /// distribution behind p50/p95/p99. Lock-free, fixed footprint.
     latency: Histogram,
@@ -112,7 +126,7 @@ impl Metrics {
             ..Metrics::default()
         };
         {
-            let mut i = m.inner.lock().unwrap();
+            let mut i = m.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             i.worker_batches = vec![0; workers];
             i.worker_served = vec![0; workers];
             i.worker_busy_us = vec![0; workers];
@@ -132,7 +146,9 @@ impl Metrics {
         compute_us: u64,
         busy_us: u64,
     ) {
-        let mut m = self.inner.lock().unwrap();
+        // Poison-recovering lock: metrics must keep counting after any
+        // worker panic (the counters are plain integers — always valid).
+        let mut m = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         m.batches += 1;
         m.served += size as u64;
         m.batch_hist[size.min(64)] += 1;
@@ -194,6 +210,34 @@ impl Metrics {
         self.watchdog_stalls.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one caught worker panic (contained batch, quarantining
+    /// retry, or supervisor catch). Lock-free.
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one quarantined poison-pill request. Lock-free.
+    pub fn record_quarantined(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one breaker-rejected submission. Lock-free.
+    pub fn record_lane_down(&self) {
+        self.lane_down.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One dispatcher worker came up (or respawned). Lock-free.
+    pub fn inc_live_workers(&self) {
+        self.live_workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One dispatcher worker exited. Saturates at zero. Lock-free.
+    pub fn dec_live_workers(&self) {
+        let _ = self
+            .live_workers
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
     /// Record one request's end-to-end latency. Lock-free, O(1) memory:
     /// one bucket increment, never an allocation.
     pub fn record_latency(&self, us: u64) {
@@ -209,14 +253,17 @@ impl Metrics {
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .errors += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let latency_hist = self.latency.snapshot();
         let queue_hist = self.queue_wait.snapshot();
         let compute_hist = self.compute.snapshot();
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let elapsed = m.started.elapsed().as_secs_f64();
         MetricsSnapshot {
             served: m.served,
@@ -262,6 +309,10 @@ impl Metrics {
             expired: self.expired.load(Ordering::Relaxed),
             in_flight: self.in_flight.load(Ordering::Relaxed),
             watchdog_stalls: self.watchdog_stalls.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            lane_down: self.lane_down.load(Ordering::Relaxed),
+            live_workers: self.live_workers.load(Ordering::Relaxed),
             latency_hist,
             queue_hist,
             compute_hist,
@@ -318,6 +369,15 @@ pub struct MetricsSnapshot {
     /// stall observations by the serving watchdog (0 when no watchdog
     /// is attached)
     pub watchdog_stalls: u64,
+    /// caught worker panics (contained batches + quarantining retries +
+    /// supervisor catches)
+    pub worker_panics: u64,
+    /// poison-pill requests quarantined with a typed fault response
+    pub quarantined: u64,
+    /// submissions bounced by an open per-lane circuit breaker
+    pub lane_down: u64,
+    /// dispatcher workers currently alive (the pool-strength gauge)
+    pub live_workers: u64,
     /// end-to-end latency distribution (bucket counts; Prometheus
     /// exposition renders these as cumulative `_bucket` series)
     pub latency_hist: HistogramSnapshot,
@@ -425,6 +485,26 @@ mod tests {
         assert_eq!(m.snapshot().in_flight, 0);
         m.record_watchdog_stall();
         assert_eq!(m.snapshot().watchdog_stalls, 1);
+    }
+
+    #[test]
+    fn fault_tolerance_counters() {
+        let m = Metrics::new(2);
+        m.inc_live_workers();
+        m.inc_live_workers();
+        m.record_worker_panic();
+        m.record_quarantined();
+        m.record_lane_down();
+        m.record_lane_down();
+        let s = m.snapshot();
+        assert_eq!(s.live_workers, 2);
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.lane_down, 2);
+        m.dec_live_workers();
+        m.dec_live_workers();
+        m.dec_live_workers(); // extra decrement saturates at zero
+        assert_eq!(m.snapshot().live_workers, 0);
     }
 
     #[test]

@@ -31,8 +31,28 @@
 //! * batch sizes never exceed `max_batch`;
 //! * a failed batch disconnects exactly its own requests' responders and
 //!   the pool keeps serving subsequent batches.
+//!
+//! Failure domains (DESIGN.md §15, tested in rust/tests/chaos.rs):
+//! * a panic inside an executing batch is CONTAINED: the dispatcher
+//!   catches it, rebuilds the lane's executor, and bisect-retries the
+//!   batch's requests individually — requests that pass are served
+//!   normally, a request that panics the worker AGAIN is quarantined
+//!   with a typed [`Response::fault`] (the poison pill gets a 500, the
+//!   lane keeps serving everyone else);
+//! * a panic anywhere else in the dispatch loop is caught by the
+//!   in-thread supervisor, which rebuilds every executor and resumes —
+//!   the pool always returns to `cfg.workers` strength
+//!   (`Metrics.live_workers`), and every caught panic counts in
+//!   `Metrics.worker_panics` + journals `WorkerPanic`/`WorkerRespawn`;
+//! * with [`ServerConfig::breaker`] set, each lane has a circuit
+//!   breaker: `threshold` consecutive batch failures open it (submits
+//!   bounce fast with [`SubmitError::LaneDown`]) and a half-open probe
+//!   closes it again ([`fault::Breaker`]);
+//! * every recovery path above is driven deterministically by the
+//!   seeded chaos plan ([`fault::FaultPlan`], `ServerConfig.chaos`).
 
 pub mod executor;
+pub mod fault;
 pub mod metrics;
 pub mod queue;
 pub mod watchdog;
@@ -46,10 +66,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::engine::{DeconvImpl, Precision, Program};
-use crate::obs::journal::{EventKind, Journal};
+use crate::obs::journal::{EventKind, Journal, NO_LANE};
 use crate::obs::{self, LayerStages, Span, StageSink};
 
 pub use executor::{chunk_batches, plan_batch, BatchExecutor, NativeExecutor, PjrtExecutor};
+pub use fault::{Breaker, BreakerConfig, BreakerState, ChaosAction, Fault, FaultKind, FaultPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{BoundedQueue, LaneQueue, PopDeadline, PushError};
 pub use watchdog::WatchdogConfig;
@@ -107,6 +128,18 @@ pub struct ServerConfig {
     /// requires `journal` (the watchdog scans it); ignored with a
     /// logged warning otherwise.
     pub watchdog: Option<WatchdogConfig>,
+    /// seeded fault-injection plan (DESIGN.md §15): when set, each batch
+    /// dispatch draws one chaos tick that may inject a worker panic, an
+    /// executor error, or a slow-compute stall. `None` (the default) is
+    /// production: no draws, no overhead. Containment retries NEVER draw
+    /// chaos, so recovery is deterministic.
+    pub chaos: Option<Arc<FaultPlan>>,
+    /// per-lane circuit breakers ([`fault::Breaker`]): `threshold`
+    /// consecutive batch failures open a lane (submits return
+    /// [`SubmitError::LaneDown`] without touching the queue) until a
+    /// half-open probe succeeds. `None` (the default) disables breakers
+    /// and keeps the legacy fail-every-batch semantics.
+    pub breaker: Option<BreakerConfig>,
 }
 
 impl Default for ServerConfig {
@@ -121,6 +154,8 @@ impl Default for ServerConfig {
             record_spans: true,
             journal: None,
             watchdog: None,
+            chaos: None,
+            breaker: None,
         }
     }
 }
@@ -184,6 +219,12 @@ pub struct Response {
     /// batch), shared behind an `Arc` by every traced request of that
     /// batch.
     pub stages: Option<Arc<Vec<LayerStages>>>,
+    /// `Some` when this request terminated with a typed fault instead of
+    /// an image (`image` is empty then): the batch panicked the worker
+    /// and the request's containment retry also failed, or the request
+    /// was quarantined as a poison pill. The responder channel still
+    /// fires — panic containment means no stranded receivers.
+    pub fault: Option<Fault>,
 }
 
 /// Why a submit was refused. `Full` is the admission-control shed signal
@@ -197,6 +238,9 @@ pub enum SubmitError {
     Closed,
     /// no such model lane
     UnknownModel,
+    /// the lane's circuit breaker is open (recent consecutive batch
+    /// failures); counted in `Metrics.lane_down`, retry after a cooldown
+    LaneDown,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -205,6 +249,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Full => write!(f, "queue full (backpressure)"),
             SubmitError::Closed => write!(f, "server stopped"),
             SubmitError::UnknownModel => write!(f, "unknown model lane"),
+            SubmitError::LaneDown => write!(f, "lane down (circuit breaker open)"),
         }
     }
 }
@@ -244,6 +289,9 @@ pub struct Server {
     /// raised before joining so the watchdog thread (in `handles` like
     /// the dispatchers) exits promptly
     watchdog_stop: Arc<AtomicBool>,
+    /// per-lane circuit breakers, `None` unless `cfg.breaker` is set
+    /// (shared with every dispatcher, which records batch outcomes)
+    breakers: Option<Arc<Vec<Breaker>>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -282,6 +330,9 @@ impl Server {
         let queue = Arc::new(LaneQueue::new(lanes.len(), cfg.queue_cap));
         let metrics = Arc::new(Metrics::with_lanes(workers, lanes.len()));
         let models: Vec<String> = lanes.iter().map(|l| l.name.clone()).collect();
+        let breakers: Option<Arc<Vec<Breaker>>> = cfg
+            .breaker
+            .map(|bc| Arc::new((0..lanes.len()).map(|_| Breaker::new(bc)).collect()));
         let lanes = Arc::new(lanes);
         let cfg = Arc::new(cfg);
         // report backend construction success/failure synchronously
@@ -292,6 +343,7 @@ impl Server {
             let metrics2 = metrics.clone();
             let lanes2 = lanes.clone();
             let cfg2 = cfg.clone();
+            let breakers2 = breakers.clone();
             let ready = ready_tx.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("sd-dispatcher-{w}"))
@@ -307,7 +359,63 @@ impl Server {
                         }
                     }
                     let _ = ready.send(Ok(()));
-                    dispatch_loop(w, &queue2, execs, &cfg2, &metrics2);
+                    metrics2.inc_live_workers();
+                    // In-thread supervisor: the dispatch loop's own panic
+                    // containment handles executor panics, but if the loop
+                    // itself ever panics (a bug in dispatch bookkeeping,
+                    // say), the supervisor catches it, rebuilds every
+                    // executor, and resumes — the pool NEVER silently
+                    // shrinks below `cfg.workers` (DESIGN.md §15).
+                    loop {
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            dispatch_loop(
+                                w,
+                                &queue2,
+                                &mut execs,
+                                &lanes2,
+                                &cfg2,
+                                &metrics2,
+                                breakers2.as_deref().map(|v| v.as_slice()),
+                            );
+                        }));
+                        match run {
+                            Ok(()) => break, // queue closed and drained
+                            Err(payload) => {
+                                metrics2.record_worker_panic();
+                                if let Some(j) = &cfg2.journal {
+                                    j.emit(EventKind::WorkerPanic, NO_LANE, 2, 0, 0);
+                                }
+                                obs::log::error(
+                                    "coordinator",
+                                    "dispatch loop panicked; supervisor respawning worker",
+                                    &[
+                                        ("worker", w.to_string()),
+                                        ("panic", panic_message(payload.as_ref())),
+                                    ],
+                                );
+                                // best-effort executor rebuild: a factory
+                                // failure keeps the old executor rather
+                                // than killing the worker
+                                for (i, lane) in lanes2.iter().enumerate() {
+                                    match (lane.factory)(w) {
+                                        Ok(e) => execs[i] = e,
+                                        Err(e) => obs::log::error(
+                                            "coordinator",
+                                            &format!("executor rebuild failed: {e:#}"),
+                                            &[
+                                                ("worker", w.to_string()),
+                                                ("lane", i.to_string()),
+                                            ],
+                                        ),
+                                    }
+                                }
+                                if let Some(j) = &cfg2.journal {
+                                    j.emit(EventKind::WorkerRespawn, NO_LANE, 0, 0, 0);
+                                }
+                            }
+                        }
+                    }
+                    metrics2.dec_live_workers();
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -373,6 +481,7 @@ impl Server {
             metrics,
             cfg,
             watchdog_stop,
+            breakers,
             handles: Mutex::new(handles),
         })
     }
@@ -467,6 +576,12 @@ impl Server {
         if lane >= self.models.len() {
             return Err(SubmitError::UnknownModel);
         }
+        if let Some(bs) = &self.breakers {
+            if !bs[lane].admit(Instant::now()) {
+                self.metrics.record_lane_down();
+                return Err(SubmitError::LaneDown);
+            }
+        }
         let (resp_tx, resp_rx) = mpsc::channel();
         let trace_id = opts.trace_id.unwrap_or_else(obs::trace::mint_trace_id);
         let req = Request {
@@ -506,8 +621,16 @@ impl Server {
         self.submit_to(0, z, None).map_err(|e| anyhow!("{e}"))
     }
 
-    /// Submit to lane 0, blocking while the queue is full.
+    /// Submit to lane 0, blocking while the queue is full. An open
+    /// circuit breaker still refuses fast — blocking admission must not
+    /// pile requests onto a lane that is known to be failing.
     pub fn submit_blocking(&self, z: Vec<f32>) -> Result<Receiver<Response>> {
+        if let Some(bs) = &self.breakers {
+            if !bs[0].admit(Instant::now()) {
+                self.metrics.record_lane_down();
+                return Err(anyhow!("{}", SubmitError::LaneDown));
+            }
+        }
         let (resp_tx, resp_rx) = mpsc::channel();
         let trace_id = obs::trace::mint_trace_id();
         let req = Request {
@@ -548,6 +671,14 @@ impl Server {
         self.cfg.journal.as_ref()
     }
 
+    /// Per-lane circuit-breaker states (lane order matches
+    /// [`Server::models`]); `None` when breakers are not configured.
+    pub fn breaker_states(&self) -> Option<Vec<BreakerState>> {
+        self.breakers
+            .as_ref()
+            .map(|bs| bs.iter().map(|b| b.state()).collect())
+    }
+
     /// The configuration this server was started with.
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
@@ -562,7 +693,14 @@ impl Server {
     pub fn shutdown(&self) {
         self.queue.close();
         self.watchdog_stop.store(true, Ordering::Relaxed);
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
+        // poison-recovering lock: shutdown must drain even after a panic
+        // elsewhere poisoned the handle list (it is always a valid Vec)
+        let handles: Vec<JoinHandle<()>> = std::mem::take(
+            &mut *self
+                .handles
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner),
+        );
         for h in handles {
             let _ = h.join();
         }
@@ -573,10 +711,12 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.queue.close();
         self.watchdog_stop.store(true, Ordering::Relaxed);
-        if let Ok(handles) = self.handles.get_mut() {
-            for h in handles.drain(..) {
-                let _ = h.join();
-            }
+        let handles = self
+            .handles
+            .get_mut()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        for h in handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -584,15 +724,21 @@ impl Drop for Server {
 /// One worker's dispatch loop: pop the first request of any lane
 /// (blocking, round-robin fair), continuously fill a single-lane batch
 /// until `max_batch` or the fill budget (whichever first), drop
-/// expired-deadline requests BEFORE compute, execute, fan out. Exits only
-/// when the queue is closed *and* drained, so accepted requests are never
-/// dropped by shutdown.
+/// expired-deadline requests BEFORE compute, execute INSIDE a panic
+/// container ([`contained_execute`]), fan out. A panicking batch never
+/// strands its receivers: the lane's executor is rebuilt and every
+/// request of the batch is retried individually ([`retry_one`] — the
+/// bisect step), quarantining repeat offenders with a typed fault.
+/// Exits only when the queue is closed *and* drained, so accepted
+/// requests are never dropped by shutdown.
 fn dispatch_loop(
     worker: usize,
     queue: &LaneQueue<Request>,
-    mut execs: Vec<Box<dyn BatchExecutor>>,
+    execs: &mut [Box<dyn BatchExecutor>],
+    lanes: &[ModelLane],
     cfg: &ServerConfig,
     metrics: &Metrics,
+    breakers: Option<&[Breaker]>,
 ) {
     let journal = cfg.journal.as_deref();
     loop {
@@ -668,14 +814,14 @@ fn dispatch_loop(
             );
         }
         let t0 = Instant::now();
-        let result = match sink.as_mut() {
-            Some(s) => execs[lane].execute_traced(&zs, Some(s)),
-            None => execs[lane].execute(&zs),
-        };
-        match result {
-            Ok(images) => {
+        let outcome = contained_execute(&mut execs[lane], &zs, sink.as_mut(), cfg.chaos.as_deref());
+        match outcome {
+            ExecOutcome::Ok(images) => {
                 let t_done = Instant::now();
                 let compute_us = (t_done - t0).as_micros() as u64;
+                if let Some(bs) = breakers {
+                    bs[lane].record_success();
+                }
                 metrics.record_batch(
                     worker,
                     lane,
@@ -751,11 +897,15 @@ fn dispatch_loop(
                         batch_size: zs.len(),
                         span,
                         stages: if req.traced { stages.clone() } else { None },
+                        fault: None,
                     });
                 }
             }
-            Err(e) => {
+            ExecOutcome::Err(e) => {
                 metrics.record_error();
+                if let Some(bs) = breakers {
+                    bs[lane].record_failure(Instant::now());
+                }
                 for req in &live {
                     metrics.dec_in_flight();
                     if let Some(j) = journal {
@@ -771,6 +921,247 @@ fn dispatch_loop(
                     &[("worker", worker.to_string()), ("lane", lane.to_string())],
                 );
             }
+            ExecOutcome::Panic(msg) => {
+                // blast-radius containment (DESIGN.md §15): the batch
+                // panicked the worker mid-execute. Count it, open the
+                // books with the breaker, rebuild the (possibly
+                // mid-batch-corrupt) executor, then bisect: retry every
+                // request of the batch individually so one poison pill
+                // cannot take its batchmates down with it.
+                metrics.record_worker_panic();
+                if let Some(bs) = breakers {
+                    bs[lane].record_failure(Instant::now());
+                }
+                if let Some(j) = journal {
+                    j.emit(EventKind::WorkerPanic, lane as u16, 0, 0, live[0].trace_id);
+                }
+                obs::log::error(
+                    "coordinator",
+                    "batch panicked the worker; containing and retrying individually",
+                    &[
+                        ("worker", worker.to_string()),
+                        ("lane", lane.to_string()),
+                        ("batch", live.len().to_string()),
+                        ("panic", msg),
+                    ],
+                );
+                rebuild_executor(execs, lanes, lane, worker, journal);
+                for req in live {
+                    retry_one(req, worker, lane, execs, lanes, cfg, metrics, breakers, journal);
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of one contained executor call.
+enum ExecOutcome {
+    Ok(Vec<Vec<f32>>),
+    Err(anyhow::Error),
+    Panic(String),
+}
+
+/// Run one executor call inside `catch_unwind`, drawing (at most) one
+/// chaos action first — INSIDE the contained region, so an injected
+/// panic exercises the real containment path, not a simulation of it.
+/// `AssertUnwindSafe` is sound here: an executor that panicked is
+/// discarded and rebuilt from its lane factory before it is used again
+/// ([`rebuild_executor`]), so no broken invariant can be observed.
+fn contained_execute(
+    exec: &mut Box<dyn BatchExecutor>,
+    zs: &[Vec<f32>],
+    sink: Option<&mut StageSink>,
+    chaos: Option<&FaultPlan>,
+) -> ExecOutcome {
+    let action = chaos.and_then(|p| p.next());
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        match action {
+            Some(ChaosAction::Panic) => panic!("chaos: injected worker panic"),
+            Some(ChaosAction::Error) => return Err(anyhow!("chaos: injected executor error")),
+            Some(ChaosAction::Slow(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        match sink {
+            Some(s) => exec.execute_traced(zs, Some(s)),
+            None => exec.execute(zs),
+        }
+    }));
+    match caught {
+        Ok(Ok(images)) => ExecOutcome::Ok(images),
+        Ok(Err(e)) => ExecOutcome::Err(e),
+        Err(payload) => ExecOutcome::Panic(panic_message(payload.as_ref())),
+    }
+}
+
+/// Best-effort panic payload → short string for logs and typed faults.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    if msg.chars().count() > 200 {
+        msg.chars().take(200).collect()
+    } else {
+        msg
+    }
+}
+
+/// Rebuild one lane's executor after a panic (the old one may hold
+/// arbitrary mid-batch state) and journal the respawn. Best-effort: a
+/// factory failure keeps the old executor and logs — the worker must
+/// stay up either way.
+fn rebuild_executor(
+    execs: &mut [Box<dyn BatchExecutor>],
+    lanes: &[ModelLane],
+    lane: usize,
+    worker: usize,
+    journal: Option<&Journal>,
+) {
+    match (lanes[lane].factory)(worker) {
+        Ok(e) => {
+            execs[lane] = e;
+            if let Some(j) = journal {
+                j.emit(EventKind::WorkerRespawn, lane as u16, 0, 0, 0);
+            }
+        }
+        Err(e) => obs::log::error(
+            "coordinator",
+            &format!("executor rebuild failed: {e:#}"),
+            &[("worker", worker.to_string()), ("lane", lane.to_string())],
+        ),
+    }
+}
+
+/// The bisect step of panic containment: run ONE request of a panicked
+/// batch by itself — no chaos draw (recovery must be deterministic), no
+/// stage sink. Success responds normally (`batch_size` 1); an executor
+/// error keeps the legacy disconnect semantics; a SECOND panic marks
+/// the request a poison pill — it is quarantined with a typed
+/// [`Fault`] response (`Metrics.quarantined`) and the executor is
+/// rebuilt again, so the lane keeps serving everyone else.
+fn retry_one(
+    req: Request,
+    worker: usize,
+    lane: usize,
+    execs: &mut [Box<dyn BatchExecutor>],
+    lanes: &[ModelLane],
+    cfg: &ServerConfig,
+    metrics: &Metrics,
+    breakers: Option<&[Breaker]>,
+    journal: Option<&Journal>,
+) {
+    let t0 = Instant::now();
+    let outcome = contained_execute(&mut execs[lane], std::slice::from_ref(&req.z), None, None);
+    match outcome {
+        ExecOutcome::Ok(mut images) => {
+            let compute_us = t0.elapsed().as_micros() as u64;
+            if let Some(bs) = breakers {
+                bs[lane].record_success();
+            }
+            metrics.record_batch(worker, lane, 1, compute_us, compute_us);
+            let total_us = req.submitted.elapsed().as_micros() as u64;
+            let queue_us = total_us.saturating_sub(compute_us);
+            metrics.record_request_latency(total_us, queue_us, compute_us);
+            metrics.dec_in_flight();
+            if let Some(j) = journal {
+                j.emit(EventKind::ComputeEnd, lane as u16, 1, compute_us, 0);
+                j.emit(EventKind::Respond, lane as u16, 0, total_us, req.trace_id);
+            }
+            let span = if cfg.record_spans {
+                Span {
+                    trace_id: req.trace_id,
+                    queue_us,
+                    batch_form_us: 0,
+                    compute_us,
+                    respond_us: 0,
+                }
+            } else {
+                Span::default()
+            };
+            let _ = req.resp.send(Response {
+                id: req.id,
+                image: images.pop().unwrap_or_default(),
+                queue_us,
+                compute_us,
+                batch_size: 1,
+                span,
+                stages: None,
+                fault: None,
+            });
+        }
+        ExecOutcome::Err(e) => {
+            // the batch panicked AND the individual retry errored: the
+            // request still gets a TYPED response (its batch's panic is
+            // the root cause the client should see), never a silent drop
+            metrics.record_error();
+            metrics.dec_in_flight();
+            if let Some(bs) = breakers {
+                bs[lane].record_failure(Instant::now());
+            }
+            obs::log::error(
+                "coordinator",
+                &format!("containment retry failed: {e:#}"),
+                &[("worker", worker.to_string()), ("lane", lane.to_string())],
+            );
+            let total_us = req.submitted.elapsed().as_micros() as u64;
+            if let Some(j) = journal {
+                j.emit(EventKind::Respond, lane as u16, 0, total_us, req.trace_id);
+            }
+            let _ = req.resp.send(Response {
+                id: req.id,
+                image: Vec::new(),
+                queue_us: total_us,
+                compute_us: 0,
+                batch_size: 1,
+                span: Span::default(),
+                stages: None,
+                fault: Some(Fault {
+                    kind: FaultKind::WorkerPanic,
+                    msg: format!("batch panicked; retry failed: {e:#}"),
+                }),
+            });
+        }
+        ExecOutcome::Panic(msg) => {
+            metrics.record_worker_panic();
+            metrics.record_quarantined();
+            if let Some(bs) = breakers {
+                bs[lane].record_failure(Instant::now());
+            }
+            if let Some(j) = journal {
+                j.emit(EventKind::WorkerPanic, lane as u16, 1, 0, req.trace_id);
+            }
+            obs::log::warn(
+                "coordinator",
+                "request quarantined after panicking the worker twice",
+                &[
+                    ("worker", worker.to_string()),
+                    ("lane", lane.to_string()),
+                    ("request", req.id.to_string()),
+                    ("panic", msg.clone()),
+                ],
+            );
+            rebuild_executor(execs, lanes, lane, worker, journal);
+            let total_us = req.submitted.elapsed().as_micros() as u64;
+            metrics.dec_in_flight();
+            if let Some(j) = journal {
+                j.emit(EventKind::Respond, lane as u16, 0, total_us, req.trace_id);
+            }
+            let _ = req.resp.send(Response {
+                id: req.id,
+                image: Vec::new(),
+                queue_us: total_us,
+                compute_us: 0,
+                batch_size: 1,
+                span: Span::default(),
+                stages: None,
+                fault: Some(Fault {
+                    kind: FaultKind::Quarantined,
+                    msg,
+                }),
+            });
         }
     }
 }

@@ -37,8 +37,18 @@
 //! [`pop_deadline`]: BoundedQueue::pop_deadline
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, LockResult, Mutex, PoisonError};
 use std::time::Instant;
+
+/// Poison-recovering unwrap for lock/wait results: queue state is plain
+/// data (`VecDeque`s + a bool) that is valid after ANY panic, so a
+/// poisoned mutex degrades to the inner guard instead of cascading the
+/// panic through every producer and consumer of the serving plane
+/// (DESIGN.md §15). Works for `Mutex::lock`, `Condvar::wait`, and
+/// `Condvar::wait_timeout` alike — they all return a [`LockResult`].
+fn sweep<T>(r: LockResult<T>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Why a non-blocking push was refused; the item is handed back.
 pub enum PushError<T> {
@@ -88,7 +98,7 @@ impl<T> BoundedQueue<T> {
 
     /// Current queue depth (racy by nature — for metrics/tests).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        sweep(self.inner.lock()).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -98,7 +108,7 @@ impl<T> BoundedQueue<T> {
     /// Non-blocking push. On success returns the queue depth *including*
     /// the new item (the backpressure high-water metric).
     pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         if q.closed {
             return Err(PushError::Closed(item));
         }
@@ -115,7 +125,7 @@ impl<T> BoundedQueue<T> {
     /// Blocking push: waits while the queue is full. Returns the post-push
     /// depth, or hands the item back if the queue is (or gets) closed.
     pub fn push(&self, item: T) -> Result<usize, T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         loop {
             if q.closed {
                 return Err(item);
@@ -123,7 +133,7 @@ impl<T> BoundedQueue<T> {
             if q.items.len() < q.cap {
                 break;
             }
-            q = self.not_full.wait(q).unwrap();
+            q = sweep(self.not_full.wait(q));
         }
         q.items.push_back(item);
         let depth = q.items.len();
@@ -135,7 +145,7 @@ impl<T> BoundedQueue<T> {
     /// Blocking pop: waits for an item; `None` only once the queue is
     /// closed **and** drained.
     pub fn pop(&self) -> Option<T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         loop {
             if let Some(item) = q.items.pop_front() {
                 drop(q);
@@ -145,7 +155,7 @@ impl<T> BoundedQueue<T> {
             if q.closed {
                 return None;
             }
-            q = self.not_empty.wait(q).unwrap();
+            q = sweep(self.not_empty.wait(q));
         }
     }
 
@@ -154,7 +164,7 @@ impl<T> BoundedQueue<T> {
     /// ([`PopDeadline::Closed`]) so the batcher can stop filling early on
     /// shutdown.
     pub fn pop_deadline(&self, deadline: Instant) -> PopDeadline<T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         loop {
             if let Some(item) = q.items.pop_front() {
                 drop(q);
@@ -168,7 +178,7 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return PopDeadline::Timeout;
             }
-            q = self.not_empty.wait_timeout(q, deadline - now).unwrap().0;
+            q = sweep(self.not_empty.wait_timeout(q, deadline - now)).0;
         }
     }
 
@@ -176,7 +186,7 @@ impl<T> BoundedQueue<T> {
     /// producer/consumer wakes. Items already queued stay poppable
     /// (close-then-drain).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        sweep(self.inner.lock()).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
@@ -223,12 +233,12 @@ impl<T> LaneQueue<T> {
 
     /// Current depth of one lane (racy by nature — for metrics/tests).
     pub fn len(&self, lane: usize) -> usize {
-        self.inner.lock().unwrap().lanes[lane].len()
+        sweep(self.inner.lock()).lanes[lane].len()
     }
 
     /// Total queued items across all lanes.
     pub fn total_len(&self) -> usize {
-        self.inner.lock().unwrap().lanes.iter().map(VecDeque::len).sum()
+        sweep(self.inner.lock()).lanes.iter().map(VecDeque::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -240,7 +250,7 @@ impl<T> LaneQueue<T> {
     /// metric). `Full` is the admission-control signal: the caller owes
     /// the client an explicit shed answer, never a silent drop.
     pub fn try_push(&self, lane: usize, item: T) -> Result<usize, PushError<T>> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         if q.closed {
             return Err(PushError::Closed(item));
         }
@@ -261,7 +271,7 @@ impl<T> LaneQueue<T> {
     /// the post-push lane depth, or hands the item back if the queue is
     /// (or gets) closed.
     pub fn push(&self, lane: usize, item: T) -> Result<usize, T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         loop {
             if q.closed {
                 return Err(item);
@@ -269,7 +279,7 @@ impl<T> LaneQueue<T> {
             if q.lanes[lane].len() < q.cap {
                 break;
             }
-            q = self.not_full.wait(q).unwrap();
+            q = sweep(self.not_full.wait(q));
         }
         q.lanes[lane].push_back(item);
         let depth = q.lanes[lane].len();
@@ -282,7 +292,7 @@ impl<T> LaneQueue<T> {
     /// past the last lane served, so a busy lane cannot starve the others.
     /// `None` only once the queue is closed **and** every lane is drained.
     pub fn pop_any(&self) -> Option<(usize, T)> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         loop {
             let n = q.lanes.len();
             let start = q.rr;
@@ -298,13 +308,13 @@ impl<T> LaneQueue<T> {
             if q.closed {
                 return None;
             }
-            q = self.not_empty.wait(q).unwrap();
+            q = sweep(self.not_empty.wait(q));
         }
     }
 
     /// Pop from one lane, waiting at most until `deadline`.
     fn pop_lane_deadline(&self, lane: usize, deadline: Instant) -> PopDeadline<T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = sweep(self.inner.lock());
         loop {
             if let Some(item) = q.lanes[lane].pop_front() {
                 drop(q);
@@ -318,7 +328,7 @@ impl<T> LaneQueue<T> {
             if now >= deadline {
                 return PopDeadline::Timeout;
             }
-            q = self.not_empty.wait_timeout(q, deadline - now).unwrap().0;
+            q = sweep(self.not_empty.wait_timeout(q, deadline - now)).0;
         }
     }
 
@@ -346,7 +356,7 @@ impl<T> LaneQueue<T> {
         let mut appended = 0;
         // fast path: everything already queued, one lock, no clock read
         {
-            let mut q = self.inner.lock().unwrap();
+            let mut q = sweep(self.inner.lock());
             while batch.len() < max_batch {
                 match q.lanes[lane].pop_front() {
                     Some(item) => {
@@ -377,7 +387,7 @@ impl<T> LaneQueue<T> {
     /// producer/consumer wakes. Items already queued stay poppable
     /// (close-then-drain).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        sweep(self.inner.lock()).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }

@@ -25,7 +25,7 @@
 //!           activations, i32 accumulate, calibrated at compile time)
 //!   serve --listen <addr> [--models all|csv] [--serve-secs N]
 //!           [--deadline-ms D] [--workers W] [--batch B] [--queue-cap Q]
-//!           [--precision f32|int8] [--artifact-dir DIR]
+//!           [--precision f32|int8] [--artifact-dir DIR] [--chaos SPEC]
 //!           network front door: serve every requested model (default: all
 //!           six) from ONE process over HTTP/1.1 — one compiled program
 //!           per model, one shared worker pool, per-model routing by
@@ -33,6 +33,12 @@
 //!           when a lane is full, 504 for requests whose --deadline-ms
 //!           (or X-Deadline-Ms header) expires before compute. --serve-secs
 //!           bounds the run (CI smoke); omit it to serve until killed.
+//!           --chaos seed=N,panic=P,error=P,slow=P:MS,ticks=T (or the
+//!           REPRO_CHAOS env var) arms seeded fault injection inside
+//!           dispatcher batch execution — panics are contained, panicked
+//!           batches retried solo, repeat offenders quarantined with a
+//!           typed 500, and per-lane circuit breakers answer 503
+//!           lane_down while a lane recovers (DESIGN.md section 15).
 //!   profile [--model dcgan|artgan|sngan|gpgan|mde|fst] [--precision f32|int8]
 //!           [--requests N] [--seed S] [--json path]
 //!           run N seeded inferences through the native engine with the
@@ -64,7 +70,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
-use split_deconv::coordinator::{Server, ServerConfig, WatchdogConfig};
+use split_deconv::coordinator::{BreakerConfig, FaultPlan, Server, ServerConfig, WatchdogConfig};
 use split_deconv::engine::{DeconvImpl, LoadMode, Plan, Precision, Program};
 use split_deconv::obs::{Journal, StageSink};
 use split_deconv::report;
@@ -91,6 +97,24 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(|s| s.as_str())
+}
+
+/// `--chaos seed=N,panic=P,error=P,slow=P:MS,ticks=T` (or the
+/// `REPRO_CHAOS` env var when the flag is absent): the deterministic
+/// fault-injection plan of DESIGN.md §15. `None` when neither is set.
+fn chaos_plan(args: &[String]) -> Result<Option<Arc<FaultPlan>>> {
+    let spec = match flag_value(args, "--chaos") {
+        Some(s) => Some(s.to_string()),
+        None => std::env::var("REPRO_CHAOS").ok().filter(|s| !s.is_empty()),
+    };
+    match spec {
+        None => Ok(None),
+        Some(s) => {
+            let plan = FaultPlan::from_spec(&s)?;
+            eprintln!("chaos injection armed: {}", plan.describe());
+            Ok(Some(Arc::new(plan)))
+        }
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -321,6 +345,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         record_spans: true,
         journal: None,
         watchdog: None,
+        chaos: chaos_plan(args)?,
+        breaker: None,
     };
     let artifact_dir = flag_value(args, "--artifact-dir");
     let native = args.iter().any(|a| a == "--native") || !artifacts_available();
@@ -433,6 +459,11 @@ fn serve_listen_cmd(args: &[String], listen: &str) -> Result<()> {
         record_spans: true,
         journal: Some(journal),
         watchdog: Some(WatchdogConfig::default()),
+        chaos: chaos_plan(args)?,
+        // the front door always flies with per-lane circuit breakers:
+        // a lane that keeps failing answers 503 fast instead of burning
+        // its queue (DESIGN.md §15)
+        breaker: Some(BreakerConfig::default()),
     };
     let fcfg = FrontDoorConfig {
         listen: listen.to_string(),
@@ -613,6 +644,8 @@ fn trace_cmd(args: &[String]) -> Result<()> {
         record_spans: true,
         journal: Some(journal.clone()),
         watchdog: None,
+        chaos: None,
+        breaker: None,
     };
     let z_len = net.input_elems();
     eprintln!(

@@ -94,6 +94,13 @@ pub enum EventKind {
     /// `aux` = `layer_idx << 2 | stage` (stage: 0 im2col, 1 gemm,
     /// 2 epilogue, 3 interleave), `arg` = stage µs.
     Stage = 13,
+    /// A dispatcher caught a panic out of an executing batch. `aux` = 0
+    /// for a contained batch panic, 1 for a quarantining retry panic,
+    /// 2 for a dispatcher-loop panic caught by the supervisor.
+    WorkerPanic = 14,
+    /// The supervised worker rebuilt its executor(s) and resumed; the
+    /// pool is back at configured strength.
+    WorkerRespawn = 15,
 }
 
 impl EventKind {
@@ -113,6 +120,8 @@ impl EventKind {
             11 => Respond,
             12 => Disconnect,
             13 => Stage,
+            14 => WorkerPanic,
+            15 => WorkerRespawn,
             _ => return None,
         })
     }
@@ -133,6 +142,8 @@ impl EventKind {
             Respond => "respond",
             Disconnect => "disconnect",
             Stage => "stage",
+            WorkerPanic => "worker_panic",
+            WorkerRespawn => "worker_respawn",
         }
     }
 }
@@ -691,13 +702,13 @@ pub fn chrome_trace_json(events: &[Event], threads: &[(u16, String)], lanes: &[S
                     ));
                 }
             }
-            EventKind::Disconnect => {
+            EventKind::Disconnect | EventKind::WorkerPanic | EventKind::WorkerRespawn => {
                 out.push((
                     e.ts_us,
                     obj(vec![
                         ("ph", Json::Str("i".into())),
                         ("s", Json::Str("t".into())),
-                        ("name", Json::Str("disconnect".into())),
+                        ("name", Json::Str(e.kind.label().into())),
                         ("cat", Json::Str("coordinator".into())),
                         ("pid", num(1)),
                         ("tid", num(tid)),

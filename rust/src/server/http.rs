@@ -68,7 +68,8 @@ pub enum ReadOutcome {
 #[derive(Debug)]
 pub struct BadRequest {
     /// response status: 400, except 411 (Length Required) for a bodied
-    /// request that declares no `Content-Length`
+    /// request that declares no `Content-Length` and 413 (Payload Too
+    /// Large) for a declared length over the configured body cap
     pub status: u16,
     pub msg: String,
 }
@@ -191,9 +192,12 @@ impl<S: Read + Write> Conn<S> {
             None => 0,
         };
         if content_length > max_body {
-            return Err(BadRequest::new(format!(
-                "body of {content_length} bytes exceeds the {max_body}-byte limit"
-            )));
+            // hostile-client guard: reject by DECLARED length before
+            // reading a single body byte — 413, not an unbounded buffer
+            return Err(BadRequest {
+                status: 413,
+                msg: format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+            });
         }
         let connection = headers
             .iter()
@@ -317,6 +321,7 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         411 => "Length Required",
+        413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
@@ -436,9 +441,14 @@ mod tests {
         assert!(parse_one(b"GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n").is_err());
         // truncated: header never completes and the stream ends
         assert!(parse_one(b"GET /x HT").is_err());
-        // body larger than the cap is refused before buffering it
+        // body larger than the cap is refused before buffering it,
+        // with the typed 413 status
         let raw = b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
-        assert!(Conn::new(Cursor::new(raw.to_vec())).read_request(10).is_err());
+        let err = match Conn::new(Cursor::new(raw.to_vec())).read_request(10) {
+            Err(e) => e,
+            Ok(_) => panic!("oversized declared body must be rejected"),
+        };
+        assert_eq!(err.status, 413);
     }
 
     #[test]

@@ -36,9 +36,16 @@
 //!
 //! Admission control is EXPLICIT at this boundary: a full lane answers
 //! 503 `{"error":"shed"}` immediately (counted in `Metrics.shed` — never a
-//! silent drop, never a hang), and a request whose deadline expires before
-//! compute answers 504 (dropped by the dispatcher pre-compute, counted in
-//! `Metrics.expired`). Graceful shutdown is close-then-drain end to end:
+//! silent drop, never a hang), a lane whose circuit breaker is open
+//! answers 503 `{"error":"lane_down"}` (DESIGN.md §15), and a request
+//! whose deadline expires before compute answers 504 (dropped by the
+//! dispatcher pre-compute, counted in `Metrics.expired`). Both 503 shapes
+//! carry a deterministically jittered `Retry-After` (1-4 s) so a
+//! synchronized client herd spreads its retries. A request whose batch
+//! panicked gets a typed 500 (`worker_panic` after a failed solo retry,
+//! `quarantined` for the request that panics alone) — panic containment
+//! means a faulted request is answered, never stranded. Graceful
+//! shutdown is close-then-drain end to end:
 //! [`FrontDoor::shutdown`] stops the acceptor, lets the coordinator drain
 //! every accepted request, and every connection handler flushes its
 //! pending response before its socket closes (proved over real sockets in
@@ -48,14 +55,16 @@ pub mod client;
 pub mod http;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{MetricsSnapshot, Server, ServerConfig, SubmitError, SubmitOpts};
+use crate::coordinator::{
+    BreakerState, MetricsSnapshot, Server, ServerConfig, SubmitError, SubmitOpts,
+};
 use crate::engine::{DeconvImpl, Program};
 use crate::obs::journal::{EventKind, Journal, NO_LANE};
 use crate::obs::{self, HistogramSnapshot, LayerStages};
@@ -171,7 +180,9 @@ impl FrontDoor {
                             .spawn(move || {
                                 handle_conn(stream, &server, &routes, &cfg, &closing);
                             });
-                        let mut conns = conns.lock().unwrap();
+                        // a handler that panicked while holding the lock
+                        // must not kill the acceptor too
+                        let mut conns = conns.lock().unwrap_or_else(PoisonError::into_inner);
                         // reap finished handlers so the vec stays bounded
                         // by the number of LIVE connections
                         conns.retain(|h| !h.is_finished());
@@ -288,13 +299,15 @@ impl FrontDoor {
         // the acceptor is blocked in accept(); a self-connection wakes it
         // so it can observe `closing` and exit
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.acceptor.lock().unwrap().take() {
+        if let Some(h) = self.acceptor.lock().unwrap_or_else(PoisonError::into_inner).take() {
             let _ = h.join();
         }
         // drain: workers finish every queued request, so handlers blocked
         // on recv get their responses before we wait on them
         self.server.shutdown();
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        let mut conns = self.conns.lock().unwrap_or_else(PoisonError::into_inner);
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *conns);
+        drop(conns);
         for h in handles {
             let _ = h.join();
         }
@@ -328,13 +341,18 @@ fn handle_conn(
         match conn.read_request(cfg.max_body_bytes) {
             Err(bad) => {
                 // fault-injection contract: malformed bytes get an
-                // explicit 4xx (400, or 411 for a bodied request with no
-                // declared length), then the connection closes
+                // explicit 4xx (400; 411 for a bodied request with no
+                // declared length; 413 for a body over the configured
+                // cap), then the connection closes
                 obs::log::warn("front_door", &format!("bad request: {}", bad.msg), &[]);
                 if let Some(j) = server.journal() {
                     j.emit(EventKind::HttpError, NO_LANE, bad.status, 0, 0);
                 }
-                let kind = if bad.status == 411 { "length_required" } else { "bad_request" };
+                let kind = match bad.status {
+                    411 => "length_required",
+                    413 => "body_too_large",
+                    _ => "bad_request",
+                };
                 let body = error_body(kind, &bad.msg);
                 let _ = write_response(
                     conn.stream_mut(),
@@ -417,7 +435,15 @@ fn handle_request(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let draining = closing.load(Ordering::SeqCst);
-            Reply::json(200, healthz_json(&server.metrics(), routes, server.config(), draining))
+            let breakers = server.breaker_states();
+            let body = healthz_json(
+                &server.metrics(),
+                routes,
+                server.config(),
+                draining,
+                breakers.as_deref(),
+            );
+            Reply::json(200, body)
         }
         ("GET", "/v1/models") => Reply::json(200, models_json(routes)),
         ("GET", "/metrics") => {
@@ -425,11 +451,12 @@ fn handle_request(
                 || matches!(req.header("accept"), Some(a) if a.contains("text/plain"));
             let journal = server.journal().map(|j| j.as_ref());
             if prom {
+                let breakers = server.breaker_states();
                 Reply {
                     status: 200,
                     content_type: "text/plain; version=0.0.4",
                     headers: Vec::new(),
-                    body: metrics_prom(&server.metrics(), routes, journal),
+                    body: metrics_prom(&server.metrics(), routes, journal, breakers.as_deref()),
                 }
             } else {
                 Reply::json(200, metrics_json(&server.metrics(), routes, journal))
@@ -560,7 +587,18 @@ fn generate(
             return Reply {
                 status: 503,
                 content_type: "application/json",
-                headers: vec![("Retry-After", "0".to_string())],
+                headers: vec![("Retry-After", retry_after_secs().to_string())],
+                body,
+            };
+        }
+        Err(SubmitError::LaneDown) => {
+            // circuit breaker open for this lane (DESIGN.md §15): fail
+            // fast under the same 503 + Retry-After contract as a shed
+            let body = error_body("lane_down", "circuit breaker open; lane is recovering");
+            return Reply {
+                status: 503,
+                content_type: "application/json",
+                headers: vec![("Retry-After", retry_after_secs().to_string())],
                 body,
             };
         }
@@ -572,6 +610,11 @@ fn generate(
 
     match rx.recv_timeout(cfg.response_timeout) {
         Ok(resp) => {
+            if let Some(fault) = &resp.fault {
+                // the batch panicked; containment answered this request
+                // with a typed fault instead of an image (DESIGN.md §15)
+                return Reply::json(500, error_body(fault.kind.label(), &fault.msg));
+            }
             let mut headers = vec![
                 ("X-Request-Id", resp.id.to_string()),
                 ("X-Model", route.name.clone()),
@@ -630,6 +673,17 @@ fn shutting_down() -> Reply {
     Reply::json(503, error_body("shutting_down", "server is draining"))
 }
 
+/// Deterministic jittered `Retry-After` for 503 answers: 1..=4 seconds,
+/// stepped per rejection by a splitmix64-style multiply so a synchronized
+/// client herd de-synchronizes instead of retrying in lockstep. No clock,
+/// no RNG state — the sequence is reproducible run to run (asserted over
+/// a real socket in rust/tests/front_door.rs).
+fn retry_after_secs() -> u64 {
+    static REJECTIONS: AtomicU64 = AtomicU64::new(0);
+    let n = REJECTIONS.fetch_add(1, Ordering::Relaxed);
+    1 + (n.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 60) % 4
+}
+
 fn models_json(routes: &[Route]) -> Vec<u8> {
     let mut out = String::from("{\"models\":[");
     for (i, r) in routes.iter().enumerate() {
@@ -654,6 +708,7 @@ fn healthz_json(
     routes: &[Route],
     scfg: &ServerConfig,
     draining: bool,
+    breakers: Option<&[BreakerState]>,
 ) -> Vec<u8> {
     let mut out = String::from("{");
     out.push_str(&format!(
@@ -668,6 +723,9 @@ fn healthz_json(
     out.push_str(&format!("\"expired\":{},", s.expired));
     out.push_str(&format!("\"in_flight\":{},", s.in_flight));
     out.push_str(&format!("\"watchdog_stalls\":{},", s.watchdog_stalls));
+    out.push_str(&format!("\"live_workers\":{},", s.live_workers));
+    out.push_str(&format!("\"worker_panics\":{},", s.worker_panics));
+    out.push_str(&format!("\"quarantined\":{},", s.quarantined));
     out.push_str("\"models\":[");
     for (i, r) in routes.iter().enumerate() {
         if i > 0 {
@@ -680,9 +738,15 @@ fn healthz_json(
         let expired = s.lane_expired.get(i).copied().unwrap_or(0);
         out.push_str(&format!(
             "{{\"name\":\"{}\",\"ready\":{ready},\"depth\":{depth},\"cap\":{},\
-             \"served\":{served},\"shed\":{shed},\"expired\":{expired}}}",
+             \"served\":{served},\"shed\":{shed},\"expired\":{expired}",
             r.name, scfg.queue_cap
         ));
+        // the breaker field only exists when the coordinator was started
+        // with circuit breakers (ServerConfig.breaker)
+        if let Some(st) = breakers.and_then(|states| states.get(i)) {
+            out.push_str(&format!(",\"breaker\":\"{}\"", st.label()));
+        }
+        out.push('}');
     }
     out.push_str("]}");
     out.into_bytes()
@@ -728,6 +792,10 @@ fn metrics_json(s: &MetricsSnapshot, routes: &[Route], journal: Option<&Journal>
     out.push_str(&format!("\"expired\":{},", s.expired));
     out.push_str(&format!("\"in_flight\":{},", s.in_flight));
     out.push_str(&format!("\"watchdog_stalls\":{},", s.watchdog_stalls));
+    out.push_str(&format!("\"worker_panics\":{},", s.worker_panics));
+    out.push_str(&format!("\"quarantined\":{},", s.quarantined));
+    out.push_str(&format!("\"lane_down\":{},", s.lane_down));
+    out.push_str(&format!("\"live_workers\":{},", s.live_workers));
     out.push_str(&format!("\"uptime_s\":{:.3},", s.uptime_s));
     out.push_str(&format!("\"throughput_rps\":{:.3},", s.throughput_rps));
     out.push_str(&format!("\"mean_batch\":{:.3},", s.mean_batch));
@@ -823,7 +891,12 @@ fn prom_histogram(out: &mut String, name: &str, help: &str, h: &HistogramSnapsho
 /// The Prometheus text-format (`version=0.0.4`) metrics exposition:
 /// everything in [`metrics_json`] plus the full latency/queue-wait/compute
 /// histograms and the per-worker counters.
-fn metrics_prom(s: &MetricsSnapshot, routes: &[Route], journal: Option<&Journal>) -> Vec<u8> {
+fn metrics_prom(
+    s: &MetricsSnapshot,
+    routes: &[Route],
+    journal: Option<&Journal>,
+    breakers: Option<&[BreakerState]>,
+) -> Vec<u8> {
     let mut out = String::with_capacity(8192);
     prom_metric(&mut out, "repro_served_total", "counter", "Requests served.");
     prom_value(&mut out, "repro_served_total", "", s.served);
@@ -934,6 +1007,46 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route], journal: Option<&Journal>
     prom_value(&mut out, "repro_watchdog_stalls_total", "", s.watchdog_stalls);
     prom_metric(
         &mut out,
+        "repro_worker_panics_total",
+        "counter",
+        "Dispatcher panics contained by the supervisor (DESIGN.md §15).",
+    );
+    prom_value(&mut out, "repro_worker_panics_total", "", s.worker_panics);
+    prom_metric(
+        &mut out,
+        "repro_quarantined_total",
+        "counter",
+        "Requests answered with a typed quarantine fault (panicked alone on retry).",
+    );
+    prom_value(&mut out, "repro_quarantined_total", "", s.quarantined);
+    prom_metric(
+        &mut out,
+        "repro_lane_down_total",
+        "counter",
+        "Submits rejected because the lane's circuit breaker was open.",
+    );
+    prom_value(&mut out, "repro_lane_down_total", "", s.lane_down);
+    prom_metric(
+        &mut out,
+        "repro_live_workers",
+        "gauge",
+        "Dispatcher workers currently running (supervisor keeps this at the configured strength).",
+    );
+    prom_value(&mut out, "repro_live_workers", "", s.live_workers);
+    if let Some(states) = breakers {
+        prom_metric(
+            &mut out,
+            "repro_breaker_state",
+            "gauge",
+            "Per-lane circuit breaker state: 0 closed, 1 half-open, 2 open.",
+        );
+        for (i, r) in routes.iter().enumerate() {
+            let code = states.get(i).map(|st| st.code()).unwrap_or(0);
+            prom_value(&mut out, "repro_breaker_state", &format!("model=\"{}\"", r.name), code);
+        }
+    }
+    prom_metric(
+        &mut out,
         "repro_worker_busy_fraction",
         "gauge",
         "Dispatcher busy fraction: rolling 1s window from the flight recorder when attached, lifetime busy-time/uptime otherwise.",
@@ -985,7 +1098,7 @@ fn metrics_prom(s: &MetricsSnapshot, routes: &[Route], journal: Option<&Journal>
 
 #[cfg(test)]
 mod tests {
-    use super::{healthz_json, metrics_prom, prom_histogram, Route, ServerConfig};
+    use super::{healthz_json, metrics_prom, prom_histogram, BreakerState, Route, ServerConfig};
     use crate::coordinator::Metrics;
     use crate::obs::histogram::Histogram;
 
@@ -1014,7 +1127,7 @@ mod tests {
         let scfg = ServerConfig::default();
         let routes = two_routes();
 
-        let body = String::from_utf8(healthz_json(&snap, &routes, &scfg, false)).unwrap();
+        let body = String::from_utf8(healthz_json(&snap, &routes, &scfg, false, None)).unwrap();
         assert!(body.starts_with("{\"status\":\"ok\",\"draining\":false,"), "{body}");
         assert!(body.contains("\"served\":3,"), "{body}");
         assert!(body.contains("\"shed\":1,"), "{body}");
@@ -1028,7 +1141,7 @@ mod tests {
         assert!(body.contains("\"name\":\"sngan\",\"ready\":true,\"depth\":0,"), "{body}");
         assert!(body.contains("\"shed\":1,\"expired\":0}"), "{body}");
 
-        let draining = String::from_utf8(healthz_json(&snap, &routes, &scfg, true)).unwrap();
+        let draining = String::from_utf8(healthz_json(&snap, &routes, &scfg, true, None)).unwrap();
         assert!(
             draining.starts_with("{\"status\":\"draining\",\"draining\":true,"),
             "{draining}"
@@ -1046,7 +1159,7 @@ mod tests {
         m.record_watchdog_stall();
         let mut snap = m.snapshot();
         snap.lane_depth = vec![7, 2];
-        let text = String::from_utf8(metrics_prom(&snap, &two_routes(), None)).unwrap();
+        let text = String::from_utf8(metrics_prom(&snap, &two_routes(), None, None)).unwrap();
         assert!(text.contains("repro_shed_total 1\n"), "{text}");
         assert!(text.contains("repro_shed_total{model=\"dcgan\"} 1\n"), "{text}");
         assert!(text.contains("repro_shed_total{model=\"sngan\"} 0\n"), "{text}");
@@ -1058,6 +1171,41 @@ mod tests {
         assert!(text.contains("repro_worker_busy_fraction{worker=\"0\"}"), "{text}");
         // one HELP/TYPE block per family even with labeled samples
         assert_eq!(text.matches("# TYPE repro_shed_total counter").count(), 1, "{text}");
+    }
+
+    #[test]
+    fn fault_tolerance_fields_ride_healthz_and_prom() {
+        let m = Metrics::with_lanes(2, 2);
+        m.inc_live_workers();
+        m.inc_live_workers();
+        m.record_worker_panic();
+        m.record_quarantined();
+        m.record_lane_down();
+        let snap = m.snapshot();
+        let scfg = ServerConfig::default();
+        let routes = two_routes();
+        let states = [BreakerState::Closed, BreakerState::Open];
+
+        let body =
+            String::from_utf8(healthz_json(&snap, &routes, &scfg, false, Some(&states))).unwrap();
+        assert!(body.contains("\"live_workers\":2,"), "{body}");
+        assert!(body.contains("\"worker_panics\":1,"), "{body}");
+        assert!(body.contains("\"quarantined\":1,"), "{body}");
+        assert!(body.contains("\"breaker\":\"closed\""), "{body}");
+        assert!(body.contains("\"breaker\":\"open\""), "{body}");
+        // without breakers configured, the field is absent entirely
+        let plain = String::from_utf8(healthz_json(&snap, &routes, &scfg, false, None)).unwrap();
+        assert!(!plain.contains("breaker"), "{plain}");
+
+        let text = String::from_utf8(metrics_prom(&snap, &routes, None, Some(&states))).unwrap();
+        assert!(text.contains("repro_worker_panics_total 1\n"), "{text}");
+        assert!(text.contains("repro_quarantined_total 1\n"), "{text}");
+        assert!(text.contains("repro_lane_down_total 1\n"), "{text}");
+        assert!(text.contains("repro_live_workers 2\n"), "{text}");
+        assert!(text.contains("repro_breaker_state{model=\"dcgan\"} 0\n"), "{text}");
+        assert!(text.contains("repro_breaker_state{model=\"sngan\"} 2\n"), "{text}");
+        let no_breaker = String::from_utf8(metrics_prom(&snap, &routes, None, None)).unwrap();
+        assert!(!no_breaker.contains("repro_breaker_state"), "{no_breaker}");
     }
 
     /// Parse every `name_bucket{le=...} v` / `name_count v` line and

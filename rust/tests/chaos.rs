@@ -1,0 +1,394 @@
+//! Chaos suite (DESIGN.md §15): seeded fault injection against a real
+//! worker pool, asserting the containment contract end to end —
+//!
+//! * **no stranded receivers**: every submitted request resolves (image,
+//!   typed fault, or disconnect) under any mix of injected panics,
+//!   executor errors, and stalls;
+//! * **pool strength**: the supervisor + in-loop containment keep
+//!   `live_workers` at the configured count no matter how many batches
+//!   panic;
+//! * **blast radius**: a poison-pill request is quarantined with a typed
+//!   fault while its batchmates and the rest of the lane keep serving;
+//! * **circuit breaker**: consecutive failures open a lane
+//!   (`SubmitError::LaneDown`), a half-open probe closes it again;
+//! * **watchdog honesty**: slow injection below the stall threshold must
+//!   NOT count as a stall.
+//!
+//! Opt-in (`cargo test --test chaos`): CI runs it in a dedicated step
+//! under `timeout`, like the other fault suites.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use split_deconv::coordinator::{
+    BatchExecutor, BreakerConfig, BreakerState, FaultKind, FaultPlan, Server, ServerConfig,
+    SubmitError, WatchdogConfig,
+};
+use split_deconv::engine::{DeconvImpl, Precision, Program};
+use split_deconv::obs::{EventKind, Journal, JournalConfig};
+use split_deconv::util::rng::Rng;
+
+mod common;
+use common::tiny_net;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Trivial echo backend (z + 1) so chaos is the ONLY failure source.
+struct EchoExec {
+    batches: Vec<usize>,
+}
+
+impl BatchExecutor for EchoExec {
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn z_len(&self) -> usize {
+        4
+    }
+    fn image_len(&self) -> usize {
+        4
+    }
+    fn execute(&mut self, batch: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(batch.iter().map(|z| z.iter().map(|v| v + 1.0).collect()).collect())
+    }
+}
+
+fn echo_cfg(workers: usize, max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch,
+        batch_timeout: Duration::from_millis(2),
+        queue_cap: 256,
+        model: "echo".to_string(),
+        workers,
+        ..ServerConfig::default()
+    }
+}
+
+fn echo_server(cfg: ServerConfig) -> Server {
+    Server::start_with(cfg, |_worker| {
+        Ok(EchoExec {
+            batches: vec![1, 2, 4],
+        })
+    })
+    .unwrap()
+}
+
+/// The headline gate: under a seeded mix of panic/error/slow injection,
+/// every one of N submitted requests resolves — as an image, a typed
+/// fault, or a disconnect — and the accounting balances exactly
+/// (`in_flight` back to 0, pool at full strength).
+#[test]
+fn mixed_chaos_strands_no_receivers() {
+    const N: usize = 64;
+    let mut cfg = echo_cfg(2, 4);
+    let plan = FaultPlan::new(42, 20, 10, 10).with_ticks(24).with_slow(Duration::from_millis(5));
+    cfg.chaos = Some(Arc::new(plan));
+    let server = echo_server(cfg);
+
+    let rxs: Vec<_> = (0..N)
+        .map(|i| server.submit_blocking(vec![i as f32; 4]).unwrap())
+        .collect();
+    let (mut ok, mut faulted, mut disconnected) = (0usize, 0usize, 0usize);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv_timeout(RECV_TIMEOUT) {
+            Ok(resp) => match resp.fault {
+                None => {
+                    assert_eq!(resp.image, vec![i as f32 + 1.0; 4], "request {i} got wrong image");
+                    ok += 1;
+                }
+                Some(f) => {
+                    assert!(resp.image.is_empty(), "faulted response {i} must carry no image");
+                    assert!(!f.msg.is_empty(), "fault must carry its panic detail");
+                    faulted += 1;
+                }
+            },
+            Err(_) => disconnected += 1, // injected executor error
+        }
+    }
+    assert_eq!(ok + faulted + disconnected, N, "every receiver must resolve");
+    assert!(ok > 0, "the quiet tail of the plan must serve normally");
+
+    let m = server.metrics();
+    assert_eq!(m.in_flight, 0, "accounting must balance after chaos");
+    assert_eq!(m.live_workers, 2, "pool at full strength while serving");
+    assert_eq!(
+        m.served as usize, ok,
+        "served counts exactly the image-carrying responses"
+    );
+    server.shutdown();
+}
+
+/// Panic containment in isolation: with `panic=100%` for the first K
+/// ticks and single-request batches, every panicked batch is retried
+/// solo (retries never draw chaos) — so ALL requests still come back
+/// with images, `worker_panics` counts exactly K, nothing is
+/// quarantined, and the pool stays at strength. The journal records one
+/// WorkerPanic + one WorkerRespawn per injection.
+#[test]
+fn pool_returns_to_strength_after_every_batch_panics() {
+    const N: usize = 16;
+    const K: u64 = 6;
+    let journal = Journal::new(JournalConfig {
+        rings: 2,
+        ring_capacity: 4096,
+    });
+    let mut cfg = echo_cfg(2, 1);
+    cfg.journal = Some(journal.clone());
+    cfg.chaos = Some(Arc::new(FaultPlan::new(5, 100, 0, 0).with_ticks(K)));
+    let server = echo_server(cfg);
+
+    let rxs: Vec<_> = (0..N)
+        .map(|i| server.submit_blocking(vec![i as f32; 4]).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert!(resp.fault.is_none(), "request {i}: solo retry must succeed");
+        assert_eq!(resp.image, vec![i as f32 + 1.0; 4], "request {i} image");
+    }
+
+    let m = server.metrics();
+    assert_eq!(m.worker_panics, K, "one contained panic per chaos tick");
+    assert_eq!(m.quarantined, 0, "retries are chaos-free, nothing quarantines");
+    assert_eq!(m.errors, 0, "panics are contained, not counted as batch errors");
+    assert_eq!(m.in_flight, 0);
+    assert_eq!(m.live_workers, 2, "pool back to configured strength");
+    server.shutdown();
+
+    let events = journal.snapshot();
+    let panics = events.iter().filter(|e| e.kind == EventKind::WorkerPanic).count();
+    let respawns = events.iter().filter(|e| e.kind == EventKind::WorkerRespawn).count();
+    assert_eq!(panics as u64, K, "journal records every contained panic");
+    assert_eq!(respawns as u64, K, "every panic rebuilds the executor");
+}
+
+/// Panics iff a request's first latent element is the poison marker.
+struct PoisonExec;
+
+impl BatchExecutor for PoisonExec {
+    fn supported_batches(&self) -> &[usize] {
+        &[1, 2, 4]
+    }
+    fn z_len(&self) -> usize {
+        4
+    }
+    fn image_len(&self) -> usize {
+        4
+    }
+    fn execute(&mut self, batch: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        for z in batch {
+            assert!(z[0] != 666.0, "poison pill in batch");
+        }
+        Ok(batch.iter().map(|z| z.iter().map(|v| v + 1.0).collect()).collect())
+    }
+}
+
+/// Blast-radius containment: a request that panics the worker on its own
+/// (twice — once in its batch, once on the solo retry) is quarantined
+/// with a typed fault; its batchmates are served via the solo retry and
+/// the lane keeps serving fresh requests afterwards.
+#[test]
+fn poison_pill_is_quarantined_and_the_lane_keeps_serving() {
+    let cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(30),
+        queue_cap: 64,
+        model: "poison".to_string(),
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let server = Server::start_with(cfg, |_worker| Ok(PoisonExec)).unwrap();
+
+    // three good requests + the poison pill, submitted back to back so
+    // they MAY share a batch (containment must be correct either way)
+    let good: Vec<_> = (0..3)
+        .map(|i| server.submit_blocking(vec![i as f32; 4]).unwrap())
+        .collect();
+    let poison = server.submit_blocking(vec![666.0; 4]).unwrap();
+
+    for (i, rx) in good.into_iter().enumerate() {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert!(resp.fault.is_none(), "good request {i} must be served");
+        assert_eq!(resp.image, vec![i as f32 + 1.0; 4], "good request {i} image");
+    }
+    let resp = poison.recv_timeout(RECV_TIMEOUT).unwrap();
+    let fault = resp.fault.expect("the poison pill gets a typed fault, not a hang");
+    assert_eq!(fault.kind, FaultKind::Quarantined);
+    assert!(resp.image.is_empty());
+
+    let m = server.metrics();
+    assert_eq!(m.quarantined, 1, "exactly the poison pill is quarantined");
+    assert!(
+        m.worker_panics >= 2,
+        "batch panic + solo-retry panic, got {}",
+        m.worker_panics
+    );
+    assert_eq!(m.live_workers, 1);
+
+    // the lane is still alive for everyone else
+    for i in 10..14 {
+        let rx = server.submit_blocking(vec![i as f32; 4]).unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert!(resp.fault.is_none(), "post-quarantine request {i} must serve");
+        assert_eq!(resp.image, vec![i as f32 + 1.0; 4]);
+    }
+    assert_eq!(server.metrics().in_flight, 0);
+    server.shutdown();
+}
+
+/// Fails every batch while the flag is up; serves normally once lowered.
+struct FlakyExec {
+    failing: Arc<AtomicBool>,
+}
+
+impl BatchExecutor for FlakyExec {
+    fn supported_batches(&self) -> &[usize] {
+        &[1]
+    }
+    fn z_len(&self) -> usize {
+        4
+    }
+    fn image_len(&self) -> usize {
+        4
+    }
+    fn execute(&mut self, batch: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        if self.failing.load(Ordering::SeqCst) {
+            anyhow::bail!("injected executor failure");
+        }
+        Ok(batch.to_vec())
+    }
+}
+
+/// The breaker lifecycle over a real pool: `threshold` consecutive batch
+/// failures open the lane (submits bounce with `LaneDown`, counted in
+/// `lane_down`), the cooldown admits exactly one half-open probe, and a
+/// successful probe closes the breaker again.
+#[test]
+fn breaker_opens_on_consecutive_failures_and_recovers_via_probe() {
+    let cooldown = Duration::from_millis(80);
+    let failing = Arc::new(AtomicBool::new(true));
+    let failing2 = failing.clone();
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 16,
+        model: "flaky".to_string(),
+        workers: 1,
+        breaker: Some(BreakerConfig {
+            threshold: 3,
+            cooldown,
+        }),
+        ..ServerConfig::default()
+    };
+    let server = Server::start_with(cfg, move |_worker| {
+        Ok(FlakyExec {
+            failing: failing2.clone(),
+        })
+    })
+    .unwrap();
+
+    // three failing batches: receivers observe the legacy disconnect,
+    // the breaker counts the consecutive failures
+    for i in 0..3 {
+        let rx = server.submit_to(0, vec![1.0; 4], None).unwrap();
+        assert!(rx.recv_timeout(RECV_TIMEOUT).is_err(), "failing batch {i} disconnects");
+    }
+    assert_eq!(server.breaker_states().unwrap()[0], BreakerState::Open);
+
+    // open lane: submits bounce fast with the typed error
+    match server.submit_to(0, vec![1.0; 4], None) {
+        Err(SubmitError::LaneDown) => {}
+        other => panic!("open breaker must answer LaneDown, got {other:?}"),
+    }
+    assert!(server.metrics().lane_down >= 1, "rejections are counted");
+
+    // heal the executor, wait out the cooldown: the next submit is the
+    // half-open probe, and its success closes the breaker
+    failing.store(false, Ordering::SeqCst);
+    std::thread::sleep(cooldown + Duration::from_millis(40));
+    let probe = server.submit_to(0, vec![2.0; 4], None).expect("probe admitted half-open");
+    let resp = probe.recv_timeout(RECV_TIMEOUT).expect("probe must be served");
+    assert!(resp.fault.is_none());
+    assert_eq!(resp.image, vec![2.0; 4]);
+    // the success lands synchronously before the response is sent
+    assert_eq!(server.breaker_states().unwrap()[0], BreakerState::Closed);
+
+    // closed again: normal serving resumes
+    let rx = server.submit_to(0, vec![3.0; 4], None).unwrap();
+    assert_eq!(rx.recv_timeout(RECV_TIMEOUT).unwrap().image, vec![3.0; 4]);
+    assert_eq!(server.metrics().in_flight, 0);
+    server.shutdown();
+}
+
+/// Watchdog honesty under slow injection: stalls BELOW `stall_after`
+/// must not be flagged — chaos slow ticks are latency, not wedges.
+#[test]
+fn slow_injection_below_the_stall_threshold_is_not_flagged() {
+    let journal = Journal::new(JournalConfig {
+        rings: 2,
+        ring_capacity: 4096,
+    });
+    let mut cfg = echo_cfg(1, 1);
+    cfg.journal = Some(journal);
+    cfg.watchdog = Some(WatchdogConfig {
+        interval: Duration::from_millis(20),
+        stall_after: Duration::from_millis(500),
+        max_request_age: Duration::from_millis(500),
+    });
+    // every tick stalls 25ms — an order of magnitude under stall_after
+    let plan = FaultPlan::new(9, 0, 0, 100).with_slow(Duration::from_millis(25));
+    cfg.chaos = Some(Arc::new(plan));
+    let server = echo_server(cfg);
+
+    for i in 0..8 {
+        let rx = server.submit_blocking(vec![i as f32; 4]).unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert!(resp.fault.is_none(), "slow is not a failure");
+        assert_eq!(resp.image, vec![i as f32 + 1.0; 4]);
+    }
+    // several watchdog scan intervals pass over the slow traffic above
+    // (8 x 25ms of injected stall >> 20ms interval); none may be flagged
+    let m = server.metrics();
+    assert_eq!(
+        m.watchdog_stalls, 0,
+        "sub-threshold slow injection must not trip the watchdog"
+    );
+    server.shutdown();
+}
+
+/// Containment over the REAL native backend at int8: injected panics
+/// against a quantized compiled program are contained and retried just
+/// like the mock path, and the recovered lane still serves quantized
+/// images.
+#[test]
+fn int8_native_lane_recovers_from_injected_panics() {
+    const K: u64 = 2;
+    let net = tiny_net();
+    let program =
+        Arc::new(Program::from_seed_prec(&net, DeconvImpl::Sd, 4, Precision::Int8).unwrap());
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 32,
+        model: "tiny-int8".to_string(),
+        workers: 1,
+        precision: Precision::Int8,
+        chaos: Some(Arc::new(FaultPlan::new(3, 100, 0, 0).with_ticks(K))),
+        ..ServerConfig::default()
+    };
+    let server = Server::start_native_program(cfg, program.clone()).unwrap();
+    let mut rng = Rng::new(11);
+    let rxs: Vec<_> = (0..6)
+        .map(|_| server.submit_blocking(rng.normal_vec(16)).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert!(resp.fault.is_none(), "request {i}: containment retry must serve");
+        assert_eq!(resp.image.len(), program.output_len(), "request {i} image length");
+    }
+    let m = server.metrics();
+    assert_eq!(m.worker_panics, K);
+    assert_eq!(m.live_workers, 1);
+    assert_eq!(m.in_flight, 0);
+    server.shutdown();
+}

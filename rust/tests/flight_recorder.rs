@@ -118,6 +118,8 @@ fn real_server_timeline_exports_schema_valid_chrome_trace() {
         record_spans: true,
         journal: Some(journal.clone()),
         watchdog: None,
+        chaos: None,
+        breaker: None,
     };
     let server = Server::start_native_program(cfg, program).unwrap();
     let mut rng = Rng::new(3);
@@ -194,6 +196,8 @@ fn watchdog_flags_an_injected_stalled_worker() {
             stall_after: Duration::from_millis(50),
             max_request_age: Duration::from_millis(50),
         }),
+        chaos: None,
+        breaker: None,
     };
     let factory_release = release.clone();
     let server = Server::start_with(cfg, move |_worker| {

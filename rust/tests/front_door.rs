@@ -47,6 +47,8 @@ fn scfg() -> ServerConfig {
         record_spans: true,
         journal: None,
         watchdog: None,
+        chaos: None,
+        breaker: None,
     }
 }
 
@@ -237,6 +239,35 @@ fn content_length_abuse_is_rejected_without_hanging_the_server() {
 }
 
 #[test]
+fn oversized_body_answers_413_and_the_server_keeps_serving() {
+    let fcfg = FrontDoorConfig {
+        max_body_bytes: 64,
+        ..FrontDoorConfig::default()
+    };
+    let (door, _p1, _p2) = tiny_door(scfg(), fcfg);
+    let addr = door.addr();
+
+    // declared length over the cap: typed 413 BEFORE any body byte is
+    // buffered, then the connection closes
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(TIMEOUT)).unwrap();
+    s.write_all(b"POST /v1/generate/tiny HTTP/1.1\r\nContent-Length: 4096\r\n\r\n")
+        .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 413"), "oversized body: {text:?}");
+    assert!(text.contains("body_too_large"), "typed error body expected: {text}");
+
+    // a request at exactly the cap (16 f32s = 64 bytes) still serves
+    let z = Rng::new(6).normal_vec(16);
+    let ok = request_once(addr, TIMEOUT, "POST", "/v1/generate/tiny", &[], &f32s_to_bytes(&z))
+        .unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.text());
+    door.shutdown();
+}
+
+#[test]
 fn client_disconnect_mid_request_leaves_the_server_healthy() {
     let (door, _p1, _p2) = tiny_door(scfg(), fcfg());
 
@@ -328,6 +359,8 @@ fn queue_full_sheds_explicitly_and_every_request_is_answered() {
         record_spans: true,
         journal: None,
         watchdog: None,
+        chaos: None,
+        breaker: None,
     };
     let (door, _executed) = slow_door(cfg, Duration::from_millis(100));
     let addr = door.addr();
@@ -351,7 +384,14 @@ fn queue_full_sheds_explicitly_and_every_request_is_answered() {
             200 => ok += 1,
             503 => {
                 assert!(resp.text().contains("shed"), "{}", resp.text());
-                assert_eq!(resp.header("retry-after"), Some("0"));
+                // jittered Retry-After: always present, always 1..=4 s,
+                // so a synchronized client herd spreads its retries
+                let ra: u64 = resp
+                    .header("retry-after")
+                    .expect("503 shed must carry Retry-After")
+                    .parse()
+                    .expect("Retry-After must be whole seconds");
+                assert!((1..=4).contains(&ra), "Retry-After {ra} outside the 1..=4 jitter band");
                 shed += 1;
             }
             other => panic!("unexpected status {other}: {}", resp.text()),
@@ -378,6 +418,8 @@ fn expired_deadline_answers_504_without_reaching_compute() {
         record_spans: true,
         journal: None,
         watchdog: None,
+        chaos: None,
+        breaker: None,
     };
     let (door, executed) = slow_door(cfg, Duration::from_millis(120));
     let addr = door.addr();
@@ -421,6 +463,8 @@ fn graceful_shutdown_flushes_inflight_responses_before_the_listener_dies() {
         record_spans: true,
         journal: None,
         watchdog: None,
+        chaos: None,
+        breaker: None,
     };
     let (door, _executed) = slow_door(cfg, Duration::from_millis(150));
     let addr = door.addr();

@@ -272,6 +272,8 @@ fn serve_native_int8_smoke_on_full_scale_models() {
             record_spans: true,
             journal: None,
             watchdog: None,
+            chaos: None,
+            breaker: None,
         };
         let net = networks::by_name(model).unwrap();
         let server = Server::start_native(cfg, 3).unwrap();
